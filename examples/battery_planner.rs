@@ -1,0 +1,70 @@
+//! Scenario: smart-packaging battery planning (the paper's Fig. 8 use
+//! case, §1: FMCG / disposables / low-end healthcare).
+//!
+//! A product team has a printed battery budget per SKU and needs to know,
+//! per classification task, the loosest accuracy budget that fits it.
+//! Sweeps accuracy-loss thresholds and reports the cheapest battery tier
+//! each one unlocks.
+//!
+//! ```text
+//! cargo run --release --example battery_planner -- [dataset-key] [budget-mW]
+//! ```
+
+use axmlp::battery::classify;
+use axmlp::coordinator::{run_dataset, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::retrain::backend_rust::RustBackend;
+use axmlp::runtime::{backend_pjrt::PjrtBackend, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let key = args.first().map(|s| s.as_str()).unwrap_or("v3");
+    let budget_mw: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(15.0);
+    anyhow::ensure!(
+        axmlp::datasets::registry::by_key(key).is_some(),
+        "unknown dataset `{key}`"
+    );
+
+    let ds = datasets::load(key, 2023);
+    let mut cfg = PipelineConfig::default();
+    cfg.thresholds = vec![0.005, 0.01, 0.02, 0.05, 0.10];
+    cfg.dse.max_g_levels = 6;
+    let ctx = SharedContext::new();
+
+    let outcome = match Runtime::new(Runtime::default_dir()) {
+        Ok(rt) => {
+            let mut be = PjrtBackend::new(&rt, key)?;
+            run_dataset(&ds, &cfg, &ctx, &mut be)?
+        }
+        Err(_) => run_dataset(&ds, &cfg, &ctx, &mut RustBackend)?,
+    };
+
+    println!(
+        "battery planning for {} (budget {budget_mw} mW); baseline draws {:.1} mW ({})",
+        ds.info.name,
+        outcome.baseline_costs.power_mw,
+        outcome.baseline_battery.name()
+    );
+    println!("{:<10} {:>10} {:>10} {:>10}  {:<16} fits?", "T", "acc", "cm²", "mW", "battery");
+    let mut first_fit: Option<f64> = None;
+    for t in &outcome.thresholds {
+        let fits = t.design.costs.power_mw <= budget_mw;
+        if fits && first_fit.is_none() {
+            first_fit = Some(t.threshold);
+        }
+        println!(
+            "{:<10} {:>10.3} {:>10.2} {:>10.1}  {:<16} {}",
+            format!("{:.1}%", t.threshold * 100.0),
+            t.design.acc_test,
+            t.design.costs.area_cm2(),
+            t.design.costs.power_mw,
+            classify(t.design.costs.power_mw).name(),
+            if fits { "yes" } else { "no" },
+        );
+    }
+    match first_fit {
+        Some(t) => println!("\n→ ship it with T = {:.1}% accuracy budget", t * 100.0),
+        None => println!("\n→ no design fits {budget_mw} mW; consider a larger battery tier"),
+    }
+    Ok(())
+}

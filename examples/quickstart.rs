@@ -1,0 +1,72 @@
+//! Quickstart: co-design one printed MLP end to end in ~a second.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the full public API on the Mammographic dataset: train MLP0,
+//! quantize, synthesize the exact bespoke baseline, retrain
+//! printing-friendly coefficients (PJRT artifact backend when available),
+//! run the AxSum DSE, and print the chosen design + its battery class.
+
+use axmlp::coordinator::{run_dataset, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::retrain::backend_rust::RustBackend;
+use axmlp::runtime::{backend_pjrt::PjrtBackend, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let ds = datasets::load("ma", 2023);
+    println!(
+        "dataset: {} ({} train / {} test, {} features, {} classes)",
+        ds.info.name,
+        ds.x_train.len(),
+        ds.x_test.len(),
+        ds.n_features(),
+        ds.n_classes()
+    );
+
+    let mut cfg = PipelineConfig::default();
+    cfg.thresholds = vec![0.01];
+    cfg.dse.max_g_levels = 5;
+
+    let ctx = SharedContext::new();
+    // prefer the production PJRT path; fall back to the native mirror
+    let outcome = match Runtime::new(Runtime::default_dir()) {
+        Ok(rt) => {
+            println!("backend: pjrt ({} artifacts)", rt.index.topologies.len());
+            let mut be = PjrtBackend::new(&rt, "ma")?;
+            run_dataset(&ds, &cfg, &ctx, &mut be)?
+        }
+        Err(e) => {
+            println!("backend: rust (no artifacts: {e})");
+            run_dataset(&ds, &cfg, &ctx, &mut RustBackend)?
+        }
+    };
+
+    println!("\nbaseline  (exact bespoke [2]):");
+    println!(
+        "  acc {:.3} | {:.2} cm² | {:.1} mW | CPD {:.0} ms | battery: {}",
+        outcome.q0_acc_test,
+        outcome.baseline_costs.area_cm2(),
+        outcome.baseline_costs.power_mw,
+        outcome.baseline_costs.delay_ms,
+        outcome.baseline_battery.name(),
+    );
+    let t = &outcome.thresholds[0];
+    println!("ours (retrain + AxSum, T = 1%):");
+    println!(
+        "  acc {:.3} | {:.2} cm² | {:.1} mW | CPD {:.0} ms | battery: {}",
+        t.design.acc_test,
+        t.design.costs.area_cm2(),
+        t.design.costs.power_mw,
+        t.design.costs.delay_ms,
+        t.battery.name(),
+    );
+    println!(
+        "  gains: {:.1}x area, {:.1}x power (clusters used: C0..C{})",
+        t.area_gain,
+        t.power_gain,
+        t.clusters_used - 1
+    );
+    Ok(())
+}

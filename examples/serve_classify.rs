@@ -1,0 +1,53 @@
+//! Scenario: deployed-inference service loop. After co-design, the same
+//! AOT artifact that drove retraining serves batched classification
+//! requests through PJRT — the Rust binary is the complete serving stack
+//! (Python never runs). Reports end-to-end batch latency and throughput.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example serve_classify -- [dataset-key] [n-requests]
+//! ```
+
+use std::time::Instant;
+
+use axmlp::axsum::ShiftPlan;
+use axmlp::coordinator::train_mlp0;
+use axmlp::coordinator::PipelineConfig;
+use axmlp::datasets;
+use axmlp::fixed::{quantize, quantize_inputs};
+use axmlp::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let key = std::env::args().nth(1).unwrap_or_else(|| "pd".to_string());
+    let n_req: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4096);
+
+    let rt = Runtime::new(Runtime::default_dir())?;
+    let ds = datasets::load(&key, 2023);
+    let cfg = PipelineConfig::default();
+    let q = quantize(&train_mlp0(&ds, &cfg.train, 2023));
+    let plan = ShiftPlan::exact(&q);
+
+    // synthesize a request stream by cycling the test set
+    let xq = quantize_inputs(&ds.x_test);
+    let requests: Vec<Vec<i64>> = (0..n_req).map(|i| xq[i % xq.len()].clone()).collect();
+    let labels: Vec<usize> = (0..n_req).map(|i| ds.y_test[i % ds.y_test.len()]).collect();
+
+    // warm-up compiles + caches the executable
+    let _ = rt.forward_logits(&key, &q, &plan, &requests[..rt.index.eval_batch.min(n_req)])?;
+
+    let t0 = Instant::now();
+    let acc = rt.accuracy(&key, &q, &plan, &requests, &labels)?;
+    let dt = t0.elapsed();
+    let per_batch = dt.as_secs_f64() / (n_req as f64 / rt.index.eval_batch as f64);
+    println!(
+        "served {n_req} requests for {} via PJRT: acc {:.3}, {:.2} ms/batch({}), {:.0} req/s",
+        ds.info.name,
+        acc,
+        per_batch * 1e3,
+        rt.index.eval_batch,
+        n_req as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""AOT lowering: JAX (L2, embedding the L1 Pallas kernel) -> HLO text.
+
+Emits, per paper topology, two PJRT-loadable artifacts plus a metadata
+index consumed by the Rust coordinator:
+
+    artifacts/fwd_<key>.hlo.txt    quantized AxSum inference forward
+    artifacts/train_<key>.hlo.txt  one printing-friendly retraining step
+    artifacts/smoke.hlo.txt        trivial graph for runtime smoke tests
+    artifacts/topologies.json      shapes + batch sizes + file names
+
+Interchange is HLO **text**, not `.serialize()`: jax >= 0.5 serializes
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. Lowered with return_tuple=True; the Rust side
+unwraps the tuple.
+
+Python runs only here (`make artifacts`); the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import mlp_fwd_axsum, train_step
+from .topologies import (EVAL_BATCH, TOPOLOGIES, TRAIN_BATCH, VC_MAX)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def lower_fwd(din, hidden, dout, batch=EVAL_BATCH, block_b=64):
+    fwd = functools.partial(mlp_fwd_axsum, block_b=block_b, interpret=True)
+    return jax.jit(fwd).lower(
+        _spec(batch, din),          # x (integer-valued)
+        _spec(din, hidden),         # w1
+        _spec(hidden),              # b1
+        _spec(din, hidden),         # s1 (truncation shifts)
+        _spec(hidden, dout),        # w2
+        _spec(dout),                # b2
+        _spec(hidden, dout),        # s2
+    )
+
+
+def lower_train(din, hidden, dout, batch=TRAIN_BATCH):
+    return jax.jit(train_step).lower(
+        _spec(din, hidden),         # w1 shadow
+        _spec(hidden),              # b1
+        _spec(hidden, dout),        # w2 shadow
+        _spec(dout),                # b2
+        _spec(batch, din),          # x (integer-valued)
+        _spec(batch, dout),         # y one-hot
+        _spec(VC_MAX),              # vc candidates
+        _spec(VC_MAX),              # vc mask
+        _spec(),                    # lr
+        _spec(),                    # temp
+    )
+
+
+def lower_smoke():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = _spec(2, 2)
+    return jax.jit(fn).lower(spec, spec)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated topology keys (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+
+    with open(os.path.join(args.out, "smoke.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lower_smoke()))
+    print("wrote smoke.hlo.txt")
+
+    index = {
+        "eval_batch": EVAL_BATCH,
+        "train_batch": TRAIN_BATCH,
+        "vc_max": VC_MAX,
+        "topologies": [],
+    }
+    for key, name, din, hidden, dout, _macs, _acc in TOPOLOGIES:
+        if only and key not in only:
+            continue
+        fwd_file = f"fwd_{key}.hlo.txt"
+        train_file = f"train_{key}.hlo.txt"
+        with open(os.path.join(args.out, fwd_file), "w") as f:
+            f.write(to_hlo_text(lower_fwd(din, hidden, dout)))
+        with open(os.path.join(args.out, train_file), "w") as f:
+            f.write(to_hlo_text(lower_train(din, hidden, dout)))
+        index["topologies"].append({
+            "key": key, "name": name,
+            "din": din, "hidden": hidden, "dout": dout,
+            "fwd": fwd_file, "train": train_file,
+        })
+        print(f"wrote {fwd_file} + {train_file} ({name})")
+
+    with open(os.path.join(args.out, "topologies.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"wrote topologies.json ({len(index['topologies'])} topologies)")
+
+
+if __name__ == "__main__":
+    main()

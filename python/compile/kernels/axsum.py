@@ -1,0 +1,99 @@
+"""L1 — Pallas kernel for the AxSum approximate neuron layer.
+
+The paper's compute hot-spot is the bespoke neuron (Fig. 4): split-sign
+product accumulation with per-product MSB truncation and 1's-complement
+negation of the negative tree. This kernel evaluates one whole layer for a
+batch tile.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the weight, shift and
+sign-mask tiles are tiny (<= 21x10 for every paper topology) and live in
+VMEM for the whole grid; the batch dimension is streamed in tiles of
+`block_b` rows. Truncation (floor between multiply and add) breaks the
+affine form the MXU wants, so the kernel deliberately targets the VPU:
+one elementwise product tile, two masked reductions, a scalar correction.
+
+`interpret=True` is mandatory on CPU — real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _axsum_kernel(x_ref, w_ref, b_ref, s_ref, o_ref):
+    """One batch-tile of the AxSum layer.
+
+    x_ref: [Bt, Din]  integer-valued activations (unsigned domain)
+    w_ref: [Din, Dout] integer-valued signed coefficients
+    b_ref: [1, Dout]  integer-valued signed biases
+    s_ref: [Din, Dout] truncation shifts (s = n-k for pruned products, else 0)
+    o_ref: [Bt, Dout] pre-activation output S'
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...][0]
+    s = s_ref[...]
+
+    absw = jnp.abs(w)
+    # Bespoke multipliers: p_ij = a_i * |w_ij|   [Bt, Din, Dout]
+    p = x[:, :, None] * absw[None, :, :]
+    # AxSum truncation: drop the low s bits of each product.
+    pow2 = jnp.exp2(s)[None, :, :]
+    t = jnp.floor(p / pow2) * pow2
+    # Split-sign adder trees.
+    pos = (w >= 0).astype(x.dtype)[None, :, :]
+    sp = jnp.sum(t * pos, axis=1) + jnp.maximum(b, 0.0)[None, :]
+    sn = jnp.sum(t * (1.0 - pos), axis=1) + jnp.maximum(-b, 0.0)[None, :]
+    # 1's-complement negation of the negative tree: ~Sn = -Sn - 1,
+    # omitted entirely when the neuron has no negative contribution.
+    has_neg = jnp.logical_or(jnp.any(w < 0, axis=0), b < 0)
+    corr = has_neg.astype(x.dtype)[None, :]
+    o_ref[...] = sp - sn - corr
+
+
+def axsum_layer(x, w, b, s, *, block_b=64, interpret=True):
+    """AxSum layer via pallas_call, batch-tiled.
+
+    x [B, Din], w [Din, Dout], b [Dout], s [Din, Dout] -> [B, Dout].
+    B must be a multiple of block_b (the AOT artifacts use fixed batch
+    sizes; callers pad).
+    """
+    bsz, din = x.shape
+    dout = w.shape[1]
+    if bsz % block_b != 0:
+        raise ValueError(f"batch {bsz} not a multiple of block_b {block_b}")
+    b2 = b.reshape(1, dout)
+    grid = (bsz // block_b,)
+    return pl.pallas_call(
+        _axsum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, din), lambda i: (i, 0)),
+            pl.BlockSpec((din, dout), lambda i: (0, 0)),
+            pl.BlockSpec((1, dout), lambda i: (0, 0)),
+            pl.BlockSpec((din, dout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dout), x.dtype),
+        interpret=interpret,
+    )(x, w, b2, s)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def axsum_layer_jit(x, w, b, s, block_b=64, interpret=True):
+    return axsum_layer(x, w, b, s, block_b=block_b, interpret=interpret)
+
+
+def vmem_footprint_bytes(block_b, din, dout, dtype_bytes=4):
+    """Static VMEM budget estimate for one grid step (DESIGN.md §HW-Adapt).
+
+    Counts the resident input/output tiles plus the [Bt, Din, Dout]
+    product intermediate the VPU materializes.
+    """
+    tiles = block_b * din + din * dout * 2 + dout + block_b * dout
+    intermediate = block_b * din * dout
+    return (tiles + intermediate) * dtype_bytes

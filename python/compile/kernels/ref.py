@@ -1,0 +1,117 @@
+"""Pure-jnp (and pure-python integer) oracles for the AxSum neuron layer.
+
+This file is the correctness contract shared by three implementations:
+
+  1. the Pallas kernel in `kernels/axsum.py` (checked by pytest),
+  2. the lowered HLO artifacts executed from Rust via PJRT,
+  3. the bit-exact integer model in `rust/src/axsum/` (ground truth for DSE).
+
+Semantics (paper Eq. (3)-(5), Fig. 4)
+-------------------------------------
+Inputs of a neuron are unsigned integers (4-bit primary inputs, or the
+full-width ReLU output bus of the previous layer). Coefficients are signed
+integers hardwired per multiplier. For each neuron j:
+
+    p_ij   = a_i * |w_ij|                      (bespoke multiplier output)
+    t_ij   = floor(p_ij / 2^s_ij) * 2^s_ij     (AxSum: keep k MSBs of the
+                                                n_ij-bit product; s_ij =
+                                                n_ij - k if G_ij <= G else 0)
+    Sp_j   = sum_{w_ij >= 0} t_ij + max(b_j, 0)
+    Sn_j   = sum_{w_ij <  0} t_ij + max(-b_j, 0)
+    S'_j   = Sp_j + ~Sn_j = Sp_j - Sn_j - 1    (1's-complement negation)
+
+If the neuron has no negative coefficient and a non-negative bias, the Sn
+tree (and the -1 correction) is omitted entirely: S'_j = Sp_j.
+
+All tensors are float32 holding exact small integers; products stay well
+below 2^24 for every paper topology in practice (the Rust i64 model is the
+bit-exact authority and tests cross-check the two on trained models).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def axsum_layer_ref(x, w, b, s):
+    """Reference AxSum layer: x [B, Din], w [Din, Dout], b [Dout],
+    s [Din, Dout] truncation shifts. Returns pre-activation [B, Dout]."""
+    absw = jnp.abs(w)
+    p = x[:, :, None] * absw[None, :, :]  # [B, Din, Dout]
+    pow2 = jnp.exp2(s)[None, :, :]
+    t = jnp.floor(p / pow2) * pow2
+    pos = (w >= 0).astype(x.dtype)[None, :, :]
+    sp = jnp.sum(t * pos, axis=1) + jnp.maximum(b, 0.0)[None, :]
+    sn = jnp.sum(t * (1.0 - pos), axis=1) + jnp.maximum(-b, 0.0)[None, :]
+    has_neg = jnp.logical_or(jnp.any(w < 0, axis=0), b < 0)
+    corr = has_neg.astype(x.dtype)[None, :]
+    return sp - sn - corr
+
+
+def mlp_fwd_ref(x, w1, b1, s1, w2, b2, s2):
+    """Two-layer AxSum MLP forward (integer domain), ReLU hidden."""
+    h = jnp.maximum(axsum_layer_ref(x, w1, b1, s1), 0.0)
+    return axsum_layer_ref(h, w2, b2, s2)
+
+
+# ---------------------------------------------------------------------------
+# Pure-python integer oracle (no jax) — mirrors rust/src/axsum exactly.
+# ---------------------------------------------------------------------------
+
+def axsum_neuron_int(a, w, bias, shifts):
+    """Bit-exact integer AxSum for a single neuron.
+
+    a: list[int] unsigned inputs; w: list[int] signed coefficients;
+    shifts: list[int] per-product truncation shift. Returns S' (int).
+    """
+    sp = max(bias, 0)
+    sn = max(-bias, 0)
+    has_neg = bias < 0
+    for ai, wi, si in zip(a, w, shifts):
+        p = ai * abs(wi)
+        t = (p >> si) << si
+        if wi >= 0:
+            sp += t
+        else:
+            sn += t
+            has_neg = True
+    has_neg = has_neg or any(wi < 0 for wi in w)
+    return sp - sn - 1 if has_neg else sp
+
+
+def axsum_layer_int(xs, w, b, s):
+    """Integer AxSum layer over a batch. xs: [B][Din] ints, w: [Din][Dout],
+    b: [Dout], s: [Din][Dout]. Returns [B][Dout] ints."""
+    out = []
+    din = len(w)
+    dout = len(b)
+    for row_in in xs:
+        row = []
+        for j in range(dout):
+            wj = [w[i][j] for i in range(din)]
+            sj = [s[i][j] for i in range(din)]
+            row.append(axsum_neuron_int(row_in, wj, b[j], sj))
+        out.append(row)
+    return out
+
+
+def product_bits(a_bits, w):
+    """n_i = $size(|w|) + $size(a): width of the bespoke product."""
+    wv = abs(int(w))
+    if wv == 0:
+        return 0
+    return int(wv).bit_length() + a_bits
+
+
+def np_int_layer(x, w, b, s):
+    """Vectorized numpy int64 oracle (used by hypothesis tests)."""
+    x = np.asarray(x, dtype=np.int64)
+    w = np.asarray(w, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    s = np.asarray(s, dtype=np.int64)
+    p = x[:, :, None] * np.abs(w)[None, :, :]
+    t = (p >> s[None, :, :]) << s[None, :, :]
+    pos = w >= 0
+    sp = (t * pos[None, :, :]).sum(axis=1) + np.maximum(b, 0)[None, :]
+    sn = (t * (~pos)[None, :, :]).sum(axis=1) + np.maximum(-b, 0)[None, :]
+    has_neg = np.logical_or((w < 0).any(axis=0), b < 0)
+    return sp - sn - has_neg.astype(np.int64)[None, :]

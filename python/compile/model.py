@@ -1,0 +1,92 @@
+"""L2 — JAX compute graphs for the co-design framework.
+
+Two graphs are AOT-lowered per paper topology (see aot.py):
+
+  * `mlp_fwd_axsum`  — the quantized AxSum inference forward used by the
+    Rust DSE/eval path. It calls the L1 Pallas kernel, so the kernel lowers
+    into the same HLO artifact. With all shifts = 0 it degrades to the
+    *exact* bespoke forward, so one artifact serves both exact-accuracy
+    evaluation and approximate-design evaluation.
+
+  * `train_step` — one minibatch step of the printing-friendly retraining
+    (paper Algorithm 1): straight-through-estimator projection of the
+    coefficients onto the allowed value set VC (the union of the coefficient
+    clusters consumed so far), SGD on softmax cross-entropy, and a count of
+    coefficients whose projection changed (the Rust driver uses it for the
+    adaptive learning-rate rule: "if no coefficient updated -> increase
+    learning rate").
+
+Everything runs in the *integer coefficient domain*: activations are
+integer-valued f32 (primary inputs quantized to [0, 15]), coefficients live
+in [-127, 127]. The softmax temperature input rescales integer-domain
+logits back to float-model magnitudes for a well-conditioned loss.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.axsum import axsum_layer
+from .topologies import W_MAX
+
+
+def mlp_fwd_axsum(x, w1, b1, s1, w2, b2, s2, *, block_b=64, interpret=True):
+    """AxSum quantized forward (integer domain): returns logits [B, Dout]."""
+    h = axsum_layer(x, w1, b1, s1, block_b=block_b, interpret=interpret)
+    h = jnp.maximum(h, 0.0)
+    o = axsum_layer(h, w2, b2, s2, block_b=block_b, interpret=interpret)
+    return (o,)
+
+
+def project_vc(w, vc, vc_mask):
+    """Map each coefficient to its closest allowed value in VC.
+
+    vc: [VC_MAX] candidate values, vc_mask: [VC_MAX] 1.0 for valid slots.
+    Ties resolve to the lowest index (jnp.argmin), i.e. the value the Rust
+    driver ordered first — it emits VC sorted by cluster then magnitude so
+    ties prefer cheaper coefficients.
+    """
+    d = jnp.abs(w[..., None] - vc) + (1.0 - vc_mask) * 1e9
+    idx = jnp.argmin(d, axis=-1)
+    return vc[idx]
+
+
+def _ste(w, vc, vc_mask):
+    """Straight-through estimator: forward uses proj(w), grad flows to w."""
+    return w + jax.lax.stop_gradient(project_vc(w, vc, vc_mask) - w)
+
+
+def _loss_fn(params, x, y1h, vc, vc_mask, temp):
+    w1, b1, w2, b2 = params
+    w1q = _ste(w1, vc, vc_mask)
+    w2q = _ste(w2, vc, vc_mask)
+    h = jnp.maximum(x @ w1q + b1[None, :], 0.0)
+    logits = (h @ w2q + b2[None, :]) / temp
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+
+
+def train_step(w1, b1, w2, b2, x, y1h, vc, vc_mask, lr, temp):
+    """One SGD step of printing-friendly retraining.
+
+    Returns (w1', b1', w2', b2', w1q, w2q, loss, changed) where w?q are the
+    projected (hardware) coefficients after the update and `changed` counts
+    coefficients whose projection moved this step.
+    """
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(_loss_fn)(params, x, y1h, vc, vc_mask, temp)
+    p1o = project_vc(w1, vc, vc_mask)
+    p2o = project_vc(w2, vc, vc_mask)
+    w1n = jnp.clip(w1 - lr * grads[0], -float(W_MAX), float(W_MAX))
+    b1n = b1 - lr * grads[1]
+    w2n = jnp.clip(w2 - lr * grads[2], -float(W_MAX), float(W_MAX))
+    b2n = b2 - lr * grads[3]
+    p1n = project_vc(w1n, vc, vc_mask)
+    p2n = project_vc(w2n, vc, vc_mask)
+    changed = jnp.sum(p1n != p1o) + jnp.sum(p2n != p2o)
+    return (w1n, b1n, w2n, b2n, p1n, p2n, loss, changed.astype(jnp.float32))
+
+
+def float_fwd(x, w1, b1, w2, b2):
+    """Plain float forward (reference model, used in python tests only)."""
+    h = jnp.maximum(x @ w1 + b1[None, :], 0.0)
+    return h @ w2 + b2[None, :]

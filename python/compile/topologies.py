@@ -1,0 +1,48 @@
+"""Paper Table 2 dataset/topology registry (single source of truth).
+
+Each entry is (key, full name, #inputs, #hidden, #outputs). The topologies
+are exactly the paper's Table 2 `#input x L x #output` MLPs. The same table
+is mirrored on the Rust side in `rust/src/datasets/registry.rs`; the AOT
+step additionally dumps `artifacts/topologies.json` so the Rust coordinator
+never hardcodes shapes.
+"""
+
+# key, name, d_in, hidden, d_out, #MACs (paper), paper test accuracy
+TOPOLOGIES = [
+    ("ww", "WhiteWine", 11, 4, 7, 72, 0.54),
+    ("ca", "Cardio", 21, 3, 3, 72, 0.88),
+    ("rw", "RedWine", 11, 2, 6, 34, 0.56),
+    ("pd", "Pendigits", 16, 5, 10, 130, 0.94),
+    ("v3", "VertebralColumn3C", 6, 3, 3, 27, 0.83),
+    ("bs", "BalanceScale", 4, 3, 3, 21, 0.91),
+    ("se", "Seeds", 7, 3, 3, 30, 0.94),
+    ("bc", "BreastCancer", 9, 3, 2, 33, 0.98),
+    ("v2", "VertebralColumn2C", 6, 3, 2, 24, 0.90),
+    ("ma", "Mammographic", 5, 3, 2, 21, 0.86),
+]
+
+# Fixed batch sizes baked into the AOT artifacts. The Rust side pads the
+# final partial batch with zero rows and ignores the padded logits.
+EVAL_BATCH = 256
+TRAIN_BATCH = 64
+
+# Maximum number of candidate coefficient values passed to the train-step
+# artifact: 0 plus +/-w for w in [1,127] plus -128 is 256; padded to a
+# round 256. Unused slots are masked out.
+VC_MAX = 256
+
+# Input activation precision (paper Section 3.1: 4-bit inputs in [0,1]).
+INPUT_BITS = 4
+A_MAX = (1 << INPUT_BITS) - 1  # 15
+
+# Coefficient precision (paper: up to 8 bits, w in [-128, 127]; retraining
+# uses +/- of positive cluster values so the effective range is symmetric).
+COEFF_BITS = 8
+W_MAX = 127
+
+
+def by_key(key):
+    for t in TOPOLOGIES:
+        if t[0] == key:
+            return t
+    raise KeyError(key)

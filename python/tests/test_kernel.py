@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas AxSum kernel vs the pure-jnp and integer oracles.
+
+This is the CORE correctness signal for the compute hot-spot: the same
+semantics are relied on by the HLO artifacts (Rust eval path) and mirrored
+bit-exactly by rust/src/axsum.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.axsum import axsum_layer, vmem_footprint_bytes
+from compile.kernels.ref import (axsum_layer_int, axsum_layer_ref,
+                                 np_int_layer, product_bits)
+from compile.topologies import A_MAX, TOPOLOGIES, W_MAX
+
+
+def _rand_case(rng, b, din, dout, a_max=A_MAX, w_max=W_MAX, max_shift=6):
+    x = rng.integers(0, a_max + 1, size=(b, din)).astype(np.float32)
+    w = rng.integers(-w_max - 1, w_max + 1, size=(din, dout)).astype(np.float32)
+    bias = rng.integers(-200, 200, size=(dout,)).astype(np.float32)
+    s = rng.integers(0, max_shift + 1, size=(din, dout)).astype(np.float32)
+    return x, w, bias, s
+
+
+@pytest.mark.parametrize("b,din,dout", [(64, 4, 3), (128, 11, 7), (64, 21, 3), (256, 16, 10)])
+def test_kernel_matches_ref(b, din, dout):
+    rng = np.random.default_rng(b * 1000 + din * 10 + dout)
+    x, w, bias, s = _rand_case(rng, b, din, dout)
+    got = axsum_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), jnp.asarray(s))
+    want = axsum_layer_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), jnp.asarray(s))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,din,dout", [(64, 5, 2), (64, 9, 3)])
+def test_kernel_matches_integer_oracle(b, din, dout):
+    rng = np.random.default_rng(7)
+    x, w, bias, s = _rand_case(rng, b, din, dout)
+    got = np.asarray(
+        axsum_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), jnp.asarray(s))
+    ).astype(np.int64)
+    want = np_int_layer(x, w, bias, s)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_zero_shift_is_exact_weighted_sum_when_no_negatives():
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 16, size=(64, 6)).astype(np.float32)
+    w = rng.integers(0, 128, size=(6, 4)).astype(np.float32)
+    bias = rng.integers(0, 100, size=(4,)).astype(np.float32)
+    s = np.zeros((6, 4), dtype=np.float32)
+    got = np.asarray(axsum_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), jnp.asarray(s)))
+    want = x @ w + bias[None, :]
+    # no negative coefficients -> no 1's-complement correction, fully exact
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ones_complement_offset_with_negatives():
+    # single neuron, one negative coefficient: S' = Sp - Sn - 1
+    x = np.array([[3.0, 5.0]], dtype=np.float32)
+    w = np.array([[2.0], [-4.0]], dtype=np.float32)
+    bias = np.array([0.0], dtype=np.float32)
+    s = np.zeros((2, 1), dtype=np.float32)
+    got = np.asarray(axsum_layer(jnp.asarray(np.repeat(x, 64, 0)), jnp.asarray(w),
+                                 jnp.asarray(bias), jnp.asarray(s)))[0, 0]
+    assert got == 3 * 2 - 5 * 4 - 1
+
+
+def test_negative_bias_triggers_correction():
+    x = np.zeros((64, 2), dtype=np.float32)
+    w = np.ones((2, 1), dtype=np.float32)
+    bias = np.array([-7.0], dtype=np.float32)
+    s = np.zeros((2, 1), dtype=np.float32)
+    got = np.asarray(axsum_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), jnp.asarray(s)))[0, 0]
+    assert got == -(7) - 1  # 0 - Sn(=|b|) - 1
+
+
+def test_truncation_drops_low_bits_only():
+    # p = 5*3 = 15 (0b1111); shift 2 -> keep 0b11xx = 12
+    x = np.full((64, 1), 5.0, dtype=np.float32)
+    w = np.array([[3.0]], dtype=np.float32)
+    bias = np.array([0.0], dtype=np.float32)
+    s = np.array([[2.0]], dtype=np.float32)
+    got = np.asarray(axsum_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), jnp.asarray(s)))[0, 0]
+    assert got == 12.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    din=st.integers(1, 12),
+    dout=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    max_shift=st.integers(0, 10),
+)
+def test_hypothesis_kernel_vs_numpy_int(din, dout, seed, max_shift):
+    """Property sweep over layer shapes / shift ranges (hypothesis)."""
+    rng = np.random.default_rng(seed)
+    x, w, bias, s = _rand_case(rng, 64, din, dout, max_shift=max_shift)
+    got = np.asarray(
+        axsum_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), jnp.asarray(s))
+    ).astype(np.int64)
+    want = np_int_layer(x, w, bias, s)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_python_int_oracle_agrees(seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias, s = _rand_case(rng, 8, 5, 3)
+    want = np_int_layer(x, w, bias, s)
+    got = axsum_layer_int(
+        x.astype(int).tolist(), w.astype(int).tolist(),
+        bias.astype(int).tolist(), s.astype(int).tolist(),
+    )
+    np.testing.assert_array_equal(np.array(got), want)
+
+
+def test_batch_tiling_invariance():
+    """Result must not depend on the pallas grid tiling."""
+    rng = np.random.default_rng(11)
+    x, w, bias, s = _rand_case(rng, 128, 7, 3)
+    a = axsum_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), jnp.asarray(s), block_b=64)
+    b = axsum_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), jnp.asarray(s), block_b=128)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bad_batch_raises():
+    with pytest.raises(ValueError):
+        axsum_layer(jnp.zeros((65, 3)), jnp.zeros((3, 2)), jnp.zeros((2,)), jnp.zeros((3, 2)))
+
+
+def test_product_bits():
+    assert product_bits(4, 7) == 7      # paper's example: w=+/-7, 4-bit input
+    assert product_bits(4, 1) == 5
+    assert product_bits(4, 0) == 0
+    assert product_bits(4, -128) == 12
+
+
+def test_vmem_budget_all_topologies():
+    """DESIGN.md §Hardware-Adaptation: tile footprint <= 4 MB VMEM-class
+    budget for every paper topology at block_b=64 (weights+shifts resident)."""
+    for _key, _n, din, hidden, dout, _m, _a in TOPOLOGIES:
+        for (a, b) in ((din, hidden), (hidden, dout)):
+            assert vmem_footprint_bytes(64, a, b) < 4 << 20

@@ -1,0 +1,165 @@
+"""L2 correctness: quantized forward, VC projection, and the train step."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.model import (float_fwd, mlp_fwd_axsum, project_vc, train_step)
+from compile.topologies import TOPOLOGIES, VC_MAX, W_MAX
+
+
+def _vc(values):
+    vc = np.zeros(VC_MAX, dtype=np.float32)
+    mask = np.zeros(VC_MAX, dtype=np.float32)
+    vc[: len(values)] = np.asarray(values, dtype=np.float32)
+    mask[: len(values)] = 1.0
+    return jnp.asarray(vc), jnp.asarray(mask)
+
+
+def _rand_mlp(rng, din, hidden, dout):
+    w1 = rng.integers(-40, 40, size=(din, hidden)).astype(np.float32)
+    b1 = rng.normal(0, 10, size=(hidden,)).astype(np.float32)
+    w2 = rng.integers(-40, 40, size=(hidden, dout)).astype(np.float32)
+    b2 = rng.normal(0, 10, size=(dout,)).astype(np.float32)
+    return w1, b1, w2, b2
+
+
+@pytest.mark.parametrize("key,name,din,hidden,dout",
+                         [(t[0], t[1], t[2], t[3], t[4]) for t in TOPOLOGIES])
+def test_fwd_shapes_all_topologies(key, name, din, hidden, dout):
+    rng = np.random.default_rng(1)
+    w1, b1, w2, b2 = _rand_mlp(rng, din, hidden, dout)
+    x = rng.integers(0, 16, size=(64, din)).astype(np.float32)
+    (o,) = mlp_fwd_axsum(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(b1),
+                         jnp.zeros((din, hidden)), jnp.asarray(w2),
+                         jnp.asarray(b2), jnp.zeros((hidden, dout)))
+    assert o.shape == (64, dout)
+    assert np.isfinite(np.asarray(o)).all()
+
+
+def test_fwd_exact_mode_matches_float_when_all_positive():
+    """shifts=0 + all-positive weights/biases => plain integer matmul."""
+    rng = np.random.default_rng(2)
+    din, hidden, dout = 6, 3, 2
+    w1 = rng.integers(0, 30, size=(din, hidden)).astype(np.float32)
+    b1 = rng.integers(0, 20, size=(hidden,)).astype(np.float32)
+    w2 = rng.integers(0, 30, size=(hidden, dout)).astype(np.float32)
+    b2 = rng.integers(0, 20, size=(dout,)).astype(np.float32)
+    x = rng.integers(0, 16, size=(64, din)).astype(np.float32)
+    (o,) = mlp_fwd_axsum(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(b1),
+                         jnp.zeros((din, hidden)), jnp.asarray(w2),
+                         jnp.asarray(b2), jnp.zeros((hidden, dout)))
+    want = float_fwd(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(b1),
+                     jnp.asarray(w2), jnp.asarray(b2))
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(want))
+
+
+def test_fwd_argmax_invariant_under_ones_complement():
+    """The 1's-complement -1 offset applies per-neuron; with mixed-sign
+    weights the exact-mode (s=0) logits differ from the float model by at
+    most 1 + propagated hidden offset; argmax on separated logits agrees."""
+    rng = np.random.default_rng(3)
+    din, hidden, dout = 8, 4, 3
+    w1, b1, w2, b2 = _rand_mlp(rng, din, hidden, dout)
+    x = rng.integers(0, 16, size=(128, din)).astype(np.float32)
+    (o,) = mlp_fwd_axsum(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(b1),
+                         jnp.zeros((din, hidden)), jnp.asarray(w2),
+                         jnp.asarray(b2), jnp.zeros((hidden, dout)))
+    f = np.asarray(float_fwd(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(b1),
+                             jnp.asarray(w2), jnp.asarray(b2)))
+    o = np.asarray(o)
+    # bounded deviation: per-neuron at most (1 + sum|w2| * 1) in magnitude
+    bound = 1 + np.abs(w2).sum(axis=0).max()
+    assert np.max(np.abs(o - f)) <= bound
+    margin = np.sort(f, axis=1)[:, -1] - np.sort(f, axis=1)[:, -2]
+    sep = margin > 2 * bound
+    if sep.any():
+        np.testing.assert_array_equal(o[sep].argmax(1), f[sep].argmax(1))
+
+
+def test_project_vc_basic():
+    vc, mask = _vc([0, 1, 2, 4, 8, -1, -2, -4, -8])
+    w = jnp.asarray(np.array([[0.4, 3.1, -2.9], [7.0, -0.6, 100.0]], dtype=np.float32))
+    p = np.asarray(project_vc(w, vc, mask))
+    np.testing.assert_array_equal(p, np.array([[0, 4, -2], [8, -1, 8]], dtype=np.float32))
+
+
+def test_project_vc_ignores_masked_slots():
+    vc, mask = _vc([0, 64])
+    # slot beyond mask holds 1.0 (would be closest) but must be ignored
+    vc = vc.at[2].set(1.0)
+    w = jnp.asarray(np.array([1.2], dtype=np.float32))
+    assert float(project_vc(w, vc, mask)[0]) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_project_vc_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    vals = sorted(set(rng.integers(-W_MAX, W_MAX + 1, size=12).tolist()))
+    vc, mask = _vc(vals)
+    w = jnp.asarray(rng.uniform(-W_MAX, W_MAX, size=(5, 4)).astype(np.float32))
+    p1 = project_vc(w, vc, mask)
+    p2 = project_vc(p1, vc, mask)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    assert set(np.asarray(p1).ravel().tolist()) <= set(float(v) for v in vals)
+
+
+def _toy_problem(rng, din=6, hidden=3, dout=3, n=64):
+    w1, b1, w2, b2 = _rand_mlp(rng, din, hidden, dout)
+    x = rng.integers(0, 16, size=(n, din)).astype(np.float32)
+    y = rng.integers(0, dout, size=(n,))
+    y1h = np.eye(dout, dtype=np.float32)[y]
+    return (jnp.asarray(w1), jnp.asarray(b1), jnp.asarray(w2), jnp.asarray(b2),
+            jnp.asarray(x), jnp.asarray(y1h))
+
+
+def test_train_step_projects_onto_vc():
+    rng = np.random.default_rng(5)
+    w1, b1, w2, b2, x, y1h = _toy_problem(rng)
+    vc, mask = _vc([0, 1, 2, 4, 8, 16, 32, 64, -1, -2, -4, -8, -16, -32, -64])
+    out = train_step(w1, b1, w2, b2, x, y1h, vc, mask,
+                     jnp.float32(0.05), jnp.float32(1000.0))
+    w1q, w2q = np.asarray(out[4]), np.asarray(out[5])
+    allowed = {0, 1, 2, 4, 8, 16, 32, 64, -1, -2, -4, -8, -16, -32, -64}
+    assert set(w1q.ravel().astype(int).tolist()) <= allowed
+    assert set(w2q.ravel().astype(int).tolist()) <= allowed
+
+
+def test_train_step_reduces_loss():
+    rng = np.random.default_rng(6)
+    w1, b1, w2, b2, x, y1h = _toy_problem(rng, n=64)
+    vc, mask = _vc(list(range(-W_MAX, W_MAX + 1)))  # dense VC: plain QAT
+    lr, temp = jnp.float32(2.0), jnp.float32(500.0)
+    losses = []
+    for _ in range(60):
+        w1, b1, w2, b2, _w1q, _w2q, loss, _ch = train_step(
+            w1, b1, w2, b2, x, y1h, vc, mask, lr, temp)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses[:3] + losses[-3:]
+
+
+def test_train_step_changed_counter():
+    rng = np.random.default_rng(7)
+    w1, b1, w2, b2, x, y1h = _toy_problem(rng)
+    vc, mask = _vc([0, 64, -64])
+    # lr=0: nothing can change
+    out = train_step(w1, b1, w2, b2, x, y1h, vc, mask,
+                     jnp.float32(0.0), jnp.float32(1000.0))
+    assert float(out[7]) == 0.0
+    # huge lr: projections must move
+    out = train_step(w1, b1, w2, b2, x, y1h, vc, mask,
+                     jnp.float32(1e4), jnp.float32(1000.0))
+    assert float(out[7]) > 0.0
+
+
+def test_train_step_clamps_shadow_weights():
+    rng = np.random.default_rng(8)
+    w1, b1, w2, b2, x, y1h = _toy_problem(rng)
+    vc, mask = _vc(list(range(-W_MAX, W_MAX + 1)))
+    out = train_step(w1, b1, w2, b2, x, y1h, vc, mask,
+                     jnp.float32(1e5), jnp.float32(10.0))
+    assert np.abs(np.asarray(out[0])).max() <= W_MAX
+    assert np.abs(np.asarray(out[2])).max() <= W_MAX

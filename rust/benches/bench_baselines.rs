@@ -1,0 +1,38 @@
+//! Bench: Fig. 9 baseline engines — the [8] cross-layer pipeline and the
+//! [15] stochastic-computing bitstream simulator.
+
+use axmlp::baselines::crosslayer::crosslayer_baseline;
+use axmlp::baselines::stochastic::{sc_predict, ScConfig};
+use axmlp::coordinator::{train_mlp0, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::fixed::{quantize, quantize_inputs};
+use axmlp::util::bench::{bench, run, write_csv};
+use axmlp::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let ctx = SharedContext::new();
+    let pcfg = PipelineConfig::default();
+    let ds = datasets::load("v2", 2023);
+    let mlp0 = train_mlp0(&ds, &pcfg.train, 2023);
+    let q0 = quantize(&mlp0);
+    let xq_train = quantize_inputs(&ds.x_train);
+    let xq_test = quantize_inputs(&ds.x_test);
+    let mut results = Vec::new();
+    let r = bench("crosslayer_baseline(v2,5%)", Duration::from_secs(2), || {
+        std::hint::black_box(crosslayer_baseline(
+            &q0, &xq_train, &ds.y_train, &xq_test, &ds.y_test,
+            ctx.lut4(), &ctx.lib, 0.05, 96,
+        ));
+    });
+    r.report();
+    results.push(r);
+
+    let cfg = ScConfig::default();
+    let mut rng = Rng::new(5);
+    let x = ds.x_test[0].clone();
+    results.push(run("sc_predict(v2,1024-bit streams)", || {
+        std::hint::black_box(sc_predict(&mlp0, &x, &cfg, &mut rng));
+    }));
+    write_csv("bench_baselines.csv", &results);
+}

@@ -1,0 +1,20 @@
+//! Bench: multiplier-area LUT synthesis + K-means clustering (Fig. 3
+//! pipeline stage; the paper reports <1 min on 10 Xeon threads for the
+//! LUT and negligible clustering time).
+
+use axmlp::clustering::{cluster_coefficients, multiplier_area_lut};
+use axmlp::pdk::EgtLibrary;
+use axmlp::util::bench::{run, write_csv};
+
+fn main() {
+    let lib = EgtLibrary::egt_v1();
+    let mut results = Vec::new();
+    results.push(run("multiplier_area_lut(4b,0..=127)", || {
+        std::hint::black_box(multiplier_area_lut(4, 127, &lib, 1));
+    }));
+    let lut = multiplier_area_lut(4, 127, &lib, 1);
+    results.push(run("kmeans(128 coeffs, k=4)", || {
+        std::hint::black_box(cluster_coefficients(&lut, 4, 42));
+    }));
+    write_csv("bench_cluster.csv", &results);
+}

@@ -1,0 +1,49 @@
+//! Bench: DSE design-point evaluation (Fig. 5 engine) + the
+//! multiplier-style ablation DESIGN.md calls out (binary vs CSD substrate).
+
+use axmlp::axsum::{derive_shifts, mean_activations, significance};
+use axmlp::coordinator::{train_mlp0, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::dse::{evaluate_design, DseConfig, QuantData};
+use axmlp::estimate::area_mm2;
+use axmlp::fixed::{quantize, quantize_inputs};
+use axmlp::synth::{multiplier_netlist, MultStyle};
+use axmlp::util::bench::{run, write_csv};
+
+fn main() {
+    let ctx = SharedContext::new();
+    let pcfg = PipelineConfig::default();
+    let ds = datasets::load("se", 2023);
+    let q = quantize(&train_mlp0(&ds, &pcfg.train, 2023));
+    let xq_train = quantize_inputs(&ds.x_train);
+    let xq_test = quantize_inputs(&ds.x_test);
+    let data = QuantData {
+        x_train: &xq_train,
+        y_train: &ds.y_train,
+        x_test: &xq_test,
+        y_test: &ds.y_test,
+    };
+    let means = mean_activations(&q, &xq_train);
+    let sig = significance(&q, &means);
+    let cfg = DseConfig {
+        verify_circuit: false,
+        power_patterns: 128,
+        max_eval: 600,
+        ..Default::default()
+    };
+    let g = vec![0.05, 0.05];
+    let mut results = Vec::new();
+    results.push(run("dse_point(seeds,k=2)", || {
+        let plan = derive_shifts(&q, &sig, &g, 2);
+        std::hint::black_box(evaluate_design(&q, plan, 2, g.clone(), &data, &ctx.lib, &cfg));
+    }));
+
+    // ablation: multiplier decomposition style — total LUT area
+    for (name, style) in [("binary", MultStyle::Binary), ("csd", MultStyle::Csd), ("auto", MultStyle::Auto)] {
+        let total: f64 = (1..=127)
+            .map(|w| area_mm2(&multiplier_netlist(4, w, style), &ctx.lib))
+            .sum();
+        println!("ablation mult-style {name:7}: total LUT area {total:.0} mm²");
+    }
+    write_csv("bench_dse.csv", &results);
+}

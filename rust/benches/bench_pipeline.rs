@@ -1,0 +1,34 @@
+//! Bench: whole-pipeline per-dataset wall time (Fig. 6 engine) — the
+//! paper reports ~4 min retraining + ~7 min DSE on 10 Xeon threads; our
+//! substrate turns each dataset around in seconds.
+
+use axmlp::coordinator::{run_dataset, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::retrain::backend_rust::RustBackend;
+use axmlp::util::bench::{bench, write_csv};
+use std::time::Duration;
+
+fn main() {
+    let ctx = SharedContext::new();
+    let mut cfg = PipelineConfig::default();
+    cfg.thresholds = vec![0.01];
+    cfg.dse.max_g_levels = 4;
+    cfg.dse.max_eval = 600;
+    cfg.retrain.epochs_per_level = 5;
+    cfg.train.epochs = 60;
+    let mut results = Vec::new();
+    for key in ["v2", "se"] {
+        let ds = datasets::load(key, 2023);
+        let r = bench(
+            &format!("pipeline({key},T=1%)"),
+            Duration::from_secs(3),
+            || {
+                let mut be = RustBackend;
+                std::hint::black_box(run_dataset(&ds, &cfg, &ctx, &mut be).unwrap());
+            },
+        );
+        r.report();
+        results.push(r);
+    }
+    write_csv("bench_pipeline.csv", &results);
+}

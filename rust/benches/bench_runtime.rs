@@ -1,0 +1,54 @@
+//! Bench: PJRT artifact execution — the L3->L2 hot path (batched AxSum
+//! forward and one retraining step). Skips when artifacts are absent.
+
+use axmlp::axsum::ShiftPlan;
+use axmlp::fixed::QuantMlp;
+use axmlp::retrain::{RetrainState, TrainBackend};
+use axmlp::runtime::{backend_pjrt::PjrtBackend, Runtime};
+use axmlp::util::bench::{run, write_csv};
+use axmlp::util::rng::Rng;
+
+fn main() {
+    let Ok(rt) = Runtime::new(Runtime::default_dir()) else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let mut rng = Rng::new(7);
+    let top = rt.index.by_key("pd").unwrap().clone();
+    let q = QuantMlp {
+        w: vec![
+            (0..top.hidden)
+                .map(|_| (0..top.din).map(|_| rng.range_i64(-100, 100)).collect())
+                .collect(),
+            (0..top.dout)
+                .map(|_| (0..top.hidden).map(|_| rng.range_i64(-100, 100)).collect())
+                .collect(),
+        ],
+        b: vec![vec![0; top.hidden], vec![0; top.dout]],
+        in_bits: 4,
+        w_scales: vec![1.0, 1.0],
+    };
+    let plan = ShiftPlan::exact(&q);
+    let xs: Vec<Vec<i64>> = (0..rt.index.eval_batch)
+        .map(|_| (0..top.din).map(|_| rng.range_i64(0, 15)).collect())
+        .collect();
+    // warm-up: compile once
+    let _ = rt.forward_logits("pd", &q, &plan, &xs).unwrap();
+    let mut results = Vec::new();
+    results.push(run("pjrt_fwd_batch256(pd)", || {
+        std::hint::black_box(rt.forward_logits("pd", &q, &plan, &xs).unwrap());
+    }));
+
+    let ys: Vec<usize> = (0..512).map(|_| rng.below(top.dout)).collect();
+    let xt: Vec<Vec<i64>> = (0..512)
+        .map(|_| (0..top.din).map(|_| rng.range_i64(0, 15)).collect())
+        .collect();
+    let mut st = RetrainState::from_quant(&q, &xt, &ys, rt.index.train_batch, 9);
+    let vc: Vec<f32> = (-127..=127).map(|v| v as f32).collect();
+    let mut be = PjrtBackend::new(&rt, "pd").unwrap();
+    let _ = be.train_epoch(&mut st, &vc, 0.1).unwrap();
+    results.push(run("pjrt_train_epoch(pd,512 samples)", || {
+        std::hint::black_box(be.train_epoch(&mut st, &vc, 0.1).unwrap());
+    }));
+    write_csv("bench_runtime.csv", &results);
+}

@@ -1,0 +1,45 @@
+//! Bench: levelized word-parallel logic simulation (the power-activity
+//! engine behind every synthesized design point).
+
+use std::collections::HashMap;
+
+use axmlp::sim::simulate;
+use axmlp::synth::{build_mlp, MlpCircuitSpec, NeuronStyle};
+use axmlp::util::bench::{run, write_csv};
+use axmlp::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let w1: Vec<Vec<i64>> = (0..5)
+        .map(|_| (0..16).map(|_| rng.range_i64(-127, 127)).collect())
+        .collect();
+    let w2: Vec<Vec<i64>> = (0..10)
+        .map(|_| (0..5).map(|_| rng.range_i64(-127, 127)).collect())
+        .collect();
+    let spec = MlpCircuitSpec::exact(
+        "pd",
+        vec![w1, w2],
+        vec![vec![3; 5], vec![-7; 10]],
+        4,
+        NeuronStyle::AxSum,
+    );
+    let nl = build_mlp(&spec);
+    eprintln!("pendigits-sized netlist: {} cells", nl.n_cells());
+    let mut inputs: HashMap<String, Vec<u64>> = HashMap::new();
+    for i in 0..16 {
+        inputs.insert(
+            format!("x{i}"),
+            (0..256).map(|_| rng.below(16) as u64).collect(),
+        );
+    }
+    let mut results = Vec::new();
+    for pats in [64usize, 256] {
+        results.push(run(&format!("simulate(pd,{pats}p,toggles)"), || {
+            std::hint::black_box(simulate(&nl, &inputs, pats, true));
+        }));
+        results.push(run(&format!("simulate(pd,{pats}p,no-toggles)"), || {
+            std::hint::black_box(simulate(&nl, &inputs, pats, false));
+        }));
+    }
+    write_csv("bench_sim.csv", &results);
+}

@@ -1,0 +1,50 @@
+//! Bench: bespoke synthesis substrate (feeds Fig. 2a/2b regeneration).
+//! Measures multiplier + neuron + full-MLP netlist generation throughput.
+
+use axmlp::netlist::Netlist;
+use axmlp::synth::{
+    build_mlp, exact_neuron, multiplier_netlist, MlpCircuitSpec, MultStyle, NeuronStyle, UBus,
+    DEFAULT_MULT_STYLE,
+};
+use axmlp::util::bench::{run, write_csv};
+use axmlp::util::rng::Rng;
+
+fn main() {
+    let mut results = Vec::new();
+    results.push(run("multiplier_netlist(w=93,4b,default)", || {
+        std::hint::black_box(multiplier_netlist(4, 93, DEFAULT_MULT_STYLE));
+    }));
+    results.push(run("multiplier_netlist(w=93,4b,csd)", || {
+        std::hint::black_box(multiplier_netlist(4, 93, MultStyle::Csd));
+    }));
+    let mut rng = Rng::new(1);
+    let weights: Vec<i64> = (0..16).map(|_| rng.range_i64(-127, 127)).collect();
+    results.push(run("exact_neuron(16 inputs)", || {
+        let mut nl = Netlist::new("n");
+        let ins: Vec<UBus> = (0..16)
+            .map(|i| UBus::from_nets(nl.input_bus(format!("a{i}"), 4)))
+            .collect();
+        let s = exact_neuron(&mut nl, &ins, &weights, 5);
+        nl.output_bus("s", s.nets.clone());
+        std::hint::black_box(nl.sweep());
+    }));
+    // full Pendigits-sized MLP circuit (the largest paper topology)
+    let mut rng = Rng::new(2);
+    let w1: Vec<Vec<i64>> = (0..5)
+        .map(|_| (0..16).map(|_| rng.range_i64(-127, 127)).collect())
+        .collect();
+    let w2: Vec<Vec<i64>> = (0..10)
+        .map(|_| (0..5).map(|_| rng.range_i64(-127, 127)).collect())
+        .collect();
+    let spec = MlpCircuitSpec::exact(
+        "pd",
+        vec![w1, w2],
+        vec![vec![3; 5], vec![-7; 10]],
+        4,
+        NeuronStyle::AxSum,
+    );
+    results.push(run("build_mlp(pendigits 16x5x10)", || {
+        std::hint::black_box(build_mlp(&spec));
+    }));
+    write_csv("bench_synth.csv", &results);
+}

@@ -1,0 +1,34 @@
+//! Bench: Table 2 end-to-end row (train MLP0 -> quantize -> synthesize
+//! exact baseline -> estimate) for the smallest and largest topologies.
+
+use axmlp::axsum::ShiftPlan;
+use axmlp::coordinator::{train_mlp0, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::dse::circuit_costs;
+use axmlp::fixed::{quantize, quantize_inputs};
+use axmlp::synth::NeuronStyle;
+use axmlp::util::bench::{run, write_csv};
+
+fn main() {
+    let ctx = SharedContext::new();
+    let cfg = PipelineConfig::default();
+    let mut results = Vec::new();
+    for key in ["ma", "pd"] {
+        let ds = datasets::load(key, 2023);
+        let q = quantize(&train_mlp0(&ds, &cfg.train, 2023));
+        let stim: Vec<Vec<i64>> = quantize_inputs(&ds.x_test)
+            .into_iter()
+            .take(192)
+            .collect();
+        results.push(run(&format!("table2_row({key})"), || {
+            std::hint::black_box(circuit_costs(
+                &q,
+                &ShiftPlan::exact(&q),
+                NeuronStyle::ExactBespoke,
+                &stim,
+                &ctx.lib,
+            ));
+        }));
+    }
+    write_csv("bench_table2.csv", &results);
+}

@@ -1,0 +1,367 @@
+//! Baseline [8]: "Cross-Layer Approximation For Printed Machine Learning
+//! Circuits" (DATE'22) — post-training, no retraining:
+//!
+//!  1. **Algorithmic weight approximation**: greedily replace each
+//!     coefficient with a cheaper nearby value (lower bespoke-multiplier
+//!     area) while the train-split accuracy stays within the loss budget.
+//!  2. **Hardware gate pruning**: simulate the synthesized circuit on a
+//!     training stimulus, then replace near-constant gates (output
+//!     probability ≤ θ or ≥ 1-θ) by constants; sweep θ and keep the most
+//!     aggressive pruning meeting the budget.
+//!
+//! Both stages mirror the reference paper's cross-layer recipe but run on
+//! our netlist/PDK substrate so Fig. 9's comparison is apples-to-apples.
+
+use std::collections::HashMap;
+
+use crate::clustering::AreaLut;
+use crate::estimate::{estimate, Costs};
+use crate::fixed::QuantMlp;
+use crate::netlist::Netlist;
+use crate::pdk::{CellKind, EgtLibrary};
+use crate::sim::simulate;
+use crate::synth::{build_mlp, MlpCircuitSpec, NeuronStyle};
+
+/// Stage 1: post-training weight approximation. Greedy, most-saving
+/// first; accepts a replacement only if train accuracy stays within
+/// `budget` of `acc0`. `window` bounds the value search radius.
+pub fn weight_approximate(
+    q0: &QuantMlp,
+    lut: &AreaLut,
+    x_train: &[Vec<i64>],
+    y_train: &[usize],
+    acc0: f64,
+    budget: f64,
+    window: i64,
+) -> QuantMlp {
+    let mut q = q0.clone();
+    // candidate moves: (saving, layer, row, col, new_w)
+    let mut moves: Vec<(f64, usize, usize, usize, i64)> = Vec::new();
+    for (l, layer) in q.w.iter().enumerate() {
+        for (j, row) in layer.iter().enumerate() {
+            for (i, &w) in row.iter().enumerate() {
+                if w == 0 {
+                    continue;
+                }
+                let cur = lut.area_of(w);
+                let mut best: Option<(f64, i64)> = None;
+                for d in -window..=window {
+                    let cand = w + d;
+                    if cand == w || cand.abs() > 127 {
+                        continue;
+                    }
+                    let a = lut.area_of(cand);
+                    if a < cur && best.map(|(ba, _)| a < ba).unwrap_or(true) {
+                        best = Some((a, cand));
+                    }
+                }
+                if let Some((a, cand)) = best {
+                    moves.push((cur - a, l, j, i, cand));
+                }
+            }
+        }
+    }
+    moves.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    for (_saving, l, j, i, cand) in moves {
+        let old = q.w[l][j][i];
+        q.w[l][j][i] = cand;
+        let acc = q.accuracy_exact(x_train, y_train);
+        if acc < acc0 - budget {
+            q.w[l][j][i] = old;
+        }
+    }
+    q
+}
+
+/// Stage 2: gate pruning. Replace gates whose simulated output is 1 with
+/// probability ≥ 1-θ (or ≤ θ) by constants, then sweep away dead logic.
+pub fn gate_prune(nl: &Netlist, stimulus: &HashMap<String, Vec<u64>>, patterns: usize, theta: f64) -> Netlist {
+    let ones = ones_counts(nl, stimulus, patterns);
+    let mut out = nl.clone();
+    for (i, g) in nl.gates.iter().enumerate() {
+        if matches!(
+            g.kind,
+            CellKind::Input | CellKind::Const0 | CellKind::Const1
+        ) {
+            continue;
+        }
+        let p1 = ones[i] as f64 / patterns as f64;
+        if p1 <= theta {
+            out.gates[i] = crate::netlist::Gate {
+                kind: CellKind::Const0,
+                ins: [0; 3],
+            };
+        } else if p1 >= 1.0 - theta {
+            out.gates[i] = crate::netlist::Gate {
+                kind: CellKind::Const1,
+                ins: [0; 3],
+            };
+        }
+    }
+    out.sweep().0
+}
+
+/// Per-gate count of patterns where the output is 1.
+fn ones_counts(nl: &Netlist, inputs: &HashMap<String, Vec<u64>>, patterns: usize) -> Vec<u64> {
+    // lightweight re-implementation of the simulator inner loop that
+    // popcounts each word instead of capturing outputs
+    let n = nl.gates.len();
+    let mut ones = vec![0u64; n];
+    let mut words = vec![0u64; n];
+    let chunks = patterns.div_ceil(64);
+    for chunk in 0..chunks {
+        let base = chunk * 64;
+        let in_chunk = (patterns - base).min(64);
+        for bus in &nl.inputs {
+            let vals = inputs.get(&bus.name);
+            for (biti, &net) in bus.nets.iter().enumerate() {
+                let mut w = 0u64;
+                for p in 0..in_chunk {
+                    let v = vals.and_then(|v| v.get(base + p)).copied().unwrap_or(0);
+                    if (v >> biti) & 1 == 1 {
+                        w |= 1u64 << p;
+                    }
+                }
+                words[net as usize] = w;
+            }
+        }
+        for (i, g) in nl.gates.iter().enumerate() {
+            let w = match g.kind {
+                CellKind::Input => words[i],
+                CellKind::Const0 => 0,
+                CellKind::Const1 => u64::MAX,
+                CellKind::Buf => words[g.ins[0] as usize],
+                CellKind::Inv => !words[g.ins[0] as usize],
+                CellKind::And2 => words[g.ins[0] as usize] & words[g.ins[1] as usize],
+                CellKind::Or2 => words[g.ins[0] as usize] | words[g.ins[1] as usize],
+                CellKind::Nand2 => !(words[g.ins[0] as usize] & words[g.ins[1] as usize]),
+                CellKind::Nor2 => !(words[g.ins[0] as usize] | words[g.ins[1] as usize]),
+                CellKind::Xor2 => words[g.ins[0] as usize] ^ words[g.ins[1] as usize],
+                CellKind::Xnor2 => !(words[g.ins[0] as usize] ^ words[g.ins[1] as usize]),
+                CellKind::Mux2 => {
+                    let s = words[g.ins[0] as usize];
+                    (s & words[g.ins[1] as usize]) | (!s & words[g.ins[2] as usize])
+                }
+            };
+            words[i] = w;
+            let mask = if in_chunk == 64 {
+                u64::MAX
+            } else {
+                (1u64 << in_chunk) - 1
+            };
+            ones[i] += (w & mask).count_ones() as u64;
+        }
+    }
+    ones
+}
+
+/// Outcome of the full [8] pipeline.
+#[derive(Clone, Debug)]
+pub struct CrosslayerOutcome {
+    pub q: QuantMlp,
+    pub theta: f64,
+    pub acc_train: f64,
+    pub acc_test: f64,
+    pub costs: Costs,
+}
+
+/// Run the full cross-layer baseline for an accuracy-loss budget
+/// (train-split driven, test-split reported).
+pub fn crosslayer_baseline(
+    q0: &QuantMlp,
+    x_train: &[Vec<i64>],
+    y_train: &[usize],
+    x_test: &[Vec<i64>],
+    y_test: &[usize],
+    lut: &AreaLut,
+    lib: &EgtLibrary,
+    budget: f64,
+    power_patterns: usize,
+) -> CrosslayerOutcome {
+    let acc0 = q0.accuracy_exact(x_train, y_train);
+    // stage 1: weight approximation (half the budget, as in the reference
+    // paper's split between algorithmic and hardware approximation)
+    let q = weight_approximate(q0, lut, x_train, y_train, acc0, budget * 0.5, 8);
+
+    // synthesize the exact bespoke circuit of the approximated model
+    let spec = MlpCircuitSpec::exact(
+        "crosslayer",
+        q.w.clone(),
+        q.b.clone(),
+        q.in_bits,
+        NeuronStyle::ExactBespoke,
+    );
+    let base_nl = build_mlp(&spec);
+
+    // stimulus from the train split
+    let mk_inputs = |xs: &[Vec<i64>], n: usize| -> HashMap<String, Vec<u64>> {
+        let mut m = HashMap::new();
+        for i in 0..q.din() {
+            m.insert(
+                format!("x{i}"),
+                xs.iter().take(n).map(|x| x[i] as u64).collect(),
+            );
+        }
+        m
+    };
+    let train_stim = mk_inputs(x_train, power_patterns.max(64));
+    let train_pats = x_train.len().min(power_patterns.max(64));
+
+    // stage 2: sweep θ, keep the most aggressive pruning within budget
+    let mut chosen = base_nl.clone();
+    let mut chosen_theta = 0.0;
+    for &theta in &[0.01, 0.02, 0.05, 0.08, 0.12, 0.2] {
+        let pruned = gate_prune(&base_nl, &train_stim, train_pats, theta);
+        let acc = circuit_accuracy(&pruned, x_train, y_train);
+        if acc >= acc0 - budget {
+            chosen = pruned;
+            chosen_theta = theta;
+        } else {
+            break;
+        }
+    }
+
+    let acc_train = circuit_accuracy(&chosen, x_train, y_train);
+    let acc_test = circuit_accuracy(&chosen, x_test, y_test);
+    let test_stim = mk_inputs(x_test, power_patterns);
+    let sim = simulate(&chosen, &test_stim, x_test.len().min(power_patterns), true);
+    let costs = estimate(&chosen, lib, Some(&sim));
+    CrosslayerOutcome {
+        q,
+        theta: chosen_theta,
+        acc_train,
+        acc_test,
+        costs,
+    }
+}
+
+/// Classification accuracy of a (possibly pruned) MLP circuit by direct
+/// simulation.
+pub fn circuit_accuracy(nl: &Netlist, xs: &[Vec<i64>], ys: &[usize]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let din = nl.inputs.len();
+    let mut inputs: HashMap<String, Vec<u64>> = HashMap::new();
+    for i in 0..din {
+        inputs.insert(
+            format!("x{i}"),
+            xs.iter().map(|x| x[i] as u64).collect(),
+        );
+    }
+    let r = simulate(nl, &inputs, xs.len(), false);
+    let classes = &r.outputs["class"];
+    let ok = classes
+        .iter()
+        .zip(ys)
+        .filter(|(&c, &y)| c as usize == y)
+        .count();
+    ok as f64 / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::multiplier_area_lut;
+    use crate::util::rng::Rng;
+
+    fn toy() -> (QuantMlp, Vec<Vec<i64>>, Vec<usize>) {
+        let mut rng = Rng::new(31);
+        let q = QuantMlp {
+            w: vec![
+                (0..3)
+                    .map(|_| (0..4).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+                (0..2)
+                    .map(|_| (0..3).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+            ],
+            b: vec![
+                (0..3).map(|_| rng.range_i64(-30, 30)).collect(),
+                (0..2).map(|_| rng.range_i64(-30, 30)).collect(),
+            ],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        };
+        let xs: Vec<Vec<i64>> = (0..240)
+            .map(|_| (0..4).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let ys: Vec<usize> = xs.iter().map(|x| q.predict_exact(x)).collect();
+        (q, xs, ys)
+    }
+
+    #[test]
+    fn weight_approximation_reduces_lut_area_within_budget() {
+        let (q, xs, ys) = toy();
+        let lut = multiplier_area_lut(4, 127, &EgtLibrary::egt_v1(), 8);
+        let acc0 = q.accuracy_exact(&xs, &ys);
+        let qa = weight_approximate(&q, &lut, &xs, &ys, acc0, 0.05, 8);
+        let area = |m: &QuantMlp| -> f64 {
+            m.w.iter()
+                .flat_map(|l| l.iter())
+                .flat_map(|r| r.iter())
+                .map(|&w| lut.area_of(w))
+                .sum()
+        };
+        assert!(area(&qa) < area(&q));
+        assert!(qa.accuracy_exact(&xs, &ys) >= acc0 - 0.05 - 1e-9);
+    }
+
+    #[test]
+    fn gate_prune_shrinks_circuit() {
+        let (q, xs, _ys) = toy();
+        let spec = MlpCircuitSpec::exact(
+            "t",
+            q.w.clone(),
+            q.b.clone(),
+            4,
+            NeuronStyle::ExactBespoke,
+        );
+        let nl = build_mlp(&spec);
+        let mut stim = HashMap::new();
+        for i in 0..4 {
+            stim.insert(
+                format!("x{i}"),
+                xs.iter().take(128).map(|x| x[i] as u64).collect::<Vec<u64>>(),
+            );
+        }
+        let pruned = gate_prune(&nl, &stim, 128, 0.05);
+        assert!(pruned.n_cells() < nl.n_cells());
+    }
+
+    #[test]
+    fn full_pipeline_respects_budget_on_train() {
+        let (q, xs, ys) = toy();
+        let lut = multiplier_area_lut(4, 127, &EgtLibrary::egt_v1(), 8);
+        let out = crosslayer_baseline(
+            &q,
+            &xs[..160],
+            &ys[..160],
+            &xs[160..],
+            &ys[160..],
+            &lut,
+            &EgtLibrary::egt_v1(),
+            0.05,
+            64,
+        );
+        let acc0 = q.accuracy_exact(&xs[..160], &ys[..160]);
+        assert!(out.acc_train >= acc0 - 0.05 - 1e-9, "{}", out.acc_train);
+        assert!(out.costs.area_mm2 > 0.0);
+    }
+
+    #[test]
+    fn circuit_accuracy_matches_software_on_exact_model() {
+        let (q, xs, ys) = toy();
+        let spec = MlpCircuitSpec::exact(
+            "t",
+            q.w.clone(),
+            q.b.clone(),
+            4,
+            NeuronStyle::ExactBespoke,
+        );
+        let nl = build_mlp(&spec);
+        let acc_hw = circuit_accuracy(&nl, &xs, &ys);
+        let acc_sw = q.accuracy_exact(&xs, &ys);
+        assert!((acc_hw - acc_sw).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Comparison baselines (paper §4 / Fig. 9).
+//!
+//! * **[2] exact bespoke** — the `synth::NeuronStyle::ExactBespoke` path
+//!   (conventional signed products + sign-extended adder tree); evaluated
+//!   directly by the Table 2 / Fig. 6 experiments.
+//! * **[8] cross-layer AC** (`crosslayer`) — post-training coefficient
+//!   approximation + netlist-level gate pruning, rebuilt on our substrate.
+//! * **[15] stochastic computing** (`stochastic`) — bitstream SC MLP
+//!   simulator + SC hardware cost model.
+
+pub mod crosslayer;
+pub mod stochastic;

@@ -1,0 +1,328 @@
+//! Baseline [15]: "Printed Stochastic Computing Neural Networks" (DATE'21).
+//!
+//! Bipolar stochastic computing MLP: every value v ∈ [-1, 1] is a
+//! bitstream with P(1) = (v+1)/2; multiplication is XNOR; addition is a
+//! MUX tree (scaled average); hidden activations are counted back to
+//! binary, ReLU'd, and re-encoded for the next layer. Stream length is
+//! 1024 as in the reference (≈220 ms/inference at printed clock rates).
+//!
+//! * **Accuracy** — software simulation with u64-packed streams and
+//!   LFSR-driven stochastic number generators (SNGs).
+//! * **Hardware** — an analytical cost model over the EGT PDK cells plus a
+//!   DFF parameter set (the SC design is sequential; our combinational
+//!   netlist IR doesn't carry state, so SNG/counter costs are counted
+//!   structurally — documented in DESIGN.md §2).
+
+use crate::estimate::Costs;
+use crate::mlp::Mlp;
+use crate::pdk::{CellKind, EgtLibrary};
+use crate::util::rng::Rng;
+use crate::util::stats::argmax_f64;
+
+/// SC simulation/config parameters.
+#[derive(Clone, Debug)]
+pub struct ScConfig {
+    pub stream_len: usize,
+    pub seed: u64,
+    /// Clock period in ms (printed EGT registers; 1024 cycles ≈ 220 ms).
+    pub clock_ms: f64,
+}
+
+impl Default for ScConfig {
+    fn default() -> Self {
+        ScConfig {
+            stream_len: 1024,
+            seed: 0x5C5C,
+            clock_ms: 0.215,
+        }
+    }
+}
+
+/// Bit-packed stochastic stream.
+#[derive(Clone, Debug)]
+pub struct Stream(pub Vec<u64>);
+
+impl Stream {
+    pub fn words(len: usize) -> usize {
+        len.div_ceil(64)
+    }
+
+    /// Encode bipolar value v ∈ [-1,1]: P(1) = (v+1)/2, using an
+    /// independent pseudo-random sequence (software SNG).
+    pub fn encode(v: f64, len: usize, rng: &mut Rng) -> Stream {
+        let p = ((v + 1.0) / 2.0).clamp(0.0, 1.0);
+        let mut words = vec![0u64; Self::words(len)];
+        for t in 0..len {
+            if rng.f64() < p {
+                words[t / 64] |= 1u64 << (t % 64);
+            }
+        }
+        Stream(words)
+    }
+
+    pub fn ones(&self, len: usize) -> u32 {
+        let mut total = 0;
+        for (i, w) in self.0.iter().enumerate() {
+            let bits = (len - i * 64).min(64);
+            let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+            total += (w & mask).count_ones();
+        }
+        total
+    }
+
+    /// Decode bipolar value.
+    pub fn decode(&self, len: usize) -> f64 {
+        2.0 * self.ones(len) as f64 / len as f64 - 1.0
+    }
+
+    /// XNOR multiply (bipolar SC multiplication).
+    pub fn xnor(&self, other: &Stream) -> Stream {
+        Stream(
+            self.0
+                .iter()
+                .zip(&other.0)
+                .map(|(&a, &b)| !(a ^ b))
+                .collect(),
+        )
+    }
+
+    /// MUX-select between two streams with a fair select stream
+    /// (scaled addition: result ≈ (a+b)/2).
+    pub fn mux(&self, other: &Stream, select: &Stream) -> Stream {
+        Stream(
+            self.0
+                .iter()
+                .zip(&other.0)
+                .zip(&select.0)
+                .map(|((&a, &b), &s)| (s & a) | (!s & b))
+                .collect(),
+        )
+    }
+}
+
+/// Scaled MUX-tree sum of n streams: decodes to (Σ v_i) / 2^ceil(log2 n).
+pub fn mux_tree_sum(mut streams: Vec<Stream>, len: usize, rng: &mut Rng) -> (Stream, usize) {
+    assert!(!streams.is_empty());
+    // pad to a power of two with zero-valued streams (bipolar 0 adds
+    // nothing to the sum) — exactly what the hardware tree does
+    let target = streams.len().next_power_of_two();
+    while streams.len() < target {
+        streams.push(Stream::encode(0.0, len, rng));
+    }
+    let mut scale = 1usize;
+    while streams.len() > 1 {
+        let mut next = Vec::with_capacity(streams.len() / 2);
+        let mut it = streams.into_iter();
+        while let Some(a) = it.next() {
+            let b = it.next().expect("power-of-two tree");
+            let sel = Stream::encode(0.0, len, rng); // P(1)=0.5
+            next.push(a.mux(&b, &sel));
+        }
+        scale *= 2;
+        streams = next;
+    }
+    (streams.pop().unwrap(), scale)
+}
+
+/// SC forward pass of a float MLP (weights normalized per layer to
+/// [-1,1]); returns predicted class.
+pub fn sc_predict(m: &Mlp, x: &[f32], cfg: &ScConfig, rng: &mut Rng) -> usize {
+    let len = cfg.stream_len;
+    let (m1, m2) = m.max_abs_weights();
+    let s1 = if m1 > 0.0 { m1 as f64 } else { 1.0 };
+    let s2 = if m2 > 0.0 { m2 as f64 } else { 1.0 };
+
+    // layer 1: inputs x ∈ [0,1] mapped to bipolar [-1,1]
+    let x_streams: Vec<Stream> = x
+        .iter()
+        .map(|&v| Stream::encode(v as f64 * 2.0 - 1.0, len, rng))
+        .collect();
+    let mut hidden: Vec<f64> = Vec::with_capacity(m.hidden);
+    for j in 0..m.hidden {
+        let mut terms: Vec<Stream> = Vec::with_capacity(m.din + 1);
+        for i in 0..m.din {
+            let w = Stream::encode(m.w1[j][i] as f64 / s1, len, rng);
+            terms.push(x_streams[i].xnor(&w));
+        }
+        // bias as an extra term (bias normalized by s1, input of 1.0)
+        terms.push(Stream::encode((m.b1[j] as f64 / s1).clamp(-1.0, 1.0), len, rng));
+        let (sum, scale) = mux_tree_sum(terms, len, rng);
+        // decode, undo the mux scaling and the weight normalization, then
+        // the bipolar-input mapping: x = (bip+1)/2 ⇒ Σ w·x = (Σ w·bip + Σw)/2
+        let bip = sum.decode(len) * scale as f64 * s1;
+        let wsum: f64 = m.w1[j].iter().map(|&w| w as f64).sum::<f64>() + m.b1[j] as f64;
+        let z = (bip + wsum) / 2.0;
+        hidden.push(z.max(0.0)); // binary-domain ReLU after the counter
+    }
+
+    // layer 2: re-encode normalized hidden activations
+    let hmax = hidden.iter().copied().fold(1e-9f64, f64::max);
+    let h_streams: Vec<Stream> = hidden
+        .iter()
+        .map(|&h| Stream::encode(h / hmax * 2.0 - 1.0, len, rng))
+        .collect();
+    let mut logits: Vec<f64> = Vec::with_capacity(m.dout);
+    for o in 0..m.dout {
+        let mut terms: Vec<Stream> = Vec::with_capacity(m.hidden + 1);
+        for j in 0..m.hidden {
+            let w = Stream::encode(m.w2[o][j] as f64 / s2, len, rng);
+            terms.push(h_streams[j].xnor(&w));
+        }
+        terms.push(Stream::encode(
+            (m.b2[o] as f64 / (s2 * hmax)).clamp(-1.0, 1.0),
+            len,
+            rng,
+        ));
+        let (sum, scale) = mux_tree_sum(terms, len, rng);
+        let bip = sum.decode(len) * scale as f64 * s2 * hmax;
+        let wsum: f64 =
+            m.w2[o].iter().map(|&w| w as f64 * hmax).sum::<f64>() + m.b2[o] as f64;
+        logits.push((bip + wsum) / 2.0);
+    }
+    argmax_f64(&logits)
+}
+
+pub fn sc_accuracy(m: &Mlp, xs: &[Vec<f32>], ys: &[usize], cfg: &ScConfig) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let ok = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, &y)| sc_predict(m, x, cfg, &mut rng) == y)
+        .count();
+    ok as f64 / xs.len() as f64
+}
+
+// ---------------------------------------------------------------------------
+// Hardware cost model
+// ---------------------------------------------------------------------------
+
+/// DFF parameters (not part of the combinational cell set): printed EGT
+/// flip-flop ≈ 2.6× a NAND2 footprint.
+fn dff_params(lib: &EgtLibrary) -> (f64, f64) {
+    let nand = lib.params(CellKind::Nand2);
+    (nand.area_mm2 * 2.6, nand.power_uw * 2.6)
+}
+
+/// Analytical SC MLP hardware costs on the EGT PDK.
+///
+/// Structure per the reference design: one 10-bit LFSR + comparator SNG
+/// per primary input / weight constant / select line group, XNOR per
+/// product, MUX tree per neuron, an 11-bit up-counter + comparator ReLU
+/// per hidden neuron, counters + binary argmax at the outputs.
+pub fn sc_mlp_costs(din: usize, hidden: usize, dout: usize, lib: &EgtLibrary, cfg: &ScConfig) -> Costs {
+    let (dff_a, dff_p) = dff_params(lib);
+    let xor = lib.params(CellKind::Xor2);
+    let xnor = lib.params(CellKind::Xnor2);
+    let mux = lib.params(CellKind::Mux2);
+    let and = lib.params(CellKind::And2);
+    let nbits = 10; // LFSR width for 1024-bit streams
+
+    // SNG: nbits DFF + 3 XOR (taps) + nbits-bit comparator (~2 gates/bit)
+    let sng_area = nbits as f64 * dff_a + 3.0 * xor.area_mm2 + nbits as f64 * 2.0 * and.area_mm2;
+    let sng_power = nbits as f64 * dff_p + 3.0 * xor.power_uw + nbits as f64 * 2.0 * and.power_uw;
+
+    // counter: 11 DFF + increment logic (~1 AND + 1 XOR per bit)
+    let ctr_bits = 11.0;
+    let ctr_area = ctr_bits * (dff_a + and.area_mm2 + xor.area_mm2);
+    let ctr_power = ctr_bits * (dff_p + and.power_uw + xor.power_uw);
+
+    // SNG count: inputs + weight streams (one per MAC, hardwired constants
+    // share the LFSR but need their own comparator — count 0.4 SNG each) +
+    // select generation per neuron + hidden re-encode
+    let macs = (din * hidden + hidden * dout) as f64;
+    let n_sng = din as f64 + 0.4 * macs + (hidden + dout) as f64 + hidden as f64;
+    // products + biases
+    let n_xnor = macs + (hidden + dout) as f64;
+    let n_mux = ((din + 1 - 1) * hidden + (hidden + 1 - 1) * dout) as f64;
+    let n_ctr = (hidden + dout) as f64;
+
+    let area_mm2 = n_sng * sng_area
+        + n_xnor * xnor.area_mm2
+        + n_mux * mux.area_mm2
+        + n_ctr * ctr_area;
+    let power_uw_raw = n_sng * sng_power
+        + n_xnor * xnor.power_uw
+        + n_mux * mux.power_uw
+        + n_ctr * ctr_power;
+    // sequential logic toggles every cycle: use the full reference power
+    // (static + dynamic at the 0.5 reference toggle rate = 1.0 × power_uw)
+    Costs {
+        area_mm2,
+        power_mw: power_uw_raw / 1000.0,
+        delay_ms: cfg.stream_len as f64 * cfg.clock_ms,
+        cells: (n_sng * (nbits as f64 + 3.0) + n_xnor + n_mux + n_ctr * ctr_bits) as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stream_encode_decode() {
+        let mut rng = Rng::new(1);
+        for &v in &[-1.0, -0.5, 0.0, 0.4, 1.0] {
+            let s = Stream::encode(v, 4096, &mut rng);
+            assert!((s.decode(4096) - v).abs() < 0.06, "v={v}");
+        }
+    }
+
+    #[test]
+    fn xnor_multiplies_bipolar() {
+        let mut rng = Rng::new(2);
+        for &(a, b) in &[(0.5, 0.5), (-0.6, 0.7), (0.9, -0.9), (0.0, 0.8)] {
+            let sa = Stream::encode(a, 8192, &mut rng);
+            let sb = Stream::encode(b, 8192, &mut rng);
+            let p = sa.xnor(&sb).decode(8192);
+            assert!((p - a * b).abs() < 0.08, "a={a} b={b} p={p}");
+        }
+    }
+
+    #[test]
+    fn mux_tree_scales_sum() {
+        let mut rng = Rng::new(3);
+        let vals = [0.3, -0.2, 0.8, 0.1];
+        let streams: Vec<Stream> = vals
+            .iter()
+            .map(|&v| Stream::encode(v, 16384, &mut rng))
+            .collect();
+        let (s, scale) = mux_tree_sum(streams, 16384, &mut rng);
+        assert_eq!(scale, 4);
+        let got = s.decode(16384) * scale as f64;
+        let want: f64 = vals.iter().sum();
+        assert!((got - want).abs() < 0.15, "got {got} want {want}");
+    }
+
+    #[test]
+    fn sc_less_accurate_than_float_on_tight_margins() {
+        // an easy model keeps accuracy; SC noise costs accuracy on a
+        // hard-margin model — here we just sanity check the plumbing and
+        // that predictions are valid classes
+        let mut rng = Rng::new(4);
+        let m = Mlp::new_random(5, 3, 3, &mut rng);
+        let cfg = ScConfig {
+            stream_len: 256,
+            ..Default::default()
+        };
+        let mut srng = Rng::new(5);
+        for _ in 0..10 {
+            let x: Vec<f32> = (0..5).map(|_| srng.f32()).collect();
+            assert!(sc_predict(&m, &x, &cfg, &mut srng) < 3);
+        }
+    }
+
+    #[test]
+    fn sc_costs_scale_with_topology() {
+        let lib = EgtLibrary::egt_v1();
+        let cfg = ScConfig::default();
+        let small = sc_mlp_costs(5, 3, 2, &lib, &cfg);
+        let big = sc_mlp_costs(16, 5, 10, &lib, &cfg);
+        assert!(big.area_mm2 > small.area_mm2 * 2.0);
+        assert!(big.power_mw > small.power_mw);
+        assert!((small.delay_ms - 220.16).abs() < 0.5); // 1024 × 0.215 ms
+    }
+}

@@ -1,0 +1,88 @@
+//! Printed-battery feasibility classification (paper Fig. 8).
+//!
+//! The paper classifies each MLP's power draw against the three printed
+//! batteries available at the time: Blue Spark (3 mW), Zinergy (15 mW) and
+//! Molex (30 mW); anything above 30 mW has "no adequate power supply".
+
+/// Battery tiers, ordered by capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Battery {
+    /// Blue Spark, 3 mW.
+    BlueSpark,
+    /// Zinergy, 15 mW.
+    Zinergy,
+    /// Molex, 30 mW.
+    Molex,
+    /// > 30 mW: not battery-powerable with printed batteries.
+    None,
+}
+
+impl Battery {
+    pub fn limit_mw(self) -> f64 {
+        match self {
+            Battery::BlueSpark => 3.0,
+            Battery::Zinergy => 15.0,
+            Battery::Molex => 30.0,
+            Battery::None => f64::INFINITY,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Battery::BlueSpark => "BlueSpark(3mW)",
+            Battery::Zinergy => "Zinergy(15mW)",
+            Battery::Molex => "Molex(30mW)",
+            Battery::None => "none(>30mW)",
+        }
+    }
+}
+
+/// Smallest battery that can power the circuit.
+pub fn classify(power_mw: f64) -> Battery {
+    if power_mw <= 3.0 {
+        Battery::BlueSpark
+    } else if power_mw <= 15.0 {
+        Battery::Zinergy
+    } else if power_mw <= 30.0 {
+        Battery::Molex
+    } else {
+        Battery::None
+    }
+}
+
+/// Count how many of the given power figures are battery-powerable at all.
+pub fn n_powerable(powers_mw: &[f64]) -> usize {
+    powers_mw
+        .iter()
+        .filter(|&&p| classify(p) != Battery::None)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_boundaries() {
+        assert_eq!(classify(0.5), Battery::BlueSpark);
+        assert_eq!(classify(3.0), Battery::BlueSpark);
+        assert_eq!(classify(3.01), Battery::Zinergy);
+        assert_eq!(classify(15.0), Battery::Zinergy);
+        assert_eq!(classify(29.9), Battery::Molex);
+        assert_eq!(classify(30.0), Battery::Molex);
+        assert_eq!(classify(30.1), Battery::None);
+    }
+
+    #[test]
+    fn powerable_count() {
+        // paper Table 2 baseline: only V2 (13 mW) and MA (27 mW) fit
+        let table2 = [98.0, 97.0, 53.0, 213.0, 36.0, 36.0, 41.0, 40.0, 13.0, 27.0];
+        assert_eq!(n_powerable(&table2), 2);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Battery::BlueSpark < Battery::Zinergy);
+        assert!(Battery::Molex < Battery::None);
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `repro <command> [--flag[=value]]...`. Flags accept both
+//! `--key value` and `--key=value` forms.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: HashMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare `--` not supported".to_string());
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn flag_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        Ok(self.flag_u64(key, default as u64)? as usize)
+    }
+
+    /// Comma-separated list flag.
+    pub fn flag_list(&self, key: &str) -> Option<Vec<String>> {
+        self.flag(key).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
+}
+
+pub const USAGE: &str = "\
+ax-printed-mlp reproduction CLI
+
+USAGE: repro <command> [flags]
+
+COMMANDS (one per paper table/figure — see DESIGN.md §6):
+  table2        exact bespoke baseline evaluation (Table 2)
+  fig2a         Monte-Carlo neuron area analysis (Fig. 2a)
+  fig2b         bespoke multiplier area landscape (Fig. 2b)
+  fig3          coefficient cluster analysis (Fig. 3)
+  fig5          Pendigits accuracy-area Pareto space (Fig. 5)
+  fig6          full co-design: area/power gains @ 1/2/5% (Fig. 6, also emits Fig. 7+8)
+  fig7          alias of fig6 (CPD gains section)
+  fig8          alias of fig6 (battery classification section)
+  fig9          vs cross-layer AC [8] and stochastic [15] (Fig. 9)
+  alpha         extension: score-weight α sweep (paper §3.2 future work)
+  refine        extension: per-neuron G refinement vs per-layer DSE
+  all           every experiment in sequence
+  verilog       emit bespoke Verilog RTL for a dataset (--dataset, --threshold)
+  smoke         PJRT runtime + artifact smoke test
+
+FLAGS:
+  --datasets ww,ca,...   subset of dataset keys (default: all ten)
+  --seed N               experiment seed (default 2023)
+  --quick                reduced sweep sizes for fast runs
+  --backend pjrt|rust    retraining backend (default pjrt, falls back)
+  --threads N            worker threads (default: cores; AXMLP_THREADS)
+  --dataset KEY          (verilog) dataset key, default ma
+  --threshold T          (verilog) accuracy-loss budget, default 0.01
+  --out FILE             (verilog) output path, default results/<key>.v
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_and_flags() {
+        let a = parse(&["fig6", "--seed", "7", "--quick", "--datasets=ww,ca"]);
+        assert_eq!(a.command.as_deref(), Some("fig6"));
+        assert_eq!(a.flag_u64("seed", 1).unwrap(), 7);
+        assert!(a.flag_bool("quick"));
+        assert_eq!(
+            a.flag_list("datasets").unwrap(),
+            vec!["ww".to_string(), "ca".to_string()]
+        );
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let a = parse(&["x", "--k=v", "--m", "n"]);
+        assert_eq!(a.flag("k"), Some("v"));
+        assert_eq!(a.flag("m"), Some("n"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["x", "--seed", "abc"]);
+        assert!(a.flag_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse(&["x", "--quick"]);
+        assert!(a.flag_bool("quick"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Paper Table 2 dataset/topology registry (Rust mirror of
+//! `python/compile/topologies.py`; the AOT artifact index is the runtime
+//! source of truth for shapes, this table adds the evaluation metadata).
+
+/// Static description of one benchmark dataset + its paper topology.
+#[derive(Debug)]
+pub struct DatasetInfo {
+    pub key: &'static str,
+    pub name: &'static str,
+    pub din: usize,
+    pub hidden: usize,
+    pub dout: usize,
+    /// MAC count as reported in Table 2.
+    pub macs: usize,
+    /// Test accuracy the paper reports for the exact bespoke MLP.
+    pub paper_acc: f64,
+    /// Paper Table 2 area (cm²) and power (mW) of the exact baseline —
+    /// recorded for the EXPERIMENTS.md paper-vs-measured comparison.
+    pub paper_area_cm2: f64,
+    pub paper_power_mw: f64,
+    /// Paper Table 2 critical-path delay (ms, synthesis-constrained).
+    pub paper_cpd_ms: f64,
+    /// Synthetic sample count (mirrors the UCI dataset size).
+    pub samples: usize,
+    /// Ordinal label structure (wine-quality style): class means lie on a
+    /// 1-D quality axis, which is what lets very small topologies (e.g.
+    /// RedWine's 11x2x6) reach the paper's accuracy.
+    pub ordinal: bool,
+}
+
+pub static REGISTRY: &[DatasetInfo] = &[
+    DatasetInfo { key: "ww", name: "WhiteWine", din: 11, hidden: 4, dout: 7, macs: 72, paper_acc: 0.54, paper_area_cm2: 31.0, paper_power_mw: 98.0, paper_cpd_ms: 198.0, samples: 4898, ordinal: true },
+    DatasetInfo { key: "ca", name: "Cardio", din: 21, hidden: 3, dout: 3, macs: 72, paper_acc: 0.88, paper_area_cm2: 33.0, paper_power_mw: 97.0, paper_cpd_ms: 199.0, samples: 2126, ordinal: false },
+    DatasetInfo { key: "rw", name: "RedWine", din: 11, hidden: 2, dout: 6, macs: 34, paper_acc: 0.56, paper_area_cm2: 18.0, paper_power_mw: 53.0, paper_cpd_ms: 199.0, samples: 1599, ordinal: true },
+    DatasetInfo { key: "pd", name: "Pendigits", din: 16, hidden: 5, dout: 10, macs: 130, paper_acc: 0.94, paper_area_cm2: 67.0, paper_power_mw: 213.0, paper_cpd_ms: 201.0, samples: 7494, ordinal: false },
+    DatasetInfo { key: "v3", name: "VertebralColumn3C", din: 6, hidden: 3, dout: 3, macs: 27, paper_acc: 0.83, paper_area_cm2: 8.9, paper_power_mw: 36.0, paper_cpd_ms: 200.0, samples: 310, ordinal: false },
+    DatasetInfo { key: "bs", name: "BalanceScale", din: 4, hidden: 3, dout: 3, macs: 21, paper_acc: 0.91, paper_area_cm2: 9.3, paper_power_mw: 36.0, paper_cpd_ms: 199.0, samples: 625, ordinal: false },
+    DatasetInfo { key: "se", name: "Seeds", din: 7, hidden: 3, dout: 3, macs: 30, paper_acc: 0.94, paper_area_cm2: 9.9, paper_power_mw: 41.0, paper_cpd_ms: 200.0, samples: 210, ordinal: false },
+    DatasetInfo { key: "bc", name: "BreastCancer", din: 9, hidden: 3, dout: 2, macs: 33, paper_acc: 0.98, paper_area_cm2: 12.0, paper_power_mw: 40.0, paper_cpd_ms: 188.0, samples: 699, ordinal: false },
+    DatasetInfo { key: "v2", name: "VertebralColumn2C", din: 6, hidden: 3, dout: 2, macs: 24, paper_acc: 0.90, paper_area_cm2: 3.5, paper_power_mw: 13.0, paper_cpd_ms: 114.0, samples: 310, ordinal: false },
+    DatasetInfo { key: "ma", name: "Mammographic", din: 5, hidden: 3, dout: 2, macs: 21, paper_acc: 0.86, paper_area_cm2: 6.8, paper_power_mw: 27.0, paper_cpd_ms: 197.0, samples: 961, ordinal: false },
+];
+
+pub fn by_key(key: &str) -> Option<&'static DatasetInfo> {
+    REGISTRY.iter().find(|d| d.key == key)
+}
+
+/// Datasets the paper's Fig. 9 compares against the stochastic MLPs [15]
+/// (the common subset examined in both works).
+pub static FIG9_KEYS: &[&str] = &["ww", "ca", "rw", "pd", "v3", "bs", "se", "bc", "v2", "ma"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_unique() {
+        let mut keys: Vec<&str> = REGISTRY.iter().map(|d| d.key).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), REGISTRY.len());
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(by_key("pd").is_some());
+        assert!(by_key("nope").is_none());
+    }
+}

@@ -1,0 +1,509 @@
+//! Exhaustive design-space exploration (paper §3.3): sweep the MSB-keep
+//! count `k ∈ [1,3]` (shared by all neurons) × one significance threshold
+//! `G` per layer, synthesize + simulate every point, and extract the
+//! accuracy/area Pareto front.
+
+use crate::axsum::{self, derive_shifts, threshold_candidates, ShiftPlan, Significance};
+use crate::estimate::{estimate, Costs};
+use crate::fixed::QuantMlp;
+use crate::pdk::EgtLibrary;
+use crate::sim::simulate;
+use crate::synth::{build_mlp, MlpCircuitSpec, NeuronStyle};
+use crate::util::pool::parallel_map;
+
+use std::collections::HashMap;
+
+/// DSE parameters.
+#[derive(Clone, Debug)]
+pub struct DseConfig {
+    /// Max significance-threshold levels per layer (quantile-subsampled;
+    /// candidates always include the disable sentinel).
+    pub max_g_levels: usize,
+    /// Number of stimulus vectors for the switching-activity simulation.
+    pub power_patterns: usize,
+    pub threads: usize,
+    /// Cross-check the synthesized circuit against the software AxSum
+    /// model on the stimulus (panics on divergence — a substrate bug).
+    pub verify_circuit: bool,
+    /// Cap on accuracy-evaluation samples per split (0 = use all).
+    pub max_eval: usize,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig {
+            max_g_levels: 8,
+            power_patterns: 192,
+            threads: crate::util::pool::default_threads(),
+            verify_circuit: true,
+            max_eval: 2000,
+        }
+    }
+}
+
+/// One evaluated design point.
+#[derive(Clone, Debug)]
+pub struct DesignEval {
+    pub k: u32,
+    pub g: Vec<f64>,
+    pub plan: ShiftPlan,
+    pub acc_train: f64,
+    pub acc_test: f64,
+    pub costs: Costs,
+}
+
+/// Integer-domain dataset view used by the DSE.
+pub struct QuantData<'a> {
+    pub x_train: &'a [Vec<i64>],
+    pub y_train: &'a [usize],
+    pub x_test: &'a [Vec<i64>],
+    pub y_test: &'a [usize],
+}
+
+/// Synthesize the circuit for (q, plan, style) and estimate its costs with
+/// switching activity from `stimulus` (integer input vectors). Returns the
+/// costs and the simulated class outputs.
+pub fn circuit_costs(
+    q: &QuantMlp,
+    plan: &ShiftPlan,
+    style: NeuronStyle,
+    stimulus: &[Vec<i64>],
+    lib: &EgtLibrary,
+) -> (Costs, Vec<u64>) {
+    let spec = MlpCircuitSpec {
+        name: "mlp".into(),
+        weights: q.w.clone(),
+        biases: q.b.clone(),
+        shifts: plan.shifts.clone(),
+        in_bits: q.in_bits,
+        style,
+    };
+    let nl = build_mlp(&spec);
+    let pats = stimulus.len().max(1);
+    let mut inputs: HashMap<String, Vec<u64>> = HashMap::new();
+    for i in 0..q.din() {
+        inputs.insert(
+            format!("x{i}"),
+            stimulus.iter().map(|x| x[i] as u64).collect(),
+        );
+    }
+    let sim = simulate(&nl, &inputs, pats, true);
+    let costs = estimate(&nl, lib, Some(&sim));
+    let classes = sim.outputs.get("class").cloned().unwrap_or_default();
+    (costs, classes)
+}
+
+/// Evaluate one design point end to end.
+pub fn evaluate_design(
+    q: &QuantMlp,
+    plan: ShiftPlan,
+    k: u32,
+    g: Vec<f64>,
+    data: &QuantData,
+    lib: &EgtLibrary,
+    cfg: &DseConfig,
+) -> DesignEval {
+    let cap = |xs: &[Vec<i64>]| if cfg.max_eval == 0 { xs.len() } else { xs.len().min(cfg.max_eval) };
+    let nt = cap(data.x_train);
+    let ne = cap(data.x_test);
+    let acc_train = axsum::accuracy(q, &plan, &data.x_train[..nt], &data.y_train[..nt]);
+    let acc_test = axsum::accuracy(q, &plan, &data.x_test[..ne], &data.y_test[..ne]);
+    let stimulus: Vec<Vec<i64>> = data
+        .x_test
+        .iter()
+        .take(cfg.power_patterns)
+        .cloned()
+        .collect();
+    let (costs, classes) = circuit_costs(q, &plan, NeuronStyle::AxSum, &stimulus, lib);
+    if cfg.verify_circuit {
+        for (x, &cls) in stimulus.iter().zip(&classes) {
+            let sw = axsum::predict(q, &plan, x);
+            assert_eq!(
+                sw, cls as usize,
+                "circuit/software divergence (substrate bug)"
+            );
+        }
+    }
+    DesignEval {
+        k,
+        g,
+        plan,
+        acc_train,
+        acc_test,
+        costs,
+    }
+}
+
+/// Enumerate the (k, per-layer G) grid.
+pub fn enumerate_points(q: &QuantMlp, sig: &Significance, cfg: &DseConfig) -> Vec<(u32, Vec<f64>)> {
+    let per_layer: Vec<Vec<f64>> = (0..q.n_layers())
+        .map(|l| threshold_candidates(sig, l, cfg.max_g_levels))
+        .collect();
+    let mut grid: Vec<Vec<f64>> = vec![Vec::new()];
+    for cands in &per_layer {
+        let mut next = Vec::with_capacity(grid.len() * cands.len());
+        for g in &grid {
+            for &c in cands {
+                let mut g2 = g.clone();
+                g2.push(c);
+                next.push(g2);
+            }
+        }
+        grid = next;
+    }
+    let mut points = Vec::new();
+    for k in 1..=3u32 {
+        for g in &grid {
+            // all-disabled G with k>1 duplicates k=1's exact point; keep one
+            if g.iter().all(|&x| x < 0.0) && k > 1 {
+                continue;
+            }
+            points.push((k, g.clone()));
+        }
+    }
+    points
+}
+
+/// Full exhaustive sweep (parallel over design points).
+pub fn sweep(
+    q: &QuantMlp,
+    sig: &Significance,
+    data: &QuantData,
+    lib: &EgtLibrary,
+    cfg: &DseConfig,
+) -> Vec<DesignEval> {
+    let points = enumerate_points(q, sig, cfg);
+    parallel_map(&points, cfg.threads, |(k, g)| {
+        let plan = derive_shifts(q, sig, g, *k);
+        evaluate_design(q, plan, *k, g.clone(), data, lib, cfg)
+    })
+}
+
+/// Indices of the accuracy/area Pareto-optimal designs (maximize accuracy,
+/// minimize area), sorted by descending accuracy.
+pub fn pareto_front(designs: &[DesignEval], by_train: bool) -> Vec<usize> {
+    let acc = |d: &DesignEval| if by_train { d.acc_train } else { d.acc_test };
+    let mut idx: Vec<usize> = (0..designs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        acc(&designs[b])
+            .partial_cmp(&acc(&designs[a]))
+            .unwrap()
+            .then(
+                designs[a]
+                    .costs
+                    .area_mm2
+                    .partial_cmp(&designs[b].costs.area_mm2)
+                    .unwrap(),
+            )
+    });
+    let mut front = Vec::new();
+    let mut best_area = f64::INFINITY;
+    for &i in &idx {
+        if designs[i].costs.area_mm2 < best_area - 1e-12 {
+            front.push(i);
+            best_area = designs[i].costs.area_mm2;
+        }
+    }
+    front
+}
+
+/// Pick the smallest-area design whose *train* accuracy loss vs `acc0` is
+/// within `threshold` (the paper selects per accuracy-loss budget; we
+/// select on the train split and report test numbers).
+pub fn select_for_threshold<'a>(
+    designs: &'a [DesignEval],
+    acc0_train: f64,
+    threshold: f64,
+) -> Option<&'a DesignEval> {
+    designs
+        .iter()
+        .filter(|d| d.acc_train >= acc0_train - threshold - 1e-12)
+        .min_by(|a, b| a.costs.area_mm2.partial_cmp(&b.costs.area_mm2).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axsum::{mean_activations, significance};
+    use crate::fixed::QuantMlp;
+    use crate::util::rng::Rng;
+
+    fn toy() -> (QuantMlp, Vec<Vec<i64>>, Vec<usize>) {
+        let mut rng = Rng::new(11);
+        let q = QuantMlp {
+            w: vec![
+                (0..3)
+                    .map(|_| (0..4).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+                (0..3)
+                    .map(|_| (0..3).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+            ],
+            b: vec![
+                (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+                (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+            ],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        };
+        let xs: Vec<Vec<i64>> = (0..200)
+            .map(|_| (0..4).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let plan = ShiftPlan::exact(&q);
+        let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&q, &plan, x)).collect();
+        (q, xs, ys)
+    }
+
+    #[test]
+    fn sweep_produces_monotone_pareto() {
+        let (q, xs, ys) = toy();
+        let data = QuantData {
+            x_train: &xs[..140],
+            y_train: &ys[..140],
+            x_test: &xs[140..],
+            y_test: &ys[140..],
+        };
+        let means = mean_activations(&q, data.x_train);
+        let sig = significance(&q, &means);
+        let cfg = DseConfig {
+            max_g_levels: 3,
+            power_patterns: 32,
+            threads: 4,
+            verify_circuit: true,
+            max_eval: 0,
+        };
+        let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+        assert!(designs.len() > 10);
+        let front = pareto_front(&designs, true);
+        assert!(!front.is_empty());
+        // front: accuracy non-increasing, area strictly decreasing
+        for w in front.windows(2) {
+            let (a, b) = (&designs[w[0]], &designs[w[1]]);
+            assert!(b.acc_train <= a.acc_train + 1e-12);
+            assert!(b.costs.area_mm2 < a.costs.area_mm2);
+        }
+        // exact point exists (all G disabled) and matches acc0 = 1.0 labels
+        let exact = designs
+            .iter()
+            .find(|d| d.g.iter().all(|&g| g < 0.0))
+            .unwrap();
+        assert!(exact.acc_train > 0.99);
+    }
+
+    #[test]
+    fn truncation_saves_area_vs_exact_point() {
+        let (q, xs, ys) = toy();
+        let data = QuantData {
+            x_train: &xs[..140],
+            y_train: &ys[..140],
+            x_test: &xs[140..],
+            y_test: &ys[140..],
+        };
+        let means = mean_activations(&q, data.x_train);
+        let sig = significance(&q, &means);
+        let cfg = DseConfig {
+            max_g_levels: 2,
+            power_patterns: 16,
+            threads: 4,
+            verify_circuit: true,
+            max_eval: 0,
+        };
+        let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+        let exact = designs
+            .iter()
+            .find(|d| d.g.iter().all(|&g| g < 0.0))
+            .unwrap();
+        let min_area = designs
+            .iter()
+            .map(|d| d.costs.area_mm2)
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_area < exact.costs.area_mm2);
+    }
+
+    #[test]
+    fn select_threshold_respects_budget() {
+        let (q, xs, ys) = toy();
+        let data = QuantData {
+            x_train: &xs[..140],
+            y_train: &ys[..140],
+            x_test: &xs[140..],
+            y_test: &ys[140..],
+        };
+        let means = mean_activations(&q, data.x_train);
+        let sig = significance(&q, &means);
+        let cfg = DseConfig {
+            max_g_levels: 3,
+            power_patterns: 16,
+            threads: 4,
+            verify_circuit: false,
+            max_eval: 0,
+        };
+        let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+        let picked = select_for_threshold(&designs, 1.0, 0.05).unwrap();
+        assert!(picked.acc_train >= 0.95 - 1e-9);
+        // tighter budget never picks a smaller-or-equal-area design than a
+        // looser one
+        let loose = select_for_threshold(&designs, 1.0, 0.20).unwrap();
+        assert!(loose.costs.area_mm2 <= picked.costs.area_mm2 + 1e-12);
+    }
+
+    #[test]
+    fn enumerate_grid_size() {
+        let (q, xs, _ys) = toy();
+        let means = mean_activations(&q, &xs);
+        let sig = significance(&q, &means);
+        let cfg = DseConfig {
+            max_g_levels: 4,
+            ..Default::default()
+        };
+        let pts = enumerate_points(&q, &sig, &cfg);
+        // 3 k-values x (<=5 x <=5) grid minus duplicate all-disabled points
+        assert!(pts.len() <= 3 * 5 * 5);
+        assert!(pts.len() >= 10);
+        let n_disabled = pts
+            .iter()
+            .filter(|(_, g)| g.iter().all(|&x| x < 0.0))
+            .count();
+        assert_eq!(n_disabled, 1, "exact point kept exactly once");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Extension: greedy per-neuron threshold refinement.
+// ---------------------------------------------------------------------------
+
+/// The paper's Eq. (5) permits a G per *neuron* but restricts the DSE to
+/// one G per layer to bound the space. This extension takes the chosen
+/// per-layer design and greedily tightens individual neurons further:
+/// for each neuron (most-area-first), try raising its truncation to the
+/// next significance level; keep the move if train accuracy stays above
+/// `floor`. A cheap hill-climb over the finer space the paper leaves as
+/// future work.
+pub fn refine_per_neuron(
+    q: &QuantMlp,
+    base: &DesignEval,
+    sig: &Significance,
+    k: u32,
+    data: &QuantData,
+    lib: &EgtLibrary,
+    cfg: &DseConfig,
+    floor: f64,
+) -> DesignEval {
+    let mut plan = base.plan.clone();
+    let cap = |xs: &[Vec<i64>]| {
+        if cfg.max_eval == 0 {
+            xs.len()
+        } else {
+            xs.len().min(cfg.max_eval)
+        }
+    };
+    let nt = cap(data.x_train);
+    let mut best_area = base.costs.area_mm2;
+    // neuron order: biggest layers first, then by row weight mass
+    let mut order: Vec<(usize, usize)> = Vec::new();
+    for (l, layer) in q.w.iter().enumerate() {
+        for j in 0..layer.len() {
+            order.push((l, j));
+        }
+    }
+    order.sort_by_key(|&(l, j)| {
+        std::cmp::Reverse(q.w[l][j].iter().map(|w| w.abs()).sum::<i64>())
+    });
+
+    for (l, j) in order {
+        // candidate: raise every product of this neuron one step deeper
+        // (threshold at the next-larger significance value of the row)
+        let row_sig = &sig.g[l][j];
+        let mut levels: Vec<f64> = row_sig.iter().copied().filter(|v| v.is_finite()).collect();
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let widths = crate::axsum::layer_input_widths(q, &plan);
+        for &g in &levels {
+            let mut cand = plan.clone();
+            for (i, &w) in q.w[l][j].iter().enumerate() {
+                if w != 0 && row_sig[i] <= g {
+                    let n_i = crate::axsum::product_bits(widths[l][i], w);
+                    cand.shifts[l][j][i] = cand.shifts[l][j][i].max(n_i.saturating_sub(k));
+                }
+            }
+            if cand.shifts == plan.shifts {
+                continue;
+            }
+            let acc = axsum::accuracy(q, &cand, &data.x_train[..nt], &data.y_train[..nt]);
+            if acc + 1e-12 < floor {
+                break; // deeper levels only truncate more
+            }
+            plan = cand;
+        }
+        let _ = best_area;
+        best_area = f64::NAN; // recomputed below once at the end
+    }
+
+    let refined = evaluate_design(q, plan, k, base.g.clone(), data, lib, cfg);
+    if refined.costs.area_mm2 < base.costs.area_mm2 && refined.acc_train + 1e-12 >= floor {
+        refined
+    } else {
+        base.clone()
+    }
+}
+
+#[cfg(test)]
+mod refine_tests {
+    use super::*;
+    use crate::axsum::{mean_activations, significance};
+    use crate::fixed::QuantMlp;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn per_neuron_refinement_never_worse() {
+        let mut rng = Rng::new(77);
+        let q = QuantMlp {
+            w: vec![
+                (0..3)
+                    .map(|_| (0..5).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+                (0..3)
+                    .map(|_| (0..3).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+            ],
+            b: vec![
+                (0..3).map(|_| rng.range_i64(-30, 30)).collect(),
+                (0..3).map(|_| rng.range_i64(-30, 30)).collect(),
+            ],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        };
+        let xs: Vec<Vec<i64>> = (0..160)
+            .map(|_| (0..5).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let plan0 = crate::axsum::ShiftPlan::exact(&q);
+        let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&q, &plan0, x)).collect();
+        let data = QuantData {
+            x_train: &xs[..120],
+            y_train: &ys[..120],
+            x_test: &xs[120..],
+            y_test: &ys[120..],
+        };
+        let means = mean_activations(&q, data.x_train);
+        let sig = significance(&q, &means);
+        let cfg = DseConfig {
+            max_g_levels: 3,
+            power_patterns: 24,
+            threads: 2,
+            verify_circuit: true,
+            max_eval: 0,
+        };
+        let base = evaluate_design(
+            &q,
+            derive_shifts(&q, &sig, &[-1.0, -1.0], 2),
+            2,
+            vec![-1.0, -1.0],
+            &data,
+            &EgtLibrary::egt_v1(),
+            &cfg,
+        );
+        let floor = base.acc_train - 0.05;
+        let refined = refine_per_neuron(&q, &base, &sig, 2, &data, &EgtLibrary::egt_v1(), &cfg, floor);
+        assert!(refined.costs.area_mm2 <= base.costs.area_mm2 + 1e-9);
+        assert!(refined.acc_train >= floor - 1e-12);
+    }
+}

@@ -1,0 +1,166 @@
+//! Area / power / delay estimation (DC area report + PrimeTime + STA
+//! substitute).
+//!
+//! * **Area** — sum of cell footprints from the PDK.
+//! * **Delay** — static timing: longest gate-delay path from any input to
+//!   any registered output (critical path delay, CPD).
+//! * **Power** — `Σ (static + dynamic·toggle_rate)`, toggle rates from a
+//!   `sim` activity run; falls back to a 0.25 default rate when no
+//!   stimulus is supplied (vector-less mode, like a PrimeTime averaged
+//!   estimate).
+
+use crate::netlist::Netlist;
+use crate::pdk::{CellKind, EgtLibrary};
+use crate::sim::SimResult;
+
+/// Circuit cost summary. Units: mm², mW, ms.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Costs {
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub delay_ms: f64,
+    pub cells: usize,
+}
+
+impl Costs {
+    pub fn area_cm2(&self) -> f64 {
+        self.area_mm2 / 100.0
+    }
+}
+
+/// Pure-area estimate (fast path for the multiplier LUT / clustering).
+pub fn area_mm2(nl: &Netlist, lib: &EgtLibrary) -> f64 {
+    nl.gates
+        .iter()
+        .map(|g| lib.params(g.kind).area_mm2)
+        .sum()
+}
+
+/// Critical-path delay in ms.
+pub fn critical_path_ms(nl: &Netlist, lib: &EgtLibrary) -> f64 {
+    let mut arrival = vec![0.0f64; nl.gates.len()];
+    let mut worst = 0.0f64;
+    for (i, g) in nl.gates.iter().enumerate() {
+        let d = lib.params(g.kind).delay_ms;
+        let in_arr = g
+            .inputs()
+            .iter()
+            .map(|&x| arrival[x as usize])
+            .fold(0.0f64, f64::max);
+        arrival[i] = in_arr + d;
+        if arrival[i] > worst {
+            worst = arrival[i];
+        }
+    }
+    worst
+}
+
+/// Full estimate. `activity`: a toggle-capturing `SimResult` from the
+/// power stimulus (test vectors), or `None` for vector-less power.
+pub fn estimate(nl: &Netlist, lib: &EgtLibrary, activity: Option<&SimResult>) -> Costs {
+    let mut area = 0.0;
+    let mut power_uw = 0.0;
+    for (i, g) in nl.gates.iter().enumerate() {
+        let p = lib.params(g.kind);
+        area += p.area_mm2;
+        let rate = match activity {
+            Some(sim) if sim.patterns > 1 && !sim.toggles.is_empty() => {
+                sim.toggles[i] as f64 / (sim.patterns - 1) as f64
+            }
+            _ => 0.25,
+        };
+        power_uw += lib.static_power_uw(g.kind) + lib.dynamic_power_uw(g.kind, rate);
+    }
+    Costs {
+        area_mm2: area,
+        power_mw: power_uw / 1000.0,
+        delay_ms: critical_path_ms(nl, lib),
+        cells: nl.n_cells(),
+    }
+}
+
+/// Cell-count report line (debugging / DESIGN.md inventory).
+pub fn histogram_string(nl: &Netlist) -> String {
+    let h = nl.cell_histogram();
+    let mut kinds: Vec<(&CellKind, &usize)> = h.iter().collect();
+    kinds.sort();
+    kinds
+        .iter()
+        .map(|(k, c)| format!("{}:{c}", k.name()))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::simulate;
+    use std::collections::HashMap;
+
+    fn xor_chain(n: usize) -> Netlist {
+        let mut nl = Netlist::new("chain");
+        let ins = nl.input_bus("a", n + 1);
+        let mut acc = ins[0];
+        for &x in &ins[1..] {
+            acc = nl.xor(acc, x);
+        }
+        nl.output_bus("y", vec![acc]);
+        nl
+    }
+
+    #[test]
+    fn area_counts_cells() {
+        let nl = xor_chain(4);
+        let lib = EgtLibrary::unit();
+        assert_eq!(area_mm2(&nl, &lib), 4.0);
+    }
+
+    #[test]
+    fn delay_is_chain_depth() {
+        let nl = xor_chain(5);
+        let lib = EgtLibrary::unit();
+        assert_eq!(critical_path_ms(&nl, &lib), 5.0);
+    }
+
+    #[test]
+    fn empty_netlist_zero_cost() {
+        let mut nl = Netlist::new("none");
+        let a = nl.input_bus("a", 2);
+        nl.output_bus("y", vec![a[0]]);
+        let lib = EgtLibrary::egt_v1();
+        let c = estimate(&nl, &lib, None);
+        assert_eq!(c.area_mm2, 0.0);
+        assert_eq!(c.power_mw, 0.0);
+        assert_eq!(c.delay_ms, 0.0);
+    }
+
+    #[test]
+    fn activity_power_lower_when_quiet() {
+        let nl = xor_chain(6);
+        let lib = EgtLibrary::egt_v1();
+        let pats = 64;
+        let mut quiet = HashMap::new();
+        quiet.insert("a".to_string(), vec![0u64; pats]);
+        let mut busy = HashMap::new();
+        busy.insert(
+            "a".to_string(),
+            (0..pats).map(|p| if p % 2 == 0 { 0u64 } else { 0x7F } ).collect(),
+        );
+        let rq = simulate(&nl, &quiet, pats, true);
+        let rb = simulate(&nl, &busy, pats, true);
+        let cq = estimate(&nl, &lib, Some(&rq));
+        let cb = estimate(&nl, &lib, Some(&rb));
+        assert!(cq.power_mw < cb.power_mw);
+        // static floor is still there
+        assert!(cq.power_mw > 0.0);
+    }
+
+    #[test]
+    fn egt_average_gate_delay_band() {
+        // ripple paths should average ~1 ms/gate in egt_v1 (DESIGN.md)
+        let nl = xor_chain(100);
+        let lib = EgtLibrary::egt_v1();
+        let per_gate = critical_path_ms(&nl, &lib) / 100.0;
+        assert!((0.5..2.0).contains(&per_gate), "{per_gate}");
+    }
+}

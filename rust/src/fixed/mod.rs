@@ -1,0 +1,217 @@
+//! Fixed-point quantization layer (paper §3.1): 4-bit inputs in [0,1],
+//! ≤8-bit integer coefficients hardwired per multiplier, biases scaled
+//! into the accumulation domain. Bare-minimum per-coefficient precision is
+//! implicit: the synthesis substrate sizes every bespoke multiplier by the
+//! actual coefficient value.
+
+use crate::mlp::Mlp;
+
+/// Input activation precision (4 bits -> a ∈ [0, 15]).
+pub const INPUT_BITS: usize = 4;
+pub const A_MAX: i64 = (1 << INPUT_BITS) - 1;
+/// Coefficient domain: symmetric ±127 (retraining uses ±cluster values).
+pub const W_MAX: i64 = 127;
+
+/// Integer-domain MLP: the hardware-facing model.
+#[derive(Clone, Debug)]
+pub struct QuantMlp {
+    /// `w[layer][out][in]`, integers in [-W_MAX, W_MAX].
+    pub w: Vec<Vec<Vec<i64>>>,
+    /// `b[layer][out]`, in the integer accumulation domain of that layer.
+    pub b: Vec<Vec<i64>>,
+    pub in_bits: usize,
+    /// Per-layer coefficient scale used at quantization time (needed to
+    /// map integer logits back to float magnitudes, e.g. for the softmax
+    /// temperature of the retraining artifact).
+    pub w_scales: Vec<f64>,
+}
+
+impl QuantMlp {
+    pub fn n_layers(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn din(&self) -> usize {
+        self.w[0][0].len()
+    }
+
+    pub fn dout(&self) -> usize {
+        self.w.last().unwrap().len()
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.w[0].len()
+    }
+
+    /// Softmax temperature that maps integer logits back to the float
+    /// model's magnitude: a_scale · Πscales.
+    pub fn logit_temperature(&self) -> f64 {
+        A_MAX as f64 * self.w_scales.iter().product::<f64>()
+    }
+
+    /// Exact integer forward (no AxSum): plain weighted sums + ReLU.
+    pub fn forward_exact(&self, x: &[i64]) -> Vec<i64> {
+        let mut acts: Vec<i64> = x.to_vec();
+        for l in 0..self.n_layers() {
+            let mut next = Vec::with_capacity(self.w[l].len());
+            for (row, &bias) in self.w[l].iter().zip(&self.b[l]) {
+                let s: i64 =
+                    row.iter().zip(&acts).map(|(&w, &a)| w * a).sum::<i64>() + bias;
+                next.push(s);
+            }
+            if l + 1 < self.n_layers() {
+                acts = next.iter().map(|&v| v.max(0)).collect();
+            } else {
+                return next;
+            }
+        }
+        unreachable!()
+    }
+
+    pub fn predict_exact(&self, x: &[i64]) -> usize {
+        crate::util::stats::argmax_i64(&self.forward_exact(x))
+    }
+
+    pub fn accuracy_exact(&self, xs: &[Vec<i64>], ys: &[usize]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let ok = xs
+            .iter()
+            .zip(ys)
+            .filter(|(x, &y)| self.predict_exact(x) == y)
+            .count();
+        ok as f64 / xs.len() as f64
+    }
+
+    /// Count of coefficients per layer (multiplier instances).
+    pub fn coeff_counts(&self) -> Vec<usize> {
+        self.w
+            .iter()
+            .map(|layer| layer.iter().map(|r| r.len()).sum())
+            .collect()
+    }
+}
+
+/// Quantize one input vector to the 4-bit integer domain.
+pub fn quantize_input(x: &[f32]) -> Vec<i64> {
+    x.iter()
+        .map(|&v| ((v as f64 * A_MAX as f64).round() as i64).clamp(0, A_MAX))
+        .collect()
+}
+
+/// Quantize a whole input set.
+pub fn quantize_inputs(xs: &[Vec<f32>]) -> Vec<Vec<i64>> {
+    xs.iter().map(|x| quantize_input(x)).collect()
+}
+
+/// Quantize a float MLP: per-layer symmetric coefficient scaling to
+/// ±W_MAX; biases land in the layer's integer accumulation domain
+/// (bias_int = bias_f · w_scale · input_scale_of_that_layer).
+pub fn quantize(m: &Mlp) -> QuantMlp {
+    let (m1, m2) = m.max_abs_weights();
+    let s1 = if m1 > 0.0 { W_MAX as f64 / m1 as f64 } else { 1.0 };
+    let s2 = if m2 > 0.0 { W_MAX as f64 / m2 as f64 } else { 1.0 };
+    // input scales: layer 1 sees a = x·A_MAX; layer 2 sees integer hidden
+    // activations h_int = h_float·A_MAX·s1
+    let in_scale1 = A_MAX as f64;
+    let in_scale2 = A_MAX as f64 * s1;
+
+    let qmat = |w: &Vec<Vec<f32>>, s: f64| -> Vec<Vec<i64>> {
+        w.iter()
+            .map(|row| {
+                row.iter()
+                    .map(|&v| ((v as f64 * s).round() as i64).clamp(-W_MAX, W_MAX))
+                    .collect()
+            })
+            .collect()
+    };
+    let qb = |b: &Vec<f32>, ws: f64, is: f64| -> Vec<i64> {
+        b.iter().map(|&v| (v as f64 * ws * is).round() as i64).collect()
+    };
+
+    QuantMlp {
+        w: vec![qmat(&m.w1, s1), qmat(&m.w2, s2)],
+        b: vec![qb(&m.b1, s1, in_scale1), qb(&m.b2, s2, in_scale2)],
+        in_bits: INPUT_BITS,
+        w_scales: vec![s1, s2],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlp::Mlp;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn input_quantization() {
+        assert_eq!(quantize_input(&[0.0, 1.0, 0.5, 0.49, 2.0, -0.3]),
+                   vec![0, 15, 8, 7, 15, 0]);
+    }
+
+    #[test]
+    fn quantized_weights_in_range() {
+        let mut rng = Rng::new(1);
+        let m = Mlp::new_random(6, 3, 3, &mut rng);
+        let q = quantize(&m);
+        for layer in &q.w {
+            for row in layer {
+                for &w in row {
+                    assert!(w.abs() <= W_MAX);
+                }
+            }
+        }
+        // max-magnitude weight maps to ±W_MAX
+        let max1 = q.w[0].iter().flatten().map(|w| w.abs()).max().unwrap();
+        assert_eq!(max1, W_MAX);
+    }
+
+    #[test]
+    fn quantized_model_tracks_float_predictions() {
+        // On a reasonably-margined model, 4/8-bit quantization keeps most
+        // predictions (paper: "close to floating-point accuracy").
+        let mut rng = Rng::new(2);
+        let m = Mlp::new_random(5, 4, 3, &mut rng);
+        let q = quantize(&m);
+        let mut agree = 0;
+        let n = 300;
+        for _ in 0..n {
+            let x: Vec<f32> = (0..5).map(|_| rng.f32()).collect();
+            let xi = quantize_input(&x);
+            // compare against the float model evaluated on the *dequantized*
+            // input so the comparison isolates weight quantization
+            let xq: Vec<f32> = xi.iter().map(|&v| v as f32 / A_MAX as f32).collect();
+            if q.predict_exact(&xi) == m.predict(&xq) {
+                agree += 1;
+            }
+        }
+        assert!(agree as f64 / n as f64 > 0.85, "agreement {agree}/{n}");
+    }
+
+    #[test]
+    fn forward_exact_manual() {
+        let q = QuantMlp {
+            w: vec![vec![vec![2, -1]], vec![vec![3], vec![-3]]],
+            b: vec![vec![1], vec![0, 5]],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        };
+        // hidden = relu(2*a0 - a1 + 1); out = [3h, -3h+5]
+        let o = q.forward_exact(&[3, 10]);
+        // h = relu(6 - 10 + 1) = 0 -> out = [0, 5]
+        assert_eq!(o, vec![0, 5]);
+        let o = q.forward_exact(&[10, 0]);
+        // h = 21 -> out = [63, -58]
+        assert_eq!(o, vec![63, -58]);
+        assert_eq!(q.predict_exact(&[10, 0]), 0);
+    }
+
+    #[test]
+    fn temperature_positive() {
+        let mut rng = Rng::new(3);
+        let m = Mlp::new_random(4, 3, 2, &mut rng);
+        let q = quantize(&m);
+        assert!(q.logit_temperature() > 0.0);
+    }
+}

@@ -1,0 +1,39 @@
+//! # ax-printed-mlp
+//!
+//! Production-grade reproduction of *"Co-Design of Approximate Multilayer
+//! Perceptron for Ultra-Resource Constrained Printed Circuits"* (IEEE TC
+//! 2023): an automated HW/SW co-design framework that turns trained MLPs
+//! into approximate bespoke printed circuits via printing-friendly
+//! coefficient retraining and AxSum summation truncation.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the co-design coordinator plus the full EDA
+//!   substrate (PDK model, netlist synthesis, logic simulation,
+//!   area/power/delay estimation, Verilog emission), the retraining
+//!   driver, the exhaustive DSE, and the baselines \[2\]\[8\]\[15\].
+//! * **L2/L1 (python, build-time only)** — JAX model + Pallas AxSum kernel,
+//!   AOT-lowered to HLO-text artifacts executed from Rust via PJRT
+//!   (`runtime`).
+
+pub mod util;
+
+pub mod axsum;
+pub mod baselines;
+pub mod battery;
+pub mod cli;
+pub mod clustering;
+pub mod coordinator;
+pub mod datasets;
+pub mod estimate;
+pub mod dse;
+pub mod experiments;
+pub mod fixed;
+pub mod mlp;
+pub mod retrain;
+pub mod runtime;
+pub mod netlist;
+pub mod pdk;
+pub mod report;
+pub mod sim;
+pub mod synth;
+pub mod verilog;

@@ -1,0 +1,150 @@
+//! `repro` — leader entrypoint of the co-design framework.
+//!
+//! Every subcommand regenerates one table/figure of the paper (DESIGN.md
+//! §6 maps them); `repro all` runs the whole evaluation. The binary is
+//! self-contained after `make artifacts`: Python never runs here.
+
+use axmlp::cli::{Args, USAGE};
+use axmlp::experiments::{self, BackendKind, ExpConfig};
+use axmlp::runtime::Runtime;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let Some(cmd) = args.command.clone() else {
+        println!("{USAGE}");
+        return;
+    };
+    if let Err(e) = run(&cmd, &args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn exp_config(args: &Args) -> Result<ExpConfig, String> {
+    let mut cfg = ExpConfig {
+        seed: args.flag_u64("seed", 2023)?,
+        quick: args.flag_bool("quick"),
+        threads: args.flag_usize("threads", axmlp::util::pool::default_threads())?,
+        ..Default::default()
+    };
+    if let Some(ds) = args.flag_list("datasets") {
+        for k in &ds {
+            if axmlp::datasets::registry::by_key(k).is_none() {
+                return Err(format!("unknown dataset key `{k}`"));
+            }
+        }
+        cfg.datasets = ds;
+    }
+    cfg.backend = match args.flag("backend") {
+        None | Some("pjrt") => BackendKind::Pjrt,
+        Some("rust") => BackendKind::Rust,
+        Some(b) => return Err(format!("unknown backend `{b}` (pjrt|rust)")),
+    };
+    Ok(cfg)
+}
+
+fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "smoke" => {
+            let rt = Runtime::new(Runtime::default_dir())?;
+            rt.smoke()?;
+            println!(
+                "runtime OK: platform={}, {} topologies indexed",
+                rt.platform(),
+                rt.index.topologies.len()
+            );
+            Ok(())
+        }
+        "table2" => experiments::exp_table2(&exp_config(args).map_err(anyhow::Error::msg)?),
+        "fig2a" => experiments::exp_fig2a(&exp_config(args).map_err(anyhow::Error::msg)?),
+        "fig2b" => experiments::exp_fig2b(&exp_config(args).map_err(anyhow::Error::msg)?),
+        "fig3" => experiments::exp_fig3(&exp_config(args).map_err(anyhow::Error::msg)?),
+        "fig5" => experiments::exp_fig5(&exp_config(args).map_err(anyhow::Error::msg)?),
+        "fig6" | "fig7" | "fig8" => {
+            experiments::exp_fig6(&exp_config(args).map_err(anyhow::Error::msg)?).map(|_| ())
+        }
+        "fig9" => experiments::exp_fig9(&exp_config(args).map_err(anyhow::Error::msg)?),
+        "alpha" => experiments::exp_alpha(&exp_config(args).map_err(anyhow::Error::msg)?),
+        "refine" => experiments::exp_refine(&exp_config(args).map_err(anyhow::Error::msg)?),
+        "all" => {
+            let cfg = exp_config(args).map_err(anyhow::Error::msg)?;
+            experiments::exp_table2(&cfg)?;
+            experiments::exp_fig2a(&cfg)?;
+            experiments::exp_fig2b(&cfg)?;
+            experiments::exp_fig3(&cfg)?;
+            experiments::exp_fig5(&cfg)?;
+            experiments::exp_fig6(&cfg)?;
+            experiments::exp_fig9(&cfg)
+        }
+        "verilog" => cmd_verilog(args),
+        other => {
+            eprintln!("unknown command `{other}`\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Emit the bespoke Verilog RTL for one dataset's co-designed MLP.
+fn cmd_verilog(args: &Args) -> anyhow::Result<()> {
+    use axmlp::coordinator::{run_dataset, PipelineConfig, SharedContext};
+    use axmlp::retrain::backend_rust::RustBackend;
+    use axmlp::synth::{build_mlp, MlpCircuitSpec, NeuronStyle};
+
+    let key = args.flag("dataset").unwrap_or("ma").to_string();
+    anyhow::ensure!(
+        axmlp::datasets::registry::by_key(&key).is_some(),
+        "unknown dataset `{key}`"
+    );
+    let threshold: f64 = args
+        .flag("threshold")
+        .unwrap_or("0.01")
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--threshold expects a float"))?;
+    let out_path = args
+        .flag("out")
+        .map(|s| s.to_string())
+        .unwrap_or(format!("results/{key}_axmlp.v"));
+
+    let seed = args.flag_u64("seed", 2023).map_err(anyhow::Error::msg)?;
+    let ds = axmlp::datasets::load(&key, seed);
+    let mut cfg = PipelineConfig {
+        thresholds: vec![threshold],
+        ..Default::default()
+    };
+    cfg.dse.max_g_levels = 4;
+    cfg.dse.max_eval = 800;
+    let ctx = SharedContext::new();
+    let mut be = RustBackend;
+    let outcome = run_dataset(&ds, &cfg, &ctx, &mut be)?;
+    let tr = &outcome.thresholds[0];
+    let spec = MlpCircuitSpec {
+        name: format!("axmlp_{key}"),
+        weights: tr.model.w.clone(),
+        biases: tr.model.b.clone(),
+        shifts: tr.design.plan.shifts.clone(),
+        in_bits: tr.model.in_bits,
+        style: NeuronStyle::AxSum,
+    };
+    let nl = build_mlp(&spec);
+    let v = axmlp::verilog::to_verilog(&nl);
+    let _ = std::fs::create_dir_all("results");
+    std::fs::write(&out_path, &v)?;
+    println!(
+        "wrote {out_path}: module axmlp_{key}, {} cells, {:.2} cm², {:.1} mW, acc(test) {:.3}",
+        nl.n_cells(),
+        tr.design.costs.area_cm2(),
+        tr.design.costs.power_mw,
+        tr.design.acc_test,
+    );
+    Ok(())
+}

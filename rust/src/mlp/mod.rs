@@ -1,0 +1,199 @@
+//! Float MLP model + trainer (scikit-learn stand-in producing MLP0).
+//!
+//! The paper's framework *receives* a trained model; this module provides
+//! one: a single-hidden-layer ReLU MLP trained with Adam on softmax
+//! cross-entropy, matching the paper's topology convention
+//! `#inputs x L x #outputs` (Table 2). Weights are `[out][in]` row-major.
+
+pub mod train;
+
+use crate::util::json::{arr_f32, num, obj, to_f32_vec, Json, JsonError};
+use crate::util::rng::Rng;
+use crate::util::stats::argmax_f64;
+
+/// Float MLP: one hidden ReLU layer + linear output (argmax classifier).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub din: usize,
+    pub hidden: usize,
+    pub dout: usize,
+    /// `w1[j][i]`: input i -> hidden j.
+    pub w1: Vec<Vec<f32>>,
+    pub b1: Vec<f32>,
+    /// `w2[o][j]`: hidden j -> output o.
+    pub w2: Vec<Vec<f32>>,
+    pub b2: Vec<f32>,
+}
+
+impl Mlp {
+    /// He-initialized random model.
+    pub fn new_random(din: usize, hidden: usize, dout: usize, rng: &mut Rng) -> Self {
+        let mut init = |fan_in: usize, rows: usize, cols: usize| -> Vec<Vec<f32>> {
+            let sd = (2.0 / fan_in as f64).sqrt();
+            (0..rows)
+                .map(|_| (0..cols).map(|_| rng.gauss(0.0, sd) as f32).collect())
+                .collect()
+        };
+        Mlp {
+            din,
+            hidden,
+            dout,
+            w1: init(din, hidden, din),
+            b1: vec![0.0; hidden],
+            w2: init(hidden, dout, hidden),
+            b2: vec![0.0; dout],
+        }
+    }
+
+    /// Hidden activations (ReLU).
+    pub fn hidden_acts(&self, x: &[f32]) -> Vec<f32> {
+        self.w1
+            .iter()
+            .zip(&self.b1)
+            .map(|(row, &b)| {
+                let z: f32 = row.iter().zip(x).map(|(&w, &xi)| w * xi).sum::<f32>() + b;
+                z.max(0.0)
+            })
+            .collect()
+    }
+
+    /// Output logits.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let h = self.hidden_acts(x);
+        self.w2
+            .iter()
+            .zip(&self.b2)
+            .map(|(row, &b)| row.iter().zip(&h).map(|(&w, &hj)| w * hj).sum::<f32>() + b)
+            .collect()
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let logits = self.forward(x);
+        argmax_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>())
+    }
+
+    pub fn accuracy(&self, xs: &[Vec<f32>], ys: &[usize]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let correct = xs
+            .iter()
+            .zip(ys)
+            .filter(|(x, &y)| self.predict(x) == y)
+            .count();
+        correct as f64 / xs.len() as f64
+    }
+
+    /// Largest |w| per layer (used by the fixed-point quantizer).
+    pub fn max_abs_weights(&self) -> (f32, f32) {
+        let m = |w: &Vec<Vec<f32>>| {
+            w.iter()
+                .flat_map(|r| r.iter())
+                .fold(0.0f32, |a, &v| a.max(v.abs()))
+        };
+        (m(&self.w1), m(&self.w2))
+    }
+
+    // ---- checkpoint I/O ------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("din", num(self.din as f64)),
+            ("hidden", num(self.hidden as f64)),
+            ("dout", num(self.dout as f64)),
+            (
+                "w1",
+                Json::Arr(self.w1.iter().map(|r| arr_f32(r)).collect()),
+            ),
+            ("b1", arr_f32(&self.b1)),
+            (
+                "w2",
+                Json::Arr(self.w2.iter().map(|r| arr_f32(r)).collect()),
+            ),
+            ("b2", arr_f32(&self.b2)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Mlp, JsonError> {
+        let mat = |key: &str| -> Result<Vec<Vec<f32>>, JsonError> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| JsonError(format!("{key} not array")))?
+                .iter()
+                .map(to_f32_vec)
+                .collect()
+        };
+        Ok(Mlp {
+            din: j.req_usize("din")?,
+            hidden: j.req_usize("hidden")?,
+            dout: j.req_usize("dout")?,
+            w1: mat("w1")?,
+            b1: to_f32_vec(j.req("b1")?)?,
+            w2: mat("w2")?,
+            b2: to_f32_vec(j.req("b2")?)?,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().pretty())
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Mlp> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Mlp::from_json(&j).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let m = Mlp::new_random(5, 3, 4, &mut rng);
+        let x = vec![0.1, 0.5, 0.9, 0.0, 1.0];
+        assert_eq!(m.hidden_acts(&x).len(), 3);
+        assert_eq!(m.forward(&x).len(), 4);
+        assert!(m.predict(&x) < 4);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut rng = Rng::new(2);
+        let mut m = Mlp::new_random(2, 2, 2, &mut rng);
+        m.w1 = vec![vec![-5.0, -5.0], vec![1.0, 1.0]];
+        m.b1 = vec![0.0, 0.0];
+        let h = m.hidden_acts(&[1.0, 1.0]);
+        assert_eq!(h[0], 0.0);
+        assert_eq!(h[1], 2.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut rng = Rng::new(3);
+        let m = Mlp::new_random(4, 3, 2, &mut rng);
+        let j = m.to_json();
+        let m2 = Mlp::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(m.w1, m2.w1);
+        assert_eq!(m.b2, m2.b2);
+        assert_eq!(m.dout, m2.dout);
+    }
+
+    #[test]
+    fn accuracy_on_linearly_separable() {
+        let mut m = Mlp::new_random(1, 2, 2, &mut Rng::new(4));
+        // hand-wire: class 1 iff x > 0.5
+        m.w1 = vec![vec![1.0], vec![-1.0]];
+        m.b1 = vec![-0.5, 0.5];
+        m.w2 = vec![vec![-2.0, 2.0], vec![2.0, -2.0]];
+        m.b2 = vec![0.0, 0.0];
+        let xs: Vec<Vec<f32>> = (0..100).map(|i| vec![i as f32 / 100.0]).collect();
+        let ys: Vec<usize> = (0..100).map(|i| usize::from(i > 50)).collect();
+        assert!(m.accuracy(&xs, &ys) > 0.95);
+    }
+}

@@ -1,0 +1,285 @@
+//! Adam trainer for the float MLP0 (scikit-learn `MLPClassifier` stand-in)
+//! plus the shared softmax/cross-entropy math reused by the pure-Rust
+//! retraining backend.
+
+use super::Mlp;
+use crate::util::rng::Rng;
+
+/// Softmax in place; numerically stabilized.
+pub fn softmax(logits: &mut [f32]) {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in logits.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in logits.iter_mut() {
+        *v /= sum;
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    /// Stop early when train accuracy exceeds this (0 disables).
+    pub target_train_acc: f64,
+    /// Plateau patience: stop when train accuracy hasn't improved for
+    /// this many epochs (0 disables). Accuracy is checked every epoch
+    /// when either stopping rule is active.
+    pub patience: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 300,
+            batch: 32,
+            lr: 3e-3,
+            weight_decay: 1e-5,
+            seed: 0xC0FFEE,
+            target_train_acc: 0.0,
+            patience: 30,
+        }
+    }
+}
+
+struct Adam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+}
+
+impl Adam {
+    fn new(n: usize) -> Self {
+        Adam {
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t);
+        let b2t = 1.0 - self.beta2.powi(self.t);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grads[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grads[i] * grads[i];
+            let mh = self.m[i] / b1t;
+            let vh = self.v[i] / b2t;
+            params[i] -= lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+}
+
+fn flatten(m: &Mlp) -> Vec<f32> {
+    let mut p = Vec::new();
+    for r in &m.w1 {
+        p.extend_from_slice(r);
+    }
+    p.extend_from_slice(&m.b1);
+    for r in &m.w2 {
+        p.extend_from_slice(r);
+    }
+    p.extend_from_slice(&m.b2);
+    p
+}
+
+fn unflatten(m: &mut Mlp, p: &[f32]) {
+    let mut i = 0;
+    for r in m.w1.iter_mut() {
+        let n = r.len();
+        r.copy_from_slice(&p[i..i + n]);
+        i += n;
+    }
+    let n = m.b1.len();
+    m.b1.copy_from_slice(&p[i..i + n]);
+    i += n;
+    for r in m.w2.iter_mut() {
+        let n = r.len();
+        r.copy_from_slice(&p[i..i + n]);
+        i += n;
+    }
+    let n = m.b2.len();
+    m.b2.copy_from_slice(&p[i..i + n]);
+}
+
+/// Mean CE loss + parameter gradient over a batch (backprop).
+pub fn loss_and_grad(m: &Mlp, xs: &[&Vec<f32>], ys: &[usize]) -> (f32, Vec<f32>) {
+    let n = xs.len();
+    let mut gw1 = vec![vec![0.0f32; m.din]; m.hidden];
+    let mut gb1 = vec![0.0f32; m.hidden];
+    let mut gw2 = vec![vec![0.0f32; m.hidden]; m.dout];
+    let mut gb2 = vec![0.0f32; m.dout];
+    let mut loss = 0.0f32;
+
+    for (x, &y) in xs.iter().zip(ys) {
+        // forward
+        let mut z1 = vec![0.0f32; m.hidden];
+        for j in 0..m.hidden {
+            z1[j] = m.w1[j].iter().zip(x.iter()).map(|(&w, &v)| w * v).sum::<f32>() + m.b1[j];
+        }
+        let h: Vec<f32> = z1.iter().map(|&v| v.max(0.0)).collect();
+        let mut logits = vec![0.0f32; m.dout];
+        for o in 0..m.dout {
+            logits[o] =
+                m.w2[o].iter().zip(&h).map(|(&w, &v)| w * v).sum::<f32>() + m.b2[o];
+        }
+        let mut p = logits.clone();
+        softmax(&mut p);
+        loss += -(p[y].max(1e-12)).ln();
+        // backward
+        let mut dlogits = p;
+        dlogits[y] -= 1.0;
+        for o in 0..m.dout {
+            gb2[o] += dlogits[o];
+            for j in 0..m.hidden {
+                gw2[o][j] += dlogits[o] * h[j];
+            }
+        }
+        for j in 0..m.hidden {
+            if z1[j] <= 0.0 {
+                continue;
+            }
+            let dh: f32 = (0..m.dout).map(|o| dlogits[o] * m.w2[o][j]).sum();
+            gb1[j] += dh;
+            for i in 0..m.din {
+                gw1[j][i] += dh * x[i];
+            }
+        }
+    }
+
+    let scale = 1.0 / n as f32;
+    let mut g = Vec::new();
+    for r in &gw1 {
+        g.extend(r.iter().map(|v| v * scale));
+    }
+    g.extend(gb1.iter().map(|v| v * scale));
+    for r in &gw2 {
+        g.extend(r.iter().map(|v| v * scale));
+    }
+    g.extend(gb2.iter().map(|v| v * scale));
+    (loss * scale, g)
+}
+
+/// Train (in place); returns the final train accuracy.
+pub fn train(m: &mut Mlp, xs: &[Vec<f32>], ys: &[usize], cfg: &TrainConfig) -> f64 {
+    let mut rng = Rng::new(cfg.seed);
+    let mut params = flatten(m);
+    let mut adam = Adam::new(params.len());
+    let n = xs.len();
+    let mut best_acc = 0.0f64;
+    let mut stale = 0usize;
+    for _epoch in 0..cfg.epochs {
+        let perm = rng.permutation(n);
+        for chunk in perm.chunks(cfg.batch) {
+            let bx: Vec<&Vec<f32>> = chunk.iter().map(|&i| &xs[i]).collect();
+            let by: Vec<usize> = chunk.iter().map(|&i| ys[i]).collect();
+            unflatten(m, &params);
+            let (_l, mut g) = loss_and_grad(m, &bx, &by);
+            if cfg.weight_decay > 0.0 {
+                for (gi, pi) in g.iter_mut().zip(&params) {
+                    *gi += cfg.weight_decay * pi;
+                }
+            }
+            adam.step(&mut params, &g, cfg.lr);
+        }
+        unflatten(m, &params);
+        if cfg.target_train_acc > 0.0 || cfg.patience > 0 {
+            let acc = m.accuracy(xs, ys);
+            if cfg.target_train_acc > 0.0 && acc >= cfg.target_train_acc {
+                break;
+            }
+            if acc > best_acc + 1e-3 {
+                best_acc = acc;
+                stale = 0;
+            } else {
+                stale += 1;
+                if cfg.patience > 0 && stale >= cfg.patience {
+                    break;
+                }
+            }
+        }
+    }
+    unflatten(m, &params);
+    m.accuracy(xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_problem(rng: &mut Rng, n: usize) -> (Vec<Vec<f32>>, Vec<usize>) {
+        // 3 well-separated Gaussian blobs in 2D, normalized to [0,1]
+        let centers = [(0.2f64, 0.2f64), (0.8, 0.2), (0.5, 0.85)];
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..n {
+            let c = i % 3;
+            let (cx, cy) = centers[c];
+            xs.push(vec![
+                (rng.gauss(cx, 0.07)).clamp(0.0, 1.0) as f32,
+                (rng.gauss(cy, 0.07)).clamp(0.0, 1.0) as f32,
+            ]);
+            ys.push(c);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn trains_blobs_to_high_accuracy() {
+        let mut rng = Rng::new(9);
+        let (xs, ys) = blob_problem(&mut rng, 300);
+        let mut m = Mlp::new_random(2, 4, 3, &mut rng);
+        let cfg = TrainConfig {
+            epochs: 120,
+            target_train_acc: 0.97,
+            ..Default::default()
+        };
+        let acc = train(&mut m, &xs, &ys, &cfg);
+        assert!(acc > 0.95, "train acc {acc}");
+    }
+
+    #[test]
+    fn gradient_check_numerical() {
+        let mut rng = Rng::new(10);
+        let mut m = Mlp::new_random(3, 2, 2, &mut rng);
+        let x = vec![0.3f32, 0.8, 0.1];
+        let xs = vec![&x];
+        let ys = vec![1usize];
+        let (_, g) = loss_and_grad(&m, &xs, &ys);
+        // perturb w1[0][1]
+        let eps = 1e-3f32;
+        let orig = m.w1[0][1];
+        m.w1[0][1] = orig + eps;
+        let (lp, _) = loss_and_grad(&m, &xs, &ys);
+        m.w1[0][1] = orig - eps;
+        let (lm, _) = loss_and_grad(&m, &xs, &ys);
+        m.w1[0][1] = orig;
+        let numeric = (lp - lm) / (2.0 * eps);
+        let analytic = g[1]; // w1 row 0, col 1
+        assert!(
+            (numeric - analytic).abs() < 1e-2,
+            "numeric {numeric} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut v = vec![1.0f32, 2.0, 3.0];
+        softmax(&mut v);
+        let s: f32 = v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(v[2] > v[1] && v[1] > v[0]);
+    }
+}

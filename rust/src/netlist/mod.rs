@@ -1,0 +1,493 @@
+//! Gate-level netlist IR + build-time logic optimization.
+//!
+//! This is the substrate standing in for Synopsys DC's internal netlist.
+//! Gates are appended in topological order (a gate may only reference
+//! earlier gates), which makes levelized simulation, cost estimation and
+//! Verilog emission single forward passes.
+//!
+//! Optimization happens in two places, mirroring how a synthesis tool
+//! cleans up bespoke constant-hardwired datapaths:
+//!
+//!  * **at construction** — constant folding, identities (x&0, x^x, ...),
+//!    double-negation, and structural hashing (CSE). This is what makes a
+//!    bespoke multiplier by a power-of-two melt into pure wiring, the
+//!    effect the paper's §3.2 clustering is built on.
+//!  * **post-pass** — [`Netlist::sweep`] dead-gate elimination from the
+//!    outputs (used after ReLU/argmax pruning folds cones away).
+
+use rustc_hash::FxHashMap;
+use std::collections::HashMap;
+
+use crate::pdk::CellKind;
+
+pub type NetId = u32;
+
+/// One gate; output net id == its index in `Netlist::gates`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Gate {
+    pub kind: CellKind,
+    pub ins: [NetId; 3],
+}
+
+impl Gate {
+    pub fn inputs(&self) -> &[NetId] {
+        &self.ins[..self.kind.arity()]
+    }
+}
+
+/// A named bus of nets, LSB first.
+#[derive(Clone, Debug)]
+pub struct Bus {
+    pub name: String,
+    pub nets: Vec<NetId>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub name: String,
+    pub gates: Vec<Gate>,
+    pub inputs: Vec<Bus>,
+    pub outputs: Vec<Bus>,
+    /// Structural-hashing table (CSE); FxHash — this map is the hottest
+    /// structure in the whole DSE (see EXPERIMENTS.md §Perf).
+    dedup: FxHashMap<Gate, NetId>,
+    const0: Option<NetId>,
+    const1: Option<NetId>,
+}
+
+impl Netlist {
+    pub fn new(name: impl Into<String>) -> Self {
+        Netlist {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn n_gates(&self) -> usize {
+        self.gates.len()
+    }
+
+    /// Count of *physical* cells (excludes inputs/constants).
+    pub fn n_cells(&self) -> usize {
+        self.gates
+            .iter()
+            .filter(|g| {
+                !matches!(
+                    g.kind,
+                    CellKind::Input | CellKind::Const0 | CellKind::Const1
+                )
+            })
+            .count()
+    }
+
+    fn push(&mut self, kind: CellKind, ins: [NetId; 3]) -> NetId {
+        let gate = Gate { kind, ins };
+        if let Some(&id) = self.dedup.get(&gate) {
+            return id;
+        }
+        let id = self.gates.len() as NetId;
+        debug_assert!(gate.inputs().iter().all(|&i| i < id), "topo violation");
+        self.gates.push(gate);
+        self.dedup.insert(gate, id);
+        id
+    }
+
+    // ---- primary nets -------------------------------------------------
+
+    /// Declare an input bus of `width` nets.
+    pub fn input_bus(&mut self, name: impl Into<String>, width: usize) -> Vec<NetId> {
+        let nets: Vec<NetId> = (0..width)
+            .map(|_| {
+                let id = self.gates.len() as NetId;
+                self.gates.push(Gate {
+                    kind: CellKind::Input,
+                    ins: [0; 3],
+                });
+                id
+            })
+            .collect();
+        self.inputs.push(Bus {
+            name: name.into(),
+            nets: nets.clone(),
+        });
+        nets
+    }
+
+    /// Register an output bus (LSB first).
+    pub fn output_bus(&mut self, name: impl Into<String>, nets: Vec<NetId>) {
+        self.outputs.push(Bus {
+            name: name.into(),
+            nets,
+        });
+    }
+
+    pub fn zero(&mut self) -> NetId {
+        if let Some(z) = self.const0 {
+            return z;
+        }
+        let id = self.push(CellKind::Const0, [0; 3]);
+        self.const0 = Some(id);
+        id
+    }
+
+    pub fn one(&mut self) -> NetId {
+        if let Some(o) = self.const1 {
+            return o;
+        }
+        let id = self.push(CellKind::Const1, [0; 3]);
+        self.const1 = Some(id);
+        id
+    }
+
+    pub fn const_bit(&mut self, v: bool) -> NetId {
+        if v {
+            self.one()
+        } else {
+            self.zero()
+        }
+    }
+
+    /// Constant bus for an unsigned value, LSB first.
+    pub fn const_bus(&mut self, value: u64, width: usize) -> Vec<NetId> {
+        (0..width).map(|b| self.const_bit((value >> b) & 1 == 1)).collect()
+    }
+
+    fn is_const(&self, id: NetId) -> Option<bool> {
+        match self.gates[id as usize].kind {
+            CellKind::Const0 => Some(false),
+            CellKind::Const1 => Some(true),
+            _ => None,
+        }
+    }
+
+    // ---- logic builders (with peephole folding) -----------------------
+
+    pub fn not(&mut self, a: NetId) -> NetId {
+        if let Some(v) = self.is_const(a) {
+            return self.const_bit(!v);
+        }
+        // double negation
+        let g = self.gates[a as usize];
+        if g.kind == CellKind::Inv {
+            return g.ins[0];
+        }
+        self.push(CellKind::Inv, [a, 0, 0])
+    }
+
+    pub fn and(&mut self, a: NetId, b: NetId) -> NetId {
+        let (a, b) = (a.min(b), a.max(b));
+        match (self.is_const(a), self.is_const(b)) {
+            (Some(false), _) | (_, Some(false)) => return self.zero(),
+            (Some(true), _) => return b,
+            (_, Some(true)) => return a,
+            _ => {}
+        }
+        if a == b {
+            return a;
+        }
+        // x & !x = 0
+        if self.are_complements(a, b) {
+            return self.zero();
+        }
+        self.push(CellKind::And2, [a, b, 0])
+    }
+
+    pub fn or(&mut self, a: NetId, b: NetId) -> NetId {
+        let (a, b) = (a.min(b), a.max(b));
+        match (self.is_const(a), self.is_const(b)) {
+            (Some(true), _) | (_, Some(true)) => return self.one(),
+            (Some(false), _) => return b,
+            (_, Some(false)) => return a,
+            _ => {}
+        }
+        if a == b {
+            return a;
+        }
+        if self.are_complements(a, b) {
+            return self.one();
+        }
+        self.push(CellKind::Or2, [a, b, 0])
+    }
+
+    pub fn xor(&mut self, a: NetId, b: NetId) -> NetId {
+        let (a, b) = (a.min(b), a.max(b));
+        match (self.is_const(a), self.is_const(b)) {
+            (Some(false), _) => return b,
+            (_, Some(false)) => return a,
+            (Some(true), _) => return self.not(b),
+            (_, Some(true)) => return self.not(a),
+            _ => {}
+        }
+        if a == b {
+            return self.zero();
+        }
+        if self.are_complements(a, b) {
+            return self.one();
+        }
+        self.push(CellKind::Xor2, [a, b, 0])
+    }
+
+    pub fn xnor(&mut self, a: NetId, b: NetId) -> NetId {
+        let x = self.xor(a, b);
+        self.not(x)
+    }
+
+    pub fn nand(&mut self, a: NetId, b: NetId) -> NetId {
+        let x = self.and(a, b);
+        self.not(x)
+    }
+
+    pub fn nor(&mut self, a: NetId, b: NetId) -> NetId {
+        let x = self.or(a, b);
+        self.not(x)
+    }
+
+    /// out = sel ? a : b
+    pub fn mux(&mut self, sel: NetId, a: NetId, b: NetId) -> NetId {
+        match self.is_const(sel) {
+            Some(true) => return a,
+            Some(false) => return b,
+            None => {}
+        }
+        if a == b {
+            return a;
+        }
+        match (self.is_const(a), self.is_const(b)) {
+            (Some(true), Some(false)) => return sel,
+            (Some(false), Some(true)) => return self.not(sel),
+            (Some(false), None) => {
+                // !sel & b
+                let ns = self.not(sel);
+                return self.and(ns, b);
+            }
+            (Some(true), None) => {
+                // sel | b
+                return self.or(sel, b);
+            }
+            (None, Some(false)) => {
+                return self.and(sel, a);
+            }
+            (None, Some(true)) => {
+                let ns = self.not(sel);
+                return self.or(ns, a);
+            }
+            _ => {}
+        }
+        self.push(CellKind::Mux2, [sel, a, b])
+    }
+
+    fn complement_of(&self, a: NetId) -> Option<NetId> {
+        let g = self.gates[a as usize];
+        if g.kind == CellKind::Inv {
+            Some(g.ins[0])
+        } else {
+            None
+        }
+    }
+
+    fn are_complements(&self, a: NetId, b: NetId) -> bool {
+        self.complement_of(a) == Some(b) || self.complement_of(b) == Some(a)
+    }
+
+    // ---- passes --------------------------------------------------------
+
+    /// Dead-gate elimination: keep only the cone of the registered outputs
+    /// (inputs are always kept so port ordering survives). Returns the new
+    /// netlist and the count of removed physical cells.
+    pub fn sweep(&self) -> (Netlist, usize) {
+        let n = self.gates.len();
+        let mut live = vec![false; n];
+        let mut stack: Vec<NetId> = Vec::new();
+        for bus in &self.outputs {
+            for &net in &bus.nets {
+                if !live[net as usize] {
+                    live[net as usize] = true;
+                    stack.push(net);
+                }
+            }
+        }
+        while let Some(id) = stack.pop() {
+            let g = self.gates[id as usize];
+            for &i in g.inputs() {
+                if !live[i as usize] {
+                    live[i as usize] = true;
+                    stack.push(i);
+                }
+            }
+        }
+        // inputs stay
+        for bus in &self.inputs {
+            for &net in &bus.nets {
+                live[net as usize] = true;
+            }
+        }
+        let mut remap: Vec<NetId> = vec![NetId::MAX; n];
+        let mut out = Netlist::new(self.name.clone());
+        let mut removed = 0usize;
+        for (i, g) in self.gates.iter().enumerate() {
+            if !live[i] {
+                if !matches!(
+                    g.kind,
+                    CellKind::Input | CellKind::Const0 | CellKind::Const1
+                ) {
+                    removed += 1;
+                }
+                continue;
+            }
+            let mut ins = [0 as NetId; 3];
+            for (k, &src) in g.inputs().iter().enumerate() {
+                ins[k] = remap[src as usize];
+                debug_assert!(ins[k] != NetId::MAX);
+            }
+            let id = out.gates.len() as NetId;
+            let ng = Gate { kind: g.kind, ins };
+            out.gates.push(ng);
+            if g.kind != CellKind::Input {
+                out.dedup.insert(ng, id);
+            }
+            match g.kind {
+                CellKind::Const0 => out.const0 = Some(id),
+                CellKind::Const1 => out.const1 = Some(id),
+                _ => {}
+            }
+            remap[i] = id;
+        }
+        for bus in &self.inputs {
+            out.inputs.push(Bus {
+                name: bus.name.clone(),
+                nets: bus.nets.iter().map(|&x| remap[x as usize]).collect(),
+            });
+        }
+        for bus in &self.outputs {
+            out.outputs.push(Bus {
+                name: bus.name.clone(),
+                nets: bus.nets.iter().map(|&x| remap[x as usize]).collect(),
+            });
+        }
+        (out, removed)
+    }
+
+    /// Histogram of physical cells by kind.
+    pub fn cell_histogram(&self) -> HashMap<CellKind, usize> {
+        let mut h = HashMap::new();
+        for g in &self.gates {
+            if !matches!(
+                g.kind,
+                CellKind::Input | CellKind::Const0 | CellKind::Const1
+            ) {
+                *h.entry(g.kind).or_insert(0) += 1;
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_folding() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input_bus("a", 1)[0];
+        let z = nl.zero();
+        let o = nl.one();
+        assert_eq!(nl.and(a, z), z);
+        assert_eq!(nl.and(a, o), a);
+        assert_eq!(nl.or(a, o), o);
+        assert_eq!(nl.or(a, z), a);
+        assert_eq!(nl.xor(a, z), a);
+        assert_eq!(nl.xor(a, a), z);
+        assert_eq!(nl.n_cells(), 0, "identities must not create cells");
+    }
+
+    #[test]
+    fn double_negation_and_complement_rules() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input_bus("a", 1)[0];
+        let na = nl.not(a);
+        assert_eq!(nl.not(na), a);
+        let z = nl.zero();
+        let o = nl.one();
+        assert_eq!(nl.and(a, na), z);
+        assert_eq!(nl.or(a, na), o);
+        assert_eq!(nl.xor(a, na), o);
+    }
+
+    #[test]
+    fn structural_hashing_dedups() {
+        let mut nl = Netlist::new("t");
+        let ab = nl.input_bus("x", 2);
+        let g1 = nl.and(ab[0], ab[1]);
+        let g2 = nl.and(ab[1], ab[0]); // commuted
+        assert_eq!(g1, g2);
+        assert_eq!(nl.n_cells(), 1);
+    }
+
+    #[test]
+    fn mux_simplifications() {
+        let mut nl = Netlist::new("t");
+        let v = nl.input_bus("v", 3);
+        let (s, a, b) = (v[0], v[1], v[2]);
+        assert_eq!(nl.mux(s, a, a), a);
+        let o = nl.one();
+        let z = nl.zero();
+        assert_eq!(nl.mux(s, o, z), s);
+        let ns = nl.mux(s, z, o);
+        assert_eq!(nl.gates[ns as usize].kind, CellKind::Inv);
+        let real = nl.mux(s, a, b);
+        assert_eq!(nl.gates[real as usize].kind, CellKind::Mux2);
+    }
+
+    #[test]
+    fn sweep_removes_dead_cone() {
+        let mut nl = Netlist::new("t");
+        let v = nl.input_bus("v", 2);
+        let live = nl.and(v[0], v[1]);
+        let _dead = nl.xor(v[0], v[1]);
+        nl.output_bus("y", vec![live]);
+        let (swept, removed) = nl.sweep();
+        assert_eq!(removed, 1);
+        assert_eq!(swept.n_cells(), 1);
+        assert_eq!(swept.outputs[0].nets.len(), 1);
+    }
+
+    #[test]
+    fn sweep_preserves_io_order() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input_bus("a", 2);
+        let b = nl.input_bus("b", 1);
+        let g = nl.or(a[1], b[0]);
+        nl.output_bus("y", vec![g, a[0]]);
+        let (swept, _) = nl.sweep();
+        assert_eq!(swept.inputs[0].name, "a");
+        assert_eq!(swept.inputs[1].name, "b");
+        assert_eq!(swept.outputs[0].nets.len(), 2);
+    }
+
+    #[test]
+    fn const_bus_encoding() {
+        let mut nl = Netlist::new("t");
+        let bus = nl.const_bus(0b1010, 4);
+        let vals: Vec<bool> = bus
+            .iter()
+            .map(|&n| nl.gates[n as usize].kind == CellKind::Const1)
+            .collect();
+        assert_eq!(vals, vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn topo_order_invariant() {
+        let mut nl = Netlist::new("t");
+        let v = nl.input_bus("v", 4);
+        let mut acc = v[0];
+        for &x in &v[1..] {
+            acc = nl.xor(acc, x);
+        }
+        for (i, g) in nl.gates.iter().enumerate() {
+            for &inp in g.inputs() {
+                assert!((inp as usize) < i);
+            }
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! EGT standard-cell parameter set.
+//!
+//! Power model: `P_total = Σ_cells (p_static + p_dyn · toggle_rate)` where
+//! `toggle_rate` is toggles per evaluated input vector (from `sim::activity`).
+//! EGT circuits at ~1 V have a large static component (resistive loads /
+//! leaky electrolyte gating), which is why the paper's Table 2 power scales
+//! almost linearly with area; we split ~65/35 static/dynamic at a 0.5
+//! reference toggle rate.
+
+/// Cell kinds the synthesis substrate emits.
+///
+/// `Input`/`Const*` are pseudo-cells (zero cost). `Buf` only survives
+/// optimization when it fans a primary output directly to an input net.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CellKind {
+    Input,
+    Const0,
+    Const1,
+    Buf,
+    Inv,
+    And2,
+    Or2,
+    Nand2,
+    Nor2,
+    Xor2,
+    Xnor2,
+    /// 2:1 multiplexer: out = sel ? a : b.
+    Mux2,
+}
+
+impl CellKind {
+    pub const ALL: [CellKind; 12] = [
+        CellKind::Input,
+        CellKind::Const0,
+        CellKind::Const1,
+        CellKind::Buf,
+        CellKind::Inv,
+        CellKind::And2,
+        CellKind::Or2,
+        CellKind::Nand2,
+        CellKind::Nor2,
+        CellKind::Xor2,
+        CellKind::Xnor2,
+        CellKind::Mux2,
+    ];
+
+    /// Number of input pins.
+    pub fn arity(self) -> usize {
+        match self {
+            CellKind::Input | CellKind::Const0 | CellKind::Const1 => 0,
+            CellKind::Buf | CellKind::Inv => 1,
+            CellKind::Mux2 => 3,
+            _ => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CellKind::Input => "input",
+            CellKind::Const0 => "const0",
+            CellKind::Const1 => "const1",
+            CellKind::Buf => "buf",
+            CellKind::Inv => "inv",
+            CellKind::And2 => "and2",
+            CellKind::Or2 => "or2",
+            CellKind::Nand2 => "nand2",
+            CellKind::Nor2 => "nor2",
+            CellKind::Xor2 => "xor2",
+            CellKind::Xnor2 => "xnor2",
+            CellKind::Mux2 => "mux2",
+        }
+    }
+}
+
+/// Per-cell physical parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellParams {
+    /// Printed footprint in mm².
+    pub area_mm2: f64,
+    /// Propagation delay in ms (EGT gates switch in the ms range [6]).
+    pub delay_ms: f64,
+    /// Reference total power in µW at 0.5 toggles/vector (split below).
+    pub power_uw: f64,
+}
+
+/// The EGT library. One instance = one calibration; `egt_v1` is the
+/// default calibrated against the paper's Table 2 / §3.2 aggregates.
+#[derive(Clone, Debug)]
+pub struct EgtLibrary {
+    pub name: &'static str,
+    /// Fraction of `power_uw` that is static (activity-independent).
+    pub static_fraction: f64,
+    inv: CellParams,
+    buf: CellParams,
+    and2: CellParams,
+    or2: CellParams,
+    nand2: CellParams,
+    nor2: CellParams,
+    xor2: CellParams,
+    xnor2: CellParams,
+    mux2: CellParams,
+}
+
+const FREE: CellParams = CellParams {
+    area_mm2: 0.0,
+    delay_ms: 0.0,
+    power_uw: 0.0,
+};
+
+impl EgtLibrary {
+    /// Calibrated EGT inkjet library (see module docs for the targets).
+    ///
+    /// Relative cell costs follow CMOS-style transistor counts (NAND/NOR
+    /// cheapest, XOR/XNOR ≈ 2.7×, MUX ≈ 3×), scaled so the logic mix of a
+    /// bespoke multiplier+adder datapath averages ≈0.36 mm²/gate. Power
+    /// density lands at ≈31 µW/mm²; delays give ≈1 ms/gate average on
+    /// carry paths so Table 2 CPDs land in the 100-200 ms band.
+    pub fn egt_v1() -> Self {
+        // area scale: NAND2 = 0.22 mm²
+        let a = |x: f64| x * 0.22;
+        // power: ~31 µW per mm² of cell area
+        let p = |area: f64| area * 31.0;
+        // delay scale: NAND2 = 0.55 ms
+        let d = |x: f64| x * 0.55;
+        let mk = |ar: f64, dl: f64| CellParams {
+            area_mm2: a(ar),
+            delay_ms: d(dl),
+            power_uw: p(a(ar)),
+        };
+        EgtLibrary {
+            name: "egt_v1",
+            static_fraction: 0.65,
+            inv: mk(0.6, 0.6),
+            buf: mk(0.6, 0.6),
+            and2: mk(1.4, 1.3),
+            or2: mk(1.4, 1.3),
+            nand2: mk(1.0, 1.0),
+            nor2: mk(1.0, 1.1),
+            xor2: mk(2.7, 2.1),
+            xnor2: mk(2.7, 2.1),
+            mux2: mk(3.0, 2.3),
+        }
+    }
+
+    /// A deliberately uncalibrated "unit" library for structural tests
+    /// (1 area / 1 delay / 1 power per real gate).
+    pub fn unit() -> Self {
+        let one = CellParams {
+            area_mm2: 1.0,
+            delay_ms: 1.0,
+            power_uw: 1.0,
+        };
+        EgtLibrary {
+            name: "unit",
+            static_fraction: 0.5,
+            inv: one,
+            buf: one,
+            and2: one,
+            or2: one,
+            nand2: one,
+            nor2: one,
+            xor2: one,
+            xnor2: one,
+            mux2: one,
+        }
+    }
+
+    pub fn params(&self, kind: CellKind) -> CellParams {
+        match kind {
+            CellKind::Input | CellKind::Const0 | CellKind::Const1 => FREE,
+            CellKind::Buf => self.buf,
+            CellKind::Inv => self.inv,
+            CellKind::And2 => self.and2,
+            CellKind::Or2 => self.or2,
+            CellKind::Nand2 => self.nand2,
+            CellKind::Nor2 => self.nor2,
+            CellKind::Xor2 => self.xor2,
+            CellKind::Xnor2 => self.xnor2,
+            CellKind::Mux2 => self.mux2,
+        }
+    }
+
+    /// Static power component of one cell (µW).
+    pub fn static_power_uw(&self, kind: CellKind) -> f64 {
+        self.params(kind).power_uw * self.static_fraction
+    }
+
+    /// Dynamic power of one cell at the given toggle rate (toggles per
+    /// input vector), normalized to the 0.5-toggle reference point.
+    pub fn dynamic_power_uw(&self, kind: CellKind, toggle_rate: f64) -> f64 {
+        self.params(kind).power_uw * (1.0 - self.static_fraction) * (toggle_rate / 0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_matches_kind() {
+        assert_eq!(CellKind::Inv.arity(), 1);
+        assert_eq!(CellKind::And2.arity(), 2);
+        assert_eq!(CellKind::Mux2.arity(), 3);
+        assert_eq!(CellKind::Input.arity(), 0);
+    }
+
+    #[test]
+    fn power_split_consistent() {
+        let lib = EgtLibrary::egt_v1();
+        let total = lib.params(CellKind::Nand2).power_uw;
+        let s = lib.static_power_uw(CellKind::Nand2);
+        let d = lib.dynamic_power_uw(CellKind::Nand2, 0.5);
+        assert!((s + d - total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_power_scales_with_activity() {
+        let lib = EgtLibrary::egt_v1();
+        let d1 = lib.dynamic_power_uw(CellKind::Xor2, 0.25);
+        let d2 = lib.dynamic_power_uw(CellKind::Xor2, 0.5);
+        assert!((d2 / d1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_density_near_31uw_per_mm2() {
+        let lib = EgtLibrary::egt_v1();
+        for k in [CellKind::Nand2, CellKind::Xor2, CellKind::Mux2] {
+            let p = lib.params(k);
+            let density = p.power_uw / p.area_mm2;
+            assert!((density - 31.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! PJRT retraining backend — executes the AOT-lowered JAX `train_step`
+//! artifact per minibatch. This is the production L3→L2 path: the Rust
+//! coordinator drives the compiled JAX graph (which embeds the Pallas
+//! kernel semantics at lowering time) through PJRT; Python is not running.
+
+use anyhow::{anyhow, Result};
+
+use crate::retrain::{EpochStats, RetrainState, TrainBackend};
+
+use super::{literal_matrix, literal_scalar, literal_vec, Runtime};
+
+/// TrainBackend that calls the `train_<key>.hlo.txt` artifact.
+pub struct PjrtBackend<'rt> {
+    rt: &'rt Runtime,
+    key: String,
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    batch: usize,
+    vc_max: usize,
+    dout: usize,
+}
+
+impl<'rt> PjrtBackend<'rt> {
+    pub fn new(rt: &'rt Runtime, key: &str) -> Result<Self> {
+        let top = rt
+            .index
+            .by_key(key)
+            .ok_or_else(|| anyhow!("no artifact for topology `{key}`"))?;
+        let exe = rt.load(&top.train)?;
+        Ok(PjrtBackend {
+            rt,
+            key: key.to_string(),
+            exe,
+            batch: rt.index.train_batch,
+            vc_max: rt.index.vc_max,
+            dout: top.dout,
+        })
+    }
+
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+}
+
+impl TrainBackend for PjrtBackend<'_> {
+    fn train_epoch(
+        &mut self,
+        st: &mut RetrainState,
+        vc: &[f32],
+        lr: f32,
+    ) -> Result<EpochStats> {
+        anyhow::ensure!(
+            vc.len() <= self.vc_max,
+            "VC larger than artifact capacity ({} > {})",
+            vc.len(),
+            self.vc_max
+        );
+        let mut vc_pad = vec![0.0f32; self.vc_max];
+        let mut vc_mask = vec![0.0f32; self.vc_max];
+        vc_pad[..vc.len()].copy_from_slice(vc);
+        vc_mask[..vc.len()].fill(1.0);
+        let lvc = literal_vec(&vc_pad)?;
+        let lmask = literal_vec(&vc_mask)?;
+
+        let perm = st.rng.permutation(st.n);
+        let mut changed_total = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut batches = 0usize;
+
+        let b = self.batch;
+        let din = st.din;
+        let dout = st.dout;
+        debug_assert_eq!(dout, self.dout);
+        let mut xbuf = vec![0.0f32; b * din];
+        let mut ybuf = vec![0.0f32; b * dout];
+
+        // count projection changes across the epoch like the native
+        // backend: before-epoch vs per-step artifact counter
+        for chunk in perm.chunks(b) {
+            if chunk.len() < b {
+                break; // drop the final partial batch (shapes are AOT-fixed)
+            }
+            for (r, &idx) in chunk.iter().enumerate() {
+                xbuf[r * din..(r + 1) * din]
+                    .copy_from_slice(&st.x[idx * din..(idx + 1) * din]);
+                for o in 0..dout {
+                    ybuf[r * dout + o] = if st.y[idx] == o { 1.0 } else { 0.0 };
+                }
+            }
+            let args = vec![
+                literal_matrix(&st.w1, din, st.hidden)?,
+                literal_vec(&st.b1)?,
+                literal_matrix(&st.w2, st.hidden, dout)?,
+                literal_vec(&st.b2)?,
+                literal_matrix(&xbuf, b, din)?,
+                literal_matrix(&ybuf, b, dout)?,
+                super::CloneLiteral::clone_literal(&lvc)?,
+                super::CloneLiteral::clone_literal(&lmask)?,
+                literal_scalar(lr),
+                literal_scalar(st.temp),
+            ];
+            let out = self.rt.exec(&self.exe, &args)?;
+            anyhow::ensure!(out.len() == 8, "train_step returns 8 outputs, got {}", out.len());
+            let take = |l: &xla::Literal| -> Result<Vec<f32>> {
+                l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+            };
+            st.w1 = take(&out[0])?;
+            st.b1 = take(&out[1])?;
+            st.w2 = take(&out[2])?;
+            st.b2 = take(&out[3])?;
+            // out[4]/out[5] are the projected weights (unused here; the
+            // driver projects via to_quant), out[6] loss, out[7] changed
+            let loss = out[6]
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("loss: {e:?}"))?;
+            let changed = out[7]
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("changed: {e:?}"))?;
+            loss_sum += loss as f64;
+            changed_total += changed as usize;
+            batches += 1;
+        }
+
+        Ok(EpochStats {
+            changed: changed_total,
+            loss: loss_sum / batches.max(1) as f64,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

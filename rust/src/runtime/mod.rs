@@ -1,0 +1,328 @@
+//! PJRT runtime — loads and executes the AOT artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`). Python never runs here:
+//! the HLO **text** is parsed and compiled by the PJRT CPU client via the
+//! `xla` crate (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `compile` → `execute`; see /opt/xla-example/load_hlo/ and DESIGN.md §3
+//! for why text, not serialized protos, is the interchange format).
+
+pub mod backend_pjrt;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::fixed::QuantMlp;
+use crate::util::json::Json;
+
+/// One topology's artifact entry (mirrors topologies.json).
+#[derive(Clone, Debug)]
+pub struct TopologyArtifact {
+    pub key: String,
+    pub name: String,
+    pub din: usize,
+    pub hidden: usize,
+    pub dout: usize,
+    pub fwd: String,
+    pub train: String,
+}
+
+/// Parsed artifact index.
+#[derive(Clone, Debug)]
+pub struct ArtifactIndex {
+    pub eval_batch: usize,
+    pub train_batch: usize,
+    pub vc_max: usize,
+    pub topologies: Vec<TopologyArtifact>,
+}
+
+impl ArtifactIndex {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("topologies.json: {e}"))?;
+        let tops = j
+            .req("topologies")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("topologies not an array"))?
+            .iter()
+            .map(|t| -> Result<TopologyArtifact> {
+                Ok(TopologyArtifact {
+                    key: t.req_str("key").map_err(|e| anyhow!("{e}"))?.to_string(),
+                    name: t.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+                    din: t.req_usize("din").map_err(|e| anyhow!("{e}"))?,
+                    hidden: t.req_usize("hidden").map_err(|e| anyhow!("{e}"))?,
+                    dout: t.req_usize("dout").map_err(|e| anyhow!("{e}"))?,
+                    fwd: t.req_str("fwd").map_err(|e| anyhow!("{e}"))?.to_string(),
+                    train: t.req_str("train").map_err(|e| anyhow!("{e}"))?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactIndex {
+            eval_batch: j.req_usize("eval_batch").map_err(|e| anyhow!("{e}"))?,
+            train_batch: j.req_usize("train_batch").map_err(|e| anyhow!("{e}"))?,
+            vc_max: j.req_usize("vc_max").map_err(|e| anyhow!("{e}"))?,
+            topologies: tops,
+        })
+    }
+
+    pub fn by_key(&self, key: &str) -> Option<&TopologyArtifact> {
+        self.topologies.iter().find(|t| t.key == key)
+    }
+}
+
+/// PJRT runtime with a compiled-executable cache (one compile per
+/// artifact per process — the paper's "synthesis once" discipline applied
+/// to the ML-compiler side).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub index: ArtifactIndex,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (expects topologies.json inside).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("topologies.json"))
+            .with_context(|| format!("reading {}/topologies.json (run `make artifacts`)", dir.display()))?;
+        let index = ArtifactIndex::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            index,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location, overridable with AXMLP_ARTIFACTS.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("AXMLP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an executable on literals; unwraps the tuple root.
+    pub fn exec(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        out.to_tuple().map_err(|e| anyhow!("tuple unwrap: {e:?}"))
+    }
+
+    /// Smoke test: run the trivial artifact and check numerics.
+    pub fn smoke(&self) -> Result<()> {
+        let exe = self.load("smoke.hlo.txt")?;
+        let x = literal_matrix(&[1.0, 2.0, 3.0, 4.0], 2, 2)?;
+        let y = literal_matrix(&[1.0, 1.0, 1.0, 1.0], 2, 2)?;
+        let out = self.exec(&exe, &[x, y])?;
+        let v = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        anyhow::ensure!(v == vec![5.0, 5.0, 9.0, 9.0], "smoke numerics: {v:?}");
+        Ok(())
+    }
+
+    /// Batched AxSum forward via the fwd artifact: returns logits
+    /// [n][dout]. Pads the final batch with zero rows.
+    pub fn forward_logits(
+        &self,
+        key: &str,
+        q: &QuantMlp,
+        plan: &crate::axsum::ShiftPlan,
+        xs: &[Vec<i64>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let top = self
+            .index
+            .by_key(key)
+            .ok_or_else(|| anyhow!("unknown topology `{key}`"))?;
+        anyhow::ensure!(top.din == q.din() && top.hidden == q.hidden() && top.dout == q.dout(),
+            "model shape does not match artifact {key}");
+        let exe = self.load(&top.fwd)?;
+        let b = self.index.eval_batch;
+        let (w1, b1, s1) = pack_layer_jax(q, plan, 0);
+        let (w2, b2, s2) = pack_layer_jax(q, plan, 1);
+        let lw1 = literal_matrix(&w1, top.din, top.hidden)?;
+        let lb1 = literal_vec(&b1)?;
+        let ls1 = literal_matrix(&s1, top.din, top.hidden)?;
+        let lw2 = literal_matrix(&w2, top.hidden, top.dout)?;
+        let lb2 = literal_vec(&b2)?;
+        let ls2 = literal_matrix(&s2, top.hidden, top.dout)?;
+
+        let mut logits: Vec<Vec<f32>> = Vec::with_capacity(xs.len());
+        let mut xbuf = vec![0.0f32; b * top.din];
+        let mut start = 0;
+        while start < xs.len() {
+            let n = (xs.len() - start).min(b);
+            xbuf.iter_mut().for_each(|v| *v = 0.0);
+            for (r, x) in xs[start..start + n].iter().enumerate() {
+                for (c, &v) in x.iter().enumerate() {
+                    xbuf[r * top.din + c] = v as f32;
+                }
+            }
+            let lx = literal_matrix(&xbuf, b, top.din)?;
+            let out = self.exec(
+                &exe,
+                &[
+                    lx,
+                    lw1.clone_literal()?,
+                    lb1.clone_literal()?,
+                    ls1.clone_literal()?,
+                    lw2.clone_literal()?,
+                    lb2.clone_literal()?,
+                    ls2.clone_literal()?,
+                ],
+            )?;
+            let flat = out[0]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            for r in 0..n {
+                logits.push(flat[r * top.dout..(r + 1) * top.dout].to_vec());
+            }
+            start += n;
+        }
+        Ok(logits)
+    }
+
+    /// Accuracy through the artifact path.
+    pub fn accuracy(
+        &self,
+        key: &str,
+        q: &QuantMlp,
+        plan: &crate::axsum::ShiftPlan,
+        xs: &[Vec<i64>],
+        ys: &[usize],
+    ) -> Result<f64> {
+        let logits = self.forward_logits(key, q, plan, xs)?;
+        let ok = logits
+            .iter()
+            .zip(ys)
+            .filter(|(l, &y)| {
+                crate::util::stats::argmax_f64(&l.iter().map(|&v| v as f64).collect::<Vec<_>>())
+                    == y
+            })
+            .count();
+        Ok(ok as f64 / xs.len().max(1) as f64)
+    }
+}
+
+/// Pack layer `l` of a QuantMlp ([out][in]) into jax layout ([in][out])
+/// flat f32 buffers: (w, b, shifts).
+pub fn pack_layer_jax(
+    q: &QuantMlp,
+    plan: &crate::axsum::ShiftPlan,
+    l: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rows = q.w[l].len(); // out
+    let cols = q.w[l][0].len(); // in
+    let mut w = vec![0.0f32; rows * cols];
+    let mut s = vec![0.0f32; rows * cols];
+    for (o, row) in q.w[l].iter().enumerate() {
+        for (i, &v) in row.iter().enumerate() {
+            w[i * rows + o] = v as f32;
+            s[i * rows + o] = plan.shifts[l][o][i] as f32;
+        }
+    }
+    let b: Vec<f32> = q.b[l].iter().map(|&v| v as f32).collect();
+    (w, b, s)
+}
+
+/// f32 row-major matrix literal.
+pub fn literal_matrix(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "literal shape mismatch");
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn literal_vec(data: &[f32]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data))
+}
+
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// The xla crate's Literal lacks Clone; round-trip through raw bytes.
+pub trait CloneLiteral {
+    fn clone_literal(&self) -> Result<xla::Literal>;
+}
+
+impl CloneLiteral for xla::Literal {
+    fn clone_literal(&self) -> Result<xla::Literal> {
+        let shape = self
+            .array_shape()
+            .map_err(|e| anyhow!("shape: {e:?}"))?;
+        let v = self
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        xla::Literal::vec1(&v)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_parses() {
+        let src = r#"{"eval_batch":256,"train_batch":64,"vc_max":256,
+          "topologies":[{"key":"ma","name":"Mammographic","din":5,"hidden":3,
+            "dout":2,"fwd":"fwd_ma.hlo.txt","train":"train_ma.hlo.txt"}]}"#;
+        let idx = ArtifactIndex::parse(src).unwrap();
+        assert_eq!(idx.eval_batch, 256);
+        assert_eq!(idx.by_key("ma").unwrap().din, 5);
+        assert!(idx.by_key("zz").is_none());
+    }
+
+    #[test]
+    fn pack_layer_transposes() {
+        let q = QuantMlp {
+            w: vec![
+                vec![vec![1, 2], vec![3, 4], vec![5, 6]], // [out=3][in=2]
+                vec![vec![7, 8, 9]],
+            ],
+            b: vec![vec![10, 11, 12], vec![13]],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        };
+        let plan = crate::axsum::ShiftPlan::exact(&q);
+        let (w, b, s) = pack_layer_jax(&q, &plan, 0);
+        // jax layout [in=2][out=3]: rows are inputs
+        assert_eq!(w, vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
+        assert_eq!(b, vec![10.0, 11.0, 12.0]);
+        assert_eq!(s, vec![0.0; 6]);
+    }
+}

@@ -1,0 +1,268 @@
+//! Levelized, word-parallel logic simulator (Questasim substitute).
+//!
+//! Because gates are stored in topological order, simulation is one
+//! forward pass. Patterns are packed 64-per-u64 word, so a full test-set
+//! stimulus of a few hundred vectors costs a handful of machine ops per
+//! gate. The simulator doubles as:
+//!
+//!  * functional verifier — bit-exact against `axsum`'s integer model;
+//!  * switching-activity source — per-gate toggle counts feed the dynamic
+//!    power term in `estimate` (what PrimeTime does with Questasim VCDs).
+
+use std::collections::HashMap;
+
+use crate::netlist::Netlist;
+use crate::pdk::CellKind;
+
+/// Result of a simulation run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Per output bus: one u64 value per pattern (LSB-first bus packing).
+    pub outputs: HashMap<String, Vec<u64>>,
+    /// Per-gate toggle counts across the pattern sequence (empty if
+    /// toggle capture was off).
+    pub toggles: Vec<u64>,
+    pub patterns: usize,
+}
+
+/// Simulate `patterns` input vectors. `inputs` maps bus name -> per-pattern
+/// unsigned values (LSB-first packing into the bus nets). Missing buses
+/// default to all-zero. When `capture_toggles` is set, per-gate transition
+/// counts over the pattern *sequence* are accumulated (stimulus order is
+/// meaningful, as in a testbench).
+pub fn simulate(
+    nl: &Netlist,
+    inputs: &HashMap<String, Vec<u64>>,
+    patterns: usize,
+    capture_toggles: bool,
+) -> SimResult {
+    let n = nl.gates.len();
+    let mut toggles = if capture_toggles { vec![0u64; n] } else { Vec::new() };
+    let mut outputs: HashMap<String, Vec<u64>> = nl
+        .outputs
+        .iter()
+        .map(|b| (b.name.clone(), Vec::with_capacity(patterns)))
+        .collect();
+
+    let mut words = vec![0u64; n];
+    // previous chunk's final pattern value per net (bit 0 = value)
+    let mut prev_last = vec![0u64; n];
+    let chunks = patterns.div_ceil(64);
+
+    for chunk in 0..chunks {
+        let base = chunk * 64;
+        let in_chunk = (patterns - base).min(64);
+
+        // load inputs
+        for bus in &nl.inputs {
+            let vals = inputs.get(&bus.name);
+            for (biti, &net) in bus.nets.iter().enumerate() {
+                let mut w = 0u64;
+                for p in 0..in_chunk {
+                    let v = vals.and_then(|v| v.get(base + p)).copied().unwrap_or(0);
+                    if (v >> biti) & 1 == 1 {
+                        w |= 1u64 << p;
+                    }
+                }
+                words[net as usize] = w;
+            }
+        }
+
+        // evaluate (+ fused toggle counting: one pass over the gate array
+        // instead of two — see EXPERIMENTS.md §Perf)
+        let mask = if in_chunk == 64 {
+            u64::MAX
+        } else {
+            (1u64 << in_chunk) - 1
+        };
+        for (i, g) in nl.gates.iter().enumerate() {
+            let w = match g.kind {
+                CellKind::Input => words[i],
+                CellKind::Const0 => 0,
+                CellKind::Const1 => u64::MAX,
+                CellKind::Buf => words[g.ins[0] as usize],
+                CellKind::Inv => !words[g.ins[0] as usize],
+                CellKind::And2 => words[g.ins[0] as usize] & words[g.ins[1] as usize],
+                CellKind::Or2 => words[g.ins[0] as usize] | words[g.ins[1] as usize],
+                CellKind::Nand2 => !(words[g.ins[0] as usize] & words[g.ins[1] as usize]),
+                CellKind::Nor2 => !(words[g.ins[0] as usize] | words[g.ins[1] as usize]),
+                CellKind::Xor2 => words[g.ins[0] as usize] ^ words[g.ins[1] as usize],
+                CellKind::Xnor2 => !(words[g.ins[0] as usize] ^ words[g.ins[1] as usize]),
+                CellKind::Mux2 => {
+                    let s = words[g.ins[0] as usize];
+                    (s & words[g.ins[1] as usize]) | (!s & words[g.ins[2] as usize])
+                }
+            };
+            words[i] = w;
+            if capture_toggles {
+                let wm = w & mask;
+                // transitions within the chunk: pattern p-1 -> p
+                let within = (wm ^ (wm >> 1)) & (mask >> 1);
+                let mut t = within.count_ones() as u64;
+                // boundary transition from previous chunk's last pattern
+                if chunk > 0 && (wm & 1) != prev_last[i] {
+                    t += 1;
+                }
+                toggles[i] += t;
+                prev_last[i] = (wm >> (in_chunk - 1)) & 1;
+            }
+        }
+
+        // read outputs
+        for bus in &nl.outputs {
+            let dst = outputs.get_mut(&bus.name).unwrap();
+            for p in 0..in_chunk {
+                let mut v = 0u64;
+                for (biti, &net) in bus.nets.iter().enumerate() {
+                    if (words[net as usize] >> p) & 1 == 1 {
+                        v |= 1u64 << biti;
+                    }
+                }
+                dst.push(v);
+            }
+        }
+    }
+
+    SimResult {
+        outputs,
+        toggles,
+        patterns,
+    }
+}
+
+/// One-pattern convenience evaluator for tests: returns bus name -> value.
+pub fn eval_once(nl: &Netlist, assignments: &[(&str, u64)]) -> HashMap<String, u64> {
+    let inputs: HashMap<String, Vec<u64>> = assignments
+        .iter()
+        .map(|(n, v)| (n.to_string(), vec![*v]))
+        .collect();
+    let r = simulate(nl, &inputs, 1, false);
+    r.outputs
+        .into_iter()
+        .map(|(k, mut v)| (k, v.pop().unwrap()))
+        .collect()
+}
+
+/// Signed read helper: interpret a bus value of width `w` as two's
+/// complement.
+pub fn as_signed(v: u64, w: usize) -> i64 {
+    if w == 0 || w >= 64 {
+        return v as i64;
+    }
+    let m = 1u64 << (w - 1);
+    (((v & ((1u64 << w) - 1)) ^ m) as i64) - m as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gates_truth_tables() {
+        let mut nl = Netlist::new("t");
+        let v = nl.input_bus("v", 2);
+        let (a, b) = (v[0], v[1]);
+        let and = nl.and(a, b);
+        let or = nl.or(a, b);
+        let xor = nl.xor(a, b);
+        let na = nl.not(a);
+        nl.output_bus("and", vec![and]);
+        nl.output_bus("or", vec![or]);
+        nl.output_bus("xor", vec![xor]);
+        nl.output_bus("na", vec![na]);
+        for v_in in 0..4u64 {
+            let out = eval_once(&nl, &[("v", v_in)]);
+            let (a, b) = (v_in & 1, (v_in >> 1) & 1);
+            assert_eq!(out["and"], a & b);
+            assert_eq!(out["or"], a | b);
+            assert_eq!(out["xor"], a ^ b);
+            assert_eq!(out["na"], 1 - a);
+        }
+    }
+
+    #[test]
+    fn mux_truth_table() {
+        let mut nl = Netlist::new("t");
+        let v = nl.input_bus("v", 3);
+        let m = nl.mux(v[0], v[1], v[2]);
+        nl.output_bus("m", vec![m]);
+        for v_in in 0..8u64 {
+            let out = eval_once(&nl, &[("v", v_in)]);
+            let (s, a, b) = (v_in & 1, (v_in >> 1) & 1, (v_in >> 2) & 1);
+            assert_eq!(out["m"], if s == 1 { a } else { b });
+        }
+    }
+
+    #[test]
+    fn multi_pattern_matches_single() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input_bus("a", 4);
+        let b = nl.input_bus("b", 4);
+        let mut acc = Vec::new();
+        for i in 0..4 {
+            acc.push(nl.xor(a[i], b[i]));
+        }
+        nl.output_bus("y", acc);
+        let mut rng = Rng::new(5);
+        let pats = 200;
+        let av: Vec<u64> = (0..pats).map(|_| rng.below(16) as u64).collect();
+        let bv: Vec<u64> = (0..pats).map(|_| rng.below(16) as u64).collect();
+        let mut inputs = HashMap::new();
+        inputs.insert("a".to_string(), av.clone());
+        inputs.insert("b".to_string(), bv.clone());
+        let r = simulate(&nl, &inputs, pats, true);
+        for p in 0..pats {
+            let one = eval_once(&nl, &[("a", av[p]), ("b", bv[p])]);
+            assert_eq!(r.outputs["y"][p], one["y"], "pattern {p}");
+        }
+    }
+
+    #[test]
+    fn toggle_counting_alternating() {
+        // single inverter driven by alternating input: every pattern
+        // transition toggles both nets.
+        let mut nl = Netlist::new("t");
+        let a = nl.input_bus("a", 1);
+        let ia = nl.not(a[0]);
+        nl.output_bus("y", vec![ia]);
+        let pats = 130; // crosses two word boundaries
+        let vals: Vec<u64> = (0..pats).map(|p| (p % 2) as u64).collect();
+        let mut inputs = HashMap::new();
+        inputs.insert("a".to_string(), vals);
+        let r = simulate(&nl, &inputs, pats, true);
+        // input net toggles pats-1 times; inverter follows
+        let inv_idx = ia as usize;
+        assert_eq!(r.toggles[inv_idx], (pats - 1) as u64);
+    }
+
+    #[test]
+    fn toggle_counting_constant_input() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input_bus("a", 1);
+        let ia = nl.not(a[0]);
+        nl.output_bus("y", vec![ia]);
+        let vals: Vec<u64> = vec![1; 100];
+        let mut inputs = HashMap::new();
+        inputs.insert("a".to_string(), vals);
+        let r = simulate(&nl, &inputs, 100, true);
+        assert_eq!(r.toggles[ia as usize], 0);
+    }
+
+    #[test]
+    fn as_signed_roundtrip() {
+        assert_eq!(as_signed(0b111, 3), -1);
+        assert_eq!(as_signed(0b011, 3), 3);
+        assert_eq!(as_signed(0b100, 3), -4);
+        assert_eq!(as_signed(5, 8), 5);
+    }
+
+    #[test]
+    fn missing_input_defaults_zero() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input_bus("a", 2);
+        nl.output_bus("y", vec![a[0], a[1]]);
+        let r = simulate(&nl, &HashMap::new(), 3, false);
+        assert_eq!(r.outputs["y"], vec![0, 0, 0]);
+    }
+}

@@ -1,0 +1,600 @@
+//! Width-minimal (bespoke) arithmetic bus builders.
+//!
+//! Values carry integer bounds alongside their nets, and every operation
+//! sizes its result bus to the *bare minimum* width its bounds require —
+//! the bespoke-design property the paper leans on ("e.g. '3' uses only 2
+//! bits"). Buses are LSB-first; constants are free nets that fold away in
+//! downstream gates.
+
+use crate::netlist::{NetId, Netlist};
+
+/// Unsigned value: nets encode [0, hi].
+#[derive(Clone, Debug)]
+pub struct UBus {
+    pub nets: Vec<NetId>,
+    pub hi: u64,
+}
+
+/// Signed two's-complement value with guaranteed bounds [lo, hi].
+#[derive(Clone, Debug)]
+pub struct SBus {
+    pub nets: Vec<NetId>,
+    pub lo: i64,
+    pub hi: i64,
+}
+
+/// Bits needed to represent the unsigned value `hi`.
+pub fn ubits(hi: u64) -> usize {
+    if hi == 0 {
+        1
+    } else {
+        64 - hi.leading_zeros() as usize
+    }
+}
+
+/// Bits needed for a signed range [lo, hi] in two's complement.
+pub fn sbits(lo: i64, hi: i64) -> usize {
+    let mut w = 1;
+    while !fits_signed(lo, hi, w) {
+        w += 1;
+    }
+    w
+}
+
+fn fits_signed(lo: i64, hi: i64, w: usize) -> bool {
+    if w >= 63 {
+        return true;
+    }
+    let min = -(1i64 << (w - 1));
+    let max = (1i64 << (w - 1)) - 1;
+    lo >= min && hi <= max
+}
+
+impl UBus {
+    pub fn width(&self) -> usize {
+        self.nets.len()
+    }
+
+    /// Constant unsigned bus.
+    pub fn constant(nl: &mut Netlist, v: u64) -> UBus {
+        let w = ubits(v);
+        UBus {
+            nets: nl.const_bus(v, w),
+            hi: v,
+        }
+    }
+
+    pub fn zero(nl: &mut Netlist) -> UBus {
+        UBus::constant(nl, 0)
+    }
+
+    /// From raw input nets: all 2^w - 1 values possible.
+    pub fn from_nets(nets: Vec<NetId>) -> UBus {
+        let hi = if nets.len() >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << nets.len()) - 1
+        };
+        UBus { nets, hi }
+    }
+
+    /// Bit at position i, or const0 past the top.
+    pub fn bit(&self, nl: &mut Netlist, i: usize) -> NetId {
+        self.nets.get(i).copied().unwrap_or_else(|| nl.zero())
+    }
+
+    /// Shift left by k (free: wiring only).
+    pub fn shl(&self, nl: &mut Netlist, k: usize) -> UBus {
+        let mut nets = vec![nl.zero(); k];
+        nets.extend_from_slice(&self.nets);
+        UBus {
+            nets,
+            hi: self.hi << k,
+        }
+    }
+
+    /// Truncate the low `s` bits to zero (AxSum: keep the MSBs, discard
+    /// the low summand bits — the adder columns simply disappear).
+    pub fn trunc_low(&self, nl: &mut Netlist, s: usize) -> UBus {
+        if s == 0 {
+            return self.clone();
+        }
+        let z = nl.zero();
+        let mut nets = self.nets.clone();
+        let upto = s.min(nets.len());
+        for net in nets.iter_mut().take(upto) {
+            *net = z;
+        }
+        // hi bound: value is a multiple of 2^s, at most floor(hi/2^s)*2^s
+        let hi = if s >= 64 { 0 } else { (self.hi >> s) << s };
+        UBus { nets, hi }
+    }
+
+    /// Interpret as a (non-negative) signed value.
+    pub fn as_signed(&self, nl: &mut Netlist) -> SBus {
+        let w = sbits(0, self.hi as i64);
+        let mut nets = self.nets.clone();
+        nets.truncate(w);
+        while nets.len() < w {
+            nets.push(nl.zero());
+        }
+        SBus {
+            nets,
+            lo: 0,
+            hi: self.hi as i64,
+        }
+    }
+}
+
+impl SBus {
+    pub fn width(&self) -> usize {
+        self.nets.len()
+    }
+
+    pub fn sign(&self) -> NetId {
+        *self.nets.last().unwrap()
+    }
+
+    /// Sign-extend (or shrink, when bounds allow) to exactly `w` bits.
+    pub fn extend_to(&self, _nl: &mut Netlist, w: usize) -> Vec<NetId> {
+        assert!(w >= self.width() || fits_signed(self.lo, self.hi, w));
+        let mut nets = self.nets.clone();
+        let s = self.sign();
+        while nets.len() < w {
+            nets.push(s);
+        }
+        nets.truncate(w);
+        nets
+    }
+}
+
+/// Full adder: returns (sum, carry).
+pub fn full_adder(nl: &mut Netlist, a: NetId, b: NetId, c: NetId) -> (NetId, NetId) {
+    let axb = nl.xor(a, b);
+    let sum = nl.xor(axb, c);
+    let t1 = nl.and(a, b);
+    let t2 = nl.and(c, axb);
+    let carry = nl.or(t1, t2);
+    (sum, carry)
+}
+
+/// Unsigned add with full-width result (never overflows).
+pub fn u_add(nl: &mut Netlist, a: &UBus, b: &UBus) -> UBus {
+    let hi = a.hi.checked_add(b.hi).expect("u_add bound overflow");
+    let w = ubits(hi);
+    let mut carry = nl.zero();
+    let mut nets = Vec::with_capacity(w);
+    for i in 0..w {
+        let ab = a.bit(nl, i);
+        let bb = b.bit(nl, i);
+        let (s, c) = full_adder(nl, ab, bb, carry);
+        nets.push(s);
+        carry = c;
+    }
+    UBus { nets, hi }
+}
+
+/// Unsigned subtract a - b where bounds guarantee a >= b (CSD partial
+/// products). Computed as a + ~b + 1 over `w` bits, carry-out discarded.
+pub fn u_sub_nonneg(nl: &mut Netlist, a: &UBus, b: &UBus) -> UBus {
+    assert!(a.hi >= b.hi || a.hi > 0, "u_sub_nonneg needs a >= b bound");
+    let hi = a.hi; // result <= a
+    let w = ubits(hi).max(a.width()).max(b.width());
+    let mut carry = nl.one();
+    let mut nets = Vec::with_capacity(w);
+    for i in 0..w {
+        let ab = a.bit(nl, i);
+        let bb = b.bit(nl, i);
+        let nb = nl.not(bb);
+        let (s, c) = full_adder(nl, ab, nb, carry);
+        nets.push(s);
+        carry = c;
+    }
+    nets.truncate(ubits(hi));
+    UBus { nets, hi }
+}
+
+/// Balanced adder tree over unsigned summands (the Sp / Sn trees of the
+/// approximate neuron). Empty input yields constant 0.
+pub fn u_adder_tree(nl: &mut Netlist, mut terms: Vec<UBus>) -> UBus {
+    if terms.is_empty() {
+        return UBus::zero(nl);
+    }
+    while terms.len() > 1 {
+        let mut next = Vec::with_capacity(terms.len().div_ceil(2));
+        let mut it = terms.into_iter();
+        while let Some(a) = it.next() {
+            if let Some(b) = it.next() {
+                next.push(u_add(nl, &a, &b));
+            } else {
+                next.push(a);
+            }
+        }
+        terms = next;
+    }
+    terms.pop().unwrap()
+}
+
+/// S' = Sp + ~Sn (1's-complement combine, paper Eq. (3)): exact value
+/// Sp - Sn - 1. Single ripple adder over W bits; the inverted high-order
+/// constant-zero bits of Sn fold to constant ones for free.
+pub fn ones_complement_combine(nl: &mut Netlist, sp: &UBus, sn: &UBus) -> SBus {
+    let lo = -(sn.hi as i64) - 1;
+    let hi = (sp.hi as i64) - 1;
+    let w = sbits(lo, hi);
+    let mut carry = nl.zero();
+    let mut nets = Vec::with_capacity(w);
+    for i in 0..w {
+        let ab = sp.bit(nl, i);
+        let raw_b = sn.bit(nl, i);
+        let bb = nl.not(raw_b); // ~Sn, including implicit high zeros -> ones
+        let (s, c) = full_adder(nl, ab, bb, carry);
+        nets.push(s);
+        carry = c;
+    }
+    SBus { nets, lo, hi }
+}
+
+/// Exact signed subtract Sp - Sn (two's complement: Sp + ~Sn + 1), used by
+/// the exact-baseline neuron.
+pub fn u_sub_signed(nl: &mut Netlist, sp: &UBus, sn: &UBus) -> SBus {
+    let lo = -(sn.hi as i64);
+    let hi = sp.hi as i64;
+    let w = sbits(lo, hi);
+    let mut carry = nl.one();
+    let mut nets = Vec::with_capacity(w);
+    for i in 0..w {
+        let ab = sp.bit(nl, i);
+        let raw_b = sn.bit(nl, i);
+        let bb = nl.not(raw_b);
+        let (s, c) = full_adder(nl, ab, bb, carry);
+        nets.push(s);
+        carry = c;
+    }
+    SBus { nets, lo, hi }
+}
+
+/// Negate an unsigned value: result = -u (two's complement: ~u + 1).
+pub fn s_negate(nl: &mut Netlist, u: &UBus) -> SBus {
+    let lo = -(u.hi as i64);
+    let hi = 0i64;
+    let w = sbits(lo, hi);
+    let mut carry = nl.one();
+    let mut nets = Vec::with_capacity(w);
+    for i in 0..w {
+        let b = u.bit(nl, i);
+        let nb = nl.not(b);
+        let z = nl.zero();
+        let (s, c) = full_adder(nl, nb, z, carry);
+        nets.push(s);
+        carry = c;
+    }
+    SBus { nets, lo, hi }
+}
+
+/// Signed add with bound-tracked minimal width (exact-baseline adder tree;
+/// the sign-extension columns are where the conventional design pays).
+pub fn s_add(nl: &mut Netlist, a: &SBus, b: &SBus) -> SBus {
+    let lo = a.lo + b.lo;
+    let hi = a.hi + b.hi;
+    let w = sbits(lo, hi);
+    let an = a.extend_to(nl, w);
+    let bn = b.extend_to(nl, w);
+    let mut carry = nl.zero();
+    let mut nets = Vec::with_capacity(w);
+    for i in 0..w {
+        let (s, c) = full_adder(nl, an[i], bn[i], carry);
+        nets.push(s);
+        carry = c;
+    }
+    SBus { nets, lo, hi }
+}
+
+/// Balanced adder tree over signed summands.
+pub fn s_adder_tree(nl: &mut Netlist, mut terms: Vec<SBus>) -> SBus {
+    if terms.is_empty() {
+        let z = UBus::zero(nl);
+        return z.as_signed(nl);
+    }
+    while terms.len() > 1 {
+        let mut next = Vec::with_capacity(terms.len().div_ceil(2));
+        let mut it = terms.into_iter();
+        while let Some(a) = it.next() {
+            if let Some(b) = it.next() {
+                next.push(s_add(nl, &a, &b));
+            } else {
+                next.push(a);
+            }
+        }
+        terms = next;
+    }
+    terms.pop().unwrap()
+}
+
+/// ReLU: max(s, 0) as an unsigned bus (AND every bit with !sign).
+pub fn relu(nl: &mut Netlist, s: &SBus) -> UBus {
+    if s.lo >= 0 {
+        // never negative: pure rewiring
+        let hi = s.hi as u64;
+        let mut nets = s.nets.clone();
+        nets.truncate(ubits(hi));
+        while nets.len() < ubits(hi) {
+            nets.push(nl.zero());
+        }
+        return UBus { nets, hi };
+    }
+    let hi = s.hi.max(0) as u64;
+    let w = ubits(hi);
+    let nsign = nl.not(s.sign());
+    let nets: Vec<NetId> = (0..w)
+        .map(|i| {
+            let b = s.nets.get(i).copied().unwrap_or_else(|| s.sign());
+            nl.and(b, nsign)
+        })
+        .collect();
+    UBus { nets, hi }
+}
+
+/// Signed greater-than: a > b (two's complement compare via subtraction).
+pub fn signed_gt(nl: &mut Netlist, a: &SBus, b: &SBus) -> NetId {
+    // diff = a - b over W bits; a > b  <=>  diff >= 1  <=>  !sign && !zero.
+    // W must cover the operands as well as the difference range, or the
+    // pre-subtraction truncation would wrap.
+    let lo = a.lo - b.hi;
+    let hi = a.hi - b.lo;
+    let w = sbits(lo, hi)
+        .max(sbits(a.lo, a.hi))
+        .max(sbits(b.lo, b.hi));
+    let an = a.extend_to(nl, w);
+    let bn = b.extend_to(nl, w);
+    let mut carry = nl.one();
+    let mut bits = Vec::with_capacity(w);
+    for i in 0..w {
+        let nb = nl.not(bn[i]);
+        let (s, c) = full_adder(nl, an[i], nb, carry);
+        bits.push(s);
+        carry = c;
+    }
+    let sign = *bits.last().unwrap();
+    let not_sign = nl.not(sign);
+    // zero detect
+    let mut nz = bits[0];
+    for &bit in &bits[1..] {
+        nz = nl.or(nz, bit);
+    }
+    nl.and(not_sign, nz)
+}
+
+/// Argmax over signed values; linear first-max-wins chain (matches the
+/// software argmax semantics). Returns the class-index bus.
+pub fn argmax(nl: &mut Netlist, values: &[SBus]) -> UBus {
+    assert!(!values.is_empty());
+    let idx_w = ubits((values.len() - 1) as u64);
+    let mut best_v = values[0].clone();
+    let mut best_i = {
+        let nets = nl.const_bus(0, idx_w);
+        UBus {
+            nets,
+            hi: (values.len() - 1) as u64,
+        }
+    };
+    for (j, v) in values.iter().enumerate().skip(1) {
+        let take = signed_gt(nl, v, &best_v);
+        // value mux (width = max of the two, sign-extended)
+        let w = sbits(best_v.lo.min(v.lo), best_v.hi.max(v.hi));
+        let av = v.extend_to(nl, w);
+        let bv = best_v.extend_to(nl, w);
+        let nets: Vec<NetId> = (0..w).map(|i| nl.mux(take, av[i], bv[i])).collect();
+        best_v = SBus {
+            nets,
+            lo: best_v.lo.min(v.lo),
+            hi: best_v.hi.max(v.hi),
+        };
+        // index mux
+        let jbus = nl.const_bus(j as u64, idx_w);
+        let nets: Vec<NetId> = (0..idx_w)
+            .map(|i| {
+                let cur = best_i.nets[i];
+                nl.mux(take, jbus[i], cur)
+            })
+            .collect();
+        best_i = UBus {
+            nets,
+            hi: best_i.hi,
+        };
+    }
+    best_i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::eval_once;
+
+    fn ubus_in(nl: &mut Netlist, name: &str, w: usize) -> UBus {
+        UBus::from_nets(nl.input_bus(name, w))
+    }
+
+    #[test]
+    fn bits_helpers() {
+        assert_eq!(ubits(0), 1);
+        assert_eq!(ubits(1), 1);
+        assert_eq!(ubits(15), 4);
+        assert_eq!(ubits(16), 5);
+        assert_eq!(sbits(0, 0), 1);
+        assert_eq!(sbits(-1, 0), 1);
+        assert_eq!(sbits(-2, 1), 2);
+        assert_eq!(sbits(0, 7), 4); // needs sign bit
+        assert_eq!(sbits(-8, 7), 4);
+    }
+
+    #[test]
+    fn add_exhaustive_4bit() {
+        let mut nl = Netlist::new("t");
+        let a = ubus_in(&mut nl, "a", 4);
+        let b = ubus_in(&mut nl, "b", 4);
+        let s = u_add(&mut nl, &a, &b);
+        nl.output_bus("s", s.nets.clone());
+        for av in 0..16u64 {
+            for bv in 0..16u64 {
+                let out = eval_once(&nl, &[("a", av), ("b", bv)]);
+                assert_eq!(out["s"], av + bv, "a={av} b={bv}");
+            }
+        }
+    }
+
+    #[test]
+    fn sub_nonneg_exhaustive() {
+        let mut nl = Netlist::new("t");
+        let a = ubus_in(&mut nl, "a", 4);
+        let b = ubus_in(&mut nl, "b", 3);
+        let d = u_sub_nonneg(&mut nl, &a, &b);
+        nl.output_bus("d", d.nets.clone());
+        for av in 0..16u64 {
+            for bv in 0..8u64.min(av + 1) {
+                let out = eval_once(&nl, &[("a", av), ("b", bv)]);
+                assert_eq!(out["d"] & 0xF, av - bv, "a={av} b={bv}");
+            }
+        }
+    }
+
+    #[test]
+    fn adder_tree_matches_sum() {
+        let mut nl = Netlist::new("t");
+        let terms: Vec<UBus> = (0..5).map(|i| ubus_in(&mut nl, &format!("t{i}"), 3)).collect();
+        let s = u_adder_tree(&mut nl, terms);
+        nl.output_bus("s", s.nets.clone());
+        let vals = [3u64, 7, 0, 5, 6];
+        let ins: Vec<(String, u64)> = vals
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (format!("t{i}"), v))
+            .collect();
+        let ins_ref: Vec<(&str, u64)> = ins.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let out = eval_once(&nl, &ins_ref);
+        assert_eq!(out["s"], vals.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn ones_complement_is_sp_minus_sn_minus_1() {
+        let mut nl = Netlist::new("t");
+        let sp = ubus_in(&mut nl, "p", 5);
+        let sn = ubus_in(&mut nl, "n", 5);
+        let s = ones_complement_combine(&mut nl, &sp, &sn);
+        let w = s.width();
+        nl.output_bus("s", s.nets.clone());
+        for pv in [0u64, 1, 5, 17, 31] {
+            for nv in [0u64, 1, 9, 30, 31] {
+                let out = eval_once(&nl, &[("p", pv), ("n", nv)]);
+                let want = pv as i64 - nv as i64 - 1;
+                let got = sign_extend(out["s"], w);
+                assert_eq!(got, want, "p={pv} n={nv}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_sub_is_sp_minus_sn() {
+        let mut nl = Netlist::new("t");
+        let sp = ubus_in(&mut nl, "p", 4);
+        let sn = ubus_in(&mut nl, "n", 4);
+        let s = u_sub_signed(&mut nl, &sp, &sn);
+        let w = s.width();
+        nl.output_bus("s", s.nets.clone());
+        for pv in 0..16u64 {
+            for nv in 0..16u64 {
+                let out = eval_once(&nl, &[("p", pv), ("n", nv)]);
+                assert_eq!(sign_extend(out["s"], w), pv as i64 - nv as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        let mut nl = Netlist::new("t");
+        let sp = ubus_in(&mut nl, "p", 3);
+        let sn = ubus_in(&mut nl, "n", 3);
+        let s = u_sub_signed(&mut nl, &sp, &sn);
+        let r = relu(&mut nl, &s);
+        nl.output_bus("r", r.nets.clone());
+        for pv in 0..8u64 {
+            for nv in 0..8u64 {
+                let out = eval_once(&nl, &[("p", pv), ("n", nv)]);
+                assert_eq!(out["r"] as i64, (pv as i64 - nv as i64).max(0));
+            }
+        }
+    }
+
+    #[test]
+    fn trunc_low_zeroes_bits() {
+        let mut nl = Netlist::new("t");
+        let a = ubus_in(&mut nl, "a", 5);
+        let t = a.trunc_low(&mut nl, 2);
+        nl.output_bus("t", t.nets.clone());
+        for av in 0..32u64 {
+            let out = eval_once(&nl, &[("a", av)]);
+            assert_eq!(out["t"], (av >> 2) << 2);
+        }
+    }
+
+    #[test]
+    fn signed_gt_cases() {
+        let mut nl = Netlist::new("t");
+        let pa = ubus_in(&mut nl, "pa", 3);
+        let na = ubus_in(&mut nl, "na", 3);
+        let pb = ubus_in(&mut nl, "pb", 3);
+        let nb = ubus_in(&mut nl, "nb", 3);
+        let a = u_sub_signed(&mut nl, &pa, &na);
+        let b = u_sub_signed(&mut nl, &pb, &nb);
+        let g = signed_gt(&mut nl, &a, &b);
+        nl.output_bus("g", vec![g]);
+        for (pav, nav, pbv, nbv) in
+            [(5, 0, 3, 0), (3, 0, 5, 0), (4, 4, 0, 3), (0, 5, 0, 2), (3, 1, 3, 1)]
+        {
+            let out = eval_once(
+                &nl,
+                &[("pa", pav), ("na", nav), ("pb", pbv), ("nb", nbv)],
+            );
+            let av = pav as i64 - nav as i64;
+            let bv = pbv as i64 - nbv as i64;
+            assert_eq!(out["g"] == 1, av > bv, "{av} vs {bv}");
+        }
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        let mut nl = Netlist::new("t");
+        let buses: Vec<SBus> = (0..4)
+            .map(|i| {
+                let u = ubus_in(&mut nl, &format!("v{i}"), 4);
+                u.as_signed(&mut nl)
+            })
+            .collect();
+        let idx = argmax(&mut nl, &buses);
+        nl.output_bus("idx", idx.nets.clone());
+        let cases: [([u64; 4], u64); 4] = [
+            ([3, 9, 2, 9], 1),
+            ([7, 7, 7, 7], 0),
+            ([0, 1, 2, 3], 3),
+            ([8, 0, 0, 0], 0),
+        ];
+        for (vals, want) in cases {
+            let names: Vec<String> = (0..4).map(|i| format!("v{i}")).collect();
+            let ins: Vec<(&str, u64)> = names
+                .iter()
+                .enumerate()
+                .map(|(i, n)| (n.as_str(), vals[i]))
+                .collect();
+            let out = eval_once(&nl, &ins);
+            assert_eq!(out["idx"], want, "{vals:?}");
+        }
+    }
+
+    fn sign_extend(v: u64, w: usize) -> i64 {
+        if w >= 64 {
+            return v as i64;
+        }
+        let m = 1u64 << (w - 1);
+        ((v ^ m) as i64) - m as i64
+    }
+}

@@ -1,0 +1,253 @@
+//! Full bespoke MLP circuit generator: quantized coefficients hardwired,
+//! fully parallel (1 inference/cycle), argmax class output — the circuit
+//! the paper's Table 2 / Fig. 6 evaluate.
+
+use crate::netlist::Netlist;
+
+use super::arith::{argmax, relu, UBus};
+use super::neuron::{axsum_neuron, exact_neuron, NeuronSpec};
+
+/// How neurons are realized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NeuronStyle {
+    /// Paper Fig. 4: split-sign trees + 1's complement (+ optional AxSum
+    /// truncation via the shift matrices).
+    AxSum,
+    /// Conventional exact bespoke baseline [2]: signed products, signed
+    /// sign-extended adder tree.
+    ExactBespoke,
+}
+
+/// Integer MLP circuit specification.
+///
+/// `weights[l][j][i]` is the coefficient from input `i` to neuron `j` of
+/// layer `l`; `shifts` has the same geometry and gives the AxSum
+/// truncation per product (all-zero => exact AxSum circuit). Primary
+/// inputs are `in_bits`-wide unsigned features named `x0..x{d-1}`.
+#[derive(Clone, Debug)]
+pub struct MlpCircuitSpec {
+    pub name: String,
+    pub weights: Vec<Vec<Vec<i64>>>,
+    pub biases: Vec<Vec<i64>>,
+    pub shifts: Vec<Vec<Vec<u32>>>,
+    pub in_bits: usize,
+    pub style: NeuronStyle,
+}
+
+impl MlpCircuitSpec {
+    /// All-exact spec (shifts = 0) with the given style.
+    pub fn exact(
+        name: impl Into<String>,
+        weights: Vec<Vec<Vec<i64>>>,
+        biases: Vec<Vec<i64>>,
+        in_bits: usize,
+        style: NeuronStyle,
+    ) -> Self {
+        let shifts = weights
+            .iter()
+            .map(|layer| layer.iter().map(|row| vec![0u32; row.len()]).collect())
+            .collect();
+        MlpCircuitSpec {
+            name: name.into(),
+            weights,
+            biases,
+            shifts,
+            in_bits,
+            style,
+        }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.weights[0][0].len()
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.weights.last().unwrap().len()
+    }
+
+    /// Total multiply-accumulate count (paper Table 2 "#MACs").
+    pub fn n_macs(&self) -> usize {
+        self.weights
+            .iter()
+            .map(|layer| layer.iter().map(|row| row.len()).sum::<usize>())
+            .sum()
+    }
+}
+
+/// Build the full circuit: returns the swept netlist. Output bus `class`
+/// carries the argmax class index; for single-output-neuron models the
+/// class is the sign-based threshold (neuron > 0).
+pub fn build_mlp(spec: &MlpCircuitSpec) -> Netlist {
+    let mut nl = Netlist::new(spec.name.clone());
+    let mut acts: Vec<UBus> = (0..spec.n_inputs())
+        .map(|i| UBus::from_nets(nl.input_bus(format!("x{i}"), spec.in_bits)))
+        .collect();
+
+    let n_layers = spec.weights.len();
+    for l in 0..n_layers {
+        let layer_w = &spec.weights[l];
+        let layer_b = &spec.biases[l];
+        let layer_s = &spec.shifts[l];
+        let mut sums = Vec::with_capacity(layer_w.len());
+        for (j, row) in layer_w.iter().enumerate() {
+            let s = match spec.style {
+                NeuronStyle::AxSum => {
+                    let nspec = NeuronSpec {
+                        weights: row.clone(),
+                        bias: layer_b[j],
+                        shifts: layer_s[j].clone(),
+                    };
+                    axsum_neuron(&mut nl, &acts, &nspec)
+                }
+                NeuronStyle::ExactBespoke => exact_neuron(&mut nl, &acts, row, layer_b[j]),
+            };
+            sums.push(s);
+        }
+        if l + 1 < n_layers {
+            // hidden layer: ReLU, outputs become next layer's inputs
+            acts = sums.iter().map(|s| relu(&mut nl, s)).collect();
+        } else {
+            // output layer: argmax -> class index
+            let idx = argmax(&mut nl, &sums);
+            nl.output_bus("class", idx.nets.clone());
+        }
+    }
+    nl.sweep().0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{eval_once, simulate};
+    use crate::util::rng::Rng;
+    use std::collections::HashMap;
+
+    /// Software model of the circuit (mirrors axsum_neuron_value per layer
+    /// + ReLU + first-max argmax).
+    pub fn software_forward(spec: &MlpCircuitSpec, x: &[i64]) -> usize {
+        let mut acts: Vec<i64> = x.to_vec();
+        for l in 0..spec.weights.len() {
+            let mut next = Vec::new();
+            for (j, row) in spec.weights[l].iter().enumerate() {
+                let v = match spec.style {
+                    NeuronStyle::AxSum => {
+                        let nspec = super::super::neuron::NeuronSpec {
+                            weights: row.clone(),
+                            bias: spec.biases[l][j],
+                            shifts: spec.shifts[l][j].clone(),
+                        };
+                        super::super::neuron::axsum_neuron_value(&acts, &nspec)
+                    }
+                    NeuronStyle::ExactBespoke => {
+                        acts.iter().zip(row).map(|(&a, &w)| a * w).sum::<i64>()
+                            + spec.biases[l][j]
+                    }
+                };
+                next.push(v);
+            }
+            if l + 1 < spec.weights.len() {
+                acts = next.iter().map(|&v| v.max(0)).collect();
+            } else {
+                return crate::util::stats::argmax_i64(&next);
+            }
+        }
+        unreachable!()
+    }
+
+    fn rand_spec(rng: &mut Rng, din: usize, hidden: usize, dout: usize, style: NeuronStyle) -> MlpCircuitSpec {
+        let w1: Vec<Vec<i64>> = (0..hidden)
+            .map(|_| (0..din).map(|_| rng.range_i64(-127, 127)).collect())
+            .collect();
+        let w2: Vec<Vec<i64>> = (0..dout)
+            .map(|_| (0..hidden).map(|_| rng.range_i64(-127, 127)).collect())
+            .collect();
+        let b1: Vec<i64> = (0..hidden).map(|_| rng.range_i64(-100, 100)).collect();
+        let b2: Vec<i64> = (0..dout).map(|_| rng.range_i64(-100, 100)).collect();
+        MlpCircuitSpec::exact("t", vec![w1, w2], vec![b1, b2], 4, style)
+    }
+
+    fn eval_class(nl: &Netlist, x: &[i64]) -> u64 {
+        let ins: Vec<(String, u64)> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (format!("x{i}"), v as u64))
+            .collect();
+        let refs: Vec<(&str, u64)> = ins.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        eval_once(nl, &refs)["class"]
+    }
+
+    #[test]
+    fn axsum_mlp_matches_software_model() {
+        let mut rng = Rng::new(100);
+        let spec = rand_spec(&mut rng, 5, 3, 3, NeuronStyle::AxSum);
+        let nl = build_mlp(&spec);
+        for _ in 0..50 {
+            let x: Vec<i64> = (0..5).map(|_| rng.range_i64(0, 15)).collect();
+            assert_eq!(
+                eval_class(&nl, &x) as usize,
+                software_forward(&spec, &x),
+                "x={x:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_mlp_matches_true_math() {
+        let mut rng = Rng::new(200);
+        let spec = rand_spec(&mut rng, 4, 3, 2, NeuronStyle::ExactBespoke);
+        let nl = build_mlp(&spec);
+        for _ in 0..50 {
+            let x: Vec<i64> = (0..4).map(|_| rng.range_i64(0, 15)).collect();
+            assert_eq!(eval_class(&nl, &x) as usize, software_forward(&spec, &x));
+        }
+    }
+
+    #[test]
+    fn axsum_mlp_with_truncation_matches_software_model() {
+        let mut rng = Rng::new(300);
+        let mut spec = rand_spec(&mut rng, 6, 3, 3, NeuronStyle::AxSum);
+        // randomize shifts
+        for layer in spec.shifts.iter_mut() {
+            for row in layer.iter_mut() {
+                for s in row.iter_mut() {
+                    *s = rng.below(6) as u32;
+                }
+            }
+        }
+        let nl = build_mlp(&spec);
+        for _ in 0..50 {
+            let x: Vec<i64> = (0..6).map(|_| rng.range_i64(0, 15)).collect();
+            assert_eq!(eval_class(&nl, &x) as usize, software_forward(&spec, &x));
+        }
+    }
+
+    #[test]
+    fn batch_simulation_matches_single() {
+        let mut rng = Rng::new(400);
+        let spec = rand_spec(&mut rng, 4, 2, 3, NeuronStyle::AxSum);
+        let nl = build_mlp(&spec);
+        let pats = 100;
+        let xs: Vec<Vec<i64>> = (0..pats)
+            .map(|_| (0..4).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let mut inputs: HashMap<String, Vec<u64>> = HashMap::new();
+        for i in 0..4 {
+            inputs.insert(
+                format!("x{i}"),
+                xs.iter().map(|x| x[i] as u64).collect(),
+            );
+        }
+        let r = simulate(&nl, &inputs, pats, true);
+        for (p, x) in xs.iter().enumerate() {
+            assert_eq!(r.outputs["class"][p] as usize, software_forward(&spec, x));
+        }
+        assert!(r.toggles.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn mac_count_matches_table2_convention() {
+        let mut rng = Rng::new(1);
+        let spec = rand_spec(&mut rng, 11, 4, 7, NeuronStyle::AxSum);
+        assert_eq!(spec.n_macs(), 11 * 4 + 4 * 7); // WhiteWine row: 72
+    }
+}

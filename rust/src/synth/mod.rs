@@ -1,0 +1,18 @@
+//! Bespoke RTL synthesis substrate (Design Compiler substitute).
+//!
+//! Generators for the circuits the paper synthesizes: constant-coefficient
+//! multipliers (CSD shift-add), width-minimal adder trees, the approximate
+//! split-sign neuron of Fig. 4, ReLU, argmax, and the full fully-parallel
+//! MLP. Everything is built directly on the optimizing netlist builder in
+//! `crate::netlist`, so constant hardwiring folds the way a synthesis tool
+//! would fold it.
+
+pub mod arith;
+pub mod mlp;
+pub mod multiplier;
+pub mod neuron;
+
+pub use arith::{SBus, UBus};
+pub use mlp::{build_mlp, MlpCircuitSpec, NeuronStyle};
+pub use multiplier::{const_multiplier, csd_digits, csd_weight, multiplier_netlist, MultStyle, DEFAULT_MULT_STYLE};
+pub use neuron::{axsum_neuron, axsum_neuron_value, exact_neuron, NeuronSpec};

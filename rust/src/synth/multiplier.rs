@@ -1,0 +1,277 @@
+//! Bespoke constant-coefficient multipliers.
+//!
+//! The coefficient is hardwired, so multiplication decomposes into shifts
+//! (free wiring) plus adders/subtractors. Canonical-signed-digit (CSD)
+//! recoding minimizes the adder count — this is what creates the paper's
+//! Fig. 2b area landscape: powers of two melt to *zero* gates, values like
+//! 96 = 64+32 or 127 = 128-1 cost one adder, dense bit patterns cost more.
+
+use crate::netlist::Netlist;
+
+use super::arith::{u_add, u_sub_nonneg, UBus};
+
+/// Default decomposition used across the substrate. Plain binary
+/// shift-add is what a synthesis tool derives from a hardwired `a*w`
+/// product (the paper's DC flow); `Auto`/`Csd` are kept as an ablation
+/// (see benches/bench_dse.rs) — they shrink dense-coefficient multipliers
+/// further and correspondingly *reduce* the retraining gains, since the
+/// paper's whole lever is the area gap between dense and power-of-two
+/// coefficients.
+pub const DEFAULT_MULT_STYLE: MultStyle = MultStyle::Binary;
+
+/// Decomposition style (Binary/Csd kept separable for the ablation bench).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MultStyle {
+    /// Pick the cheaper of Binary/Csd per coefficient (default — what a
+    /// synthesis tool's constant-multiplier optimization does; a
+    /// subtractor costs slightly more than an adder, so CSD only wins
+    /// when it removes at least one partial term).
+    Auto,
+    /// Canonical signed digit (subtractors allowed).
+    Csd,
+    /// Plain binary shift-add (adders only).
+    Binary,
+}
+
+/// CSD digits of a positive value as (bit position, +1/-1), LSB-first.
+pub fn csd_digits(mut w: u64) -> Vec<(u32, i8)> {
+    let mut out = Vec::new();
+    let mut k = 0u32;
+    while w != 0 {
+        if w & 1 == 1 {
+            let d: i8 = if w & 3 == 3 { -1 } else { 1 };
+            out.push((k, d));
+            if d == 1 {
+                w -= 1;
+            } else {
+                w += 1;
+            }
+        }
+        w >>= 1;
+        k += 1;
+    }
+    out
+}
+
+/// Number of CSD non-zero digits (area predictor used in tests/analyses).
+pub fn csd_weight(w: u64) -> usize {
+    csd_digits(w).len()
+}
+
+/// Build `a * w` for a hardwired non-negative coefficient `w`.
+pub fn const_multiplier(nl: &mut Netlist, a: &UBus, w: u64, style: MultStyle) -> UBus {
+    if w == 0 || a.hi == 0 {
+        return UBus::zero(nl);
+    }
+    match style {
+        MultStyle::Auto => match decide_style(a.width(), w) {
+            MultStyle::Binary => build_binary(nl, a, w),
+            _ => build_csd(nl, a, w),
+        },
+        MultStyle::Csd => build_csd(nl, a, w),
+        MultStyle::Binary => build_binary(nl, a, w),
+    }
+}
+
+/// Pick the cheaper decomposition by actually synthesizing both standalone
+/// and comparing EGT area (memoized per (input width, coefficient) — the
+/// same once-for-all trick the paper uses for its multiplier area LUT).
+fn decide_style(a_bits: usize, w: u64) -> MultStyle {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    thread_local! {
+        static CACHE: RefCell<HashMap<(usize, u64), MultStyle>> = RefCell::new(HashMap::new());
+    }
+    CACHE.with(|c| {
+        if let Some(&s) = c.borrow().get(&(a_bits, w)) {
+            return s;
+        }
+        let lib = crate::pdk::EgtLibrary::egt_v1();
+        let area_of = |style: MultStyle| {
+            let mut nl = Netlist::new("probe");
+            let a = UBus::from_nets(nl.input_bus("a", a_bits));
+            let m = const_multiplier(&mut nl, &a, w, style);
+            nl.output_bus("p", m.nets);
+            crate::estimate::area_mm2(&nl.sweep().0, &lib)
+        };
+        let s = if area_of(MultStyle::Binary) <= area_of(MultStyle::Csd) {
+            MultStyle::Binary
+        } else {
+            MultStyle::Csd
+        };
+        c.borrow_mut().insert((a_bits, w), s);
+        s
+    })
+}
+
+fn build_binary(nl: &mut Netlist, a: &UBus, w: u64) -> UBus {
+    let mut terms: Vec<UBus> = Vec::new();
+    for k in 0..64 {
+        if (w >> k) & 1 == 1 {
+            terms.push(a.shl(nl, k));
+        }
+    }
+    // left-fold keeps carry chains short at these widths
+    let mut acc = terms.remove(0);
+    for t in terms {
+        acc = u_add(nl, &acc, &t);
+    }
+    acc
+}
+
+fn build_csd(nl: &mut Netlist, a: &UBus, w: u64) -> UBus {
+    let mut digits = csd_digits(w);
+    // process from the most-significant digit down: every prefix value of a
+    // CSD expansion is positive, so subtractions never underflow.
+    digits.reverse();
+    debug_assert_eq!(digits[0].1, 1, "CSD leading digit is positive");
+    let mut prefix: i64 = 1i64 << digits[0].0;
+    let mut acc = a.shl(nl, digits[0].0 as usize);
+    acc.hi = a.hi * prefix as u64; // tight bound
+    for &(k, d) in &digits[1..] {
+        let term = a.shl(nl, k as usize);
+        if d == 1 {
+            prefix += 1i64 << k;
+            acc = u_add(nl, &acc, &term);
+        } else {
+            prefix -= 1i64 << k;
+            debug_assert!(prefix > 0);
+            acc = u_sub_nonneg(nl, &acc, &term);
+        }
+        acc.hi = a.hi * prefix as u64;
+        // shrink the bus to the tight bound (bespoke minimal width)
+        let w_bits = super::arith::ubits(acc.hi);
+        acc.nets.truncate(w_bits);
+    }
+    debug_assert_eq!(prefix as u64, w);
+    acc
+}
+
+/// Standalone bespoke multiplier netlist (used for the area LUT, Fig. 2b
+/// and the clustering): input bus `a` of `a_bits`, output `p = a * |w|`,
+/// optionally negated for a negative coefficient (2's complement), which
+/// is how the conventional baseline realizes negative products.
+pub fn multiplier_netlist(a_bits: usize, w: i64, style: MultStyle) -> Netlist {
+    let mut nl = Netlist::new(format!("bespoke_mul_{w}_{a_bits}b"));
+    let a = UBus::from_nets(nl.input_bus("a", a_bits));
+    let m = const_multiplier(&mut nl, &a, w.unsigned_abs(), style);
+    if w < 0 {
+        let s = super::arith::s_negate(&mut nl, &m);
+        nl.output_bus("p", s.nets);
+    } else {
+        nl.output_bus("p", m.nets);
+    }
+    nl.sweep().0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{as_signed, eval_once};
+
+    #[test]
+    fn csd_examples() {
+        // 7 = 8 - 1
+        assert_eq!(csd_digits(7), vec![(0, -1), (3, 1)]);
+        // 12 = 16 - 4 in canonical form (no adjacent non-zeros)
+        assert_eq!(csd_digits(12), vec![(2, -1), (4, 1)]);
+        // powers of two are single digits
+        for k in 0..8 {
+            assert_eq!(csd_weight(1 << k), 1);
+        }
+        // CSD value reconstructs
+        for w in 1..=255u64 {
+            let v: i64 = csd_digits(w)
+                .iter()
+                .map(|&(k, d)| d as i64 * (1i64 << k))
+                .sum();
+            assert_eq!(v as u64, w, "w={w}");
+        }
+    }
+
+    #[test]
+    fn csd_no_adjacent_nonzeros() {
+        for w in 1..=255u64 {
+            let ds = csd_digits(w);
+            for pair in ds.windows(2) {
+                assert!(pair[1].0 > pair[0].0 + 1, "adjacent digits for {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn multiplier_exhaustive_4bit_all_coefficients() {
+        for w in 0..=127i64 {
+            let nl = multiplier_netlist(4, w, MultStyle::Csd);
+            for a in 0..16u64 {
+                let out = eval_once(&nl, &[("a", a)]);
+                assert_eq!(out["p"], a * w as u64, "w={w} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn multiplier_negative_coefficients() {
+        for w in [-1i64, -3, -8, -100, -128] {
+            let nl = multiplier_netlist(4, w, MultStyle::Csd);
+            let width = nl.outputs[0].nets.len();
+            for a in 0..16u64 {
+                let out = eval_once(&nl, &[("a", a)]);
+                assert_eq!(as_signed(out["p"], width), a as i64 * w, "w={w} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn binary_style_matches_csd_function() {
+        for w in [3i64, 7, 21, 96, 127] {
+            let c = multiplier_netlist(4, w, MultStyle::Csd);
+            let b = multiplier_netlist(4, w, MultStyle::Binary);
+            for a in 0..16u64 {
+                assert_eq!(
+                    eval_once(&c, &[("a", a)])["p"],
+                    eval_once(&b, &[("a", a)])["p"]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn power_of_two_multipliers_are_free() {
+        for k in 0..8 {
+            let nl = multiplier_netlist(4, 1i64 << k, MultStyle::Csd);
+            assert_eq!(nl.n_cells(), 0, "2^{k} should be wiring only");
+        }
+        assert_eq!(multiplier_netlist(4, 0, MultStyle::Csd).n_cells(), 0);
+    }
+
+    #[test]
+    fn auto_picks_the_cheaper_area() {
+        use crate::estimate::area_mm2;
+        use crate::pdk::EgtLibrary;
+        let lib = EgtLibrary::egt_v1();
+        for w in 1..=255i64 {
+            let a = area_mm2(&multiplier_netlist(4, w, MultStyle::Auto), &lib);
+            let c = area_mm2(&multiplier_netlist(4, w, MultStyle::Csd), &lib);
+            let b = area_mm2(&multiplier_netlist(4, w, MultStyle::Binary), &lib);
+            assert!(a <= c.min(b) + 1e-9, "w={w}: auto={a} csd={c} binary={b}");
+        }
+    }
+
+    #[test]
+    fn auto_matches_function_everywhere() {
+        for w in [3i64, 7, 12, 45, 87, 96, 127, -5, -96] {
+            let nl = multiplier_netlist(4, w, MultStyle::Auto);
+            let width = nl.outputs[0].nets.len();
+            for a in 0..16u64 {
+                let out = eval_once(&nl, &[("a", a)]);
+                let got = if w < 0 {
+                    as_signed(out["p"], width)
+                } else {
+                    out["p"] as i64
+                };
+                assert_eq!(got, a as i64 * w, "w={w} a={a}");
+            }
+        }
+    }
+}

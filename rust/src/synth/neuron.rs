@@ -1,0 +1,281 @@
+//! Bespoke neuron generators: the paper's approximate neuron (Fig. 4) and
+//! the conventional exact neuron of the [2]-style baseline.
+
+use crate::netlist::Netlist;
+
+use super::arith::{
+    ones_complement_combine, s_add, s_adder_tree, s_negate, u_adder_tree, SBus, UBus,
+};
+use super::multiplier::{const_multiplier, DEFAULT_MULT_STYLE};
+
+/// Per-neuron hardware spec: hardwired signed coefficients, a hardwired
+/// bias, and a per-product AxSum truncation shift (0 = exact product).
+#[derive(Clone, Debug)]
+pub struct NeuronSpec {
+    pub weights: Vec<i64>,
+    pub bias: i64,
+    pub shifts: Vec<u32>,
+}
+
+impl NeuronSpec {
+    pub fn exact(weights: Vec<i64>, bias: i64) -> Self {
+        let shifts = vec![0; weights.len()];
+        NeuronSpec {
+            weights,
+            bias,
+            shifts,
+        }
+    }
+}
+
+/// Approximate bespoke neuron (paper Eq. (3)-(5), Fig. 4):
+/// positive/negative coefficient split, only *positive* bespoke
+/// multipliers (|w|), truncated products feeding two unsigned adder trees,
+/// 1's-complement combine. Omits the negative tree entirely when the
+/// neuron has no negative contribution.
+pub fn axsum_neuron(nl: &mut Netlist, inputs: &[UBus], spec: &NeuronSpec) -> SBus {
+    assert_eq!(inputs.len(), spec.weights.len());
+    assert_eq!(inputs.len(), spec.shifts.len());
+    let mut pos: Vec<UBus> = Vec::new();
+    let mut neg: Vec<UBus> = Vec::new();
+    for ((a, &w), &s) in inputs.iter().zip(&spec.weights).zip(&spec.shifts) {
+        if w == 0 {
+            continue;
+        }
+        let p = const_multiplier(nl, a, w.unsigned_abs(), DEFAULT_MULT_STYLE);
+        let p = p.trunc_low(nl, s as usize);
+        if w > 0 {
+            pos.push(p);
+        } else {
+            neg.push(p);
+        }
+    }
+    if spec.bias > 0 {
+        pos.push(UBus::constant(nl, spec.bias as u64));
+    } else if spec.bias < 0 {
+        neg.push(UBus::constant(nl, (-spec.bias) as u64));
+    }
+    let sp = u_adder_tree(nl, pos);
+    if neg.is_empty() {
+        sp.as_signed(nl)
+    } else {
+        let sn = u_adder_tree(nl, neg);
+        ones_complement_combine(nl, &sp, &sn)
+    }
+}
+
+/// Conventional exact bespoke neuron ([2]-style baseline): per-product
+/// signed values (negative coefficients pay a 2's-complement negation),
+/// one signed adder tree with sign extension at every level.
+pub fn exact_neuron(nl: &mut Netlist, inputs: &[UBus], weights: &[i64], bias: i64) -> SBus {
+    assert_eq!(inputs.len(), weights.len());
+    let mut terms: Vec<SBus> = Vec::new();
+    for (a, &w) in inputs.iter().zip(weights) {
+        if w == 0 {
+            continue;
+        }
+        let p = const_multiplier(nl, a, w.unsigned_abs(), DEFAULT_MULT_STYLE);
+        if w > 0 {
+            terms.push(p.as_signed(nl));
+        } else {
+            terms.push(s_negate(nl, &p));
+        }
+    }
+    let mut sum = s_adder_tree(nl, terms);
+    if bias != 0 {
+        let b = if bias > 0 {
+            UBus::constant(nl, bias as u64).as_signed(nl)
+        } else {
+            let m = UBus::constant(nl, (-bias) as u64);
+            s_negate(nl, &m)
+        };
+        sum = s_add(nl, &sum, &b);
+    }
+    sum
+}
+
+/// Software-exact value the AxSum neuron must produce (mirrors
+/// `python/compile/kernels/ref.py::axsum_neuron_int`).
+pub fn axsum_neuron_value(a: &[i64], spec: &NeuronSpec) -> i64 {
+    let mut sp = spec.bias.max(0);
+    let mut sn = (-spec.bias).max(0);
+    let mut has_neg = spec.bias < 0;
+    for ((&ai, &wi), &si) in a.iter().zip(&spec.weights).zip(&spec.shifts) {
+        let p = ai * wi.abs();
+        let t = (p >> si) << si;
+        if wi > 0 {
+            sp += t;
+        } else if wi < 0 {
+            sn += t;
+            has_neg = true;
+        }
+    }
+    has_neg |= spec.weights.iter().any(|&w| w < 0);
+    if has_neg {
+        sp - sn - 1
+    } else {
+        sp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{as_signed, eval_once};
+    use crate::util::prop;
+
+    fn build_axsum(weights: Vec<i64>, bias: i64, shifts: Vec<u32>) -> (Netlist, usize) {
+        let mut nl = Netlist::new("neuron");
+        let inputs: Vec<UBus> = (0..weights.len())
+            .map(|i| UBus::from_nets(nl.input_bus(format!("a{i}"), 4)))
+            .collect();
+        let spec = NeuronSpec {
+            weights,
+            bias,
+            shifts,
+        };
+        let s = axsum_neuron(&mut nl, &inputs, &spec);
+        let w = s.width();
+        nl.output_bus("s", s.nets.clone());
+        (nl.sweep().0, w)
+    }
+
+    fn eval_neuron(nl: &Netlist, w: usize, a: &[i64]) -> i64 {
+        let ins: Vec<(String, u64)> = a
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (format!("a{i}"), v as u64))
+            .collect();
+        let refs: Vec<(&str, u64)> = ins.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        as_signed(eval_once(nl, &refs)["s"], w)
+    }
+
+    #[test]
+    fn axsum_matches_integer_model_positive_only() {
+        let (nl, w) = build_axsum(vec![3, 8, 1], 5, vec![0, 0, 0]);
+        for a0 in 0..16 {
+            for a1 in [0i64, 7, 15] {
+                let a = [a0, a1, 9];
+                let spec = NeuronSpec {
+                    weights: vec![3, 8, 1],
+                    bias: 5,
+                    shifts: vec![0, 0, 0],
+                };
+                assert_eq!(eval_neuron(&nl, w, &a), axsum_neuron_value(&a, &spec));
+            }
+        }
+    }
+
+    #[test]
+    fn axsum_matches_integer_model_mixed_signs_and_shifts() {
+        let weights = vec![5, -7, 2, -1];
+        let shifts = vec![1, 2, 0, 3];
+        let (nl, w) = build_axsum(weights.clone(), -3, shifts.clone());
+        let spec = NeuronSpec {
+            weights,
+            bias: -3,
+            shifts,
+        };
+        for a0 in 0..16 {
+            for a1 in [0i64, 3, 15] {
+                let a = [a0, a1, 11, 6];
+                assert_eq!(
+                    eval_neuron(&nl, w, &a),
+                    axsum_neuron_value(&a, &spec),
+                    "a={a:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn axsum_property_random_neurons() {
+        prop::forall(60, |rng| {
+            let n = 1 + rng.below(6);
+            let weights: Vec<i64> = (0..n).map(|_| rng.range_i64(-127, 127)).collect();
+            let bias = rng.range_i64(-60, 60);
+            let shifts: Vec<u32> = (0..n).map(|_| rng.below(5) as u32).collect();
+            let (nl, w) = build_axsum(weights.clone(), bias, shifts.clone());
+            let spec = NeuronSpec {
+                weights,
+                bias,
+                shifts,
+            };
+            let a: Vec<i64> = (0..n).map(|_| rng.range_i64(0, 15)).collect();
+            prop::check_eq(eval_neuron(&nl, w, &a), axsum_neuron_value(&a, &spec), "neuron")
+        });
+    }
+
+    #[test]
+    fn exact_neuron_is_true_weighted_sum() {
+        let mut nl = Netlist::new("exact");
+        let weights = vec![5i64, -7, 2, -1];
+        let inputs: Vec<UBus> = (0..weights.len())
+            .map(|i| UBus::from_nets(nl.input_bus(format!("a{i}"), 4)))
+            .collect();
+        let s = exact_neuron(&mut nl, &inputs, &weights, -9);
+        let w = s.width();
+        nl.output_bus("s", s.nets.clone());
+        let nl = nl.sweep().0;
+        for a0 in [0i64, 6, 15] {
+            for a3 in 0..16 {
+                let a = [a0, 13, 2, a3];
+                let want: i64 =
+                    a.iter().zip(&weights).map(|(&x, &w)| x * w).sum::<i64>() - 9;
+                assert_eq!(eval_neuron_named(&nl, w, &a), want);
+            }
+        }
+    }
+
+    fn eval_neuron_named(nl: &Netlist, w: usize, a: &[i64]) -> i64 {
+        let ins: Vec<(String, u64)> = a
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (format!("a{i}"), v as u64))
+            .collect();
+        let refs: Vec<(&str, u64)> = ins.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        as_signed(eval_once(nl, &refs)["s"], w)
+    }
+
+    #[test]
+    fn axsum_cheaper_than_exact_for_mixed_signs() {
+        let weights = vec![33i64, -45, 77, -9, 18, -101];
+        let mut nl_a = Netlist::new("ax");
+        let ins_a: Vec<UBus> = (0..6)
+            .map(|i| UBus::from_nets(nl_a.input_bus(format!("a{i}"), 4)))
+            .collect();
+        let spec = NeuronSpec::exact(weights.clone(), 0);
+        let s = axsum_neuron(&mut nl_a, &ins_a, &spec);
+        nl_a.output_bus("s", s.nets.clone());
+        let ax_cells = nl_a.sweep().0.n_cells();
+
+        let mut nl_e = Netlist::new("ex");
+        let ins_e: Vec<UBus> = (0..6)
+            .map(|i| UBus::from_nets(nl_e.input_bus(format!("a{i}"), 4)))
+            .collect();
+        let s = exact_neuron(&mut nl_e, &ins_e, &weights, 0);
+        nl_e.output_bus("s", s.nets.clone());
+        let ex_cells = nl_e.sweep().0.n_cells();
+        assert!(
+            ax_cells < ex_cells,
+            "axsum {ax_cells} !< exact {ex_cells}"
+        );
+    }
+
+    #[test]
+    fn truncation_reduces_area() {
+        let (full, _) = build_axsum(vec![93, 55, -77], 0, vec![0, 0, 0]);
+        let (trunc, _) = build_axsum(vec![93, 55, -77], 0, vec![5, 5, 5]);
+        assert!(trunc.n_cells() < full.n_cells());
+    }
+
+    #[test]
+    fn zero_weight_contributes_nothing() {
+        let (nl, w) = build_axsum(vec![0, 4], 0, vec![0, 0]);
+        let spec = NeuronSpec::exact(vec![0, 4], 0);
+        for a1 in 0..16 {
+            let a = [9, a1];
+            assert_eq!(eval_neuron(&nl, w, &a), axsum_neuron_value(&a, &spec));
+        }
+    }
+}

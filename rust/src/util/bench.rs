@@ -1,0 +1,135 @@
+//! Micro-benchmark harness for the `harness = false` bench targets
+//! (criterion is not in the offline vendor set).
+//!
+//! Reports min/median/mean and a robust throughput figure; warms up, then
+//! samples a fixed wall-clock budget. Output is both human-readable and
+//! machine-parsable (`results/bench_*.csv` written by callers).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  min {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.1},{:.1},{:.1},{:.1}",
+            self.name, self.iters, self.mean_ns, self.median_ns, self.min_ns, self.p95_ns
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark `f`, spending roughly `budget` wall-clock on sampling.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warm-up + calibrate: how many inner iterations fit ~2 ms per sample.
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_nanos().max(1) as u64;
+    let per_sample = (2_000_000 / one).clamp(1, 1 << 16);
+
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    let mut total_iters = 0u64;
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        for _ in 0..per_sample {
+            f();
+        }
+        let ns = t.elapsed().as_nanos() as f64 / per_sample as f64;
+        samples.push(ns);
+        total_iters += per_sample;
+        if samples.len() >= 2000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        mean_ns: mean,
+        median_ns: samples[n / 2],
+        min_ns: samples[0],
+        p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+    }
+}
+
+/// Convenience: run + report + return.
+pub fn run<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    let r = bench(name, Duration::from_millis(600), &mut f);
+    r.report();
+    r
+}
+
+/// Write accumulated results to results/<file>.csv with a header.
+pub fn write_csv(file: &str, results: &[BenchResult]) {
+    let _ = std::fs::create_dir_all("results");
+    let mut out = String::from("name,iters,mean_ns,median_ns,min_ns,p95_ns\n");
+    for r in results {
+        out.push_str(&r.csv_row());
+        out.push('\n');
+    }
+    let path = format!("results/{file}");
+    if let Err(e) = std::fs::write(&path, out) {
+        eprintln!("warn: could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_numbers() {
+        let mut x = 0u64;
+        let r = bench("noop", Duration::from_millis(30), || {
+            x = x.wrapping_add(1);
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns <= r.p95_ns + 1.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(10.0).contains("ns"));
+        assert!(fmt_ns(10_000.0).contains("µs"));
+        assert!(fmt_ns(10_000_000.0).contains("ms"));
+        assert!(fmt_ns(10_000_000_000.0).contains(" s"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained utility layer (the offline vendor set has no serde /
+//! tokio / criterion / proptest / rayon — see DESIGN.md §4).
+
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

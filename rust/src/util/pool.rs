@@ -1,0 +1,119 @@
+//! Scoped work-stealing-lite thread pool (std-only; no tokio in the
+//! offline vendor set).
+//!
+//! The DSE sweep and the Monte-Carlo synthesis analyses are embarrassingly
+//! parallel over independent design points; `parallel_map` fans a job list
+//! out over N workers pulling indices from a shared atomic counter (which
+//! load-balances uneven synthesis times better than static chunking).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers: respects AXMLP_THREADS, defaults to available cores
+/// (the paper used 10 threads — their EDA license limit; we have no such
+/// limit but stay configurable for the ablation bench).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("AXMLP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Map `f` over `items` in parallel, preserving order of results.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker missed an item"))
+        .collect()
+}
+
+/// Parallel-for over an index range with a shared accumulator reducer.
+pub fn parallel_reduce<R, F, G>(n: usize, threads: usize, init: R, f: F, combine: G) -> R
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+    G: Fn(R, R) -> R + Send + Sync,
+{
+    let idx: Vec<usize> = (0..n).collect();
+    let partials = parallel_map(&idx, threads, |&i| f(i));
+    partials.into_iter().fold(init, |acc, x| combine(acc, x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_runs_every_item_once() {
+        let count = AtomicU64::new(0);
+        let items: Vec<u32> = (0..337).collect();
+        let _ = parallel_map(&items, 5, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 337);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u32> = vec![];
+        assert!(parallel_map(&items, 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn reduce_sums() {
+        let total = parallel_reduce(100, 4, 0u64, |i| i as u64, |a, b| a + b);
+        assert_eq!(total, 4950);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,83 @@
+//! Tiny property-testing harness (proptest is not in the offline vendor
+//! set). `forall` runs a seeded-random property N times and, on failure,
+//! reports the failing seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! prop::forall(100, |rng| {
+//!     let w = rng.range_i64(-128, 127);
+//!     check_something(w)
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Result of one property case: Ok(()) or a failure message.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` for `cases` seeded cases; panics with the failing seed.
+pub fn forall<F>(cases: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> CaseResult,
+{
+    forall_seeded(0xA11CE, cases, prop)
+}
+
+pub fn forall_seeded<F>(base_seed: u64, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> CaseResult,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-like helpers that return CaseResult instead of panicking, so a
+/// property can compose multiple checks.
+pub fn check(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn check_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> CaseResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(50, |rng| {
+            let x = rng.range_i64(0, 100);
+            check(x >= 0 && x <= 100, "range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(50, |rng| {
+            let x = rng.range_i64(0, 100);
+            check(x < 95, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn check_eq_formats() {
+        assert!(check_eq(1, 1, "same").is_ok());
+        let e = check_eq(1, 2, "diff").unwrap_err();
+        assert!(e.contains("diff"));
+    }
+}

@@ -1,0 +1,66 @@
+//! Integration tests over the comparison baselines ([8] and [15]).
+
+use axmlp::baselines::crosslayer::{circuit_accuracy, crosslayer_baseline};
+use axmlp::baselines::stochastic::{sc_accuracy, sc_mlp_costs, ScConfig};
+use axmlp::coordinator::{train_mlp0, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::fixed::{quantize, quantize_inputs};
+use axmlp::synth::{build_mlp, MlpCircuitSpec, NeuronStyle};
+
+#[test]
+fn crosslayer_respects_budget_and_shrinks() {
+    let ctx = SharedContext::new();
+    let mut cfg = PipelineConfig::default();
+    cfg.train.epochs = 60;
+    let ds = datasets::load("v2", 2023);
+    let q0 = quantize(&train_mlp0(&ds, &cfg.train, 2023));
+    let xq_train = quantize_inputs(&ds.x_train);
+    let xq_test = quantize_inputs(&ds.x_test);
+    let out = crosslayer_baseline(
+        &q0, &xq_train, &ds.y_train, &xq_test, &ds.y_test,
+        ctx.lut4(), &ctx.lib, 0.05, 64,
+    );
+    let acc0 = q0.accuracy_exact(&xq_train, &ds.y_train);
+    assert!(out.acc_train >= acc0 - 0.05 - 1e-9);
+    // must shrink vs the exact circuit of the same model
+    let spec = MlpCircuitSpec::exact(
+        "b", q0.w.clone(), q0.b.clone(), 4, NeuronStyle::ExactBespoke,
+    );
+    let nl = build_mlp(&spec);
+    let base_area = axmlp::estimate::area_mm2(&nl, &ctx.lib);
+    assert!(out.costs.area_mm2 < base_area, "{} !< {base_area}", out.costs.area_mm2);
+    // sanity: the unmodified circuit classifies like the software model
+    let acc_hw = circuit_accuracy(&nl, &xq_test, &ds.y_test);
+    assert!((acc_hw - q0.accuracy_exact(&xq_test, &ds.y_test)).abs() < 1e-12);
+}
+
+#[test]
+fn sc_baseline_costs_exceed_ours_shape() {
+    // Fig. 9 shape: SC hardware is larger than the approximate bespoke
+    // design (SNGs + counters dominate at these tiny topologies)
+    let ctx = SharedContext::new();
+    let cfg = ScConfig::default();
+    for info in datasets::REGISTRY.iter().take(4) {
+        let sc = sc_mlp_costs(info.din, info.hidden, info.dout, &ctx.lib, &cfg);
+        assert!(sc.area_mm2 > 0.0);
+        assert!(sc.delay_ms > 200.0, "stream length dominates delay");
+    }
+}
+
+#[test]
+fn sc_accuracy_degrades_vs_float() {
+    let mut cfg_p = PipelineConfig::default();
+    cfg_p.train.epochs = 80;
+    let ds = datasets::load("se", 2023);
+    let mlp0 = train_mlp0(&ds, &cfg_p.train, 2023);
+    let float_acc = mlp0.accuracy(&ds.x_test, &ds.y_test);
+    let sc_cfg = ScConfig {
+        stream_len: 512,
+        ..Default::default()
+    };
+    let n = ds.x_test.len().min(120);
+    let sc_acc = sc_accuracy(&mlp0, &ds.x_test[..n], &ds.y_test[..n], &sc_cfg);
+    // SC noise should not *improve* accuracy; allow small sampling slack
+    assert!(sc_acc <= float_acc + 0.05, "sc {sc_acc} vs float {float_acc}");
+    assert!(sc_acc > 1.0 / ds.n_classes() as f64, "sc above chance");
+}

@@ -1,0 +1,105 @@
+//! End-to-end pipeline integration tests (native backend; the PJRT
+//! variants live in runtime_test.rs).
+
+use axmlp::coordinator::{run_dataset, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::dse::DseConfig;
+use axmlp::mlp::train::TrainConfig;
+use axmlp::retrain::backend_rust::RustBackend;
+use axmlp::retrain::RetrainConfig;
+
+fn quick_cfg(thresholds: Vec<f64>) -> PipelineConfig {
+    PipelineConfig {
+        thresholds,
+        dse: DseConfig {
+            max_g_levels: 3,
+            power_patterns: 48,
+            threads: 2,
+            verify_circuit: true, // full circuit/software cross-check
+            max_eval: 400,
+        },
+        retrain: RetrainConfig {
+            epochs_per_level: 4,
+            ..Default::default()
+        },
+        train: TrainConfig {
+            epochs: 60,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn thresholds_are_monotone_in_area() {
+    let ds = datasets::load("v2", 11);
+    let cfg = quick_cfg(vec![0.01, 0.05, 0.10]);
+    let ctx = SharedContext::new();
+    let out = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();
+    // looser budgets never cost more area
+    for w in out.thresholds.windows(2) {
+        assert!(
+            w[1].design.costs.area_mm2 <= w[0].design.costs.area_mm2 + 1e-9,
+            "area not monotone: {} then {}",
+            w[0].design.costs.area_mm2,
+            w[1].design.costs.area_mm2
+        );
+    }
+}
+
+#[test]
+fn approximate_always_beats_baseline() {
+    for key in ["se", "bs"] {
+        let ds = datasets::load(key, 5);
+        let cfg = quick_cfg(vec![0.05]);
+        let ctx = SharedContext::new();
+        let out = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();
+        let t = &out.thresholds[0];
+        assert!(t.area_gain > 1.0, "{key}: area gain {}", t.area_gain);
+        assert!(t.power_gain > 1.0, "{key}: power gain {}", t.power_gain);
+        // retrain-only sits between baseline and final
+        assert!(t.retrain_only_area_gain >= 1.0, "{key}");
+        assert!(
+            t.area_gain >= t.retrain_only_area_gain - 1e-9,
+            "{key}: axsum should add on top of retraining"
+        );
+    }
+}
+
+#[test]
+fn accuracy_floor_respected_on_train_split() {
+    let ds = datasets::load("ma", 3);
+    let cfg = quick_cfg(vec![0.02]);
+    let ctx = SharedContext::new();
+    let out = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();
+    let t = &out.thresholds[0];
+    assert!(
+        t.design.acc_train >= out.q0_acc_train - 0.02 - 1e-9,
+        "{} vs floor {}",
+        t.design.acc_train,
+        out.q0_acc_train - 0.02
+    );
+}
+
+#[test]
+fn outcome_is_deterministic_in_seed() {
+    let ds = datasets::load("v2", 9);
+    let cfg = quick_cfg(vec![0.02]);
+    let ctx = SharedContext::new();
+    let a = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();
+    let b = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();
+    assert_eq!(a.thresholds[0].design.costs.area_mm2, b.thresholds[0].design.costs.area_mm2);
+    assert_eq!(a.thresholds[0].design.acc_test, b.thresholds[0].design.acc_test);
+    assert_eq!(a.thresholds[0].model.w, b.thresholds[0].model.w);
+}
+
+#[test]
+fn pareto_cloud_contains_exact_point() {
+    let ds = datasets::load("se", 7);
+    let cfg = quick_cfg(vec![0.05]);
+    let ctx = SharedContext::new();
+    let out = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();
+    assert!(!out.pareto_cloud.is_empty());
+    // at least one untruncated point in the cloud
+    assert!(out.pareto_cloud.iter().any(|&(_, _, _, _, trunc)| trunc == 0));
+}

@@ -1,0 +1,229 @@
+//! Cross-module property tests: the synthesized circuits, the bit-exact
+//! software models, and the bound/width bookkeeping must agree on random
+//! instances (our substitute for proptest).
+
+use std::collections::HashMap;
+
+use axmlp::axsum::{self, derive_shifts, mean_activations, significance, ShiftPlan};
+use axmlp::fixed::QuantMlp;
+use axmlp::sim::simulate;
+use axmlp::synth::{build_mlp, MlpCircuitSpec, NeuronStyle};
+use axmlp::util::prop::{check, check_eq, forall_seeded};
+use axmlp::util::rng::Rng;
+
+fn rand_q(rng: &mut Rng) -> QuantMlp {
+    let din = 2 + rng.below(6);
+    let hidden = 2 + rng.below(4);
+    let dout = 2 + rng.below(4);
+    QuantMlp {
+        w: vec![
+            (0..hidden)
+                .map(|_| (0..din).map(|_| rng.range_i64(-127, 127)).collect())
+                .collect(),
+            (0..dout)
+                .map(|_| (0..hidden).map(|_| rng.range_i64(-127, 127)).collect())
+                .collect(),
+        ],
+        b: vec![
+            (0..hidden).map(|_| rng.range_i64(-60, 60)).collect(),
+            (0..dout).map(|_| rng.range_i64(-60, 60)).collect(),
+        ],
+        in_bits: 4,
+        w_scales: vec![1.0, 1.0],
+    }
+}
+
+fn rand_plan(rng: &mut Rng, q: &QuantMlp) -> ShiftPlan {
+    let mut plan = ShiftPlan::exact(q);
+    for layer in plan.shifts.iter_mut() {
+        for row in layer.iter_mut() {
+            for s in row.iter_mut() {
+                *s = rng.below(7) as u32;
+            }
+        }
+    }
+    plan
+}
+
+#[test]
+fn circuit_equals_software_model_on_random_mlps() {
+    forall_seeded(0xC1, 25, |rng| {
+        let q = rand_q(rng);
+        let plan = rand_plan(rng, &q);
+        let spec = MlpCircuitSpec {
+            name: "prop".into(),
+            weights: q.w.clone(),
+            biases: q.b.clone(),
+            shifts: plan.shifts.clone(),
+            in_bits: 4,
+            style: NeuronStyle::AxSum,
+        };
+        let nl = build_mlp(&spec);
+        let pats = 40;
+        let xs: Vec<Vec<i64>> = (0..pats)
+            .map(|_| (0..q.din()).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let mut inputs: HashMap<String, Vec<u64>> = HashMap::new();
+        for i in 0..q.din() {
+            inputs.insert(format!("x{i}"), xs.iter().map(|x| x[i] as u64).collect());
+        }
+        let sim = simulate(&nl, &inputs, pats, false);
+        for (x, &cls) in xs.iter().zip(&sim.outputs["class"]) {
+            check_eq(
+                axsum::predict(&q, &plan, x),
+                cls as usize,
+                "circuit vs software class",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncation_monotone_in_k_single_sign() {
+    // For an all-positive-coefficient neuron, keeping more MSBs can only
+    // move the truncated sum toward the exact one: S'_1 <= S'_2 <= S'_3
+    // <= S_exact. (End-to-end MLP error is NOT monotone in k — the Sp/Sn
+    // trees can cancel — so the guarantee is stated per single-sign sum.)
+    forall_seeded(0xC2, 60, |rng| {
+        let n = 1 + rng.below(8);
+        let w: Vec<i64> = (0..n).map(|_| rng.range_i64(1, 127)).collect();
+        let a: Vec<i64> = (0..n).map(|_| rng.range_i64(0, 15)).collect();
+        let bias = rng.range_i64(0, 40);
+        let exact = axsum::neuron_value(&a, &w, bias, &vec![0u32; n]);
+        let mut prev = i64::MIN;
+        for k in 1..=3u32 {
+            let shifts: Vec<u32> = w
+                .iter()
+                .map(|&wi| axsum::product_bits(4, wi).saturating_sub(k))
+                .collect();
+            let v = axsum::neuron_value(&a, &w, bias, &shifts);
+            check(v >= prev, format!("k={k}: {v} < {prev}"))?;
+            check(v <= exact, format!("k={k}: {v} > exact {exact}"))?;
+            prev = v;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn derived_shifts_respect_k_ordering() {
+    // derive_shifts with larger k never truncates more bits
+    forall_seeded(0xC6, 20, |rng| {
+        let q = rand_q(rng);
+        let xs: Vec<Vec<i64>> = (0..30)
+            .map(|_| (0..q.din()).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let means = mean_activations(&q, &xs);
+        let sig = significance(&q, &means);
+        let g = vec![1e18, 1e18];
+        let p1 = derive_shifts(&q, &sig, &g, 1);
+        let p3 = derive_shifts(&q, &sig, &g, 3);
+        // only layer 0 has fixed input widths; deeper layers' product
+        // sizes shrink with the *upstream* truncation, so cross-k shift
+        // comparisons are only meaningful at the primary inputs
+        for (r1, r3) in p1.shifts[0].iter().zip(&p3.shifts[0]) {
+            for (&s1, &s3) in r1.iter().zip(r3) {
+                check(s3 <= s1, format!("s3={s3} > s1={s1}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_value_never_exceeds_exact_positive_part() {
+    // truncation only discards magnitude: each product term shrinks
+    forall_seeded(0xC3, 60, |rng| {
+        let a = rng.range_i64(0, 15);
+        let w = rng.range_i64(1, 127);
+        let s = rng.below(10) as u32;
+        let p = a * w;
+        let t = (p >> s) << s;
+        check(t <= p && t >= 0, format!("t={t} p={p}"))?;
+        check(p - t < (1 << s), "truncation error bound")
+    });
+}
+
+#[test]
+fn widths_cover_all_reachable_values() {
+    // layer_input_widths must bound every activation value reachable on
+    // random inputs (the circuit sizes buses from these bounds)
+    forall_seeded(0xC4, 20, |rng| {
+        let q = rand_q(rng);
+        let plan = rand_plan(rng, &q);
+        let widths = axsum::layer_input_widths(&q, &plan);
+        let mut scratch = Vec::new();
+        for _ in 0..30 {
+            let x: Vec<i64> = (0..q.din()).map(|_| rng.range_i64(0, 15)).collect();
+            // hidden activations
+            let mut acts = x.clone();
+            let l = 0usize;
+            let mut hidden = Vec::new();
+            for (j, row) in q.w[l].iter().enumerate() {
+                let v = axsum::neuron_value(&acts, row, q.b[l][j], &plan.shifts[l][j]).max(0);
+                hidden.push(v);
+            }
+            acts = hidden;
+            for (j, &v) in acts.iter().enumerate() {
+                let w = widths[1][j];
+                check(
+                    (v as u64) < (1u64 << w),
+                    format!("activation {v} overflows width {w}"),
+                )?;
+            }
+            let _ = axsum::forward(&q, &plan, &x, &mut scratch);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn verilog_emission_total_and_parseable_shape() {
+    forall_seeded(0xC5, 10, |rng| {
+        let q = rand_q(rng);
+        let spec = MlpCircuitSpec::exact(
+            "prop_v",
+            q.w.clone(),
+            q.b.clone(),
+            4,
+            NeuronStyle::AxSum,
+        );
+        let nl = build_mlp(&spec);
+        let v = axmlp::verilog::to_verilog(&nl);
+        check(v.contains("module prop_v"), "module header")?;
+        check(v.contains("endmodule"), "endmodule")?;
+        check(
+            v.matches("assign").count() >= nl.n_cells(),
+            "every cell emitted",
+        )
+    });
+}
+
+#[test]
+fn failure_injection_bad_artifacts_are_graceful() {
+    // a corrupt artifact directory must produce errors, not panics
+    let dir = std::env::temp_dir().join("axmlp_bad_artifacts");
+    let _ = std::fs::create_dir_all(&dir);
+    std::fs::write(dir.join("topologies.json"), "{not json").unwrap();
+    assert!(axmlp::runtime::Runtime::new(&dir).is_err());
+    std::fs::write(
+        dir.join("topologies.json"),
+        r#"{"eval_batch":256,"train_batch":64,"vc_max":256,
+            "topologies":[{"key":"zz","name":"Z","din":2,"hidden":2,"dout":2,
+              "fwd":"missing.hlo.txt","train":"missing.hlo.txt"}]}"#,
+    )
+    .unwrap();
+    let rt = axmlp::runtime::Runtime::new(&dir).unwrap();
+    assert!(rt.load("missing.hlo.txt").is_err());
+    let q = QuantMlp {
+        w: vec![vec![vec![1, 1]; 2], vec![vec![1, 1]; 2]],
+        b: vec![vec![0; 2], vec![0; 2]],
+        in_bits: 4,
+        w_scales: vec![1.0, 1.0],
+    };
+    let plan = ShiftPlan::exact(&q);
+    assert!(rt
+        .forward_logits("zz", &q, &plan, &[vec![0, 0]])
+        .is_err());
+}

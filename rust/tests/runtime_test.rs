@@ -1,0 +1,189 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These require `make artifacts` to have run; they skip (with a notice)
+//! when the artifacts directory is absent so `cargo test` stays green in a
+//! fresh checkout.
+
+use axmlp::axsum::{self, ShiftPlan};
+use axmlp::fixed::QuantMlp;
+use axmlp::retrain::{backend_rust::RustBackend, RetrainState, TrainBackend};
+use axmlp::runtime::{backend_pjrt::PjrtBackend, Runtime};
+use axmlp::util::rng::Rng;
+use axmlp::util::stats::argmax_f64;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("topologies.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime init"))
+}
+
+fn rand_q(rng: &mut Rng, din: usize, hidden: usize, dout: usize) -> QuantMlp {
+    QuantMlp {
+        w: vec![
+            (0..hidden)
+                .map(|_| (0..din).map(|_| rng.range_i64(-100, 100)).collect())
+                .collect(),
+            (0..dout)
+                .map(|_| (0..hidden).map(|_| rng.range_i64(-100, 100)).collect())
+                .collect(),
+        ],
+        b: vec![
+            (0..hidden).map(|_| rng.range_i64(-50, 50)).collect(),
+            (0..dout).map(|_| rng.range_i64(-50, 50)).collect(),
+        ],
+        in_bits: 4,
+        w_scales: vec![1.0, 1.0],
+    }
+}
+
+#[test]
+fn smoke_artifact_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    rt.smoke().expect("smoke numerics");
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn fwd_artifact_bit_matches_rust_axsum_model() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(42);
+    for key in ["ma", "v2", "bs"] {
+        let top = rt.index.by_key(key).expect("topology in index");
+        let q = rand_q(&mut rng, top.din, top.hidden, top.dout);
+        // random truncation plan
+        let mut plan = ShiftPlan::exact(&q);
+        for layer in plan.shifts.iter_mut() {
+            for row in layer.iter_mut() {
+                for s in row.iter_mut() {
+                    *s = rng.below(5) as u32;
+                }
+            }
+        }
+        let xs: Vec<Vec<i64>> = (0..300)
+            .map(|_| (0..top.din).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let logits = rt.forward_logits(key, &q, &plan, &xs).expect("fwd exec");
+        assert_eq!(logits.len(), xs.len());
+        let mut scratch = Vec::new();
+        for (x, l) in xs.iter().zip(&logits) {
+            let want = axsum::forward(&q, &plan, x, &mut scratch);
+            let got: Vec<i64> = l.iter().map(|&v| v as i64).collect();
+            assert_eq!(got, want, "key={key} x={x:?}");
+        }
+    }
+}
+
+#[test]
+fn fwd_artifact_accuracy_equals_software_accuracy() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(7);
+    let top = rt.index.by_key("v2").unwrap();
+    let q = rand_q(&mut rng, top.din, top.hidden, top.dout);
+    let plan = ShiftPlan::exact(&q);
+    let xs: Vec<Vec<i64>> = (0..500)
+        .map(|_| (0..top.din).map(|_| rng.range_i64(0, 15)).collect())
+        .collect();
+    let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&q, &plan, x)).collect();
+    let acc_hw = rt.accuracy("v2", &q, &plan, &xs, &ys).unwrap();
+    assert!((acc_hw - 1.0).abs() < 1e-12, "acc={acc_hw}");
+}
+
+#[test]
+fn pjrt_train_step_descends_and_projects() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(9);
+    let top = rt.index.by_key("ma").unwrap();
+    let q = rand_q(&mut rng, top.din, top.hidden, top.dout);
+    // synthetic labeled data from a teacher model
+    let xs: Vec<Vec<i64>> = (0..256)
+        .map(|_| (0..top.din).map(|_| rng.range_i64(0, 15)).collect())
+        .collect();
+    let plan = ShiftPlan::exact(&q);
+    let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&q, &plan, x)).collect();
+
+    let mut st = RetrainState::from_quant(&q, &xs, &ys, rt.index.train_batch, 11);
+    let vc: Vec<f32> = (-127..=127).map(|v| v as f32).collect();
+    let mut be = PjrtBackend::new(&rt, "ma").expect("backend");
+    let s0 = be.train_epoch(&mut st, &vc, 0.5).expect("epoch");
+    let mut last = s0.loss;
+    for _ in 0..4 {
+        last = be.train_epoch(&mut st, &vc, 0.5).expect("epoch").loss;
+    }
+    assert!(
+        last <= s0.loss + 0.05,
+        "loss should not blow up: {last} vs {}",
+        s0.loss
+    );
+
+    // projection containment with a sparse VC
+    let vc_sparse: Vec<f32> = vec![0.0, 1.0, -1.0, 2.0, -2.0, 4.0, -4.0, 8.0, -8.0,
+                                   16.0, -16.0, 32.0, -32.0, 64.0, -64.0];
+    be.train_epoch(&mut st, &vc_sparse, 0.5).unwrap();
+    let qp = st.to_quant(&vc_sparse, &q);
+    let allowed: Vec<i64> = vc_sparse.iter().map(|&v| v as i64).collect();
+    for layer in &qp.w {
+        for row in layer {
+            for &w in row {
+                assert!(allowed.contains(&w), "w={w} outside VC");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_and_rust_backends_agree_on_dynamics() {
+    // Same state, same data, same lr: the two backends are independent
+    // implementations of the same step; they should track each other in
+    // loss trajectory and end accuracy (not bit-identical: shuffles and
+    // float summation orders differ).
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(13);
+    let top = rt.index.by_key("v2").unwrap();
+    let teacher = rand_q(&mut rng, top.din, top.hidden, top.dout);
+    let plan = ShiftPlan::exact(&teacher);
+    let xs: Vec<Vec<i64>> = (0..384)
+        .map(|_| (0..top.din).map(|_| rng.range_i64(0, 15)).collect())
+        .collect();
+    let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&teacher, &plan, x)).collect();
+    // student starts perturbed
+    let mut student = teacher.clone();
+    for row in student.w[0].iter_mut() {
+        for w in row.iter_mut() {
+            *w = (*w + 17).clamp(-127, 127);
+        }
+    }
+    let vc: Vec<f32> = (-127..=127).map(|v| v as f32).collect();
+
+    let run = |backend: &mut dyn TrainBackend| -> (f64, f64) {
+        let mut st = RetrainState::from_quant(&student, &xs, &ys, rt.index.train_batch, 17);
+        let mut last_loss = f64::INFINITY;
+        for _ in 0..6 {
+            last_loss = backend.train_epoch(&mut st, &vc, 1.0).unwrap().loss;
+        }
+        let qf = st.to_quant(&vc, &student);
+        (last_loss, qf.accuracy_exact(&xs, &ys))
+    };
+    let (l_rust, a_rust) = run(&mut RustBackend);
+    let mut pjrt = PjrtBackend::new(&rt, "v2").unwrap();
+    let (l_pjrt, a_pjrt) = run(&mut pjrt);
+    // the native backend is a bit-faithful mirror of the AOT'd jax step:
+    // same permutation, same batches, near-identical float math
+    assert!(
+        (a_rust - a_pjrt).abs() < 1e-9,
+        "backends diverged: rust acc {a_rust}, pjrt acc {a_pjrt}"
+    );
+    assert!(
+        (l_rust - l_pjrt).abs() < 1e-2 * l_rust.abs().max(1.0),
+        "loss diverged: {l_rust} vs {l_pjrt}"
+    );
+}
+
+#[test]
+fn argmax_helper_consistent() {
+    // guards the accuracy() reduction used on artifact logits
+    let logits = [0.1f64, 0.9, 0.5];
+    assert_eq!(argmax_f64(&logits), 1);
+}
