@@ -1,14 +1,21 @@
 //! Bench: DSE design-point evaluation (Fig. 5 engine) + the
 //! multiplier-style ablation DESIGN.md calls out (binary vs CSD substrate).
+//!
+//! Emits `results/bench_dse.csv` and the machine-readable
+//! `BENCH_dse.json` (name, iters, ns/iter) used to track the sweep
+//! engine's perf trajectory across PRs — see EXPERIMENTS.md §Perf.
 
-use axmlp::axsum::{derive_shifts, mean_activations, significance};
+use axmlp::axsum::{derive_shifts, mean_activations, significance, FlatEval, FlatScratch};
 use axmlp::coordinator::{train_mlp0, PipelineConfig, SharedContext};
 use axmlp::datasets;
-use axmlp::dse::{evaluate_design, DseConfig, QuantData};
+use axmlp::dse::{
+    evaluate_design, evaluate_design_packed, sweep, DseConfig, EngineScratch, QuantData,
+};
 use axmlp::estimate::area_mm2;
 use axmlp::fixed::{quantize, quantize_inputs};
+use axmlp::sim::PackedStimulus;
 use axmlp::synth::{multiplier_netlist, MultStyle};
-use axmlp::util::bench::{run, write_csv};
+use axmlp::util::bench::{run, write_csv, write_json};
 
 fn main() {
     let ctx = SharedContext::new();
@@ -33,9 +40,60 @@ fn main() {
     };
     let g = vec![0.05, 0.05];
     let mut results = Vec::new();
+
+    // standalone entry point: packs the stimulus + allocates scratch per
+    // call (the pre-engine upper bound for one design point)
     results.push(run("dse_point(seeds,k=2)", || {
         let plan = derive_shifts(&q, &sig, &g, 2);
         std::hint::black_box(evaluate_design(&q, plan, 2, g.clone(), &data, &ctx.lib, &cfg));
+    }));
+
+    // sweep inner loop: per-sweep invariants (packed stimulus, worker
+    // scratch) hoisted — what each point costs inside dse::sweep
+    let n_stim = xq_test.len().min(cfg.power_patterns);
+    let stimulus = &xq_test[..n_stim];
+    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let mut scratch = EngineScratch::new();
+    results.push(run("dse_point_prepared(seeds,k=2)", || {
+        let plan = derive_shifts(&q, &sig, &g, 2);
+        std::hint::black_box(evaluate_design_packed(
+            &q,
+            plan,
+            2,
+            g.clone(),
+            &data,
+            &ctx.lib,
+            &cfg,
+            &packed,
+            stimulus,
+            &mut scratch,
+        ));
+    }));
+
+    // software accuracy oracle alone (flattened integer forward)
+    let plan = derive_shifts(&q, &sig, &g, 2);
+    let flat = FlatEval::new(&q, &plan);
+    let mut fs = FlatScratch::new();
+    let n_eval = xq_train.len().min(cfg.max_eval);
+    results.push(run("flat_accuracy(se,train*cap)", || {
+        std::hint::black_box(flat.accuracy_with(
+            &xq_train[..n_eval],
+            &ds.y_train[..n_eval],
+            &mut fs,
+        ));
+    }));
+
+    // full sweep at a reduced grid: exercises plan-level dedup + the
+    // parallel engine end to end
+    let sweep_cfg = DseConfig {
+        max_g_levels: 3,
+        power_patterns: 64,
+        max_eval: 300,
+        verify_circuit: false,
+        ..Default::default()
+    };
+    results.push(run("dse_sweep(se,3g,300eval)", || {
+        std::hint::black_box(sweep(&q, &sig, &data, &ctx.lib, &sweep_cfg));
     }));
 
     // ablation: multiplier decomposition style — total LUT area
@@ -46,4 +104,5 @@ fn main() {
         println!("ablation mult-style {name:7}: total LUT area {total:.0} mm²");
     }
     write_csv("bench_dse.csv", &results);
+    write_json("BENCH_dse.json", &results);
 }

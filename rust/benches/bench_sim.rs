@@ -3,7 +3,7 @@
 
 use std::collections::HashMap;
 
-use axmlp::sim::simulate;
+use axmlp::sim::{simulate, simulate_packed, PackedStimulus, SimScratch};
 use axmlp::synth::{build_mlp, MlpCircuitSpec, NeuronStyle};
 use axmlp::util::bench::{run, write_csv};
 use axmlp::util::rng::Rng;
@@ -39,6 +39,17 @@ fn main() {
         }));
         results.push(run(&format!("simulate(pd,{pats}p,no-toggles)"), || {
             std::hint::black_box(simulate(&nl, &inputs, pats, false));
+        }));
+        // sweep-engine path: stimulus packed once, scratch reused
+        let stim = PackedStimulus::for_netlist(&nl, &inputs, pats);
+        let mut scratch = SimScratch::new();
+        results.push(run(&format!("simulate_packed(pd,{pats}p,toggles)"), || {
+            simulate_packed(&nl, &stim, true, &mut scratch);
+            std::hint::black_box(scratch.patterns);
+        }));
+        results.push(run(&format!("simulate_packed(pd,{pats}p,no-toggles)"), || {
+            simulate_packed(&nl, &stim, false, &mut scratch);
+            std::hint::black_box(scratch.patterns);
         }));
     }
     write_csv("bench_sim.csv", &results);

@@ -110,15 +110,122 @@ pub fn accuracy(q: &QuantMlp, plan: &ShiftPlan, xs: &[Vec<i64>], ys: &[usize]) -
     if xs.is_empty() {
         return 0.0;
     }
-    let mut scratch = Vec::new();
-    let mut ok = 0usize;
-    for (x, &y) in xs.iter().zip(ys) {
-        let logits = forward(q, plan, x, &mut scratch);
-        if argmax_i64(&logits) == y {
-            ok += 1;
+    let flat = FlatEval::new(q, plan);
+    let mut scratch = FlatScratch::new();
+    flat.accuracy_with(xs, ys, &mut scratch)
+}
+
+// ---------------------------------------------------------------------------
+// Flattened evaluation form (DSE hot path).
+// ---------------------------------------------------------------------------
+
+/// One layer of a [`FlatEval`]: weights and shifts stored contiguously
+/// row-major (`w[j * n_in + i]`), so the per-neuron inner product walks
+/// one cache line stream instead of chasing `Vec<Vec<i64>>` pointers.
+#[derive(Clone, Debug)]
+struct FlatLayer {
+    n_in: usize,
+    n_out: usize,
+    w: Vec<i64>,
+    shifts: Vec<u32>,
+    b: Vec<i64>,
+}
+
+/// Flattened `(QuantMlp, ShiftPlan)` pair: built once per design point,
+/// then evaluated over thousands of samples with a caller-owned
+/// [`FlatScratch`] — no per-sample or per-layer heap allocation. Bit-exact
+/// with [`forward`] (the inner loop is the same [`neuron_value`]).
+#[derive(Clone, Debug)]
+pub struct FlatEval {
+    layers: Vec<FlatLayer>,
+}
+
+/// Caller-owned ping-pong activation buffers for [`FlatEval`].
+#[derive(Default)]
+pub struct FlatScratch {
+    cur: Vec<i64>,
+    next: Vec<i64>,
+}
+
+impl FlatScratch {
+    pub fn new() -> FlatScratch {
+        FlatScratch::default()
+    }
+}
+
+impl FlatEval {
+    pub fn new(q: &QuantMlp, plan: &ShiftPlan) -> FlatEval {
+        let layers = q
+            .w
+            .iter()
+            .zip(&q.b)
+            .zip(&plan.shifts)
+            .map(|((lw, lb), ls)| {
+                let n_out = lw.len();
+                let n_in = lw.first().map_or(0, |r| r.len());
+                let mut w = Vec::with_capacity(n_out * n_in);
+                let mut shifts = Vec::with_capacity(n_out * n_in);
+                for (row, srow) in lw.iter().zip(ls) {
+                    w.extend_from_slice(row);
+                    shifts.extend_from_slice(srow);
+                }
+                FlatLayer {
+                    n_in,
+                    n_out,
+                    w,
+                    shifts,
+                    b: lb.clone(),
+                }
+            })
+            .collect();
+        FlatEval { layers }
+    }
+
+    /// Integer logits for one sample, borrowed from the scratch buffer.
+    pub fn forward_into<'a>(&self, x: &[i64], s: &'a mut FlatScratch) -> &'a [i64] {
+        s.cur.clear();
+        s.cur.extend_from_slice(x);
+        let n_layers = self.layers.len();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let last = li + 1 == n_layers;
+            s.next.clear();
+            for j in 0..layer.n_out {
+                let row = &layer.w[j * layer.n_in..(j + 1) * layer.n_in];
+                let sh = &layer.shifts[j * layer.n_in..(j + 1) * layer.n_in];
+                let v = neuron_value(&s.cur, row, layer.b[j], sh);
+                s.next.push(if last { v } else { v.max(0) });
+            }
+            std::mem::swap(&mut s.cur, &mut s.next);
+        }
+        &s.cur
+    }
+
+    /// Batched forward: every sample's logits written contiguously
+    /// (`[sample][dout]` row-major) into the caller-owned `logits`.
+    pub fn forward_batch(&self, xs: &[Vec<i64>], logits: &mut Vec<i64>, s: &mut FlatScratch) {
+        logits.clear();
+        for x in xs {
+            let l = self.forward_into(x, s);
+            logits.extend_from_slice(l);
         }
     }
-    ok as f64 / xs.len() as f64
+
+    pub fn predict(&self, x: &[i64], s: &mut FlatScratch) -> usize {
+        argmax_i64(self.forward_into(x, s))
+    }
+
+    pub fn accuracy_with(&self, xs: &[Vec<i64>], ys: &[usize], s: &mut FlatScratch) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mut ok = 0usize;
+        for (x, &y) in xs.iter().zip(ys) {
+            if argmax_i64(self.forward_into(x, s)) == y {
+                ok += 1;
+            }
+        }
+        ok as f64 / xs.len() as f64
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -186,23 +293,22 @@ pub fn mean_activations(q: &QuantMlp, xs: &[Vec<i64>]) -> Vec<Vec<f64>> {
         sums.push(vec![0.0; q.w[l].len()]);
     }
     let plan = ShiftPlan::exact(q);
-    let mut scratch = Vec::new();
+    let mut cur: Vec<i64> = Vec::new();
+    let mut next: Vec<i64> = Vec::new();
     for x in xs {
-        scratch.clear();
-        scratch.extend_from_slice(x);
-        for (i, &v) in scratch.iter().enumerate() {
+        cur.clear();
+        cur.extend_from_slice(x);
+        for (i, &v) in cur.iter().enumerate() {
             sums[0][i] += v as f64;
         }
         for l in 0..n_layers - 1 {
-            let mut next = Vec::with_capacity(q.w[l].len());
+            next.clear();
             for (j, row) in q.w[l].iter().enumerate() {
-                let v = neuron_value(&scratch, row, q.b[l][j], &plan.shifts[l][j]).max(0);
+                let v = neuron_value(&cur, row, q.b[l][j], &plan.shifts[l][j]).max(0);
                 next.push(v);
-            }
-            for (j, &v) in next.iter().enumerate() {
                 sums[l + 1][j] += v as f64;
             }
-            scratch = next;
+            std::mem::swap(&mut cur, &mut next);
         }
     }
     let n = xs.len().max(1) as f64;
@@ -505,6 +611,39 @@ mod tests {
         assert!(cands.len() <= 9);
         for w in cands.windows(2) {
             assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn flat_eval_bit_matches_forward() {
+        let mut rng = Rng::new(91);
+        for _ in 0..10 {
+            let q = rand_q(&mut rng, 5, 4, 3);
+            let mut plan = ShiftPlan::exact(&q);
+            for layer in plan.shifts.iter_mut() {
+                for row in layer.iter_mut() {
+                    for s in row.iter_mut() {
+                        *s = rng.below(6) as u32;
+                    }
+                }
+            }
+            let flat = FlatEval::new(&q, &plan);
+            let mut fs = FlatScratch::new();
+            let mut scratch = Vec::new();
+            let xs: Vec<Vec<i64>> = (0..40)
+                .map(|_| (0..5).map(|_| rng.range_i64(0, 15)).collect())
+                .collect();
+            let mut batch = Vec::new();
+            flat.forward_batch(&xs, &mut batch, &mut fs);
+            for (s_idx, x) in xs.iter().enumerate() {
+                let want = forward(&q, &plan, x, &mut scratch);
+                assert_eq!(flat.forward_into(x, &mut fs), &want[..]);
+                assert_eq!(flat.predict(x, &mut fs), predict(&q, &plan, x));
+                assert_eq!(&batch[s_idx * 3..(s_idx + 1) * 3], &want[..]);
+            }
+            let ys: Vec<usize> = xs.iter().map(|x| predict(&q, &plan, x)).collect();
+            assert_eq!(flat.accuracy_with(&xs, &ys, &mut fs), 1.0);
+            assert_eq!(accuracy(&q, &plan, &xs, &ys), 1.0);
         }
     }
 

@@ -22,6 +22,7 @@ use crate::pdk::EgtLibrary;
 use crate::retrain::{
     printing_friendly_retrain, AreaModel, RetrainConfig, RetrainOutcome, TrainBackend,
 };
+use crate::sim::{PackedStimulus, SimScratch};
 use crate::synth::NeuronStyle;
 use crate::util::rng::Rng;
 
@@ -171,18 +172,19 @@ pub fn run_dataset(
     let q0_acc_train = q0.accuracy_exact(&xq_train, &ds.y_train);
     let q0_acc_test = q0.accuracy_exact(&xq_test, &ds.y_test);
 
-    // 3. exact bespoke baseline [2]
-    let stimulus: Vec<Vec<i64>> = xq_test
-        .iter()
-        .take(cfg.dse.power_patterns)
-        .cloned()
-        .collect();
-    let (baseline_costs, _) = dse::circuit_costs(
+    // 3. exact bespoke baseline [2] — the power stimulus is packed once
+    // and shared by every synthesis/simulation below (q0 and the
+    // retrained models expose the same x0..x{d-1} input interface)
+    let stimulus = &xq_test[..xq_test.len().min(cfg.dse.power_patterns)];
+    let packed = PackedStimulus::from_features(stimulus, q0.din(), q0.in_bits);
+    let mut sim_scratch = SimScratch::new();
+    let baseline_costs = dse::circuit_costs_packed(
         &q0,
         &ShiftPlan::exact(&q0),
         NeuronStyle::ExactBespoke,
-        &stimulus,
+        &packed,
         &ctx.lib,
+        &mut sim_scratch,
     );
 
     // 4. clustering (cached) + per-model area LUTs for Eq. (1)
@@ -208,12 +210,13 @@ pub fn run_dataset(
         let qr = &outcome.q;
 
         // "Only Retrain": retrained coefficients, exact conventional circuit
-        let (ro_costs, _) = dse::circuit_costs(
+        let ro_costs = dse::circuit_costs_packed(
             qr,
             &ShiftPlan::exact(qr),
             NeuronStyle::ExactBespoke,
-            &stimulus,
+            &packed,
             &ctx.lib,
+            &mut sim_scratch,
         );
         let ro_acc_test = qr.accuracy_exact(&xq_test, &ds.y_test);
 
@@ -238,9 +241,18 @@ pub fn run_dataset(
             });
 
         // spot-verify the chosen circuit against the software model
-        let verify = dse::circuit_costs(qr, &chosen.plan, NeuronStyle::AxSum, &stimulus, &ctx.lib);
-        for (x, &cls) in stimulus.iter().zip(&verify.1) {
-            debug_assert_eq!(axsum::predict(qr, &chosen.plan, x), cls as usize);
+        let _verify_costs = dse::circuit_costs_packed(
+            qr,
+            &chosen.plan,
+            NeuronStyle::AxSum,
+            &packed,
+            &ctx.lib,
+            &mut sim_scratch,
+        );
+        if let Some(classes) = sim_scratch.outputs.first() {
+            for (x, &cls) in stimulus.iter().zip(classes) {
+                debug_assert_eq!(axsum::predict(qr, &chosen.plan, x), cls as usize);
+            }
         }
 
         if (t - cfg.thresholds.last().copied().unwrap_or(t)).abs() < 1e-12 {

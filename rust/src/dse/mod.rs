@@ -2,14 +2,25 @@
 //! count `k ∈ [1,3]` (shared by all neurons) × one significance threshold
 //! `G` per layer, synthesize + simulate every point, and extract the
 //! accuracy/area Pareto front.
+//!
+//! Sweep evaluation engine (see EXPERIMENTS.md §Perf): all per-sweep
+//! invariants are hoisted out of the per-point loop — the power stimulus
+//! is bit-transposed once into a [`PackedStimulus`], every worker owns one
+//! reusable [`EngineScratch`], the model is flattened per point into an
+//! `axsum::FlatEval`, netlists are built from borrowed specs (no weight
+//! clones), and grid points whose `(k, G)` settings derive to an identical
+//! [`ShiftPlan`] are synthesized/simulated once with the result fanned
+//! back out.
 
-use crate::axsum::{self, derive_shifts, threshold_candidates, ShiftPlan, Significance};
-use crate::estimate::{estimate, Costs};
+use crate::axsum::{
+    self, derive_shifts, threshold_candidates, FlatEval, FlatScratch, ShiftPlan, Significance,
+};
+use crate::estimate::{estimate_with_toggles, Costs};
 use crate::fixed::QuantMlp;
 use crate::pdk::EgtLibrary;
-use crate::sim::simulate;
-use crate::synth::{build_mlp, MlpCircuitSpec, NeuronStyle};
-use crate::util::pool::parallel_map;
+use crate::sim::{simulate_packed, PackedStimulus, SimScratch};
+use crate::synth::{build_mlp_ref, MlpSpecRef, NeuronStyle};
+use crate::util::pool::parallel_map_with;
 
 use std::collections::HashMap;
 
@@ -60,9 +71,34 @@ pub struct QuantData<'a> {
     pub y_test: &'a [usize],
 }
 
+/// Reusable per-worker buffers for the sweep engine: simulation word /
+/// toggle / output staging plus the flattened-forward activation
+/// ping-pong. One per worker thread; the per-point loop allocates nothing.
+#[derive(Default)]
+pub struct EngineScratch {
+    pub sim: SimScratch,
+    pub flat: FlatScratch,
+}
+
+impl EngineScratch {
+    pub fn new() -> EngineScratch {
+        EngineScratch::default()
+    }
+}
+
+/// The power-estimation stimulus: the first `power_patterns` test vectors,
+/// borrowed (the engine never clones stimulus rows).
+fn power_stimulus<'a>(data: &QuantData<'a>, cfg: &DseConfig) -> &'a [Vec<i64>] {
+    &data.x_test[..data.x_test.len().min(cfg.power_patterns)]
+}
+
 /// Synthesize the circuit for (q, plan, style) and estimate its costs with
 /// switching activity from `stimulus` (integer input vectors). Returns the
 /// costs and the simulated class outputs.
+///
+/// Convenience wrapper over [`circuit_costs_packed`]: packs the stimulus
+/// and allocates scratch per call. Sweep-shaped callers pack once and
+/// reuse scratch instead.
 pub fn circuit_costs(
     q: &QuantMlp,
     plan: &ShiftPlan,
@@ -70,30 +106,48 @@ pub fn circuit_costs(
     stimulus: &[Vec<i64>],
     lib: &EgtLibrary,
 ) -> (Costs, Vec<u64>) {
-    let spec = MlpCircuitSpec {
-        name: "mlp".into(),
-        weights: q.w.clone(),
-        biases: q.b.clone(),
-        shifts: plan.shifts.clone(),
-        in_bits: q.in_bits,
-        style,
-    };
-    let nl = build_mlp(&spec);
-    let pats = stimulus.len().max(1);
-    let mut inputs: HashMap<String, Vec<u64>> = HashMap::new();
-    for i in 0..q.din() {
-        inputs.insert(
-            format!("x{i}"),
-            stimulus.iter().map(|x| x[i] as u64).collect(),
-        );
-    }
-    let sim = simulate(&nl, &inputs, pats, true);
-    let costs = estimate(&nl, lib, Some(&sim));
-    let classes = sim.outputs.get("class").cloned().unwrap_or_default();
+    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let mut scratch = SimScratch::new();
+    let costs = circuit_costs_packed(q, plan, style, &packed, lib, &mut scratch);
+    let classes = scratch.outputs.first().cloned().unwrap_or_default();
     (costs, classes)
 }
 
+/// Packed-stimulus core of [`circuit_costs`]: builds the netlist from a
+/// borrowed spec (no weight-matrix clones), simulates against the
+/// pre-packed stimulus into caller-owned scratch, and estimates costs
+/// straight from the scratch toggle counts. The simulated class outputs
+/// are left in `scratch.outputs[0]` (the MLP circuit's only output bus).
+pub fn circuit_costs_packed(
+    q: &QuantMlp,
+    plan: &ShiftPlan,
+    style: NeuronStyle,
+    packed: &PackedStimulus,
+    lib: &EgtLibrary,
+    scratch: &mut SimScratch,
+) -> Costs {
+    let spec = MlpSpecRef {
+        name: "mlp",
+        weights: &q.w,
+        biases: &q.b,
+        shifts: &plan.shifts,
+        in_bits: q.in_bits,
+        style,
+    };
+    let nl = build_mlp_ref(&spec);
+    // callers read the classes positionally from scratch.outputs[0]; keep
+    // that contract loud (one comparison per point — negligible next to
+    // synthesis) in case the MLP builder ever grows extra output buses
+    assert_eq!(nl.outputs.len(), 1, "MLP circuit must expose one bus");
+    assert_eq!(nl.outputs[0].name, "class");
+    simulate_packed(&nl, packed, true, scratch);
+    estimate_with_toggles(&nl, lib, &scratch.toggles, scratch.patterns)
+}
+
 /// Evaluate one design point end to end.
+///
+/// Standalone wrapper over [`evaluate_design_packed`]: packs the stimulus
+/// and allocates scratch per call (bit-identical results).
 pub fn evaluate_design(
     q: &QuantMlp,
     plan: ShiftPlan,
@@ -103,21 +157,39 @@ pub fn evaluate_design(
     lib: &EgtLibrary,
     cfg: &DseConfig,
 ) -> DesignEval {
+    let stimulus = power_stimulus(data, cfg);
+    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let mut scratch = EngineScratch::new();
+    evaluate_design_packed(q, plan, k, g, data, lib, cfg, &packed, stimulus, &mut scratch)
+}
+
+/// Evaluate one design point against per-sweep-invariant state: the
+/// pre-packed power stimulus (`packed` is the bit-transpose of
+/// `stimulus`) and a reusable per-worker scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_design_packed(
+    q: &QuantMlp,
+    plan: ShiftPlan,
+    k: u32,
+    g: Vec<f64>,
+    data: &QuantData,
+    lib: &EgtLibrary,
+    cfg: &DseConfig,
+    packed: &PackedStimulus,
+    stimulus: &[Vec<i64>],
+    scratch: &mut EngineScratch,
+) -> DesignEval {
     let cap = |xs: &[Vec<i64>]| if cfg.max_eval == 0 { xs.len() } else { xs.len().min(cfg.max_eval) };
     let nt = cap(data.x_train);
     let ne = cap(data.x_test);
-    let acc_train = axsum::accuracy(q, &plan, &data.x_train[..nt], &data.y_train[..nt]);
-    let acc_test = axsum::accuracy(q, &plan, &data.x_test[..ne], &data.y_test[..ne]);
-    let stimulus: Vec<Vec<i64>> = data
-        .x_test
-        .iter()
-        .take(cfg.power_patterns)
-        .cloned()
-        .collect();
-    let (costs, classes) = circuit_costs(q, &plan, NeuronStyle::AxSum, &stimulus, lib);
+    let flat = FlatEval::new(q, &plan);
+    let acc_train = flat.accuracy_with(&data.x_train[..nt], &data.y_train[..nt], &mut scratch.flat);
+    let acc_test = flat.accuracy_with(&data.x_test[..ne], &data.y_test[..ne], &mut scratch.flat);
+    let costs = circuit_costs_packed(q, &plan, NeuronStyle::AxSum, packed, lib, &mut scratch.sim);
     if cfg.verify_circuit {
-        for (x, &cls) in stimulus.iter().zip(&classes) {
-            let sw = axsum::predict(q, &plan, x);
+        let classes = scratch.sim.outputs.first().map(|v| v.as_slice()).unwrap_or(&[]);
+        for (x, &cls) in stimulus.iter().zip(classes) {
+            let sw = flat.predict(x, &mut scratch.flat);
             assert_eq!(
                 sw, cls as usize,
                 "circuit/software divergence (substrate bug)"
@@ -165,6 +237,14 @@ pub fn enumerate_points(q: &QuantMlp, sig: &Significance, cfg: &DseConfig) -> Ve
 }
 
 /// Full exhaustive sweep (parallel over design points).
+///
+/// Per-sweep-invariant work happens exactly once: the stimulus is packed
+/// up front, every worker owns one [`EngineScratch`], and — because
+/// distinct `(k, G)` grid points frequently derive to the *same*
+/// truncation plan (coarse significance distributions, saturated
+/// thresholds, the all-disabled degeneracy) — identical [`ShiftPlan`]s are
+/// synthesized/simulated once and the evaluation is fanned back out to
+/// every aliasing grid point, relabeled with that point's own `(k, g)`.
 pub fn sweep(
     q: &QuantMlp,
     sig: &Significance,
@@ -173,10 +253,50 @@ pub fn sweep(
     cfg: &DseConfig,
 ) -> Vec<DesignEval> {
     let points = enumerate_points(q, sig, cfg);
-    parallel_map(&points, cfg.threads, |(k, g)| {
-        let plan = derive_shifts(q, sig, g, *k);
-        evaluate_design(q, plan, *k, g.clone(), data, lib, cfg)
-    })
+    // derive every plan up front (cheap: software-only bookkeeping)
+    let plans: Vec<ShiftPlan> = points
+        .iter()
+        .map(|(k, g)| derive_shifts(q, sig, g, *k))
+        .collect();
+    // plan-level dedup
+    let mut seen: HashMap<Vec<Vec<Vec<u32>>>, usize> = HashMap::new();
+    let mut reps: Vec<usize> = Vec::new();
+    let mut rep_of_point: Vec<usize> = Vec::with_capacity(points.len());
+    for (i, plan) in plans.iter().enumerate() {
+        let id = *seen.entry(plan.shifts.clone()).or_insert_with(|| {
+            reps.push(i);
+            reps.len() - 1
+        });
+        rep_of_point.push(id);
+    }
+    let stimulus = power_stimulus(data, cfg);
+    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let rep_evals: Vec<DesignEval> =
+        parallel_map_with(&reps, cfg.threads, EngineScratch::new, |scratch, &pi| {
+            let (k, g) = &points[pi];
+            evaluate_design_packed(
+                q,
+                plans[pi].clone(),
+                *k,
+                g.clone(),
+                data,
+                lib,
+                cfg,
+                &packed,
+                stimulus,
+                scratch,
+            )
+        });
+    points
+        .into_iter()
+        .zip(rep_of_point)
+        .map(|((k, g), rid)| {
+            let mut e = rep_evals[rid].clone();
+            e.k = k;
+            e.g = g;
+            e
+        })
+        .collect()
 }
 
 /// Indices of the accuracy/area Pareto-optimal designs (maximize accuracy,

@@ -58,16 +58,32 @@ pub fn critical_path_ms(nl: &Netlist, lib: &EgtLibrary) -> f64 {
 /// Full estimate. `activity`: a toggle-capturing `SimResult` from the
 /// power stimulus (test vectors), or `None` for vector-less power.
 pub fn estimate(nl: &Netlist, lib: &EgtLibrary, activity: Option<&SimResult>) -> Costs {
+    match activity {
+        Some(sim) => estimate_with_toggles(nl, lib, &sim.toggles, sim.patterns),
+        None => estimate_with_toggles(nl, lib, &[], 0),
+    }
+}
+
+/// [`estimate`] from a raw toggle slice (the packed-simulation hot path:
+/// no `SimResult` is materialized — toggles come straight from a
+/// `sim::SimScratch`). Falls back to the 0.25 vector-less rate when the
+/// slice is empty or fewer than two patterns were simulated.
+pub fn estimate_with_toggles(
+    nl: &Netlist,
+    lib: &EgtLibrary,
+    toggles: &[u64],
+    patterns: usize,
+) -> Costs {
+    let vectored = patterns > 1 && !toggles.is_empty();
     let mut area = 0.0;
     let mut power_uw = 0.0;
     for (i, g) in nl.gates.iter().enumerate() {
         let p = lib.params(g.kind);
         area += p.area_mm2;
-        let rate = match activity {
-            Some(sim) if sim.patterns > 1 && !sim.toggles.is_empty() => {
-                sim.toggles[i] as f64 / (sim.patterns - 1) as f64
-            }
-            _ => 0.25,
+        let rate = if vectored {
+            toggles[i] as f64 / (patterns - 1) as f64
+        } else {
+            0.25
         };
         power_uw += lib.static_power_uw(g.kind) + lib.dynamic_power_uw(g.kind, rate);
     }

@@ -130,12 +130,12 @@ pub fn exp_table2(cfg: &ExpConfig) -> anyhow::Result<()> {
         let q0 = quantize(&mlp0);
         let xq_test = quantize_inputs(&ds.x_test);
         let acc = q0.accuracy_exact(&xq_test, &ds.y_test);
-        let stim: Vec<Vec<i64>> = xq_test.iter().take(pcfg.dse.power_patterns).cloned().collect();
+        let n_stim = xq_test.len().min(pcfg.dse.power_patterns);
         let (costs, _) = circuit_costs(
             &q0,
             &crate::axsum::ShiftPlan::exact(&q0),
             NeuronStyle::ExactBespoke,
-            &stim,
+            &xq_test[..n_stim],
             &ctx.lib,
         );
         t.row(vec![

@@ -51,36 +51,52 @@ impl QuantMlp {
 
     /// Exact integer forward (no AxSum): plain weighted sums + ReLU.
     pub fn forward_exact(&self, x: &[i64]) -> Vec<i64> {
-        let mut acts: Vec<i64> = x.to_vec();
-        for l in 0..self.n_layers() {
-            let mut next = Vec::with_capacity(self.w[l].len());
+        let mut cur = Vec::new();
+        let mut next = Vec::new();
+        self.forward_exact_into(x, &mut cur, &mut next);
+        cur
+    }
+
+    /// [`Self::forward_exact`] with caller-owned ping-pong activation
+    /// buffers (the logits end up in `cur`) — the allocation-free batch
+    /// path behind [`Self::accuracy_exact`].
+    fn forward_exact_into(&self, x: &[i64], cur: &mut Vec<i64>, next: &mut Vec<i64>) {
+        cur.clear();
+        cur.extend_from_slice(x);
+        let n_layers = self.n_layers();
+        for l in 0..n_layers {
+            next.clear();
+            let last = l + 1 == n_layers;
             for (row, &bias) in self.w[l].iter().zip(&self.b[l]) {
                 let s: i64 =
-                    row.iter().zip(&acts).map(|(&w, &a)| w * a).sum::<i64>() + bias;
-                next.push(s);
+                    row.iter().zip(cur.iter()).map(|(&w, &a)| w * a).sum::<i64>() + bias;
+                next.push(if last { s } else { s.max(0) });
             }
-            if l + 1 < self.n_layers() {
-                acts = next.iter().map(|&v| v.max(0)).collect();
-            } else {
-                return next;
-            }
+            std::mem::swap(cur, next);
         }
-        unreachable!()
     }
 
     pub fn predict_exact(&self, x: &[i64]) -> usize {
         crate::util::stats::argmax_i64(&self.forward_exact(x))
     }
 
+    /// Test-set accuracy of the exact integer model. Hot in the
+    /// coordinator (full train+test splits per threshold), so the layer
+    /// activations ping-pong through two reused buffers instead of
+    /// allocating per sample.
     pub fn accuracy_exact(&self, xs: &[Vec<i64>], ys: &[usize]) -> f64 {
         if xs.is_empty() {
             return 0.0;
         }
-        let ok = xs
-            .iter()
-            .zip(ys)
-            .filter(|(x, &y)| self.predict_exact(x) == y)
-            .count();
+        let mut cur: Vec<i64> = Vec::new();
+        let mut next: Vec<i64> = Vec::new();
+        let mut ok = 0usize;
+        for (x, &y) in xs.iter().zip(ys) {
+            self.forward_exact_into(x, &mut cur, &mut next);
+            if crate::util::stats::argmax_i64(&cur) == y {
+                ok += 1;
+            }
+        }
         ok as f64 / xs.len() as f64
     }
 
@@ -205,6 +221,24 @@ mod tests {
         // h = 21 -> out = [63, -58]
         assert_eq!(o, vec![63, -58]);
         assert_eq!(q.predict_exact(&[10, 0]), 0);
+    }
+
+    #[test]
+    fn accuracy_exact_matches_per_sample_predict() {
+        let mut rng = Rng::new(17);
+        let m = Mlp::new_random(5, 4, 3, &mut rng);
+        let q = quantize(&m);
+        let xs: Vec<Vec<i64>> = (0..200)
+            .map(|_| (0..5).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let ys: Vec<usize> = (0..200).map(|_| rng.below(3)).collect();
+        let want = xs
+            .iter()
+            .zip(&ys)
+            .filter(|(x, &y)| q.predict_exact(x) == y)
+            .count() as f64
+            / xs.len() as f64;
+        assert_eq!(q.accuracy_exact(&xs, &ys), want);
     }
 
     #[test]

@@ -8,6 +8,14 @@
 //!  * functional verifier — bit-exact against `axsum`'s integer model;
 //!  * switching-activity source — per-gate toggle counts feed the dynamic
 //!    power term in `estimate` (what PrimeTime does with Questasim VCDs).
+//!
+//! Hot-path architecture (see EXPERIMENTS.md §Perf): the DSE evaluates
+//! thousands of netlists against ONE stimulus, so the stimulus is
+//! bit-transposed once per sweep into a [`PackedStimulus`] and every
+//! [`simulate_packed`] call borrows it, writing into a caller-owned
+//! [`SimScratch`] so the per-design-point loop performs no heap
+//! allocation. [`simulate`] is the compatibility wrapper that packs and
+//! allocates per call.
 
 use std::collections::HashMap;
 
@@ -25,46 +33,213 @@ pub struct SimResult {
     pub patterns: usize,
 }
 
-/// Simulate `patterns` input vectors. `inputs` maps bus name -> per-pattern
-/// unsigned values (LSB-first packing into the bus nets). Missing buses
-/// default to all-zero. When `capture_toggles` is set, per-gate transition
-/// counts over the pattern *sequence* are accumulated (stimulus order is
-/// meaningful, as in a testbench).
-pub fn simulate(
-    nl: &Netlist,
-    inputs: &HashMap<String, Vec<u64>>,
-    patterns: usize,
-    capture_toggles: bool,
-) -> SimResult {
-    let n = nl.gates.len();
-    let mut toggles = if capture_toggles { vec![0u64; n] } else { Vec::new() };
-    let mut outputs: HashMap<String, Vec<u64>> = nl
-        .outputs
-        .iter()
-        .map(|b| (b.name.clone(), Vec::with_capacity(patterns)))
-        .collect();
+// ---------------------------------------------------------------------------
+// Packed stimulus: bit-transpose once, simulate many.
+// ---------------------------------------------------------------------------
 
-    let mut words = vec![0u64; n];
-    // previous chunk's final pattern value per net (bit 0 = value)
-    let mut prev_last = vec![0u64; n];
+/// One input bus of a [`PackedStimulus`]: `words[bit * chunks + chunk]`
+/// holds the 64-pattern word for bit lane `bit` of chunk `chunk`.
+#[derive(Clone, Debug)]
+struct PackedBus {
+    name: String,
+    width: usize,
+    words: Vec<u64>,
+}
+
+/// A stimulus bit-transposed into per-net 64-pattern words.
+///
+/// Built once per sweep (or per `simulate` call on the legacy path) and
+/// shared immutably by every simulation of netlists with the same input
+/// interface (bus names; widths may differ — extra netlist bits read 0).
+#[derive(Clone, Debug)]
+pub struct PackedStimulus {
+    patterns: usize,
+    chunks: usize,
+    buses: Vec<PackedBus>,
+}
+
+/// Bit-transpose one bus's value stream into `width` lane words of
+/// `chunks` chunks each (`words[bit * chunks + chunk]`).
+fn pack_bus(values: impl Iterator<Item = u64>, width: usize, chunks: usize) -> Vec<u64> {
+    let mut words = vec![0u64; width * chunks];
+    for (p, v) in values.enumerate() {
+        let (chunk, pos) = (p / 64, p % 64);
+        for (b, lane) in words.chunks_exact_mut(chunks).enumerate() {
+            if (v >> b) & 1 == 1 {
+                lane[chunk] |= 1u64 << pos;
+            }
+        }
+    }
+    words
+}
+
+impl PackedStimulus {
+    /// Pack integer feature vectors into buses named `x0..x{din-1}`, each
+    /// `width` bits wide — the input interface `synth::build_mlp`
+    /// generates. An empty stimulus packs as a single all-zero pattern
+    /// (matching the simulator's missing-input default).
+    pub fn from_features(xs: &[Vec<i64>], din: usize, width: usize) -> PackedStimulus {
+        let patterns = xs.len().max(1);
+        let chunks = patterns.div_ceil(64);
+        let buses = (0..din)
+            .map(|i| PackedBus {
+                name: format!("x{i}"),
+                width,
+                words: pack_bus(xs.iter().map(|x| x[i] as u64), width, chunks),
+            })
+            .collect();
+        PackedStimulus {
+            patterns,
+            chunks,
+            buses,
+        }
+    }
+
+    /// Pack a name→values stimulus map against `nl`'s input interface.
+    /// Missing buses pack as all-zero; missing patterns default to 0.
+    pub fn for_netlist(
+        nl: &Netlist,
+        inputs: &HashMap<String, Vec<u64>>,
+        patterns: usize,
+    ) -> PackedStimulus {
+        let chunks = patterns.div_ceil(64);
+        let buses = nl
+            .inputs
+            .iter()
+            .map(|bus| {
+                let width = bus.nets.len();
+                let vals = inputs
+                    .get(&bus.name)
+                    .map(|v| v.as_slice())
+                    .unwrap_or_default();
+                PackedBus {
+                    name: bus.name.clone(),
+                    width,
+                    words: pack_bus(vals.iter().take(patterns).copied(), width, chunks),
+                }
+            })
+            .collect();
+        PackedStimulus {
+            patterns,
+            chunks,
+            buses,
+        }
+    }
+
+    pub fn patterns(&self) -> usize {
+        self.patterns
+    }
+
+    fn bus_index(&self, name: &str) -> Option<usize> {
+        self.buses.iter().position(|b| b.name == name)
+    }
+}
+
+/// Caller-owned simulation buffers: one per worker thread; reused across
+/// design points so the sweep's inner loop does zero heap allocation
+/// (buffers only grow, never shrink).
+#[derive(Default)]
+pub struct SimScratch {
+    words: Vec<u64>,
+    prev_last: Vec<u64>,
+    /// Per-gate toggle counts of the last run (empty if capture was off).
+    pub toggles: Vec<u64>,
+    /// Per output bus of the last simulated netlist (same order as
+    /// `nl.outputs`): one value per pattern.
+    pub outputs: Vec<Vec<u64>>,
+    /// Pattern count of the last run.
+    pub patterns: usize,
+    lane_map: Vec<usize>,
+}
+
+impl SimScratch {
+    pub fn new() -> SimScratch {
+        SimScratch::default()
+    }
+
+    /// Values of the named output bus from the last run.
+    pub fn output<'a>(&'a self, nl: &Netlist, name: &str) -> Option<&'a [u64]> {
+        nl.outputs
+            .iter()
+            .position(|b| b.name == name)
+            .map(|i| self.outputs[i].as_slice())
+    }
+
+    /// Convert the last run into an owned [`SimResult`] (legacy shape).
+    pub fn to_result(&self, nl: &Netlist) -> SimResult {
+        SimResult {
+            outputs: nl
+                .outputs
+                .iter()
+                .zip(&self.outputs)
+                .map(|(b, v)| (b.name.clone(), v.clone()))
+                .collect(),
+            toggles: self.toggles.clone(),
+            patterns: self.patterns,
+        }
+    }
+}
+
+/// Simulate `nl` against a pre-packed stimulus, writing into `scratch`.
+///
+/// Bit-exact with [`simulate`]: same evaluation order, same fused toggle
+/// counting, same output packing. The only differences are where the
+/// input words come from (pre-transposed lanes instead of a per-bit
+/// repacking loop) and where the buffers live.
+pub fn simulate_packed(
+    nl: &Netlist,
+    stim: &PackedStimulus,
+    capture_toggles: bool,
+    scratch: &mut SimScratch,
+) {
+    let n = nl.gates.len();
+    let patterns = stim.patterns;
+    scratch.patterns = patterns;
+    scratch.words.clear();
+    scratch.words.resize(n, 0);
+    scratch.prev_last.clear();
+    scratch.prev_last.resize(n, 0);
+    scratch.toggles.clear();
+    if capture_toggles {
+        scratch.toggles.resize(n, 0);
+    }
+    scratch.outputs.truncate(nl.outputs.len());
+    while scratch.outputs.len() < nl.outputs.len() {
+        scratch.outputs.push(Vec::new());
+    }
+    for out in scratch.outputs.iter_mut() {
+        out.clear();
+    }
+    scratch.lane_map.clear();
+    for bus in &nl.inputs {
+        scratch
+            .lane_map
+            .push(stim.bus_index(&bus.name).unwrap_or(usize::MAX));
+    }
+
+    let words = &mut scratch.words;
+    let prev_last = &mut scratch.prev_last;
+    let toggles = &mut scratch.toggles;
     let chunks = patterns.div_ceil(64);
 
     for chunk in 0..chunks {
         let base = chunk * 64;
         let in_chunk = (patterns - base).min(64);
 
-        // load inputs
-        for bus in &nl.inputs {
-            let vals = inputs.get(&bus.name);
+        // load inputs: one word copy per (net, chunk)
+        for (bi, bus) in nl.inputs.iter().enumerate() {
+            let lane = scratch.lane_map[bi];
             for (biti, &net) in bus.nets.iter().enumerate() {
-                let mut w = 0u64;
-                for p in 0..in_chunk {
-                    let v = vals.and_then(|v| v.get(base + p)).copied().unwrap_or(0);
-                    if (v >> biti) & 1 == 1 {
-                        w |= 1u64 << p;
+                words[net as usize] = if lane != usize::MAX {
+                    let pb = &stim.buses[lane];
+                    if biti < pb.width && chunk < stim.chunks {
+                        pb.words[biti * stim.chunks + chunk]
+                    } else {
+                        0
                     }
-                }
-                words[net as usize] = w;
+                } else {
+                    0
+                };
             }
         }
 
@@ -109,8 +284,8 @@ pub fn simulate(
         }
 
         // read outputs
-        for bus in &nl.outputs {
-            let dst = outputs.get_mut(&bus.name).unwrap();
+        for (oi, bus) in nl.outputs.iter().enumerate() {
+            let dst = &mut scratch.outputs[oi];
             for p in 0..in_chunk {
                 let mut v = 0u64;
                 for (biti, &net) in bus.nets.iter().enumerate() {
@@ -122,11 +297,35 @@ pub fn simulate(
             }
         }
     }
+}
 
+/// Simulate `patterns` input vectors. `inputs` maps bus name -> per-pattern
+/// unsigned values (LSB-first packing into the bus nets). Missing buses
+/// default to all-zero. When `capture_toggles` is set, per-gate transition
+/// counts over the pattern *sequence* are accumulated (stimulus order is
+/// meaningful, as in a testbench).
+///
+/// Compatibility wrapper over [`simulate_packed`]: packs the stimulus and
+/// allocates fresh buffers per call. Sweep-shaped callers should pack once
+/// and reuse a [`SimScratch`] instead.
+pub fn simulate(
+    nl: &Netlist,
+    inputs: &HashMap<String, Vec<u64>>,
+    patterns: usize,
+    capture_toggles: bool,
+) -> SimResult {
+    let stim = PackedStimulus::for_netlist(nl, inputs, patterns);
+    let mut scratch = SimScratch::new();
+    simulate_packed(nl, &stim, capture_toggles, &mut scratch);
     SimResult {
-        outputs,
-        toggles,
-        patterns,
+        outputs: nl
+            .outputs
+            .iter()
+            .zip(scratch.outputs.iter_mut())
+            .map(|(b, v)| (b.name.clone(), std::mem::take(v)))
+            .collect(),
+        toggles: scratch.toggles,
+        patterns: scratch.patterns,
     }
 }
 
@@ -264,5 +463,80 @@ mod tests {
         nl.output_bus("y", vec![a[0], a[1]]);
         let r = simulate(&nl, &HashMap::new(), 3, false);
         assert_eq!(r.outputs["y"], vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn packed_scratch_reuse_across_netlists() {
+        // one scratch driven across two different-size netlists must
+        // produce the same results as fresh simulate() calls.
+        let mut rng = Rng::new(9);
+        let mut scratch = SimScratch::new();
+        for width in [3usize, 7] {
+            let mut nl = Netlist::new("t");
+            let a = nl.input_bus("a", width);
+            let b = nl.input_bus("b", width);
+            let bits: Vec<_> = (0..width).map(|i| nl.xor(a[i], b[i])).collect();
+            let y0 = bits[0];
+            nl.output_bus("y", bits);
+            nl.output_bus("lsb", vec![y0]);
+            let pats = 100;
+            let hi = 1usize << width;
+            let av: Vec<u64> = (0..pats).map(|_| rng.below(hi) as u64).collect();
+            let bv: Vec<u64> = (0..pats).map(|_| rng.below(hi) as u64).collect();
+            let mut inputs = HashMap::new();
+            inputs.insert("a".to_string(), av);
+            inputs.insert("b".to_string(), bv);
+            let stim = PackedStimulus::for_netlist(&nl, &inputs, pats);
+            simulate_packed(&nl, &stim, true, &mut scratch);
+            let want = simulate(&nl, &inputs, pats, true);
+            assert_eq!(scratch.output(&nl, "y").unwrap(), &want.outputs["y"][..]);
+            assert_eq!(
+                scratch.output(&nl, "lsb").unwrap(),
+                &want.outputs["lsb"][..]
+            );
+            assert_eq!(scratch.toggles, want.toggles);
+            assert_eq!(scratch.to_result(&nl).patterns, pats);
+        }
+    }
+
+    #[test]
+    fn from_features_matches_bus_map_packing() {
+        let mut rng = Rng::new(21);
+        let din = 5;
+        let xs: Vec<Vec<i64>> = (0..130)
+            .map(|_| (0..din).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        // netlist echoing every input bit
+        let mut nl = Netlist::new("echo");
+        let mut all = Vec::new();
+        for i in 0..din {
+            let b = nl.input_bus(format!("x{i}"), 4);
+            all.extend(b);
+        }
+        nl.output_bus("all", all);
+        let mut inputs: HashMap<String, Vec<u64>> = HashMap::new();
+        for i in 0..din {
+            inputs.insert(format!("x{i}"), xs.iter().map(|x| x[i] as u64).collect());
+        }
+        let via_map = PackedStimulus::for_netlist(&nl, &inputs, xs.len());
+        let via_features = PackedStimulus::from_features(&xs, din, 4);
+        let mut s1 = SimScratch::new();
+        let mut s2 = SimScratch::new();
+        simulate_packed(&nl, &via_map, true, &mut s1);
+        simulate_packed(&nl, &via_features, true, &mut s2);
+        assert_eq!(s1.outputs, s2.outputs);
+        assert_eq!(s1.toggles, s2.toggles);
+    }
+
+    #[test]
+    fn empty_feature_stimulus_is_one_zero_pattern() {
+        let stim = PackedStimulus::from_features(&[], 3, 4);
+        assert_eq!(stim.patterns(), 1);
+        let mut nl = Netlist::new("t");
+        let x0 = nl.input_bus("x0", 4);
+        nl.output_bus("y", x0);
+        let mut scratch = SimScratch::new();
+        simulate_packed(&nl, &stim, true, &mut scratch);
+        assert_eq!(scratch.output(&nl, "y").unwrap(), &[0u64][..]);
     }
 }

@@ -74,12 +74,49 @@ impl MlpCircuitSpec {
     }
 }
 
+/// Borrowed view of an MLP circuit spec.
+///
+/// The DSE evaluates thousands of design points that share one model's
+/// weight/bias matrices and differ only in the truncation plan; this view
+/// lets the hot loop synthesize per-point netlists without cloning the
+/// matrices into an owned [`MlpCircuitSpec`] first.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpSpecRef<'a> {
+    pub name: &'a str,
+    pub weights: &'a [Vec<Vec<i64>>],
+    pub biases: &'a [Vec<i64>],
+    pub shifts: &'a [Vec<Vec<u32>>],
+    pub in_bits: usize,
+    pub style: NeuronStyle,
+}
+
+impl MlpCircuitSpec {
+    /// Borrow this owned spec as an [`MlpSpecRef`].
+    pub fn as_ref_spec(&self) -> MlpSpecRef<'_> {
+        MlpSpecRef {
+            name: &self.name,
+            weights: &self.weights,
+            biases: &self.biases,
+            shifts: &self.shifts,
+            in_bits: self.in_bits,
+            style: self.style,
+        }
+    }
+}
+
 /// Build the full circuit: returns the swept netlist. Output bus `class`
 /// carries the argmax class index; for single-output-neuron models the
 /// class is the sign-based threshold (neuron > 0).
 pub fn build_mlp(spec: &MlpCircuitSpec) -> Netlist {
-    let mut nl = Netlist::new(spec.name.clone());
-    let mut acts: Vec<UBus> = (0..spec.n_inputs())
+    build_mlp_ref(&spec.as_ref_spec())
+}
+
+/// [`build_mlp`] over a borrowed spec (no matrix clones — see
+/// EXPERIMENTS.md §Perf).
+pub fn build_mlp_ref(spec: &MlpSpecRef<'_>) -> Netlist {
+    let n_inputs = spec.weights[0][0].len();
+    let mut nl = Netlist::new(spec.name.to_string());
+    let mut acts: Vec<UBus> = (0..n_inputs)
         .map(|i| UBus::from_nets(nl.input_bus(format!("x{i}"), spec.in_bits)))
         .collect();
 

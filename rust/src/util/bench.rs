@@ -36,6 +36,14 @@ impl BenchResult {
             self.name, self.iters, self.mean_ns, self.median_ns, self.min_ns, self.p95_ns
         )
     }
+
+    /// One JSON object per result (names must not contain `"` or `\`).
+    pub fn json_row(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"ns_per_iter\":{:.1},\"median_ns\":{:.1},\"min_ns\":{:.1},\"p95_ns\":{:.1}}}",
+            self.name, self.iters, self.mean_ns, self.median_ns, self.min_ns, self.p95_ns
+        )
+    }
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -109,9 +117,38 @@ pub fn write_csv(file: &str, results: &[BenchResult]) {
     }
 }
 
+/// Write results as a machine-readable JSON array to `path` (taken as
+/// given, unlike [`write_csv`]'s results/ prefix) — the per-PR perf
+/// trajectory files (`BENCH_*.json`) committed at the repository root.
+pub fn write_json(path: &str, results: &[BenchResult]) {
+    let rows: Vec<String> = results.iter().map(|r| format!("  {}", r.json_row())).collect();
+    let out = format!("[\n{}\n]\n", rows.join(",\n"));
+    if let Err(e) = std::fs::write(path, out) {
+        eprintln!("warn: could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_row_parses_as_json() {
+        let r = BenchResult {
+            name: "dse_point(seeds,k=2)".into(),
+            iters: 10,
+            mean_ns: 1234.5,
+            median_ns: 1200.0,
+            min_ns: 1100.0,
+            p95_ns: 1500.0,
+        };
+        let j = crate::util::json::Json::parse(&r.json_row()).expect("valid json");
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("dse_point(seeds,k=2)"));
+        assert_eq!(j.get("iters").and_then(|v| v.as_usize()), Some(10));
+        assert!(j.get("ns_per_iter").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
 
     #[test]
     fn bench_returns_sane_numbers() {

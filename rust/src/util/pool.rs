@@ -7,7 +7,6 @@
 //! load-balances uneven synthesis times better than static chunking).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Number of workers: respects AXMLP_THREADS, defaults to available cores
 /// (the paper used 10 threads — their EDA license limit; we have no such
@@ -32,31 +31,67 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    parallel_map_with(items, threads, || (), |_, item| f(item))
+}
+
+/// [`parallel_map`] with a per-worker state created once per worker and
+/// threaded through every call that worker makes — how the DSE gives each
+/// worker its own reusable simulation/evaluation scratch buffers.
+///
+/// Results are collected lock-free: each worker accumulates
+/// `(index, result)` pairs locally and the pairs are merged into order at
+/// join, instead of taking one `Mutex` per item (see EXPERIMENTS.md
+/// §Perf).
+pub fn parallel_map_with<T, R, S, I, F>(items: &[T], threads: usize, init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let threads = threads.max(1).min(n);
     if threads == 1 {
-        return items.iter().map(&f).collect();
+        let mut state = init();
+        return items.iter().map(|item| f(&mut state, item)).collect();
     }
     let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                *results[i].lock().unwrap() = Some(r);
-            });
-        }
+    let buckets: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut state = init();
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(&mut state, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
     });
-    results
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for bucket in buckets {
+        for (i, r) in bucket {
+            debug_assert!(slots[i].is_none(), "item {i} produced twice");
+            slots[i] = Some(r);
+        }
+    }
+    slots
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker missed an item"))
+        .map(|s| s.expect("worker missed an item"))
         .collect()
 }
 
@@ -104,6 +139,27 @@ mod tests {
     fn empty_input() {
         let items: Vec<u32> = vec![];
         assert!(parallel_map(&items, 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn map_with_reuses_worker_state() {
+        // per-worker scratch: count calls through each state; totals must
+        // cover every item exactly once and results stay ordered.
+        let items: Vec<u64> = (0..500).collect();
+        let out = parallel_map_with(
+            &items,
+            6,
+            Vec::<u64>::new,
+            |scratch, &x| {
+                scratch.push(x);
+                (x * 3, scratch.len())
+            },
+        );
+        assert_eq!(out.len(), 500);
+        for (i, (v, calls)) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 3);
+            assert!(*calls >= 1);
+        }
     }
 
     #[test]
