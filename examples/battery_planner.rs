@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
         "unknown dataset `{key}`"
     );
 
-    let ds = datasets::load(key, 2023);
+    let ds = datasets::load(key, 2023)?;
     let mut cfg = PipelineConfig::default();
     cfg.thresholds = vec![0.005, 0.01, 0.02, 0.05, 0.10];
     cfg.dse.max_g_levels = 6;

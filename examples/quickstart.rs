@@ -15,7 +15,7 @@ use axmlp::retrain::backend_rust::RustBackend;
 use axmlp::runtime::{backend_pjrt::PjrtBackend, Runtime};
 
 fn main() -> anyhow::Result<()> {
-    let ds = datasets::load("ma", 2023);
+    let ds = datasets::load("ma", 2023)?;
     println!(
         "dataset: {} ({} train / {} test, {} features, {} classes)",
         ds.info.name,

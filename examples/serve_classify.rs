@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(4096);
 
     let rt = Runtime::new(Runtime::default_dir())?;
-    let ds = datasets::load(&key, 2023);
+    let ds = datasets::load(&key, 2023)?;
     let cfg = PipelineConfig::default();
     let q = quantize(&train_mlp0(&ds, &cfg.train, 2023));
     let plan = ShiftPlan::exact(&q);

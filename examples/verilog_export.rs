@@ -15,7 +15,7 @@ use axmlp::synth::{build_mlp, MlpCircuitSpec, NeuronStyle};
 
 fn main() -> anyhow::Result<()> {
     let key = std::env::args().nth(1).unwrap_or_else(|| "se".to_string());
-    let ds = datasets::load(&key, 2023);
+    let ds = datasets::load(&key, 2023)?;
     let mut cfg = PipelineConfig::default();
     cfg.thresholds = vec![0.02];
     cfg.dse.max_g_levels = 4;

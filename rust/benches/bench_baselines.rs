@@ -13,7 +13,7 @@ use std::time::Duration;
 fn main() {
     let ctx = SharedContext::new();
     let pcfg = PipelineConfig::default();
-    let ds = datasets::load("v2", 2023);
+    let ds = datasets::load("v2", 2023).expect("dataset");
     let mlp0 = train_mlp0(&ds, &pcfg.train, 2023);
     let q0 = quantize(&mlp0);
     let xq_train = quantize_inputs(&ds.x_train);

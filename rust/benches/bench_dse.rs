@@ -20,7 +20,7 @@ use axmlp::util::bench::{run, write_csv, write_json};
 fn main() {
     let ctx = SharedContext::new();
     let pcfg = PipelineConfig::default();
-    let ds = datasets::load("se", 2023);
+    let ds = datasets::load("se", 2023).expect("dataset");
     let q = quantize(&train_mlp0(&ds, &pcfg.train, 2023));
     let xq_train = quantize_inputs(&ds.x_train);
     let xq_test = quantize_inputs(&ds.x_test);

@@ -18,7 +18,7 @@ fn main() {
     cfg.train.epochs = 60;
     let mut results = Vec::new();
     for key in ["v2", "se"] {
-        let ds = datasets::load(key, 2023);
+        let ds = datasets::load(key, 2023).expect("dataset");
         let r = bench(
             &format!("pipeline({key},T=1%)"),
             Duration::from_secs(3),

@@ -14,7 +14,7 @@ fn main() {
     let cfg = PipelineConfig::default();
     let mut results = Vec::new();
     for key in ["ma", "pd"] {
-        let ds = datasets::load(key, 2023);
+        let ds = datasets::load(key, 2023).expect("dataset");
         let q = quantize(&train_mlp0(&ds, &cfg.train, 2023));
         let stim: Vec<Vec<i64>> = quantize_inputs(&ds.x_test)
             .into_iter()

@@ -416,6 +416,41 @@ pub fn threshold_candidates(sig: &Significance, layer: usize, max_levels: usize)
     out
 }
 
+/// Per-neuron threshold levels for the genetic search: the sorted unique
+/// finite significance values of row `(layer, row)` (thresholding between
+/// values is equivalent to thresholding at them — Eq. 5 compares
+/// inclusively). Capped to `max_levels` by the same quantile subsampling
+/// as [`threshold_candidates`]; unlike the layer-level candidates, no
+/// disable sentinel is included (the genome encodes "no truncation" as
+/// level 0 instead).
+pub fn neuron_threshold_levels(
+    sig: &Significance,
+    layer: usize,
+    row: usize,
+    max_levels: usize,
+) -> Vec<f64> {
+    let mut vals: Vec<f64> = sig.g[layer][row]
+        .iter()
+        .copied()
+        .filter(|v| v.is_finite())
+        .collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // exact dedup only: near-but-not-equal values must stay distinct so
+    // thresholding at a table value reproduces Eq. 5's `G_i ≤ G` set
+    // exactly (the lossless grid-genome encoding depends on it)
+    vals.dedup();
+    if vals.len() <= max_levels || max_levels < 2 {
+        return vals;
+    }
+    let mut out = Vec::with_capacity(max_levels);
+    for i in 0..max_levels {
+        let idx = i * (vals.len() - 1) / (max_levels - 1);
+        out.push(vals[idx]);
+    }
+    out.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -595,6 +630,36 @@ mod tests {
         let plan = derive_shifts(&q, &sig, &[1e18, 1e18], 3);
         let acc = accuracy(&q, &plan, &xs, &ys);
         assert!(acc > 0.5, "k=3 full truncation acc {acc}");
+    }
+
+    #[test]
+    fn neuron_levels_sorted_unique_and_capped() {
+        let mut rng = Rng::new(23);
+        let q = rand_q(&mut rng, 8, 3, 3);
+        let xs: Vec<Vec<i64>> = (0..60)
+            .map(|_| (0..8).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let means = mean_activations(&q, &xs);
+        let sig = significance(&q, &means);
+        for l in 0..2 {
+            for j in 0..q.w[l].len() {
+                let lv = neuron_threshold_levels(&sig, l, j, 16);
+                for w in lv.windows(2) {
+                    assert!(w[1] > w[0]);
+                }
+                // every level is one of the row's significance values
+                for &v in &lv {
+                    assert!(sig.g[l][j].iter().any(|&g| (g - v).abs() < 1e-12));
+                }
+                let capped = neuron_threshold_levels(&sig, l, j, 3);
+                assert!(capped.len() <= 3);
+                if !lv.is_empty() {
+                    // quantile subsample keeps the extremes
+                    assert_eq!(capped.first(), lv.first());
+                    assert_eq!(capped.last(), lv.last());
+                }
+            }
+        }
     }
 
     #[test]

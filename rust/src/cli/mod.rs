@@ -89,6 +89,8 @@ COMMANDS (one per paper table/figure — see DESIGN.md §6):
   fig9          vs cross-layer AC [8] and stochastic [15] (Fig. 9)
   alpha         extension: score-weight α sweep (paper §3.2 future work)
   refine        extension: per-neuron G refinement vs per-layer DSE
+  search        NSGA-II genetic DSE over per-neuron genomes vs the grid
+                sweep (emits results/search_fronts.csv + BENCH_search.json)
   all           every experiment in sequence
   verilog       emit bespoke Verilog RTL for a dataset (--dataset, --threshold)
   smoke         PJRT runtime + artifact smoke test
@@ -102,6 +104,9 @@ FLAGS:
   --dataset KEY          (verilog) dataset key, default ma
   --threshold T          (verilog) accuracy-loss budget, default 0.01
   --out FILE             (verilog) output path, default results/<key>.v
+  --pop N                (search) NSGA-II population size (default 48; 24 quick)
+  --gens N               (search) NSGA-II generations (default 32; 12 quick)
+  --search-log           (search) per-generation front log on stderr
 ";
 
 #[cfg(test)]

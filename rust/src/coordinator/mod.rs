@@ -22,9 +22,23 @@ use crate::pdk::EgtLibrary;
 use crate::retrain::{
     printing_friendly_retrain, AreaModel, RetrainConfig, RetrainOutcome, TrainBackend,
 };
+use crate::search::{self, SearchConfig, SearchSpace};
 use crate::sim::{PackedStimulus, SimScratch};
 use crate::synth::NeuronStyle;
 use crate::util::rng::Rng;
+
+/// How the per-model design space is explored.
+#[derive(Clone, Debug, Default)]
+pub enum DseStrategy {
+    /// The paper's exhaustive per-layer `(k, G)` grid only.
+    #[default]
+    Grid,
+    /// Grid sweep plus NSGA-II genetic search over per-neuron
+    /// approximation genomes (`search::nsga2`); the grid's evaluated
+    /// points seed the initial population and the genetic archive front
+    /// joins the design pool the threshold selection draws from.
+    Genetic(SearchConfig),
+}
 
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
@@ -33,6 +47,7 @@ pub struct PipelineConfig {
     /// Accuracy-loss thresholds to evaluate (paper: 1%, 2%, 5%).
     pub thresholds: Vec<f64>,
     pub dse: DseConfig,
+    pub strategy: DseStrategy,
     pub retrain: RetrainConfig,
     pub train: TrainConfig,
 }
@@ -46,6 +61,7 @@ impl Default for PipelineConfig {
                 verify_circuit: false, // spot-verified on chosen designs
                 ..Default::default()
             },
+            strategy: DseStrategy::default(),
             retrain: RetrainConfig::default(),
             train: TrainConfig {
                 epochs: 250,
@@ -223,13 +239,21 @@ pub fn run_dataset(
         // AxSum DSE on the retrained model
         let means = mean_activations(qr, &xq_train);
         let sig = significance(qr, &means);
-        let designs = dse::sweep(qr, &sig, &data, &ctx.lib, &cfg.dse);
+        let mut designs = dse::sweep(qr, &sig, &data, &ctx.lib, &cfg.dse);
+        // genetic strategy: NSGA-II over per-neuron genomes, seeded from
+        // the grid's evaluated points; the archive front joins the pool
+        if let DseStrategy::Genetic(scfg) = &cfg.strategy {
+            let mut scfg = scfg.clone();
+            scfg.seed ^= (t * 1e4) as u64; // independent stream per threshold
+            let space = SearchSpace::lossless(qr, &sig, scfg.max_levels);
+            let seeds = search::seed_genomes_from_grid(&space, qr, &designs);
+            let sout =
+                search::nsga2(qr, &sig, &data, &ctx.lib, &cfg.dse, &scfg, &space, &seeds);
+            designs.extend(sout.front_evals());
+        }
         // spend whatever budget retraining left: floor = acc0_train - T
         let floor = q0_acc_train - t;
-        let chosen = designs
-            .iter()
-            .filter(|d| d.acc_train >= floor - 1e-12)
-            .min_by(|a, b| a.costs.area_mm2.partial_cmp(&b.costs.area_mm2).unwrap())
+        let chosen = dse::best_under_floor(&designs, floor)
             .cloned()
             .unwrap_or_else(|| {
                 // fall back to the exact point of the retrained model
@@ -310,7 +334,7 @@ mod tests {
 
     #[test]
     fn pipeline_end_to_end_smallest_dataset() {
-        let ds = datasets::load("ma", 7);
+        let ds = datasets::load("ma", 7).expect("dataset");
         let cfg = PipelineConfig {
             thresholds: vec![0.05],
             dse: DseConfig {

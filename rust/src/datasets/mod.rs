@@ -47,12 +47,34 @@ fn noise_for_target(target: f64, classes: usize, clean: f64) -> f64 {
     ((clean - target) / (clean - chance)).clamp(0.0, 0.95)
 }
 
+/// Error for a dataset key that is not in the registry; its `Display`
+/// lists the valid keys so CLI users see the menu, not a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownDatasetKey {
+    pub key: String,
+}
+
+impl std::fmt::Display for UnknownDatasetKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown dataset key `{}` (valid keys: {})",
+            self.key,
+            registry::valid_keys().join(", ")
+        )
+    }
+}
+
+impl std::error::Error for UnknownDatasetKey {}
+
 /// Generate a dataset by key (see [`registry::REGISTRY`]); deterministic
-/// in (key, seed).
-pub fn load(key: &str, seed: u64) -> Dataset {
-    let info = registry::by_key(key)
-        .unwrap_or_else(|| panic!("unknown dataset key `{key}`"));
-    generate(info, seed)
+/// in (key, seed). Unknown keys are a recoverable error carrying the
+/// list of valid keys, propagated through the CLI.
+pub fn load(key: &str, seed: u64) -> Result<Dataset, UnknownDatasetKey> {
+    let info = registry::by_key(key).ok_or_else(|| UnknownDatasetKey {
+        key: key.to_string(),
+    })?;
+    Ok(generate(info, seed))
 }
 
 /// All ten paper datasets.
@@ -204,17 +226,28 @@ mod tests {
 
     #[test]
     fn generation_deterministic() {
-        let a = load("v2", 7);
-        let b = load("v2", 7);
+        let a = load("v2", 7).unwrap();
+        let b = load("v2", 7).unwrap();
         assert_eq!(a.x_train, b.x_train);
         assert_eq!(a.y_test, b.y_test);
-        let c = load("v2", 8);
+        let c = load("v2", 8).unwrap();
         assert_ne!(a.x_train, c.x_train);
     }
 
     #[test]
+    fn unknown_key_error_lists_valid_keys() {
+        let e = load("nope", 1).unwrap_err();
+        assert_eq!(e.key, "nope");
+        let msg = e.to_string();
+        assert!(msg.contains("unknown dataset key `nope`"), "{msg}");
+        for info in REGISTRY {
+            assert!(msg.contains(info.key), "missing {} in {msg}", info.key);
+        }
+    }
+
+    #[test]
     fn features_normalized_and_split_70_30() {
-        let ds = load("bc", 1);
+        let ds = load("bc", 1).unwrap();
         for x in ds.x_train.iter().chain(&ds.x_test) {
             assert_eq!(x.len(), ds.n_features());
             for &v in x {

@@ -45,6 +45,12 @@ pub fn by_key(key: &str) -> Option<&'static DatasetInfo> {
     REGISTRY.iter().find(|d| d.key == key)
 }
 
+/// Every registered dataset key, in registry order (for error messages
+/// and CLI help).
+pub fn valid_keys() -> Vec<&'static str> {
+    REGISTRY.iter().map(|d| d.key).collect()
+}
+
 /// Datasets the paper's Fig. 9 compares against the stochastic MLPs [15]
 /// (the common subset examined in both works).
 pub static FIG9_KEYS: &[&str] = &["ww", "ca", "rw", "pd", "v3", "bs", "se", "bc", "v2", "ma"];

@@ -87,8 +87,10 @@ impl EngineScratch {
 }
 
 /// The power-estimation stimulus: the first `power_patterns` test vectors,
-/// borrowed (the engine never clones stimulus rows).
-fn power_stimulus<'a>(data: &QuantData<'a>, cfg: &DseConfig) -> &'a [Vec<i64>] {
+/// borrowed (the engine never clones stimulus rows). Shared with the
+/// genetic search so both DSE strategies cost designs on an identical
+/// stimulus.
+pub(crate) fn power_stimulus<'a>(data: &QuantData<'a>, cfg: &DseConfig) -> &'a [Vec<i64>] {
     &data.x_test[..data.x_test.len().min(cfg.power_patterns)]
 }
 
@@ -327,6 +329,20 @@ pub fn pareto_front(designs: &[DesignEval], by_train: bool) -> Vec<usize> {
     front
 }
 
+/// Smallest-area design whose *train* accuracy is at least `floor`
+/// (ties broken deterministically toward the earlier design).
+pub fn best_under_floor<'a>(designs: &'a [DesignEval], floor: f64) -> Option<&'a DesignEval> {
+    designs
+        .iter()
+        .filter(|d| d.acc_train >= floor - 1e-12)
+        .min_by(|a, b| {
+            a.costs
+                .area_mm2
+                .partial_cmp(&b.costs.area_mm2)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+}
+
 /// Pick the smallest-area design whose *train* accuracy loss vs `acc0` is
 /// within `threshold` (the paper selects per accuracy-loss budget; we
 /// select on the train split and report test numbers).
@@ -335,10 +351,7 @@ pub fn select_for_threshold<'a>(
     acc0_train: f64,
     threshold: f64,
 ) -> Option<&'a DesignEval> {
-    designs
-        .iter()
-        .filter(|d| d.acc_train >= acc0_train - threshold - 1e-12)
-        .min_by(|a, b| a.costs.area_mm2.partial_cmp(&b.costs.area_mm2).unwrap())
+    best_under_floor(designs, acc0_train - threshold)
 }
 
 #[cfg(test)]

@@ -10,7 +10,8 @@
 //! * **L3 (this crate)** — the co-design coordinator plus the full EDA
 //!   substrate (PDK model, netlist synthesis, logic simulation,
 //!   area/power/delay estimation, Verilog emission), the retraining
-//!   driver, the exhaustive DSE, and the baselines \[2\]\[8\]\[15\].
+//!   driver, the exhaustive DSE, the NSGA-II genetic DSE over per-neuron
+//!   approximation genomes (`search`), and the baselines \[2\]\[8\]\[15\].
 //! * **L2/L1 (python, build-time only)** — JAX model + Pallas AxSum kernel,
 //!   AOT-lowered to HLO-text artifacts executed from Rust via PJRT
 //!   (`runtime`).
@@ -34,6 +35,7 @@ pub mod runtime;
 pub mod netlist;
 pub mod pdk;
 pub mod report;
+pub mod search;
 pub mod sim;
 pub mod synth;
 pub mod verilog;

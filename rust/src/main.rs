@@ -36,7 +36,10 @@ fn exp_config(args: &Args) -> Result<ExpConfig, String> {
     if let Some(ds) = args.flag_list("datasets") {
         for k in &ds {
             if axmlp::datasets::registry::by_key(k).is_none() {
-                return Err(format!("unknown dataset key `{k}`"));
+                return Err(format!(
+                    "unknown dataset key `{k}` (valid keys: {})",
+                    axmlp::datasets::registry::valid_keys().join(", ")
+                ));
             }
         }
         cfg.datasets = ds;
@@ -47,6 +50,26 @@ fn exp_config(args: &Args) -> Result<ExpConfig, String> {
         Some(b) => return Err(format!("unknown backend `{b}` (pjrt|rust)")),
     };
     Ok(cfg)
+}
+
+/// NSGA-II hyperparameters for the `search` subcommand: sized down under
+/// `--quick`, overridable with `--pop` / `--gens`.
+fn search_config(args: &Args, cfg: &ExpConfig) -> Result<axmlp::search::SearchConfig, String> {
+    let (def_pop, def_gens) = if cfg.quick { (24, 12) } else { (48, 32) };
+    let scfg = axmlp::search::SearchConfig {
+        seed: cfg.seed,
+        pop_size: args.flag_usize("pop", def_pop)?,
+        generations: args.flag_usize("gens", def_gens)?,
+        log: args.flag_bool("search-log"),
+        ..Default::default()
+    };
+    if scfg.pop_size < 4 {
+        return Err("--pop must be at least 4".to_string());
+    }
+    if scfg.generations == 0 {
+        return Err("--gens must be at least 1".to_string());
+    }
+    Ok(scfg)
 }
 
 fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
@@ -76,6 +99,11 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "fig9" => experiments::exp_fig9(&exp_config(args).map_err(anyhow::Error::msg)?),
         "alpha" => experiments::exp_alpha(&exp_config(args).map_err(anyhow::Error::msg)?),
         "refine" => experiments::exp_refine(&exp_config(args).map_err(anyhow::Error::msg)?),
+        "search" => {
+            let cfg = exp_config(args).map_err(anyhow::Error::msg)?;
+            let scfg = search_config(args, &cfg).map_err(anyhow::Error::msg)?;
+            experiments::exp_search(&cfg, &scfg)
+        }
         "all" => {
             let cfg = exp_config(args).map_err(anyhow::Error::msg)?;
             experiments::exp_table2(&cfg)?;
@@ -101,10 +129,6 @@ fn cmd_verilog(args: &Args) -> anyhow::Result<()> {
     use axmlp::synth::{build_mlp, MlpCircuitSpec, NeuronStyle};
 
     let key = args.flag("dataset").unwrap_or("ma").to_string();
-    anyhow::ensure!(
-        axmlp::datasets::registry::by_key(&key).is_some(),
-        "unknown dataset `{key}`"
-    );
     let threshold: f64 = args
         .flag("threshold")
         .unwrap_or("0.01")
@@ -116,7 +140,7 @@ fn cmd_verilog(args: &Args) -> anyhow::Result<()> {
         .unwrap_or(format!("results/{key}_axmlp.v"));
 
     let seed = args.flag_u64("seed", 2023).map_err(anyhow::Error::msg)?;
-    let ds = axmlp::datasets::load(&key, seed);
+    let ds = axmlp::datasets::load(&key, seed)?;
     let mut cfg = PipelineConfig {
         thresholds: vec![threshold],
         ..Default::default()

@@ -106,6 +106,11 @@ pub fn gain(v: f64) -> String {
     format!("{v:.1}x")
 }
 
+/// Ratio rendered as a percentage, e.g. `0.1234` → `"12.3%"`.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +132,12 @@ mod tests {
         let c = t.to_csv();
         assert!(c.contains("\"x,y\""));
         assert!(c.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn pct_formats_ratio() {
+        assert_eq!(pct(0.1234), "12.3%");
+        assert_eq!(pct(1.0), "100.0%");
     }
 
     #[test]

@@ -1,0 +1,819 @@
+//! Genetic design-space exploration: NSGA-II over per-neuron
+//! approximation genomes.
+//!
+//! The grid DSE (`dse::sweep`) shares one truncation threshold `G` per
+//! layer and one MSB-keep count `k` for the whole network — a deliberate
+//! restriction the paper makes to keep exhaustive enumeration tractable.
+//! Eq. (5) itself permits a threshold per *neuron*, and that space (with
+//! per-neuron `k` and optional full pruning of insignificant products) is
+//! exponentially larger: `Π_neurons (levels+1)·3·2` points. This module
+//! searches it with a multi-objective evolutionary loop in the style of
+//! discrete hardware-aware genetic training for printed MLPs
+//! (arxiv 2402.02930) and cross-layer joint accuracy/area search
+//! (arxiv 2203.05915):
+//!
+//! * **Genome** — one [`Gene`] per neuron: a truncation *level* (index
+//!   into that neuron's sorted significance values; 0 = exact), an
+//!   MSB-keep count `k ∈ [1,3]`, and a *prune* bit that drops
+//!   below-threshold products entirely (shift = full product width)
+//!   instead of keeping the top-`k` bits.
+//! * **Decode** — a genome derives a [`ShiftPlan`] with exactly the
+//!   layer-by-layer bus-width bookkeeping of `axsum::derive_shifts`, so
+//!   grid points encode losslessly into genomes (the grid seeds the
+//!   initial population) and every genome maps to a synthesizable plan.
+//! * **NSGA-II** — fast non-dominated sorting + crowding distance over
+//!   the minimized objectives `(1 - train accuracy, area, power)`,
+//!   binary-tournament selection, uniform/segment crossover and per-gene
+//!   mutation (see `nsga`).
+//! * **Evaluation** — through the PR-1 packed sweep engine
+//!   (`dse::evaluate_design_packed` with per-worker
+//!   [`EngineScratch`](crate::dse::EngineScratch), the stimulus packed
+//!   once per run), parallel per generation via
+//!   `util::pool::parallel_map_with`. A fitness memo keyed by the decoded
+//!   plan generalizes the grid sweep's plan-level dedup: duplicate
+//!   genomes — and distinct genomes decoding to the same plan — are never
+//!   re-simulated.
+//!
+//! Runs are bit-deterministic in `SearchConfig::seed`: one PRNG drives
+//! all stochastic choices, evaluation is order-preserving, and every
+//! ranking sort breaks ties by index.
+
+pub mod nsga;
+
+use crate::axsum::{
+    hidden_bounds, neuron_threshold_levels, product_bits, ShiftPlan, Significance,
+};
+use crate::dse::{evaluate_design_packed, DesignEval, DseConfig, EngineScratch, QuantData};
+use crate::fixed::QuantMlp;
+use crate::pdk::EgtLibrary;
+use crate::sim::PackedStimulus;
+use crate::synth::arith::ubits;
+use crate::util::pool::parallel_map_with;
+use crate::util::rng::Rng;
+
+use rustc_hash::FxHashMap;
+
+/// Per-neuron approximation gene.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Gene {
+    /// Truncation level: 0 = exact neuron; `v > 0` truncates every
+    /// product whose significance (Eq. 4) is ≤ the neuron's `v`-th
+    /// smallest significance value.
+    pub level: u8,
+    /// MSB-keep count for truncated products, `k ∈ [1,3]` (paper Eq. 5).
+    pub k: u8,
+    /// Drop below-threshold products entirely (shift = full product
+    /// width) instead of keeping the top `k` bits — the hardware loses
+    /// the whole adder, not just its low columns.
+    pub prune: bool,
+}
+
+/// A full per-neuron assignment, genes in layer-major neuron order.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Genome {
+    pub genes: Vec<Gene>,
+}
+
+/// Static description of the searchable space for one model: the
+/// per-neuron threshold level tables and the gene → (layer, row) layout.
+pub struct SearchSpace {
+    /// `levels[layer][row]`: sorted unique finite significance values
+    /// (possibly quantile-capped) — the thresholds a gene's `level`
+    /// indexes into.
+    pub levels: Vec<Vec<Vec<f64>>>,
+    /// Gene index → (layer, row).
+    pub layout: Vec<(usize, usize)>,
+}
+
+impl SearchSpace {
+    /// Space whose level tables are guaranteed lossless for grid encoding
+    /// on this model: the cap is raised to the widest row fan-in, so
+    /// every per-neuron table keeps all of the row's significance values
+    /// and [`SearchSpace::encode_grid_point`] round-trips exactly. Use
+    /// this whenever the population is seeded from grid points.
+    pub fn lossless(q: &QuantMlp, sig: &Significance, max_levels: usize) -> SearchSpace {
+        let fan_in = q
+            .w
+            .iter()
+            .flat_map(|l| l.iter())
+            .map(|r| r.len())
+            .max()
+            .unwrap_or(0);
+        SearchSpace::new(q, sig, max_levels.max(fan_in))
+    }
+
+    pub fn new(q: &QuantMlp, sig: &Significance, max_levels: usize) -> SearchSpace {
+        let mut levels = Vec::with_capacity(q.n_layers());
+        let mut layout = Vec::new();
+        for (l, layer) in q.w.iter().enumerate() {
+            let mut per_row = Vec::with_capacity(layer.len());
+            for j in 0..layer.len() {
+                let lv = neuron_threshold_levels(sig, l, j, max_levels);
+                // Gene.level is a u8: levels beyond 255 would silently
+                // wrap in mutation and void the lossless-seeding
+                // guarantee, so refuse rather than mis-encode
+                assert!(
+                    lv.len() <= u8::MAX as usize,
+                    "neuron ({l},{j}) has {} threshold levels (max 255)",
+                    lv.len()
+                );
+                per_row.push(lv);
+                layout.push((l, j));
+            }
+            levels.push(per_row);
+        }
+        SearchSpace { levels, layout }
+    }
+
+    pub fn n_genes(&self) -> usize {
+        self.layout.len()
+    }
+
+    fn n_levels(&self, gene_idx: usize) -> usize {
+        let (l, j) = self.layout[gene_idx];
+        self.levels[l][j].len()
+    }
+
+    /// Decode a genome into a truncation plan, with the exact
+    /// layer-by-layer width propagation of `axsum::derive_shifts`: layer
+    /// `l+1` product widths see the bus narrowing layer `l`'s truncation
+    /// causes.
+    pub fn decode(&self, q: &QuantMlp, sig: &Significance, genome: &Genome) -> ShiftPlan {
+        assert_eq!(genome.genes.len(), self.n_genes(), "genome arity");
+        let mut plan = ShiftPlan::exact(q);
+        let mut in_hi: Vec<i64> = vec![(1i64 << q.in_bits) - 1; q.din()];
+        let mut gi = 0usize;
+        for l in 0..q.n_layers() {
+            let in_bits: Vec<usize> = in_hi.iter().map(|&h| ubits(h.max(0) as u64)).collect();
+            for (j, row) in q.w[l].iter().enumerate() {
+                let gene = genome.genes[gi];
+                gi += 1;
+                if gene.level == 0 {
+                    continue;
+                }
+                let lv = &self.levels[l][j];
+                let idx = (gene.level as usize).min(lv.len());
+                if idx == 0 {
+                    continue;
+                }
+                let thresh = lv[idx - 1];
+                let k = (gene.k as u32).clamp(1, 3);
+                for (i, &w) in row.iter().enumerate() {
+                    if w == 0 {
+                        continue;
+                    }
+                    if sig.g[l][j][i] <= thresh {
+                        let n_i = product_bits(in_bits[i], w);
+                        plan.shifts[l][j][i] =
+                            if gene.prune { n_i } else { n_i.saturating_sub(k) };
+                    }
+                }
+            }
+            if l + 1 < q.n_layers() {
+                in_hi = hidden_bounds(q, &plan, &in_hi, l);
+            }
+        }
+        plan
+    }
+
+    /// Encode a grid point (shared `k`, per-layer thresholds `g`) as a
+    /// genome: each neuron's level is the count of its own significance
+    /// values ≤ that layer's threshold. When the level tables are not
+    /// quantile-capped this decodes to exactly `derive_shifts(q, sig, g,
+    /// k)`'s plan, which is what lets the grid sweep seed the population
+    /// with its own evaluated designs.
+    pub fn encode_grid_point(&self, k: u32, g: &[f64]) -> Genome {
+        let genes = self
+            .layout
+            .iter()
+            .map(|&(l, j)| {
+                let thresh = g[l];
+                let level = if thresh < 0.0 {
+                    0
+                } else {
+                    self.levels[l][j]
+                        .iter()
+                        .take_while(|&&v| v <= thresh)
+                        .count()
+                        .min(u8::MAX as usize)
+                };
+                Gene {
+                    level: level as u8,
+                    k: k.clamp(1, 3) as u8,
+                    prune: false,
+                }
+            })
+            .collect();
+        Genome { genes }
+    }
+
+    /// Uniformly random genome (levels weighted toward the shallow end so
+    /// the initial population is not dominated by fully-truncated nets).
+    pub fn random_genome(&self, rng: &mut Rng) -> Genome {
+        let genes = (0..self.n_genes())
+            .map(|gi| {
+                let n = self.n_levels(gi);
+                // half the mass on "exact or light truncation"
+                let level = if rng.f64() < 0.5 {
+                    rng.below(n / 2 + 1)
+                } else {
+                    rng.below(n + 1)
+                };
+                Gene {
+                    level: level as u8,
+                    k: 1 + rng.below(3) as u8,
+                    prune: rng.f64() < 0.15,
+                }
+            })
+            .collect();
+        Genome { genes }
+    }
+}
+
+/// NSGA-II hyperparameters. Deterministic in `seed`.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub seed: u64,
+    /// Population size μ (λ = μ offspring per generation).
+    pub pop_size: usize,
+    pub generations: usize,
+    /// Probability an offspring is produced by crossover (else a mutated
+    /// clone of one tournament winner).
+    pub crossover_rate: f64,
+    /// Per-gene mutation probability.
+    pub mutation_rate: f64,
+    /// Tournament size for parent selection.
+    pub tournament: usize,
+    /// Per-neuron threshold-level table cap (quantile-subsampled above
+    /// this). Callers seeding from grid points should build the space
+    /// with [`SearchSpace::lossless`], which raises this cap to the
+    /// model's widest row fan-in so grid encoding stays exact.
+    pub max_levels: usize,
+    /// Print a one-line front summary per generation to stderr.
+    pub log: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            seed: 2023,
+            pop_size: 48,
+            generations: 32,
+            crossover_rate: 0.9,
+            mutation_rate: 0.15,
+            tournament: 2,
+            max_levels: 16,
+            log: false,
+        }
+    }
+}
+
+/// Per-generation Pareto-front log entry.
+#[derive(Clone, Debug)]
+pub struct GenStats {
+    pub gen: usize,
+    /// Non-dominated members of the current population.
+    pub front_size: usize,
+    /// 2-D hypervolume of the population front over
+    /// `(1 - acc_train, area_mm2)` w.r.t. `(1.0, hv_ref_area)`.
+    pub hypervolume: f64,
+    pub best_acc_train: f64,
+    pub min_area_mm2: f64,
+    /// Unique designs simulated so far (archive size).
+    pub evaluated: usize,
+    /// Genome evaluations requested so far (including memo hits).
+    pub requested: usize,
+}
+
+/// Search result: every unique evaluated design plus the final
+/// non-dominated front over the whole archive.
+pub struct SearchOutcome {
+    /// Every unique `(plan → evaluation)` the run simulated, in
+    /// first-evaluation order. `DesignEval::k` is 0 and `g` empty for
+    /// genome-derived points (no shared `(k, G)` label exists).
+    pub archive: Vec<DesignEval>,
+    /// Indices into `archive`: non-dominated under
+    /// `(1 - acc_train, area, power)`, sorted by descending accuracy.
+    pub front: Vec<usize>,
+    /// Generation-by-generation front log.
+    pub gens: Vec<GenStats>,
+    /// Total genome evaluations requested (archive hits included).
+    pub requested: usize,
+    /// Requests answered by the plan-keyed fitness memo.
+    pub memo_hits: usize,
+    /// Area reference used for the hypervolume log.
+    pub hv_ref_area: f64,
+}
+
+impl SearchOutcome {
+    /// The archive-wide front as owned evaluations (descending accuracy).
+    pub fn front_evals(&self) -> Vec<DesignEval> {
+        self.front.iter().map(|&i| self.archive[i].clone()).collect()
+    }
+}
+
+const SEARCH_SEED_SALT: u64 = 0x4E534741; // "NSGA"
+
+fn objectives(e: &DesignEval) -> nsga::Objectives {
+    [1.0 - e.acc_train, e.costs.area_mm2, e.costs.power_mw]
+}
+
+/// Evaluation layer: decode → memo lookup → batched parallel evaluation
+/// of the memo misses. Returns one archive index per genome, in order.
+struct Evaluator<'a> {
+    q: &'a QuantMlp,
+    sig: &'a Significance,
+    data: &'a QuantData<'a>,
+    lib: &'a EgtLibrary,
+    dse_cfg: &'a DseConfig,
+    packed: PackedStimulus,
+    stimulus: &'a [Vec<i64>],
+    space: &'a SearchSpace,
+    memo: FxHashMap<Vec<Vec<Vec<u32>>>, usize>,
+    archive: Vec<DesignEval>,
+    objs: Vec<nsga::Objectives>,
+    requested: usize,
+    memo_hits: usize,
+}
+
+impl<'a> Evaluator<'a> {
+    fn evaluate(&mut self, genomes: &[Genome]) -> Vec<usize> {
+        self.requested += genomes.len();
+        // resolve each genome to an archive slot; collect unique misses
+        // in first-seen order (deterministic regardless of thread count)
+        let mut slots: Vec<usize> = Vec::with_capacity(genomes.len());
+        let mut fresh: Vec<ShiftPlan> = Vec::new();
+        for g in genomes {
+            let plan = self.space.decode(self.q, self.sig, g);
+            // probe without cloning the nested key; clone only on a miss
+            let slot = match self.memo.get(&plan.shifts) {
+                Some(&s) => {
+                    self.memo_hits += 1;
+                    s
+                }
+                None => {
+                    let s = self.archive.len() + fresh.len();
+                    self.memo.insert(plan.shifts.clone(), s);
+                    fresh.push(plan);
+                    s
+                }
+            };
+            slots.push(slot);
+        }
+        if !fresh.is_empty() {
+            let evals: Vec<DesignEval> = parallel_map_with(
+                &fresh,
+                self.dse_cfg.threads,
+                EngineScratch::new,
+                |scratch, plan| {
+                    evaluate_design_packed(
+                        self.q,
+                        plan.clone(),
+                        0,
+                        Vec::new(),
+                        self.data,
+                        self.lib,
+                        self.dse_cfg,
+                        &self.packed,
+                        self.stimulus,
+                        scratch,
+                    )
+                },
+            );
+            for e in evals {
+                self.objs.push(objectives(&e));
+                self.archive.push(e);
+            }
+        }
+        slots
+    }
+}
+
+/// Snapshot the current population's front for the generation log.
+fn population_stats(
+    ev: &Evaluator,
+    slots: &[usize],
+    gen: usize,
+    hv_ref_area: f64,
+    log: bool,
+) -> GenStats {
+    let objs: Vec<nsga::Objectives> = slots.iter().map(|&s| ev.objs[s]).collect();
+    let fronts = nsga::fast_non_dominated_sort(&objs);
+    let front = fronts.first().map(|f| f.as_slice()).unwrap_or(&[]);
+    let pts: Vec<(f64, f64)> = front.iter().map(|&p| (objs[p][0], objs[p][1])).collect();
+    let stats = GenStats {
+        gen,
+        front_size: front.len(),
+        hypervolume: nsga::hypervolume2(&pts, (1.0, hv_ref_area)),
+        best_acc_train: slots
+            .iter()
+            .map(|&s| ev.archive[s].acc_train)
+            .fold(0.0, f64::max),
+        min_area_mm2: slots
+            .iter()
+            .map(|&s| ev.archive[s].costs.area_mm2)
+            .fold(f64::INFINITY, f64::min),
+        evaluated: ev.archive.len(),
+        requested: ev.requested,
+    };
+    if log {
+        eprintln!(
+            "[search] gen {:>3}: front {:>3}, hv {:.4}, best acc {:.4}, min area {:.2} mm², {} evals ({} requested)",
+            stats.gen,
+            stats.front_size,
+            stats.hypervolume,
+            stats.best_acc_train,
+            stats.min_area_mm2,
+            stats.evaluated,
+            stats.requested,
+        );
+    }
+    stats
+}
+
+fn crossover(rng: &mut Rng, a: &Genome, b: &Genome) -> Genome {
+    let n = a.genes.len();
+    let mut genes = a.genes.clone();
+    if rng.f64() < 0.5 {
+        // uniform: per-gene coin flip
+        for (g, &gb) in genes.iter_mut().zip(&b.genes) {
+            if rng.f64() < 0.5 {
+                *g = gb;
+            }
+        }
+    } else {
+        // segment: one contiguous neuron range from b
+        let i = rng.below(n);
+        let j = rng.below(n);
+        let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
+        genes[lo..=hi].copy_from_slice(&b.genes[lo..=hi]);
+    }
+    Genome { genes }
+}
+
+fn mutate(rng: &mut Rng, space: &SearchSpace, genome: &mut Genome, rate: f64) {
+    for (gi, gene) in genome.genes.iter_mut().enumerate() {
+        if rng.f64() >= rate {
+            continue;
+        }
+        let n = space.n_levels(gi);
+        let r = rng.f64();
+        if r < 0.5 {
+            // local level step ±1 (the neighbourhood move that turns the
+            // grid's per-layer staircase into per-neuron refinement)
+            let cur = gene.level as i64;
+            let step = if rng.f64() < 0.5 { -1 } else { 1 };
+            gene.level = (cur + step).clamp(0, n as i64) as u8;
+        } else if r < 0.75 {
+            gene.level = rng.below(n + 1) as u8;
+        } else if r < 0.9 {
+            gene.k = 1 + rng.below(3) as u8;
+        } else {
+            gene.prune = !gene.prune;
+        }
+    }
+}
+
+fn tournament(
+    rng: &mut Rng,
+    rank: &[usize],
+    crowd: &[f64],
+    size: usize,
+) -> usize {
+    let n = rank.len();
+    let mut best = rng.below(n);
+    for _ in 1..size.max(2) {
+        let c = rng.below(n);
+        let better = rank[c] < rank[best]
+            || (rank[c] == rank[best] && crowd[c] > crowd[best]);
+        if better {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Run the NSGA-II search over `space` (build it with
+/// [`SearchSpace::lossless`] when seeding from grid points, so the seed
+/// genomes decode to exactly the grid's plans). `seeds` join the initial
+/// population; the remainder is filled with random genomes. *Every* seed
+/// is evaluated — an oversupplied seed set is trimmed to `pop_size` by
+/// environmental selection only after evaluation — so the returned
+/// archive always covers the full seed set and a grid-seeded search is
+/// never worse than the grid at any accuracy floor.
+#[allow(clippy::too_many_arguments)]
+pub fn nsga2(
+    q: &QuantMlp,
+    sig: &Significance,
+    data: &QuantData,
+    lib: &EgtLibrary,
+    dse_cfg: &DseConfig,
+    cfg: &SearchConfig,
+    space: &SearchSpace,
+    seeds: &[Genome],
+) -> SearchOutcome {
+    assert!(cfg.pop_size >= 4, "population too small for NSGA-II");
+    assert!(cfg.generations >= 1);
+    let mut rng = Rng::new(cfg.seed ^ SEARCH_SEED_SALT);
+
+    // identical stimulus to the grid sweep: both strategies cost designs
+    // on the same packed vectors
+    let stimulus = crate::dse::power_stimulus(data, dse_cfg);
+    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let mut ev = Evaluator {
+        q,
+        sig,
+        data,
+        lib,
+        dse_cfg,
+        packed,
+        stimulus,
+        space,
+        memo: FxHashMap::default(),
+        archive: Vec::new(),
+        objs: Vec::new(),
+        requested: 0,
+        memo_hits: 0,
+    };
+
+    // initial population: the all-exact anchor, every seed (all of them —
+    // an oversupplied seed set is evaluated in full so the archive
+    // provably contains every grid point's evaluation, then trimmed to
+    // μ by environmental selection), and random fill
+    let mut init: Vec<Genome> = Vec::with_capacity(cfg.pop_size.max(seeds.len() + 1));
+    init.push(Genome {
+        genes: vec![Gene { level: 0, k: 2, prune: false }; space.n_genes()],
+    });
+    init.extend(seeds.iter().cloned());
+    while init.len() < cfg.pop_size {
+        init.push(space.random_genome(&mut rng));
+    }
+    let init_slots = ev.evaluate(&init);
+
+    // hypervolume reference: a hair above the largest area seen in the
+    // initial generation (kept fixed so the per-generation series is
+    // comparable)
+    let hv_ref_area = init_slots
+        .iter()
+        .map(|&s| ev.archive[s].costs.area_mm2)
+        .fold(0.0f64, f64::max)
+        * 1.05
+        + 1e-9;
+
+    let (mut pop, mut pop_slots) = if init.len() > cfg.pop_size {
+        let objs: Vec<nsga::Objectives> = init_slots.iter().map(|&s| ev.objs[s]).collect();
+        let keep = nsga::select_survivors(&objs, cfg.pop_size);
+        (
+            keep.iter().map(|&i| init[i].clone()).collect::<Vec<_>>(),
+            keep.iter().map(|&i| init_slots[i]).collect::<Vec<_>>(),
+        )
+    } else {
+        (init, init_slots)
+    };
+
+    let mut gens: Vec<GenStats> = Vec::with_capacity(cfg.generations + 1);
+    gens.push(population_stats(&ev, &pop_slots, 0, hv_ref_area, cfg.log));
+
+    for gen in 1..=cfg.generations {
+        // parent ranking for tournament selection
+        let pop_objs: Vec<nsga::Objectives> =
+            pop_slots.iter().map(|&s| ev.objs[s]).collect();
+        let (rank, crowd) = nsga::rank_and_crowding(&pop_objs);
+
+        // offspring (λ = μ)
+        let mut offspring: Vec<Genome> = Vec::with_capacity(cfg.pop_size);
+        while offspring.len() < cfg.pop_size {
+            let a = tournament(&mut rng, &rank, &crowd, cfg.tournament);
+            let mut child = if rng.f64() < cfg.crossover_rate {
+                let b = tournament(&mut rng, &rank, &crowd, cfg.tournament);
+                crossover(&mut rng, &pop[a], &pop[b])
+            } else {
+                pop[a].clone()
+            };
+            mutate(&mut rng, space, &mut child, cfg.mutation_rate);
+            offspring.push(child);
+        }
+        let off_slots = ev.evaluate(&offspring);
+
+        // (μ+λ) environmental selection
+        let mut union: Vec<Genome> = pop;
+        union.extend(offspring);
+        let mut union_slots = pop_slots;
+        union_slots.extend(off_slots);
+        let union_objs: Vec<nsga::Objectives> =
+            union_slots.iter().map(|&s| ev.objs[s]).collect();
+        let keep = nsga::select_survivors(&union_objs, cfg.pop_size);
+        pop = keep.iter().map(|&i| union[i].clone()).collect();
+        pop_slots = keep.iter().map(|&i| union_slots[i]).collect();
+
+        gens.push(population_stats(&ev, &pop_slots, gen, hv_ref_area, cfg.log));
+    }
+
+    // final front over the whole archive (not just the surviving
+    // population — early evaluations may still be non-dominated)
+    let mut front = nsga::fast_non_dominated_sort(&ev.objs)
+        .into_iter()
+        .next()
+        .unwrap_or_default();
+    front.sort_by(|&a, &b| {
+        ev.archive[b]
+            .acc_train
+            .partial_cmp(&ev.archive[a].acc_train)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(
+                ev.archive[a]
+                    .costs
+                    .area_mm2
+                    .partial_cmp(&ev.archive[b].costs.area_mm2)
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+            .then(a.cmp(&b))
+    });
+
+    SearchOutcome {
+        archive: ev.archive,
+        front,
+        gens,
+        requested: ev.requested,
+        memo_hits: ev.memo_hits,
+        hv_ref_area,
+    }
+}
+
+/// Encode every labeled grid-sweep evaluation as a seed genome (points
+/// carrying a real `(k, G)` label — genetic points with `k = 0` are
+/// skipped). Duplicate plans are fine: the fitness memo collapses them.
+pub fn seed_genomes_from_grid(
+    space: &SearchSpace,
+    q: &QuantMlp,
+    designs: &[DesignEval],
+) -> Vec<Genome> {
+    designs
+        .iter()
+        .filter(|d| (1..=3).contains(&d.k) && d.g.len() == q.n_layers())
+        .map(|d| space.encode_grid_point(d.k, &d.g))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axsum::{self, derive_shifts, mean_activations, significance};
+
+    fn toy() -> (QuantMlp, Vec<Vec<i64>>, Vec<usize>) {
+        let mut rng = Rng::new(31);
+        let q = QuantMlp {
+            w: vec![
+                (0..3)
+                    .map(|_| (0..5).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+                (0..3)
+                    .map(|_| (0..3).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+            ],
+            b: vec![
+                (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+                (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+            ],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        };
+        let xs: Vec<Vec<i64>> = (0..180)
+            .map(|_| (0..5).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let plan = ShiftPlan::exact(&q);
+        let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&q, &plan, x)).collect();
+        (q, xs, ys)
+    }
+
+    fn sig_of(q: &QuantMlp, xs: &[Vec<i64>]) -> Significance {
+        significance(q, &mean_activations(q, xs))
+    }
+
+    #[test]
+    fn space_layout_covers_all_neurons() {
+        let (q, xs, _) = toy();
+        let sig = sig_of(&q, &xs);
+        let space = SearchSpace::new(&q, &sig, 16);
+        assert_eq!(space.n_genes(), 6);
+        assert_eq!(space.layout[0], (0, 0));
+        assert_eq!(space.layout[3], (1, 0));
+    }
+
+    #[test]
+    fn exact_genome_decodes_to_exact_plan() {
+        let (q, xs, _) = toy();
+        let sig = sig_of(&q, &xs);
+        let space = SearchSpace::new(&q, &sig, 16);
+        let g = Genome {
+            genes: vec![Gene { level: 0, k: 2, prune: false }; space.n_genes()],
+        };
+        assert_eq!(space.decode(&q, &sig, &g), ShiftPlan::exact(&q));
+    }
+
+    #[test]
+    fn grid_encoding_roundtrips_to_derive_shifts() {
+        let (q, xs, _) = toy();
+        let sig = sig_of(&q, &xs);
+        // max_levels larger than any row width → uncapped tables → exact
+        let space = SearchSpace::new(&q, &sig, 32);
+        for k in 1..=3u32 {
+            for g0 in [-1.0, 0.05, 0.2, 1e18] {
+                for g1 in [-1.0, 0.1, 1e18] {
+                    let g = vec![g0, g1];
+                    let genome = space.encode_grid_point(k, &g);
+                    let decoded = space.decode(&q, &sig, &genome);
+                    let derived = derive_shifts(&q, &sig, &g, k);
+                    assert_eq!(decoded, derived, "k={k} g={g:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prune_gene_zeroes_products() {
+        let (q, xs, _) = toy();
+        let sig = sig_of(&q, &xs);
+        let space = SearchSpace::new(&q, &sig, 16);
+        let n = space.n_genes();
+        let mut genes = vec![Gene { level: 0, k: 1, prune: false }; n];
+        // fully truncate neuron 0 with prune: every nonzero first-layer
+        // product of row 0 gets shift = its full width
+        let max_level = space.levels[0][0].len() as u8;
+        genes[0] = Gene { level: max_level, k: 1, prune: true };
+        let plan = space.decode(&q, &sig, &Genome { genes });
+        let mut n_pruned = 0;
+        for (i, &w) in q.w[0][0].iter().enumerate() {
+            // infinite-significance products (w = 0 or a degenerate
+            // denominator) are never truncated; every other product of
+            // the fully-pruned neuron loses its entire width
+            if w != 0 && sig.g[0][0][i].is_finite() {
+                let n_i = product_bits(q.in_bits, w);
+                assert_eq!(plan.shifts[0][0][i], n_i);
+                n_pruned += 1;
+            }
+        }
+        assert!(n_pruned > 0, "toy neuron has no finite-significance products");
+        // a pruned-everything neuron contributes 0: the plan still
+        // evaluates without panicking
+        let ys0 = [0usize; 20];
+        let acc = axsum::accuracy(&q, &plan, &xs[..20], &ys0);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn nsga2_small_run_is_deterministic_and_memoized() {
+        let (q, xs, ys) = toy();
+        let sig = sig_of(&q, &xs);
+        let data = QuantData {
+            x_train: &xs[..120],
+            y_train: &ys[..120],
+            x_test: &xs[120..],
+            y_test: &ys[120..],
+        };
+        let dse_cfg = DseConfig {
+            max_g_levels: 2,
+            power_patterns: 16,
+            threads: 2,
+            verify_circuit: false,
+            max_eval: 0,
+        };
+        let cfg = SearchConfig {
+            seed: 7,
+            pop_size: 8,
+            generations: 3,
+            log: false,
+            ..Default::default()
+        };
+        let lib = EgtLibrary::egt_v1();
+        let space = SearchSpace::lossless(&q, &sig, cfg.max_levels);
+        let a = nsga2(&q, &sig, &data, &lib, &dse_cfg, &cfg, &space, &[]);
+        let b = nsga2(&q, &sig, &data, &lib, &dse_cfg, &cfg, &space, &[]);
+        assert_eq!(a.front, b.front);
+        assert_eq!(a.archive.len(), b.archive.len());
+        assert_eq!(a.requested, b.requested);
+        assert_eq!(a.memo_hits, b.memo_hits);
+        for (x, y) in a.archive.iter().zip(&b.archive) {
+            assert_eq!(x.plan, y.plan);
+            assert_eq!(x.acc_train, y.acc_train);
+            assert_eq!(x.costs, y.costs);
+        }
+        // bookkeeping: 4 evaluation waves of pop 8 = 32 requests; memo
+        // absorbed whatever decoded to an already-seen plan
+        assert_eq!(a.requested, 32);
+        assert_eq!(a.archive.len() + a.memo_hits, a.requested);
+        assert_eq!(a.gens.len(), cfg.generations + 1);
+        // the exact anchor is evaluated in generation 0 and stays in the
+        // archive, so the archive-wide front's best point has perfect
+        // accuracy on these exact-model labels
+        assert!(a.front_evals()[0].acc_train > 0.99);
+        // front is mutually non-dominating
+        for (ai, &i) in a.front.iter().enumerate() {
+            for &j in &a.front[ai + 1..] {
+                let oi = objectives(&a.archive[i]);
+                let oj = objectives(&a.archive[j]);
+                assert!(!nsga::dominates(&oi, &oj) && !nsga::dominates(&oj, &oi));
+            }
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! NSGA-II machinery: Pareto dominance, fast non-dominated sorting,
+//! crowding distance, environmental selection, and the 2-D hypervolume
+//! indicator used to track front quality generation by generation.
+//!
+//! All routines are deterministic: every sort breaks floating-point ties
+//! by index, so identical inputs produce identical rankings regardless of
+//! thread count (the evaluation layer above is order-preserving too).
+
+use std::cmp::Ordering;
+
+/// One point in objective space. All objectives are minimized; callers
+/// map "maximize accuracy" to `1 - accuracy`.
+pub type Objectives = [f64; 3];
+
+/// Strict Pareto dominance: `a` no worse in every objective and strictly
+/// better in at least one.
+pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Deb's fast non-dominated sort: partitions `0..objs.len()` into fronts
+/// F0 (non-dominated), F1 (dominated only by F0), ... Front membership is
+/// returned in ascending index order within each front.
+pub fn fast_non_dominated_sort(objs: &[Objectives]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i -> set i dominates
+    let mut n_dominating: Vec<usize> = vec![0; n]; // how many dominate i
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&objs[i], &objs[j]) {
+                dominated_by[i].push(j);
+                n_dominating[j] += 1;
+            } else if dominates(&objs[j], &objs[i]) {
+                dominated_by[j].push(i);
+                n_dominating[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| n_dominating[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next: Vec<usize> = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                n_dominating[j] -= 1;
+                if n_dominating[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        next.sort_unstable();
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// Crowding distance of each member of `front` (parallel to `front`):
+/// boundary solutions get +inf, interior ones the normalized objective-
+/// space perimeter of their neighbour cuboid.
+pub fn crowding_distance(objs: &[Objectives], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let n_obj = objs.first().map_or(0, |o| o.len());
+    let mut order: Vec<usize> = (0..m).collect(); // positions into `front`
+    for k in 0..n_obj {
+        order.sort_by(|&a, &b| {
+            objs[front[a]][k]
+                .partial_cmp(&objs[front[b]][k])
+                .unwrap_or(Ordering::Equal)
+                .then(front[a].cmp(&front[b]))
+        });
+        let lo = objs[front[order[0]]][k];
+        let hi = objs[front[order[m - 1]]][k];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = hi - lo;
+        if span <= 0.0 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            let gap = objs[front[order[w + 1]]][k] - objs[front[order[w - 1]]][k];
+            dist[order[w]] += gap / span;
+        }
+    }
+    dist
+}
+
+/// Environmental selection: pick `target` survivors from `objs` by
+/// (front rank asc, crowding distance desc, index asc). Returns selected
+/// indices into `objs`.
+pub fn select_survivors(objs: &[Objectives], target: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = Vec::with_capacity(target);
+    for front in fast_non_dominated_sort(objs) {
+        if out.len() + front.len() <= target {
+            out.extend_from_slice(&front);
+            if out.len() == target {
+                break;
+            }
+            continue;
+        }
+        let crowd = crowding_distance(objs, &front);
+        let mut by_crowd: Vec<usize> = (0..front.len()).collect();
+        by_crowd.sort_by(|&a, &b| {
+            crowd[b]
+                .partial_cmp(&crowd[a])
+                .unwrap_or(Ordering::Equal)
+                .then(front[a].cmp(&front[b]))
+        });
+        for &p in by_crowd.iter().take(target - out.len()) {
+            out.push(front[p]);
+        }
+        break;
+    }
+    out
+}
+
+/// Rank + crowding of every individual, for tournament selection.
+/// Returns `(rank, crowding)` parallel to `objs`.
+pub fn rank_and_crowding(objs: &[Objectives]) -> (Vec<usize>, Vec<f64>) {
+    let n = objs.len();
+    let mut rank = vec![0usize; n];
+    let mut crowd = vec![0.0f64; n];
+    for (r, front) in fast_non_dominated_sort(objs).iter().enumerate() {
+        let d = crowding_distance(objs, front);
+        for (pos, &i) in front.iter().enumerate() {
+            rank[i] = r;
+            crowd[i] = d[pos];
+        }
+    }
+    (rank, crowd)
+}
+
+/// Exact 2-D hypervolume (both coordinates minimized) dominated by `pts`
+/// with respect to `ref_pt`. Points at or beyond the reference contribute
+/// nothing. Used on `(1 - accuracy, area)` to track front quality.
+pub fn hypervolume2(pts: &[(f64, f64)], ref_pt: (f64, f64)) -> f64 {
+    let mut ps: Vec<(f64, f64)> = pts
+        .iter()
+        .copied()
+        .filter(|&(x, y)| x < ref_pt.0 && y < ref_pt.1)
+        .collect();
+    if ps.is_empty() {
+        return 0.0;
+    }
+    ps.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(Ordering::Equal)
+            .then(a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal))
+    });
+    // staircase sweep left to right: each point that improves the best y
+    // so far adds the rectangle between its y, the previous best y, and
+    // the reference x (dominated points improve nothing and add nothing)
+    let mut hv = 0.0;
+    let mut best_y = ref_pt.1;
+    for &(x, y) in &ps {
+        if y < best_y {
+            hv += (ref_pt.0 - x) * (best_y - y);
+            best_y = y;
+        }
+    }
+    hv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0, 1.0], &[2.0, 1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]));
+        assert!(!dominates(&[1.0, 2.0, 1.0], &[2.0, 1.0, 1.0]));
+    }
+
+    #[test]
+    fn sort_layers_fronts() {
+        let objs = vec![
+            [0.0, 0.0, 0.0], // dominates everything
+            [1.0, 1.0, 1.0],
+            [2.0, 0.5, 1.0], // incomparable with [1,1,1]
+            [3.0, 3.0, 3.0], // dominated by all
+        ];
+        let fronts = fast_non_dominated_sort(&objs);
+        assert_eq!(fronts[0], vec![0]);
+        assert_eq!(fronts[1], vec![1, 2]);
+        assert_eq!(fronts[2], vec![3]);
+        let total: usize = fronts.iter().map(|f| f.len()).sum();
+        assert_eq!(total, objs.len());
+    }
+
+    #[test]
+    fn crowding_boundaries_infinite() {
+        let objs = vec![
+            [0.0, 4.0, 0.0],
+            [1.0, 2.0, 0.0],
+            [2.0, 1.0, 0.0],
+            [4.0, 0.0, 0.0],
+        ];
+        let front: Vec<usize> = (0..4).collect();
+        let d = crowding_distance(&objs, &front);
+        assert!(d[0].is_infinite());
+        assert!(d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+        assert!(d[2].is_finite() && d[2] > 0.0);
+    }
+
+    #[test]
+    fn survivors_prefer_low_rank_then_spread() {
+        let objs = vec![
+            [0.0, 1.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [0.5, 0.5, 0.0],
+            [2.0, 2.0, 0.0], // rank 1
+        ];
+        let sel = select_survivors(&objs, 3);
+        assert_eq!(sel.len(), 3);
+        assert!(!sel.contains(&3), "dominated point selected over front");
+    }
+
+    #[test]
+    fn survivors_deterministic() {
+        let objs: Vec<Objectives> = (0..20)
+            .map(|i| {
+                let x = (i as f64 * 0.37).sin().abs();
+                [x, 1.0 - x, (i % 3) as f64]
+            })
+            .collect();
+        assert_eq!(select_survivors(&objs, 8), select_survivors(&objs, 8));
+    }
+
+    #[test]
+    fn hypervolume_rectangle() {
+        // single point (0.5, 0.5) vs ref (1,1): hv = 0.25
+        assert!((hypervolume2(&[(0.5, 0.5)], (1.0, 1.0)) - 0.25).abs() < 1e-12);
+        // dominated second point adds nothing
+        let hv = hypervolume2(&[(0.5, 0.5), (0.75, 0.75)], (1.0, 1.0));
+        assert!((hv - 0.25).abs() < 1e-12);
+        // staircase of two incomparable points
+        let hv2 = hypervolume2(&[(0.2, 0.6), (0.6, 0.2)], (1.0, 1.0));
+        assert!((hv2 - (0.8 * 0.4 + 0.4 * 0.4)).abs() < 1e-12);
+        // beyond-reference points contribute nothing
+        assert_eq!(hypervolume2(&[(2.0, 2.0)], (1.0, 1.0)), 0.0);
+    }
+
+    #[test]
+    fn hypervolume_monotone_in_points() {
+        let base = vec![(0.4, 0.4)];
+        let more = vec![(0.4, 0.4), (0.1, 0.9), (0.9, 0.1)];
+        let r = (1.0, 1.0);
+        assert!(hypervolume2(&more, r) >= hypervolume2(&base, r) - 1e-15);
+    }
+}

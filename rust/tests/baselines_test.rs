@@ -12,7 +12,7 @@ fn crosslayer_respects_budget_and_shrinks() {
     let ctx = SharedContext::new();
     let mut cfg = PipelineConfig::default();
     cfg.train.epochs = 60;
-    let ds = datasets::load("v2", 2023);
+    let ds = datasets::load("v2", 2023).expect("dataset");
     let q0 = quantize(&train_mlp0(&ds, &cfg.train, 2023));
     let xq_train = quantize_inputs(&ds.x_train);
     let xq_test = quantize_inputs(&ds.x_test);
@@ -51,7 +51,7 @@ fn sc_baseline_costs_exceed_ours_shape() {
 fn sc_accuracy_degrades_vs_float() {
     let mut cfg_p = PipelineConfig::default();
     cfg_p.train.epochs = 80;
-    let ds = datasets::load("se", 2023);
+    let ds = datasets::load("se", 2023).expect("dataset");
     let mlp0 = train_mlp0(&ds, &cfg_p.train, 2023);
     let float_acc = mlp0.accuracy(&ds.x_test, &ds.y_test);
     let sc_cfg = ScConfig {

@@ -32,7 +32,7 @@ fn quick_cfg(thresholds: Vec<f64>) -> PipelineConfig {
 
 #[test]
 fn thresholds_are_monotone_in_area() {
-    let ds = datasets::load("v2", 11);
+    let ds = datasets::load("v2", 11).expect("dataset");
     let cfg = quick_cfg(vec![0.01, 0.05, 0.10]);
     let ctx = SharedContext::new();
     let out = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();
@@ -50,7 +50,7 @@ fn thresholds_are_monotone_in_area() {
 #[test]
 fn approximate_always_beats_baseline() {
     for key in ["se", "bs"] {
-        let ds = datasets::load(key, 5);
+        let ds = datasets::load(key, 5).expect("dataset");
         let cfg = quick_cfg(vec![0.05]);
         let ctx = SharedContext::new();
         let out = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();
@@ -68,7 +68,7 @@ fn approximate_always_beats_baseline() {
 
 #[test]
 fn accuracy_floor_respected_on_train_split() {
-    let ds = datasets::load("ma", 3);
+    let ds = datasets::load("ma", 3).expect("dataset");
     let cfg = quick_cfg(vec![0.02]);
     let ctx = SharedContext::new();
     let out = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();
@@ -83,7 +83,7 @@ fn accuracy_floor_respected_on_train_split() {
 
 #[test]
 fn outcome_is_deterministic_in_seed() {
-    let ds = datasets::load("v2", 9);
+    let ds = datasets::load("v2", 9).expect("dataset");
     let cfg = quick_cfg(vec![0.02]);
     let ctx = SharedContext::new();
     let a = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();
@@ -95,7 +95,7 @@ fn outcome_is_deterministic_in_seed() {
 
 #[test]
 fn pareto_cloud_contains_exact_point() {
-    let ds = datasets::load("se", 7);
+    let ds = datasets::load("se", 7).expect("dataset");
     let cfg = quick_cfg(vec![0.05]);
     let ctx = SharedContext::new();
     let out = run_dataset(&ds, &cfg, &ctx, &mut RustBackend).unwrap();

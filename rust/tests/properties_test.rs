@@ -227,3 +227,113 @@ fn failure_injection_bad_artifacts_are_graceful() {
         .forward_logits("zz", &q, &plan, &[vec![0, 0]])
         .is_err());
 }
+
+// ---------------------------------------------------------------------------
+// DSE selection properties (pareto_front / select_for_threshold).
+// ---------------------------------------------------------------------------
+
+/// Random synthetic design evaluations: quantized accuracies and areas so
+/// ties (the delicate case for front extraction) actually occur.
+fn rand_designs(rng: &mut Rng, n: usize) -> Vec<axmlp::dse::DesignEval> {
+    (0..n)
+        .map(|i| axmlp::dse::DesignEval {
+            k: 1 + (i % 3) as u32,
+            g: Vec::new(),
+            plan: ShiftPlan { shifts: Vec::new() },
+            acc_train: rng.below(21) as f64 / 20.0,
+            acc_test: rng.f64(),
+            costs: axmlp::estimate::Costs {
+                area_mm2: (1 + rng.below(40)) as f64 * 0.5,
+                power_mw: rng.f64() * 10.0,
+                delay_ms: 1.0 + rng.f64(),
+                cells: 1 + rng.below(100),
+            },
+        })
+        .collect()
+}
+
+#[test]
+fn pareto_front_is_mutually_nondominated_and_complete() {
+    use axmlp::dse::pareto_front;
+    forall_seeded(0xFA57, 80, |rng| {
+        let n = 2 + rng.below(40);
+        let designs = rand_designs(rng, n);
+        let front = pareto_front(&designs, true);
+        check(!front.is_empty(), "front must not be empty")?;
+        // mutual non-domination: along the front (sorted by descending
+        // accuracy) the area must strictly improve, so no member weakly
+        // dominates another
+        for w in front.windows(2) {
+            let (a, b) = (&designs[w[0]], &designs[w[1]]);
+            check(
+                b.acc_train < a.acc_train + 1e-12,
+                "front accuracy must be non-increasing",
+            )?;
+            check(
+                b.costs.area_mm2 < a.costs.area_mm2,
+                "front area must strictly decrease",
+            )?;
+            check(
+                b.acc_train < a.acc_train,
+                format!(
+                    "equal-accuracy pair on front: {} / {}",
+                    a.acc_train, b.acc_train
+                ),
+            )?;
+        }
+        // completeness: every design is weakly dominated by a front member
+        for d in &designs {
+            check(
+                front.iter().any(|&f| {
+                    designs[f].acc_train >= d.acc_train - 1e-12
+                        && designs[f].costs.area_mm2 <= d.costs.area_mm2 + 1e-12
+                }),
+                "non-front design not covered by the front",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn select_for_threshold_monotone_in_budget() {
+    use axmlp::dse::select_for_threshold;
+    forall_seeded(0x5E1E, 80, |rng| {
+        let n = 2 + rng.below(40);
+        let designs = rand_designs(rng, n);
+        let acc0 = designs
+            .iter()
+            .map(|d| d.acc_train)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let mut prev_area: Option<f64> = None;
+        // tightest to loosest: the selected area can only shrink as the
+        // accuracy budget loosens, and never violates its own floor
+        for t in [0.0, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0] {
+            match select_for_threshold(&designs, acc0, t) {
+                Some(d) => {
+                    check(
+                        d.acc_train >= acc0 - t - 1e-9,
+                        format!("selection violates floor at t={t}"),
+                    )?;
+                    if let Some(pa) = prev_area {
+                        check(
+                            d.costs.area_mm2 <= pa + 1e-12,
+                            format!("area grew as budget loosened at t={t}"),
+                        )?;
+                    }
+                    prev_area = Some(d.costs.area_mm2);
+                }
+                None => {
+                    check(
+                        prev_area.is_none(),
+                        "selection disappeared as budget loosened",
+                    )?;
+                }
+            }
+        }
+        // t=0 always selects (the best-accuracy design qualifies), so by
+        // monotonicity every looser budget selected too
+        check(prev_area.is_some(), "t=1.0 must select something")?;
+        Ok(())
+    });
+}

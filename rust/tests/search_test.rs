@@ -1,0 +1,209 @@
+//! Integration tests for the NSGA-II genetic DSE (`search`): grid-seeded
+//! runs must be provably no worse than the grid sweep at any accuracy
+//! floor, bit-deterministic in the seed, and pluggable into the
+//! coordinator as a drop-in strategy.
+
+use axmlp::axsum::{mean_activations, significance};
+use axmlp::coordinator::{run_dataset, train_mlp0, DseStrategy, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::dse::{self, DseConfig, QuantData};
+use axmlp::fixed::{quantize, quantize_inputs};
+use axmlp::mlp::train::TrainConfig;
+use axmlp::pdk::EgtLibrary;
+use axmlp::retrain::backend_rust::RustBackend;
+use axmlp::retrain::RetrainConfig;
+use axmlp::search::{nsga2, seed_genomes_from_grid, SearchConfig, SearchSpace};
+
+/// Small quantized model + integer data splits for the search tests.
+fn setup(
+    key: &str,
+    seed: u64,
+) -> (
+    axmlp::fixed::QuantMlp,
+    Vec<Vec<i64>>,
+    Vec<usize>,
+    Vec<Vec<i64>>,
+    Vec<usize>,
+) {
+    let ds = datasets::load(key, seed).expect("dataset");
+    let tcfg = TrainConfig {
+        epochs: 40,
+        ..Default::default()
+    };
+    let q0 = quantize(&train_mlp0(&ds, &tcfg, seed));
+    (
+        q0,
+        quantize_inputs(&ds.x_train),
+        ds.y_train.clone(),
+        quantize_inputs(&ds.x_test),
+        ds.y_test.clone(),
+    )
+}
+
+fn tiny_dse() -> DseConfig {
+    DseConfig {
+        max_g_levels: 3,
+        power_patterns: 32,
+        threads: 4,
+        verify_circuit: false,
+        max_eval: 200,
+    }
+}
+
+#[test]
+fn grid_seeded_search_never_worse_than_grid() {
+    let (q0, xt, yt, xe, ye) = setup("ma", 11);
+    let data = QuantData {
+        x_train: &xt,
+        y_train: &yt,
+        x_test: &xe,
+        y_test: &ye,
+    };
+    let cfg = tiny_dse();
+    let lib = EgtLibrary::egt_v1();
+    let means = mean_activations(&q0, &xt);
+    let sig = significance(&q0, &means);
+    let grid = dse::sweep(&q0, &sig, &data, &lib, &cfg);
+
+    let scfg = SearchConfig {
+        seed: 3,
+        pop_size: 12,
+        generations: 4,
+        ..Default::default()
+    };
+    // `lossless` raises the level cap to the fan-in → exact grid encoding
+    let space = SearchSpace::lossless(&q0, &sig, scfg.max_levels);
+    let seeds = seed_genomes_from_grid(&space, &q0, &grid);
+    assert_eq!(seeds.len(), grid.len(), "every grid point seeds the GA");
+    let out = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg, &space, &seeds);
+
+    // the archive covers every seed evaluation, so at every accuracy
+    // floor the genetic pick is at least as small as the grid pick
+    let acc_max = grid.iter().map(|d| d.acc_train).fold(0.0f64, f64::max);
+    for loss in [0.0, 0.01, 0.02, 0.05, 0.10] {
+        let floor = acc_max - loss;
+        let gb = dse::best_under_floor(&grid, floor).expect("grid pick");
+        let ab = dse::best_under_floor(&out.archive, floor).expect("ga pick");
+        assert!(
+            ab.costs.area_mm2 <= gb.costs.area_mm2 + 1e-12,
+            "floor {floor}: ga {} > grid {}",
+            ab.costs.area_mm2,
+            gb.costs.area_mm2
+        );
+        assert!(ab.acc_train >= floor - 1e-12);
+    }
+    // per-generation log is complete and the front never shrinks to zero
+    assert_eq!(out.gens.len(), scfg.generations + 1);
+    for g in &out.gens {
+        assert!(g.front_size > 0);
+        assert!(g.hypervolume.is_finite() && g.hypervolume >= 0.0);
+        assert!(g.min_area_mm2.is_finite());
+    }
+    // the request/memo bookkeeping adds up
+    assert_eq!(out.archive.len() + out.memo_hits, out.requested);
+}
+
+#[test]
+fn nsga2_same_seed_same_front_grid_seeded() {
+    let (q0, xt, yt, xe, ye) = setup("v2", 5);
+    let data = QuantData {
+        x_train: &xt,
+        y_train: &yt,
+        x_test: &xe,
+        y_test: &ye,
+    };
+    let cfg = tiny_dse();
+    let lib = EgtLibrary::egt_v1();
+    let means = mean_activations(&q0, &xt);
+    let sig = significance(&q0, &means);
+    let grid = dse::sweep(&q0, &sig, &data, &lib, &cfg);
+    let scfg = SearchConfig {
+        seed: 42,
+        pop_size: 10,
+        generations: 3,
+        ..Default::default()
+    };
+    let space = SearchSpace::lossless(&q0, &sig, scfg.max_levels);
+    let seeds = seed_genomes_from_grid(&space, &q0, &grid);
+
+    let a = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg, &space, &seeds);
+    let b = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg, &space, &seeds);
+    assert_eq!(a.front, b.front);
+    assert_eq!(a.requested, b.requested);
+    assert_eq!(a.memo_hits, b.memo_hits);
+    let fa = a.front_evals();
+    let fb = b.front_evals();
+    assert_eq!(fa.len(), fb.len());
+    for (x, y) in fa.iter().zip(&fb) {
+        assert_eq!(x.plan, y.plan);
+        assert_eq!(x.acc_train, y.acc_train);
+        assert_eq!(x.acc_test, y.acc_test);
+        assert_eq!(x.costs, y.costs);
+    }
+    // a different seed explores a different trajectory (same archive
+    // prefix from the seeds, but different random fill / offspring)
+    let scfg2 = SearchConfig { seed: 43, ..scfg };
+    let c = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg2, &space, &seeds);
+    assert!(
+        c.requested == a.requested,
+        "request budget is seed-independent"
+    );
+}
+
+#[test]
+fn pipeline_genetic_strategy_never_worse_than_grid() {
+    let ds = datasets::load("ma", 7).expect("dataset");
+    let base = PipelineConfig {
+        thresholds: vec![0.05],
+        dse: DseConfig {
+            max_g_levels: 3,
+            power_patterns: 48,
+            threads: 4,
+            verify_circuit: false,
+            max_eval: 0,
+        },
+        retrain: RetrainConfig {
+            epochs_per_level: 3,
+            ..Default::default()
+        },
+        train: TrainConfig {
+            epochs: 40,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let genetic = PipelineConfig {
+        strategy: DseStrategy::Genetic(SearchConfig {
+            seed: 2023,
+            pop_size: 10,
+            generations: 2,
+            ..Default::default()
+        }),
+        ..base.clone()
+    };
+    let ctx = SharedContext::new();
+    let mut be = RustBackend;
+    let grid_out = run_dataset(&ds, &base, &ctx, &mut be).unwrap();
+    let mut be2 = RustBackend;
+    let ga_out = run_dataset(&ds, &genetic, &ctx, &mut be2).unwrap();
+
+    // same seeds → same retrained model → the genetic pool is a superset
+    // of the grid pool, so the chosen design can only get smaller
+    let g = &grid_out.thresholds[0];
+    let a = &ga_out.thresholds[0];
+    assert_eq!(g.retrain_acc_train, a.retrain_acc_train, "retrain differs");
+    assert!(
+        a.design.costs.area_mm2 <= g.design.costs.area_mm2 + 1e-12,
+        "genetic {} worse than grid {}",
+        a.design.costs.area_mm2,
+        g.design.costs.area_mm2
+    );
+    assert!(a.area_gain >= g.area_gain - 1e-9);
+    // the budget is still respected on the train split
+    assert!(
+        a.design.acc_train >= ga_out.q0_acc_train - 0.05 - 1e-9,
+        "{} vs {}",
+        a.design.acc_train,
+        ga_out.q0_acc_train
+    );
+}
