@@ -91,6 +91,9 @@ COMMANDS (one per paper table/figure — see DESIGN.md §6):
   refine        extension: per-neuron G refinement vs per-layer DSE
   search        NSGA-II genetic DSE over per-neuron genomes vs the grid
                 sweep (emits results/search_fronts.csv + BENCH_search.json)
+  conform       differential conformance harness: fuzzed netlist<->software
+                cross-validation (all forwards, logit-exact) + golden
+                regression diff under rust/tests/golden/
   all           every experiment in sequence
   verilog       emit bespoke Verilog RTL for a dataset (--dataset, --threshold)
   smoke         PJRT runtime + artifact smoke test
@@ -107,6 +110,8 @@ FLAGS:
   --pop N                (search) NSGA-II population size (default 48; 24 quick)
   --gens N               (search) NSGA-II generations (default 32; 12 quick)
   --search-log           (search) per-generation front log on stderr
+  --cases N              (conform) fuzzed differential cases (default 256)
+  --bless                (conform) rewrite the golden snapshots
 ";
 
 #[cfg(test)]

@@ -1,0 +1,371 @@
+//! Randomized-but-valid instance generators for the conformance harness:
+//! `QuantMlp` topologies, truncation plans of every flavor the framework
+//! can produce (exact, arbitrary shifts, grid-derived, genetic-genome
+//! decoded), stimulus packs with adversarial corners, and raw gate-level
+//! netlists for the `netlist::sweep` semantics property.
+//!
+//! Everything is built from the composable combinators in
+//! [`crate::util::prop`] and is deterministic in the caller's [`Rng`]; a
+//! failing conformance case replays from its
+//! [`FailingCase`](crate::conformance::FailingCase) record (seed +
+//! pattern count + plan family).
+
+use crate::axsum::{
+    derive_shifts, mean_activations, significance, threshold_candidates, ShiftPlan, Significance,
+};
+use crate::fixed::QuantMlp;
+use crate::netlist::{NetId, Netlist};
+use crate::search::SearchSpace;
+use crate::util::prop::{flag, i64_in, konst, matrix_of, one_of, usize_in, vec_of};
+use crate::util::rng::Rng;
+
+use std::collections::HashMap;
+
+/// Topology/coefficient ranges for [`random_quant_mlp`]. Defaults stay in
+/// the paper's domain (4-bit activations, ≤8-bit coefficients) but small
+/// enough that a fuzz case synthesizes + simulates in well under a
+/// millisecond.
+#[derive(Clone, Debug)]
+pub struct TopologyRange {
+    /// Weight-layer count range (1 = single-layer perceptron, 2 = the
+    /// paper's MLPs, 3 = deeper than anything the seed tests exercise).
+    pub layers: (usize, usize),
+    /// Input feature count range.
+    pub din: (usize, usize),
+    /// Hidden/output layer width range.
+    pub dim: (usize, usize),
+    /// Input activation precision range, in bits.
+    pub in_bits: (usize, usize),
+    /// Coefficient magnitude cap (paper: ≤ 127).
+    pub w_abs_max: i64,
+    /// Bias magnitude cap.
+    pub b_abs_max: i64,
+    /// Probability a coefficient is exactly zero (bespoke no-hardware
+    /// products — a corner the hand-written tests barely touch).
+    pub p_zero_w: f64,
+}
+
+impl Default for TopologyRange {
+    fn default() -> Self {
+        TopologyRange {
+            layers: (1, 3),
+            din: (1, 8),
+            dim: (1, 6),
+            in_bits: (2, 5),
+            w_abs_max: 127,
+            b_abs_max: 90,
+            p_zero_w: 0.12,
+        }
+    }
+}
+
+/// Random integer MLP within `r`'s ranges: uniform weight rows (every
+/// neuron of a layer sees the same fan-in), sparse zeros, biases in the
+/// accumulation domain.
+pub fn random_quant_mlp(rng: &mut Rng, r: &TopologyRange) -> QuantMlp {
+    let n_layers = usize_in(r.layers.0, r.layers.1)(rng);
+    let din = usize_in(r.din.0, r.din.1)(rng);
+    let weight = {
+        let mag = i64_in(-r.w_abs_max, r.w_abs_max);
+        let zero = flag(r.p_zero_w);
+        move |rng: &mut Rng| if zero(rng) { 0 } else { mag(rng) }
+    };
+    let mut w: Vec<Vec<Vec<i64>>> = Vec::with_capacity(n_layers);
+    let mut b: Vec<Vec<i64>> = Vec::with_capacity(n_layers);
+    let mut fan_in = din;
+    for _ in 0..n_layers {
+        let width = usize_in(r.dim.0, r.dim.1)(rng);
+        w.push(matrix_of(konst(width), konst(fan_in), &weight)(rng));
+        b.push(vec_of(konst(width), i64_in(-r.b_abs_max, r.b_abs_max))(rng));
+        fan_in = width;
+    }
+    QuantMlp {
+        w,
+        b,
+        in_bits: usize_in(r.in_bits.0, r.in_bits.1)(rng),
+        w_scales: vec![1.0; n_layers],
+    }
+}
+
+/// Deterministic adversarial stimulus corners for a `din`-feature,
+/// `in_bits`-bit input interface: all-zero, all-saturated, per-feature
+/// one-hot saturation (sign/carry boundaries in the split-sign trees),
+/// and a max/zero alternation (worst-case toggle pattern).
+pub fn adversarial_stimulus(din: usize, in_bits: usize) -> Vec<Vec<i64>> {
+    let a_max = (1i64 << in_bits) - 1;
+    let mut xs = Vec::new();
+    xs.push(vec![0i64; din]);
+    xs.push(vec![a_max; din]);
+    for i in 0..din.min(8) {
+        let mut x = vec![0i64; din];
+        x[i] = a_max;
+        xs.push(x);
+        let mut y = vec![a_max; din];
+        y[i] = 0;
+        xs.push(y);
+    }
+    xs.push(
+        (0..din)
+            .map(|i| if i % 2 == 0 { a_max } else { 0 })
+            .collect(),
+    );
+    xs.push(vec![1i64.min(a_max); din]);
+    xs
+}
+
+/// `n` uniform random feature vectors in `[0, 2^in_bits)`.
+pub fn random_stimulus(rng: &mut Rng, din: usize, in_bits: usize, n: usize) -> Vec<Vec<i64>> {
+    let a_max = (1i64 << in_bits) - 1;
+    matrix_of(konst(n), konst(din), i64_in(0, a_max))(rng)
+}
+
+/// Adversarial corners first, random fill up to exactly `total` patterns
+/// (callers pick `total` on 64-pattern chunk edges: 63/64/65/128/129).
+pub fn mixed_stimulus(rng: &mut Rng, q: &QuantMlp, total: usize) -> Vec<Vec<i64>> {
+    let mut xs = adversarial_stimulus(q.din(), q.in_bits);
+    xs.truncate(total);
+    let fill = total - xs.len();
+    xs.extend(random_stimulus(rng, q.din(), q.in_bits, fill));
+    xs
+}
+
+/// Which family a fuzzed plan came from (reported per conformance run so
+/// coverage of all four decoders is visible).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanKind {
+    /// All-exact plan.
+    Exact,
+    /// Arbitrary per-product shifts, including past-full-width ones.
+    RandomShifts,
+    /// `axsum::derive_shifts` on random per-layer thresholds and `k` —
+    /// the grid DSE's decoder.
+    Grid,
+    /// A random genetic genome decoded through `search::SearchSpace` —
+    /// the NSGA-II path (per-neuron levels, `k`, prune bits).
+    Genome,
+}
+
+impl PlanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanKind::Exact => "exact",
+            PlanKind::RandomShifts => "random-shifts",
+            PlanKind::Grid => "grid",
+            PlanKind::Genome => "genome",
+        }
+    }
+
+    pub const ALL: [PlanKind; 4] = [
+        PlanKind::Exact,
+        PlanKind::RandomShifts,
+        PlanKind::Grid,
+        PlanKind::Genome,
+    ];
+}
+
+/// Significance tables for `q` captured on `xs` (shared by the grid and
+/// genome plan generators).
+pub fn significance_of(q: &QuantMlp, xs: &[Vec<i64>]) -> Significance {
+    significance(q, &mean_activations(q, xs))
+}
+
+/// A random plan of the given family. `xs` supplies the activation
+/// distribution for the significance-driven families.
+pub fn plan_of_kind(rng: &mut Rng, q: &QuantMlp, xs: &[Vec<i64>], kind: PlanKind) -> ShiftPlan {
+    match kind {
+        PlanKind::Exact => ShiftPlan::exact(q),
+        PlanKind::RandomShifts => {
+            let mut plan = ShiftPlan::exact(q);
+            for layer in plan.shifts.iter_mut() {
+                for row in layer.iter_mut() {
+                    for s in row.iter_mut() {
+                        // includes shifts beyond the product width (the
+                        // bus truncates to constant zero — must match
+                        // software)
+                        *s = rng.below(14) as u32;
+                    }
+                }
+            }
+            plan
+        }
+        PlanKind::Grid => {
+            let sig = significance_of(q, xs);
+            let k = one_of(vec![1u32, 2, 3])(rng);
+            let g: Vec<f64> = (0..q.n_layers())
+                .map(|l| {
+                    let cands = threshold_candidates(&sig, l, 8);
+                    cands[rng.below(cands.len())]
+                })
+                .collect();
+            derive_shifts(q, &sig, &g, k)
+        }
+        PlanKind::Genome => {
+            let sig = significance_of(q, xs);
+            let space = SearchSpace::lossless(q, &sig, 16);
+            let genome = space.random_genome(rng);
+            space.decode(q, &sig, &genome)
+        }
+    }
+}
+
+/// A random truncation plan of a random family (exact 10%, arbitrary
+/// shifts 30%, grid 30%, genome 30%).
+pub fn random_plan(rng: &mut Rng, q: &QuantMlp, xs: &[Vec<i64>]) -> (PlanKind, ShiftPlan) {
+    let roll = rng.f64();
+    let kind = if roll < 0.10 {
+        PlanKind::Exact
+    } else if roll < 0.40 {
+        PlanKind::RandomShifts
+    } else if roll < 0.70 {
+        PlanKind::Grid
+    } else {
+        PlanKind::Genome
+    };
+    (kind, plan_of_kind(rng, q, xs, kind))
+}
+
+// ---------------------------------------------------------------------------
+// Raw netlist generator (for the sweep semantics property).
+// ---------------------------------------------------------------------------
+
+/// A random *unswept* netlist plus a random multi-pattern stimulus for
+/// it: a few input buses, a few hundred random gate constructions over
+/// the growing net pool (the builder's folding/CSE applies as in real
+/// construction), and output buses sampling the pool — leaving plenty of
+/// dead logic for `Netlist::sweep` to remove.
+pub fn random_netlist(rng: &mut Rng, patterns: usize) -> (Netlist, HashMap<String, Vec<u64>>) {
+    let mut nl = Netlist::new("fuzz");
+    let n_buses = 1 + rng.below(3);
+    let mut pool: Vec<NetId> = Vec::new();
+    let mut inputs: HashMap<String, Vec<u64>> = HashMap::new();
+    for bi in 0..n_buses {
+        let width = 1 + rng.below(6);
+        let name = format!("in{bi}");
+        pool.extend(nl.input_bus(name.clone(), width));
+        let hi = 1usize << width;
+        let vals: Vec<u64> = (0..patterns).map(|_| rng.below(hi) as u64).collect();
+        inputs.insert(name, vals);
+    }
+    // sprinkle constants into the pool so folding paths get exercised
+    let z = nl.zero();
+    let o = nl.one();
+    pool.push(z);
+    pool.push(o);
+    let ops = 20 + rng.below(180);
+    for _ in 0..ops {
+        let a = pool[rng.below(pool.len())];
+        let b = pool[rng.below(pool.len())];
+        let c = pool[rng.below(pool.len())];
+        let id = match rng.below(8) {
+            0 => nl.not(a),
+            1 => nl.and(a, b),
+            2 => nl.or(a, b),
+            3 => nl.xor(a, b),
+            4 => nl.xnor(a, b),
+            5 => nl.nand(a, b),
+            6 => nl.nor(a, b),
+            _ => nl.mux(a, b, c),
+        };
+        pool.push(id);
+    }
+    let n_outs = 1 + rng.below(3);
+    for oi in 0..n_outs {
+        // pool is always comfortably larger than 8 here (inputs + two
+        // constants + ≥20 ops)
+        let width = 1 + rng.below(8);
+        let nets: Vec<NetId> = (0..width).map(|_| pool[rng.below(pool.len())]).collect();
+        nl.output_bus(format!("y{oi}"), nets);
+    }
+    (nl, inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topologies_within_ranges_and_valid() {
+        let r = TopologyRange::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..60 {
+            let q = random_quant_mlp(&mut rng, &r);
+            assert!((r.layers.0..=r.layers.1).contains(&q.n_layers()));
+            assert!((r.din.0..=r.din.1).contains(&q.din()));
+            assert!((r.in_bits.0..=r.in_bits.1).contains(&q.in_bits));
+            let mut fan_in = q.din();
+            for (lw, lb) in q.w.iter().zip(&q.b) {
+                assert_eq!(lw.len(), lb.len());
+                assert!(!lw.is_empty());
+                for row in lw {
+                    assert_eq!(row.len(), fan_in, "uniform fan-in");
+                    assert!(row.iter().all(|w| w.abs() <= r.w_abs_max));
+                }
+                fan_in = lw.len();
+            }
+            assert_eq!(q.w_scales.len(), q.n_layers());
+            // the model must run end to end
+            let x = vec![0i64; q.din()];
+            let _ = crate::axsum::predict(&q, &ShiftPlan::exact(&q), &x);
+        }
+    }
+
+    #[test]
+    fn stimulus_in_range_and_exact_count() {
+        let mut rng = Rng::new(2);
+        let q = random_quant_mlp(&mut rng, &TopologyRange::default());
+        for total in [1usize, 63, 64, 65, 129] {
+            let xs = mixed_stimulus(&mut rng, &q, total);
+            assert_eq!(xs.len(), total);
+            let a_max = (1i64 << q.in_bits) - 1;
+            for x in &xs {
+                assert_eq!(x.len(), q.din());
+                assert!(x.iter().all(|&v| (0..=a_max).contains(&v)));
+            }
+        }
+    }
+
+    #[test]
+    fn plans_have_model_geometry_for_every_family() {
+        let mut rng = Rng::new(3);
+        for _ in 0..15 {
+            let q = random_quant_mlp(&mut rng, &TopologyRange::default());
+            let xs = mixed_stimulus(&mut rng, &q, 24);
+            for kind in PlanKind::ALL {
+                let plan = plan_of_kind(&mut rng, &q, &xs, kind);
+                assert_eq!(plan.shifts.len(), q.n_layers(), "{}", kind.name());
+                for (l, layer) in plan.shifts.iter().enumerate() {
+                    assert_eq!(layer.len(), q.w[l].len());
+                    for (j, row) in layer.iter().enumerate() {
+                        assert_eq!(row.len(), q.w[l][j].len());
+                    }
+                }
+                if kind == PlanKind::Exact {
+                    assert_eq!(plan.n_truncated(), 0);
+                }
+            }
+            // the random-family picker agrees with its own label
+            let (kind, plan) = random_plan(&mut rng, &q, &xs);
+            if kind == PlanKind::Exact {
+                assert_eq!(plan.n_truncated(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn random_netlists_are_topological_and_simulable() {
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let (nl, inputs) = random_netlist(&mut rng, 10);
+            for (i, g) in nl.gates.iter().enumerate() {
+                for &inp in g.inputs() {
+                    assert!((inp as usize) < i);
+                }
+            }
+            let r = crate::sim::simulate(&nl, &inputs, 10, false);
+            assert_eq!(r.patterns, 10);
+            for bus in &nl.outputs {
+                assert_eq!(r.outputs[&bus.name].len(), 10);
+            }
+        }
+    }
+}

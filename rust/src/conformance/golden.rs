@@ -1,0 +1,435 @@
+//! Golden regression registry: per-dataset JSON snapshots of the numbers
+//! the co-design substrate produces (accuracies, netlist cell
+//! histograms, area/power/delay estimates) committed under
+//! `rust/tests/golden/` and diffed on every `repro conform` run — any
+//! refactor that shifts a number fails loudly instead of silently
+//! re-baselining the paper's tables.
+//!
+//! Determinism: the snapshot pipeline is deliberately float-transcendental
+//! -free on the model side — the snapshot model is an integer-weight
+//! `QuantMlp` drawn from the seeded PRNG (not a trained network), so the
+//! numbers depend only on integer arithmetic plus IEEE add/mul/div, which
+//! are bit-deterministic across conforming platforms. The dataset
+//! generator's Gaussian sampler is the one libm-adjacent input; quantized
+//! 4-bit features would only flip if a `v*15` landed within an ulp of a
+//! rounding boundary. All stored floats are rounded to 9 decimals and the
+//! JSON writer emits shortest-roundtrip representations, so
+//! `parse(write(x)) == x` and comparison is exact equality.
+//!
+//! Blessing: `repro conform --bless` rewrites every snapshot; a missing
+//! snapshot is written on first run and reported as *bootstrapped* (commit
+//! it). CI runs the strict diff and additionally `git diff --exit-code`s
+//! the golden directory so a blessed-but-uncommitted change cannot slip
+//! through.
+
+use crate::axsum::{threshold_candidates, FlatEval, FlatScratch, ShiftPlan};
+use crate::datasets;
+use crate::estimate::estimate_with_toggles;
+use crate::fixed::{quantize_inputs, QuantMlp};
+use crate::pdk::EgtLibrary;
+use crate::search::SearchSpace;
+use crate::sim::{simulate_packed, PackedStimulus, SimScratch};
+use crate::synth::{build_mlp_ref, MlpSpecRef, NeuronStyle};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Directory the snapshots live in (compile-time anchored to the crate
+/// root, so the CLI and the test harness agree regardless of cwd).
+pub const GOLDEN_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden");
+
+/// One golden configuration: a dataset key plus the seeds that pin the
+/// snapshot model and data.
+#[derive(Clone, Copy, Debug)]
+pub struct GoldenConfig {
+    pub key: &'static str,
+    pub data_seed: u64,
+    pub model_seed: u64,
+}
+
+impl GoldenConfig {
+    pub fn file_name(&self) -> String {
+        format!("conform_{}.json", self.key)
+    }
+
+    pub fn path(&self) -> String {
+        format!("{GOLDEN_DIR}/{}", self.file_name())
+    }
+}
+
+/// The registered golden set: small/medium topologies from the paper's
+/// Table 2 (kept quick enough for every CI run).
+pub fn default_configs() -> Vec<GoldenConfig> {
+    ["ma", "se", "v2", "bs"]
+        .into_iter()
+        .map(|key| GoldenConfig {
+            key,
+            data_seed: 2023,
+            model_seed: 2023,
+        })
+        .collect()
+}
+
+/// Round to 9 decimals before storing (writer emits shortest-roundtrip
+/// decimal, so comparison after a parse round-trip is exact).
+fn r9(x: f64) -> Json {
+    Json::Num((x * 1e9).round() / 1e9)
+}
+
+const TRAIN_EVAL_CAP: usize = 400;
+const TEST_EVAL_CAP: usize = 300;
+const SIG_SAMPLES: usize = 200;
+/// 96 stimulus patterns: crosses the 64-pattern chunk edge.
+const STIM_PATTERNS: usize = 96;
+
+/// Deterministic snapshot model: integer weights from the seeded PRNG in
+/// the registry topology of `key` (see module docs for why this is not a
+/// trained network).
+pub fn snapshot_model(cfg: &GoldenConfig) -> QuantMlp {
+    let info = datasets::registry::by_key(cfg.key).expect("registered golden key");
+    let mut rng = Rng::new(cfg.model_seed ^ crate::datasets::fxhash(cfg.key) ^ 0x60_1D);
+    let dims = [info.hidden, info.dout];
+    let mut w = Vec::new();
+    let mut b = Vec::new();
+    let mut fan_in = info.din;
+    for &width in &dims {
+        w.push(
+            (0..width)
+                .map(|_| (0..fan_in).map(|_| rng.range_i64(-127, 127)).collect::<Vec<i64>>())
+                .collect::<Vec<_>>(),
+        );
+        b.push((0..width).map(|_| rng.range_i64(-60, 60)).collect::<Vec<i64>>());
+        fan_in = width;
+    }
+    QuantMlp {
+        w,
+        b,
+        in_bits: crate::fixed::INPUT_BITS,
+        w_scales: vec![1.0; 2],
+    }
+}
+
+/// Compute the snapshot for one golden configuration. The golden
+/// generator is itself a conformance check: a circuit/software
+/// divergence on a registry topology surfaces as `Err` (reported by
+/// `check_all` as a golden error) rather than a panic.
+pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
+    let ds = datasets::load(cfg.key, cfg.data_seed).expect("registered golden key");
+    let q = snapshot_model(cfg);
+    let xq_train = quantize_inputs(&ds.x_train);
+    let xq_test = quantize_inputs(&ds.x_test);
+    let nt = xq_train.len().min(TRAIN_EVAL_CAP);
+    let ne = xq_test.len().min(TEST_EVAL_CAP);
+    let ns = xq_test.len().min(STIM_PATTERNS);
+    let stimulus = &xq_test[..ns];
+
+    // self-labels: the exact integer model's own predictions (maximally
+    // sensitive to any change in AxSum semantics)
+    let exact = ShiftPlan::exact(&q);
+    let flat0 = FlatEval::new(&q, &exact);
+    let mut fs = FlatScratch::new();
+    let self_train: Vec<usize> = xq_train[..nt].iter().map(|x| flat0.predict(x, &mut fs)).collect();
+
+    let sig = super::gen::significance_of(&q, &xq_train[..xq_train.len().min(SIG_SAMPLES)]);
+
+    // plan menu: exact, the grid DSE decoder at a mid threshold, and a
+    // deterministic genetic genome through the search decoder
+    let grid_g: Vec<f64> = (0..q.n_layers())
+        .map(|l| {
+            let cands = threshold_candidates(&sig, l, 8);
+            cands[cands.len() / 2]
+        })
+        .collect();
+    let grid = crate::axsum::derive_shifts(&q, &sig, &grid_g, 2);
+    let space = SearchSpace::lossless(&q, &sig, 16);
+    let mut grng = Rng::new(cfg.model_seed ^ crate::datasets::fxhash(cfg.key) ^ 0x6E_0E);
+    let genome_plan = space.decode(&q, &sig, &space.random_genome(&mut grng));
+
+    let lib = EgtLibrary::egt_v1();
+    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let mut sim = SimScratch::new();
+
+    let mut plans_json = Vec::new();
+    for (name, plan) in [
+        ("exact", &exact),
+        ("grid_k2", &grid),
+        ("genome", &genome_plan),
+    ] {
+        let flat = FlatEval::new(&q, plan);
+        let acc_self = flat.accuracy_with(&xq_train[..nt], &self_train, &mut fs);
+        let acc_data_train = flat.accuracy_with(&xq_train[..nt], &ds.y_train[..nt], &mut fs);
+        let acc_data_test = flat.accuracy_with(&xq_test[..ne], &ds.y_test[..ne], &mut fs);
+
+        let spec = MlpSpecRef {
+            name: "golden",
+            weights: &q.w,
+            biases: &q.b,
+            shifts: &plan.shifts,
+            in_bits: q.in_bits,
+            style: NeuronStyle::AxSum,
+        };
+        let nl = build_mlp_ref(&spec);
+        simulate_packed(&nl, &packed, true, &mut sim);
+        let classes = sim.output(&nl, "class").expect("class bus").to_vec();
+        let mut checksum = 0u64;
+        for (p, (x, &cls)) in stimulus.iter().zip(&classes).enumerate() {
+            let sw = flat.predict(x, &mut fs);
+            if sw != cls as usize {
+                return Err(format!(
+                    "golden generator caught a circuit/software divergence \
+                     ({}/{name}, pattern {p}: software class {sw}, netlist class {cls}) \
+                     — run `repro conform` for a shrunk reproducer",
+                    cfg.key
+                ));
+            }
+            checksum = checksum.wrapping_mul(31).wrapping_add(cls);
+        }
+        let costs = estimate_with_toggles(&nl, &lib, &sim.toggles, sim.patterns);
+
+        let mut hist: Vec<(String, usize)> = nl
+            .cell_histogram()
+            .into_iter()
+            .map(|(k, c)| (k.name().to_string(), c))
+            .collect();
+        hist.sort();
+        let hist_json = Json::Obj(
+            hist.into_iter()
+                .map(|(k, c)| (k, Json::Num(c as f64)))
+                .collect(),
+        );
+
+        plans_json.push(json::obj(vec![
+            ("name", json::s(name)),
+            ("n_truncated", Json::Num(plan.n_truncated() as f64)),
+            ("acc_self_train", r9(acc_self)),
+            ("acc_data_train", r9(acc_data_train)),
+            ("acc_data_test", r9(acc_data_test)),
+            // hex string: a u64 does not fit an f64 mantissa losslessly
+            ("class_checksum", json::s(&format!("{checksum:016x}"))),
+            ("n_gates", Json::Num(nl.n_gates() as f64)),
+            ("cells", Json::Num(costs.cells as f64)),
+            ("area_mm2", r9(costs.area_mm2)),
+            ("power_mw", r9(costs.power_mw)),
+            ("delay_ms", r9(costs.delay_ms)),
+            ("cell_histogram", hist_json),
+        ]));
+    }
+
+    let info = ds.info;
+    Ok(json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("dataset", json::s(cfg.key)),
+        ("data_seed", Json::Num(cfg.data_seed as f64)),
+        ("model_seed", Json::Num(cfg.model_seed as f64)),
+        ("din", Json::Num(info.din as f64)),
+        ("hidden", Json::Num(info.hidden as f64)),
+        ("dout", Json::Num(info.dout as f64)),
+        ("in_bits", Json::Num(q.in_bits as f64)),
+        ("n_train_eval", Json::Num(nt as f64)),
+        ("n_test_eval", Json::Num(ne as f64)),
+        ("stim_patterns", Json::Num(ns as f64)),
+        ("plans", Json::Arr(plans_json)),
+    ]))
+}
+
+/// Outcome of checking one golden configuration.
+#[derive(Clone, Debug)]
+pub enum GoldenStatus {
+    /// Snapshot matched the committed golden.
+    Matched,
+    /// No golden existed; the freshly computed snapshot was written
+    /// (commit it to arm the regression check).
+    Bootstrapped,
+    /// Golden was rewritten under `--bless`.
+    Blessed,
+    /// Snapshot diverged from the committed golden.
+    Drift(Vec<String>),
+    /// The golden file could not be read/parsed/written.
+    Error(String),
+}
+
+impl GoldenStatus {
+    pub fn is_failure(&self) -> bool {
+        matches!(self, GoldenStatus::Drift(_) | GoldenStatus::Error(_))
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            GoldenStatus::Matched => "ok",
+            GoldenStatus::Bootstrapped => "bootstrapped",
+            GoldenStatus::Blessed => "blessed",
+            GoldenStatus::Drift(_) => "DRIFT",
+            GoldenStatus::Error(_) => "ERROR",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GoldenResult {
+    pub key: &'static str,
+    pub path: String,
+    pub status: GoldenStatus,
+}
+
+/// Recursive structural diff; appends `path: old != new` lines.
+pub fn diff_json(path: &str, old: &Json, new: &Json, out: &mut Vec<String>) {
+    match (old, new) {
+        (Json::Obj(a), Json::Obj(b)) => {
+            for (k, va) in a {
+                match b.iter().find(|(kb, _)| kb == k) {
+                    Some((_, vb)) => diff_json(&format!("{path}.{k}"), va, vb, out),
+                    None => out.push(format!("{path}.{k}: removed")),
+                }
+            }
+            for (k, _) in b {
+                if !a.iter().any(|(ka, _)| ka == k) {
+                    out.push(format!("{path}.{k}: added"));
+                }
+            }
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            if a.len() != b.len() {
+                out.push(format!("{path}: length {} != {}", a.len(), b.len()));
+            }
+            for (i, (va, vb)) in a.iter().zip(b).enumerate() {
+                diff_json(&format!("{path}[{i}]"), va, vb, out);
+            }
+        }
+        (a, b) => {
+            if a != b {
+                out.push(format!("{path}: {} != {}", a.dump(), b.dump()));
+            }
+        }
+    }
+}
+
+fn write_golden(path: &str, snap: &Json, status: GoldenStatus) -> GoldenStatus {
+    match std::fs::create_dir_all(GOLDEN_DIR).and_then(|_| std::fs::write(path, snap.pretty())) {
+        Ok(()) => status,
+        Err(e) => GoldenStatus::Error(format!("cannot write golden: {e}")),
+    }
+}
+
+fn check_one(cfg: &GoldenConfig, bless: bool) -> GoldenResult {
+    let path = cfg.path();
+    let snap = match snapshot(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            return GoldenResult {
+                key: cfg.key,
+                path,
+                status: GoldenStatus::Error(e),
+            }
+        }
+    };
+    let status = if bless {
+        write_golden(&path, &snap, GoldenStatus::Blessed)
+    } else {
+        match std::fs::read_to_string(&path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                write_golden(&path, &snap, GoldenStatus::Bootstrapped)
+            }
+            Err(e) => GoldenStatus::Error(format!("cannot read golden: {e}")),
+            Ok(text) => match Json::parse(&text) {
+                Err(e) => GoldenStatus::Error(format!("golden is not valid JSON: {e}")),
+                Ok(old) => {
+                    let mut diffs = Vec::new();
+                    diff_json(cfg.key, &old, &snap, &mut diffs);
+                    if diffs.is_empty() {
+                        GoldenStatus::Matched
+                    } else {
+                        // dump the regenerated snapshot next to the CI
+                        // artifacts so a drift investigation can read the
+                        // new values without a local toolchain + --bless
+                        crate::report::write_results(
+                            &format!("conform_golden_{}.new.json", cfg.key),
+                            &snap.pretty(),
+                        );
+                        GoldenStatus::Drift(diffs)
+                    }
+                }
+            },
+        }
+    };
+    GoldenResult {
+        key: cfg.key,
+        path,
+        status,
+    }
+}
+
+/// Check (or bless) every registered golden configuration.
+pub fn check_all(bless: bool) -> Vec<GoldenResult> {
+    default_configs().iter().map(|cfg| check_one(cfg, bless)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_deterministic_and_self_consistent() {
+        let cfg = GoldenConfig {
+            key: "ma",
+            data_seed: 2023,
+            model_seed: 2023,
+        };
+        let a = snapshot(&cfg).expect("snapshot");
+        let b = snapshot(&cfg).expect("snapshot");
+        assert_eq!(a, b, "snapshot must be bit-deterministic");
+        // parse round-trip is exact (what makes golden comparison strict
+        // equality instead of tolerance windows)
+        let re = Json::parse(&a.pretty()).unwrap();
+        let mut diffs = Vec::new();
+        diff_json("ma", &a, &re, &mut diffs);
+        assert!(diffs.is_empty(), "{diffs:?}");
+        // schema spot checks
+        assert_eq!(a.req_usize("schema").unwrap(), 1);
+        let plans = a.get("plans").unwrap().as_arr().unwrap();
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[0].req_str("name").unwrap(), "exact");
+        // exact plan perfectly reproduces its own labels
+        assert_eq!(plans[0].req_f64("acc_self_train").unwrap(), 1.0);
+        assert_eq!(plans[0].req_usize("n_truncated").unwrap(), 0);
+        assert!(plans[1].req_usize("n_truncated").unwrap() > 0 || plans[2].req_usize("n_truncated").unwrap() > 0);
+        for p in plans {
+            assert!(p.req_f64("area_mm2").unwrap() > 0.0);
+            assert!(p.req_f64("power_mw").unwrap() > 0.0);
+            assert!(p.get("cell_histogram").is_some());
+        }
+    }
+
+    #[test]
+    fn diff_reports_value_and_shape_changes() {
+        let a = Json::parse(r#"{"x": 1, "arr": [1, 2], "o": {"k": 3.5}}"#).unwrap();
+        let b = Json::parse(r#"{"x": 2, "arr": [1], "o": {"k": 3.5, "new": 1}}"#).unwrap();
+        let mut d = Vec::new();
+        diff_json("t", &a, &b, &mut d);
+        assert!(d.iter().any(|l| l.contains("t.x")));
+        assert!(d.iter().any(|l| l.contains("t.arr: length")));
+        assert!(d.iter().any(|l| l.contains("t.o.new: added")));
+        let mut none = Vec::new();
+        diff_json("t", &a, &a, &mut none);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn golden_roundtrip_in_temp_dir() {
+        // bless → reread → matched, without touching the committed set:
+        // exercise check_one's file machinery against a scratch copy
+        let cfg = GoldenConfig {
+            key: "v2",
+            data_seed: 2023,
+            model_seed: 2023,
+        };
+        let snap = snapshot(&cfg).expect("snapshot");
+        let dir = std::env::temp_dir().join("axmlp_golden_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(cfg.file_name());
+        std::fs::write(&path, snap.pretty()).unwrap();
+        let old = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let mut diffs = Vec::new();
+        diff_json(cfg.key, &old, &snapshot(&cfg).expect("snapshot"), &mut diffs);
+        assert!(diffs.is_empty(), "{diffs:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

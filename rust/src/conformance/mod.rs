@@ -1,0 +1,250 @@
+//! Differential conformance harness.
+//!
+//! The co-design guarantee of the whole framework rests on one invariant:
+//! the approximate integer forward that drives every DSE accuracy number
+//! must be **bit-exact** with the gate-level circuit that gets printed —
+//! otherwise every Pareto point is fiction. This module machine-checks
+//! that invariant at scale, instead of relying on the handful of
+//! hand-written parity tests:
+//!
+//! * [`gen`] — composable generators (built on `util::prop`) for random
+//!   `QuantMlp` topologies, truncation plans of every decoder family
+//!   (exact / arbitrary shifts / grid `derive_shifts` / genetic genomes
+//!   through `search::SearchSpace`), adversarial stimulus corners, and
+//!   raw netlists;
+//! * [`diff`] — runs each case through all the forwards the repo owns
+//!   (`axsum::forward`, `FlatEval::forward_batch`, and synthesized
+//!   netlists under `sim::simulate_packed`, compared at *logit* level)
+//!   and shrinks any mismatch to a minimal reproducer naming the
+//!   layer/neuron;
+//! * [`golden`] — committed JSON regression snapshots of accuracies,
+//!   cell histograms and area/power estimates, re-derived and diffed on
+//!   every run.
+//!
+//! Entry points: `repro conform [--cases N] [--bless]` (CLI),
+//! [`crate::experiments::exp_conform`], and [`run_fuzz`] /
+//! [`canary`] for tests. Before trusting a green fuzz run, [`canary`]
+//! injects a single-shift corruption and verifies the harness catches
+//! *and shrinks* it — an instrument that cannot fail cannot certify.
+
+pub mod diff;
+pub mod gen;
+pub mod golden;
+
+pub use diff::{check_case, check_case_pair, shrink, CaseFailure, Shrunk};
+pub use gen::{PlanKind, TopologyRange};
+pub use golden::{GoldenConfig, GoldenResult, GoldenStatus};
+
+use crate::util::rng::Rng;
+
+/// Fuzz-run parameters.
+#[derive(Clone, Debug)]
+pub struct ConformConfig {
+    /// Number of fuzzed `(model, plan, stimulus)` cases.
+    pub cases: u64,
+    pub seed: u64,
+    /// Topology ranges for the model generator.
+    pub topology: TopologyRange,
+    /// Stop after this many mismatches (each one is shrunk, which costs
+    /// many re-checks; one is already a red build).
+    pub max_mismatches: usize,
+}
+
+impl Default for ConformConfig {
+    fn default() -> Self {
+        ConformConfig {
+            cases: 256,
+            seed: 2023,
+            topology: TopologyRange::default(),
+            max_mismatches: 8,
+        }
+    }
+}
+
+/// Per-case pattern counts cycle the 64-pattern chunk edges the packed
+/// simulator is most likely to get wrong.
+const PATTERN_COUNTS: [usize; 5] = [63, 64, 65, 128, 129];
+
+/// What `run_fuzz` recorded about one failing case so it replays
+/// exactly: the case seed plus the two choices derived from the case
+/// *index* (outside the PRNG stream) — the pattern count and, for the
+/// forced coverage rounds, the plan family. Replay also requires the
+/// originating run's `ConformConfig::topology` (the CLI always uses
+/// `TopologyRange::default()`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FailingCase {
+    pub seed: u64,
+    pub patterns: usize,
+    pub kind: PlanKind,
+    /// Whether the plan family was forced (coverage round) or rolled
+    /// from the PRNG — replay must do the same.
+    pub forced_kind: bool,
+}
+
+/// Aggregate fuzz outcome.
+#[derive(Debug, Default)]
+pub struct FuzzReport {
+    /// Cases actually executed (can stop early at `max_mismatches`).
+    pub cases: u64,
+    pub patterns_total: usize,
+    /// Cases per plan family, `PlanKind::ALL` order.
+    pub plan_counts: [usize; 4],
+    /// Shrunk mismatch reproducers (bounded by `max_mismatches`).
+    pub mismatches: Vec<Shrunk>,
+    /// Replay records for the mismatching cases.
+    pub failing: Vec<FailingCase>,
+}
+
+impl FuzzReport {
+    pub fn ok(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+}
+
+/// Seed of fuzz case `i` under base seed `seed` — the shared
+/// `util::prop` derivation, so a [`FailingCase`] replays standalone.
+pub fn case_seed(seed: u64, i: u64) -> u64 {
+    crate::util::prop::case_seed(seed, i)
+}
+
+/// Run `cfg.cases` fuzzed differential cases. Every case draws a fresh
+/// model, plan and stimulus from its own seed; any divergence between
+/// the software forwards and the synthesized/simulated netlists is
+/// shrunk and collected.
+pub fn run_fuzz(cfg: &ConformConfig) -> FuzzReport {
+    let mut report = FuzzReport::default();
+    for i in 0..cfg.cases {
+        report.cases += 1;
+        let mut rng = Rng::new(case_seed(cfg.seed, i));
+        let q = gen::random_quant_mlp(&mut rng, &cfg.topology);
+        let total = PATTERN_COUNTS[(i as usize) % PATTERN_COUNTS.len()];
+        let xs = gen::mixed_stimulus(&mut rng, &q, total);
+        // the first two rounds cycle every plan family deterministically
+        // (coverage must not hinge on a lucky roll); later cases roll
+        let forced = i < 2 * PlanKind::ALL.len() as u64;
+        let (kind, plan) = if forced {
+            let k = PlanKind::ALL[(i as usize) % PlanKind::ALL.len()];
+            (k, gen::plan_of_kind(&mut rng, &q, &xs, k))
+        } else {
+            gen::random_plan(&mut rng, &q, &xs)
+        };
+        report.plan_counts[PlanKind::ALL.iter().position(|&k| k == kind).unwrap()] += 1;
+        report.patterns_total += xs.len();
+        if let Some(failure) = diff::check_case(&q, &plan, &xs) {
+            report.failing.push(FailingCase {
+                seed: case_seed(cfg.seed, i),
+                patterns: total,
+                kind,
+                forced_kind: forced,
+            });
+            report
+                .mismatches
+                .push(diff::shrink(&q, &plan, &plan, &xs, failure));
+            if report.mismatches.len() >= cfg.max_mismatches {
+                break;
+            }
+        }
+    }
+    report
+}
+
+/// Fault-injection self-test: corrupt exactly one shift of a
+/// known-divergent model on the netlist side, and require the harness to
+/// (a) flag the case and (b) shrink it to a reproducer that still names
+/// the corrupted neuron. Returns the shrunk reproducer, or an error when
+/// the instrument failed to fire — in which case no green fuzz result
+/// can be trusted.
+pub fn canary(seed: u64) -> Result<Shrunk, String> {
+    let mut rng = Rng::new(seed ^ 0xCA_4A_59);
+    // widen until a corruption provokes divergence (ReLU clamps or
+    // zeroed downstream columns can mask one; a handful of tries always
+    // suffices in practice)
+    for attempt in 0..16u64 {
+        let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+        let xs = gen::mixed_stimulus(&mut rng, &q, 33);
+        let (_, plan) = gen::random_plan(&mut rng, &q, &xs);
+        // pick the largest-magnitude weight (most likely to matter)
+        let mut best: Option<(usize, usize, usize, i64)> = None;
+        for (l, layer) in q.w.iter().enumerate() {
+            for (j, row) in layer.iter().enumerate() {
+                for (i, &w) in row.iter().enumerate() {
+                    let better = match best {
+                        None => true,
+                        Some((_, _, _, bw)) => w.abs() > bw.abs(),
+                    };
+                    if better {
+                        best = Some((l, j, i, w));
+                    }
+                }
+            }
+        }
+        let Some((l, j, i, w)) = best else { continue };
+        if w == 0 {
+            continue;
+        }
+        let mut hw = plan.clone();
+        let full = crate::axsum::product_bits(q.in_bits, w);
+        hw.shifts[l][j][i] = if plan.shifts[l][j][i] >= full { 0 } else { full };
+        if let Some(failure) = diff::check_case_pair(&q, &plan, &hw, &xs) {
+            let s = diff::shrink(&q, &plan, &hw, &xs, failure);
+            if !s.kept_neurons[l].contains(&j) {
+                return Err(format!(
+                    "canary shrink lost the corrupted neuron L{l}/{j} (attempt {attempt}): {}",
+                    s.summary()
+                ));
+            }
+            return Ok(s);
+        }
+    }
+    Err("canary could not provoke a divergence in 16 attempts".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fuzz_small_run_is_clean_and_covers_families() {
+        let cfg = ConformConfig {
+            cases: 40,
+            seed: 7,
+            ..Default::default()
+        };
+        let report = run_fuzz(&cfg);
+        assert!(
+            report.ok(),
+            "conformance mismatches: {:?}",
+            report
+                .mismatches
+                .iter()
+                .map(|m| m.summary())
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(report.cases, 40);
+        assert!(report.patterns_total > 40 * 63);
+        // with 40 cases every plan family should appear
+        assert!(report.plan_counts.iter().all(|&c| c > 0), "{:?}", report.plan_counts);
+    }
+
+    #[test]
+    fn fuzz_is_deterministic_in_seed() {
+        let cfg = ConformConfig {
+            cases: 12,
+            seed: 99,
+            ..Default::default()
+        };
+        let a = run_fuzz(&cfg);
+        let b = run_fuzz(&cfg);
+        assert_eq!(a.cases, b.cases);
+        assert_eq!(a.plan_counts, b.plan_counts);
+        assert_eq!(a.patterns_total, b.patterns_total);
+        assert_eq!(a.failing, b.failing);
+    }
+
+    #[test]
+    fn canary_fires_and_names_the_neuron() {
+        let s = canary(2023).expect("canary must fire");
+        assert_eq!(s.xs.len(), 1, "canary reproducer minimized");
+        assert!(s.summary().contains("surviving neurons"));
+    }
+}

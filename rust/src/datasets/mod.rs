@@ -193,7 +193,9 @@ pub fn generate(info: &'static DatasetInfo, seed: u64) -> Dataset {
     }
 }
 
-fn fxhash(s: &str) -> u64 {
+/// FNV-1a over a short key (shared with the conformance golden registry
+/// for seed derivation).
+pub(crate) fn fxhash(s: &str) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for b in s.bytes() {
         h ^= b as u64;

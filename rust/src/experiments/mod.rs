@@ -794,6 +794,103 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
     Ok(())
 }
 
+/// `repro conform` — the differential conformance harness (ISSUE 3).
+///
+/// Three stages, any failure turns the run red:
+///
+/// 1. **canary** — inject a single-shift corruption on the netlist side
+///    of a random model and require the harness to catch it *and* shrink
+///    it to a reproducer naming the corrupted neuron (an instrument that
+///    cannot fail cannot certify a green run);
+/// 2. **fuzz** — `cases` random `(QuantMlp, plan, stimulus)` triples
+///    through every forward (`axsum::forward`, `FlatEval`,
+///    `build_mlp_ref`/`build_mlp_logits` → `simulate_packed`), plan
+///    families spanning exact / random-shift / grid / genetic-genome
+///    decoders, stimulus hitting saturation corners and 64-pattern chunk
+///    edges. Mismatches are shrunk and dumped as
+///    `results/conform_repro_*.json` (uploaded as CI artifacts);
+/// 3. **golden** — recompute the committed `rust/tests/golden/*.json`
+///    snapshots and diff strictly (`--bless` rewrites them; missing files
+///    are bootstrapped and reported so they get committed).
+pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<()> {
+    use crate::conformance::{self, ConformConfig, GoldenStatus, PlanKind};
+
+    let mut failures: Vec<String> = Vec::new();
+
+    // 1. canary
+    let t0 = std::time::Instant::now();
+    match conformance::canary(cfg.seed) {
+        Ok(s) => println!("canary: corruption caught and shrunk — {}", s.summary()),
+        Err(e) => failures.push(format!("canary: {e}")),
+    }
+
+    // 2. fuzz
+    let ccfg = ConformConfig {
+        cases,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let report = conformance::run_fuzz(&ccfg);
+    let mut t = Table::new(&["stage", "detail", "result"]);
+    t.row(vec![
+        "fuzz".into(),
+        format!("{} cases, {} patterns", report.cases, report.patterns_total),
+        if report.ok() {
+            "ok".into()
+        } else {
+            format!("{} MISMATCHES", report.mismatches.len())
+        },
+    ]);
+    for (ki, kind) in PlanKind::ALL.iter().enumerate() {
+        t.row(vec![
+            "fuzz/plans".into(),
+            kind.name().into(),
+            report.plan_counts[ki].to_string(),
+        ]);
+    }
+    for (i, m) in report.mismatches.iter().enumerate() {
+        let name = format!("conform_repro_{i}.json");
+        write_results(&name, &m.to_json().pretty());
+        failures.push(format!("fuzz mismatch (results/{name}): {}", m.summary()));
+    }
+
+    // 3. goldens
+    for g in conformance::golden::check_all(bless) {
+        let detail = match &g.status {
+            GoldenStatus::Drift(lines) => {
+                failures.push(format!(
+                    "golden drift in {} ({} fields — rerun with --bless only if the change is intended):\n  {}",
+                    g.path,
+                    lines.len(),
+                    lines.join("\n  ")
+                ));
+                format!("{} fields differ", lines.len())
+            }
+            GoldenStatus::Error(e) => {
+                failures.push(format!("golden {}: {e}", g.key));
+                e.clone()
+            }
+            GoldenStatus::Bootstrapped => format!("wrote {} — commit it", g.path),
+            _ => g.path.clone(),
+        };
+        t.row(vec![format!("golden/{}", g.key), detail, g.status.label().into()]);
+    }
+    t.emit(
+        &format!(
+            "Conformance — differential netlist↔software cross-validation ({:.1}s)",
+            t0.elapsed().as_secs_f64()
+        ),
+        "conform_summary.csv",
+    );
+
+    if failures.is_empty() {
+        println!("conformance OK: all engines bit-exact, goldens stable");
+        Ok(())
+    } else {
+        Err(anyhow::Error::msg(failures.join("\n")))
+    }
+}
+
 /// Extension: per-neuron G refinement (Eq. 5 allows per-neuron
 /// thresholds; the paper's DSE restricts to per-layer). Reports the extra
 /// area the greedy refinement recovers on top of the chosen designs.

@@ -23,6 +23,7 @@ pub mod baselines;
 pub mod battery;
 pub mod cli;
 pub mod clustering;
+pub mod conformance;
 pub mod coordinator;
 pub mod datasets;
 pub mod estimate;

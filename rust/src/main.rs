@@ -104,6 +104,11 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let scfg = search_config(args, &cfg).map_err(anyhow::Error::msg)?;
             experiments::exp_search(&cfg, &scfg)
         }
+        "conform" => {
+            let cfg = exp_config(args).map_err(anyhow::Error::msg)?;
+            let cases = args.flag_u64("cases", 256).map_err(anyhow::Error::msg)?;
+            experiments::exp_conform(&cfg, cases, args.flag_bool("bless"))
+        }
         "all" => {
             let cfg = exp_config(args).map_err(anyhow::Error::msg)?;
             experiments::exp_table2(&cfg)?;

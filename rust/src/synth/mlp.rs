@@ -114,6 +114,22 @@ pub fn build_mlp(spec: &MlpCircuitSpec) -> Netlist {
 /// [`build_mlp`] over a borrowed spec (no matrix clones — see
 /// EXPERIMENTS.md §Perf).
 pub fn build_mlp_ref(spec: &MlpSpecRef<'_>) -> Netlist {
+    build_mlp_inner(spec, false)
+}
+
+/// [`build_mlp_ref`] variant that additionally exposes every output
+/// neuron's signed sum as its own `logit{j}` bus (two's complement,
+/// LSB-first, width = the bus's bound-derived minimum). The conformance
+/// harness reads integer logits straight off the simulated netlist and
+/// compares them against the software forwards bit-for-bit; `class` stays
+/// the last output bus. DSE cost paths must keep using [`build_mlp_ref`]
+/// (the extra output buses pin the logit cones live through `sweep`,
+/// changing area/power).
+pub fn build_mlp_logits(spec: &MlpSpecRef<'_>) -> Netlist {
+    build_mlp_inner(spec, true)
+}
+
+fn build_mlp_inner(spec: &MlpSpecRef<'_>, expose_logits: bool) -> Netlist {
     let n_inputs = spec.weights[0][0].len();
     let mut nl = Netlist::new(spec.name.to_string());
     let mut acts: Vec<UBus> = (0..n_inputs)
@@ -144,6 +160,11 @@ pub fn build_mlp_ref(spec: &MlpSpecRef<'_>) -> Netlist {
             // hidden layer: ReLU, outputs become next layer's inputs
             acts = sums.iter().map(|s| relu(&mut nl, s)).collect();
         } else {
+            if expose_logits {
+                for (j, s) in sums.iter().enumerate() {
+                    nl.output_bus(format!("logit{j}"), s.nets.clone());
+                }
+            }
             // output layer: argmax -> class index
             let idx = argmax(&mut nl, &sums);
             nl.output_bus("class", idx.nets.clone());
@@ -279,6 +300,61 @@ mod tests {
             assert_eq!(r.outputs["class"][p] as usize, software_forward(&spec, x));
         }
         assert!(r.toggles.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn logit_builder_exposes_signed_sums_and_same_class() {
+        use crate::sim::as_signed;
+        let mut rng = Rng::new(500);
+        let mut spec = rand_spec(&mut rng, 5, 3, 3, NeuronStyle::AxSum);
+        for layer in spec.shifts.iter_mut() {
+            for row in layer.iter_mut() {
+                for s in row.iter_mut() {
+                    *s = rng.below(5) as u32;
+                }
+            }
+        }
+        let nl = build_mlp_logits(&spec.as_ref_spec());
+        assert_eq!(nl.outputs.len(), 4); // logit0..2 + class
+        assert_eq!(nl.outputs.last().unwrap().name, "class");
+        for _ in 0..30 {
+            let x: Vec<i64> = (0..5).map(|_| rng.range_i64(0, 15)).collect();
+            let ins: Vec<(String, u64)> = x
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (format!("x{i}"), v as u64))
+                .collect();
+            let refs: Vec<(&str, u64)> = ins.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+            let out = eval_once(&nl, &refs);
+            // software logits: same per-neuron model the class path uses
+            let mut acts: Vec<i64> = x.clone();
+            for l in 0..spec.weights.len() {
+                let mut next = Vec::new();
+                for (j, row) in spec.weights[l].iter().enumerate() {
+                    let nspec = super::super::neuron::NeuronSpec {
+                        weights: row.clone(),
+                        bias: spec.biases[l][j],
+                        shifts: spec.shifts[l][j].clone(),
+                    };
+                    next.push(super::super::neuron::axsum_neuron_value(&acts, &nspec));
+                }
+                if l + 1 < spec.weights.len() {
+                    acts = next.iter().map(|&v| v.max(0)).collect();
+                } else {
+                    acts = next;
+                }
+            }
+            for (j, &want) in acts.iter().enumerate() {
+                let bus = nl
+                    .outputs
+                    .iter()
+                    .find(|b| b.name == format!("logit{j}"))
+                    .unwrap();
+                let got = as_signed(out[&format!("logit{j}")], bus.nets.len());
+                assert_eq!(got, want, "logit{j} x={x:?}");
+            }
+            assert_eq!(out["class"] as usize, software_forward(&spec, &x));
+        }
     }
 
     #[test]

@@ -8,6 +8,12 @@
 //!     check_something(w)
 //! });
 //! ```
+//!
+//! The second half of the module is a set of composable *generators*:
+//! plain `Fn(&mut Rng) -> T` closures with combinators (`vec_of`,
+//! `matrix_of`, `one_of`, …). Domain-specific generators (random
+//! `QuantMlp`s, truncation plans, netlists) are built from these in
+//! `crate::conformance::gen`.
 
 use super::rng::Rng;
 
@@ -27,12 +33,19 @@ where
     F: Fn(&mut Rng) -> CaseResult,
 {
     for case in 0..cases {
-        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let seed = case_seed(base_seed, case);
         let mut rng = Rng::new(seed);
         if let Err(msg) = prop(&mut rng) {
             panic!("property failed (case {case}, seed {seed:#x}): {msg}");
         }
     }
+}
+
+/// Seed of case `case` under `base_seed` — the one derivation shared by
+/// [`forall_seeded`] and the conformance fuzzer, so a reported seed
+/// always replays the same stream.
+pub fn case_seed(base_seed: u64, case: u64) -> u64 {
+    base_seed ^ case.wrapping_mul(0x9E3779B97F4A7C15)
 }
 
 /// Assert-like helpers that return CaseResult instead of panicking, so a
@@ -50,6 +63,65 @@ pub fn check_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> CaseRe
         Ok(())
     } else {
         Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Composable generators.
+// ---------------------------------------------------------------------------
+
+/// A generator is any reusable `Fn(&mut Rng) -> T`. The combinators below
+/// return `impl Gen<T>` so they nest without boxing.
+pub trait Gen<T>: Fn(&mut Rng) -> T {}
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {}
+
+/// Uniform `usize` in `[lo, hi]` inclusive.
+pub fn usize_in(lo: usize, hi: usize) -> impl Gen<usize> {
+    debug_assert!(lo <= hi);
+    move |rng: &mut Rng| lo + rng.below(hi - lo + 1)
+}
+
+/// Uniform `i64` in `[lo, hi]` inclusive.
+pub fn i64_in(lo: i64, hi: i64) -> impl Gen<i64> {
+    move |rng: &mut Rng| rng.range_i64(lo, hi)
+}
+
+/// `true` with probability `p`.
+pub fn flag(p: f64) -> impl Gen<bool> {
+    move |rng: &mut Rng| rng.f64() < p
+}
+
+/// The constant generator (`pure`/`return`): always yields a clone of
+/// `v`, consuming no randomness. Lets fixed dimensions flow through
+/// [`vec_of`]/[`matrix_of`].
+pub fn konst<T: Clone>(v: T) -> impl Gen<T> {
+    move |_: &mut Rng| v.clone()
+}
+
+/// Uniform choice from a fixed (cloneable) menu.
+pub fn one_of<T: Clone>(choices: Vec<T>) -> impl Gen<T> {
+    assert!(!choices.is_empty());
+    move |rng: &mut Rng| choices[rng.below(choices.len())].clone()
+}
+
+/// A vector whose length comes from `len` and whose items come from
+/// `item`.
+pub fn vec_of<T>(len: impl Gen<usize>, item: impl Gen<T>) -> impl Gen<Vec<T>> {
+    move |rng: &mut Rng| {
+        let n = len(rng);
+        (0..n).map(|_| item(rng)).collect()
+    }
+}
+
+/// A `rows × cols` matrix of `item` values (row-major `Vec<Vec<T>>`).
+pub fn matrix_of<T>(
+    rows: impl Gen<usize>,
+    cols: impl Gen<usize>,
+    item: impl Gen<T>,
+) -> impl Gen<Vec<Vec<T>>> {
+    move |rng: &mut Rng| {
+        let (r, c) = (rows(rng), cols(rng));
+        (0..r).map(|_| (0..c).map(|_| item(rng)).collect()).collect()
     }
 }
 
@@ -79,5 +151,41 @@ mod tests {
         assert!(check_eq(1, 1, "same").is_ok());
         let e = check_eq(1, 2, "diff").unwrap_err();
         assert!(e.contains("diff"));
+    }
+
+    #[test]
+    fn generators_compose_and_respect_bounds() {
+        let mut rng = Rng::new(3);
+        let g = matrix_of(usize_in(2, 4), usize_in(1, 3), i64_in(-5, 5));
+        for _ in 0..50 {
+            let m = g(&mut rng);
+            assert!((2..=4).contains(&m.len()));
+            for row in &m {
+                assert!((1..=3).contains(&row.len()));
+                assert!(row.iter().all(|v| (-5..=5).contains(v)));
+            }
+        }
+        let pick = one_of(vec![10usize, 20, 30]);
+        for _ in 0..30 {
+            assert!(matches!(pick(&mut rng), 10 | 20 | 30));
+        }
+        let fixed = matrix_of(konst(3usize), konst(2usize), flag(0.5));
+        let m = fixed(&mut rng);
+        assert_eq!(m.len(), 3);
+        assert!(m.iter().all(|r| r.len() == 2));
+        let lens = vec_of(usize_in(0, 2), flag(0.5));
+        for _ in 0..20 {
+            assert!(lens(&mut rng).len() <= 2);
+        }
+    }
+
+    #[test]
+    fn generators_deterministic_in_seed() {
+        let g = vec_of(usize_in(3, 6), i64_in(-100, 100));
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        for _ in 0..10 {
+            assert_eq!(g(&mut a), g(&mut b));
+        }
     }
 }

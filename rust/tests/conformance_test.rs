@@ -1,0 +1,114 @@
+//! Integration tests for the differential conformance harness (ISSUE 3):
+//! fuzzed netlist↔software cross-validation must be clean on healthy
+//! code, fault injection must be caught and shrunk to a reproducer
+//! naming the layer/neuron, and the whole run must be deterministic.
+
+use axmlp::axsum::{product_bits, ShiftPlan};
+use axmlp::conformance::{self, gen, ConformConfig, TopologyRange};
+use axmlp::fixed::QuantMlp;
+use axmlp::util::json::Json;
+use axmlp::util::rng::Rng;
+
+#[test]
+fn fuzz_run_is_clean_across_all_engines_and_plan_families() {
+    let cfg = ConformConfig {
+        cases: 64,
+        seed: 2023,
+        ..Default::default()
+    };
+    let report = conformance::run_fuzz(&cfg);
+    assert!(
+        report.ok(),
+        "fuzz found engine divergence:\n{}",
+        report
+            .mismatches
+            .iter()
+            .map(|m| m.summary())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert_eq!(report.cases, 64);
+    assert!(report.plan_counts.iter().all(|&c| c > 0));
+    // chunk-edge pattern counts were exercised (63..129 cycle)
+    assert!(report.patterns_total >= 64 * 63);
+}
+
+#[test]
+fn every_chunk_edge_pattern_count_agrees() {
+    // one fixed model × plan evaluated at every 64-pattern chunk edge —
+    // pins the packed simulator's boundary handling at the logit level
+    let mut rng = Rng::new(77);
+    let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+    let xs_all = gen::mixed_stimulus(&mut rng, &q, 129);
+    let (_, plan) = gen::random_plan(&mut rng, &q, &xs_all);
+    for n in [1usize, 63, 64, 65, 127, 128, 129] {
+        assert!(
+            conformance::check_case(&q, &plan, &xs_all[..n]).is_none(),
+            "divergence at {n} patterns"
+        );
+    }
+}
+
+#[test]
+fn corrupting_one_shift_fails_with_reproducer_naming_the_neuron() {
+    // acceptance criterion: deliberately corrupting one shift in a
+    // ShiftPlan makes the harness fail with a shrunk reproducer naming
+    // the layer/neuron
+    let q = QuantMlp {
+        w: vec![
+            vec![vec![11, -6, 4], vec![2, 9, -7]],
+            vec![vec![5, -3], vec![-2, 8]],
+        ],
+        b: vec![vec![4, -2], vec![0, 1]],
+        in_bits: 4,
+        w_scales: vec![1.0, 1.0],
+    };
+    let sw = ShiftPlan::exact(&q);
+    let mut hw = sw.clone();
+    // corrupt layer 1, neuron 0, product 1 (weight -3): zero it in HW
+    hw.shifts[1][0][1] = product_bits(8, -3) + 4; // >= any reachable width
+    let xs = gen::adversarial_stimulus(3, 4);
+    let failure =
+        conformance::check_case_pair(&q, &sw, &hw, &xs).expect("corruption must be detected");
+    let shrunk = conformance::shrink(&q, &sw, &hw, &xs, failure);
+    assert!(
+        shrunk.kept_neurons[1].contains(&0),
+        "reproducer must name L1 neuron 0: {}",
+        shrunk.summary()
+    );
+    assert_eq!(shrunk.xs.len(), 1, "stimulus minimized to one pattern");
+    assert!(shrunk.summary().contains("L1:"), "{}", shrunk.summary());
+    // the reproducer is machine-readable and round-trips through JSON
+    let j = shrunk.to_json();
+    let re = Json::parse(&j.pretty()).expect("reproducer is valid JSON");
+    assert!(re.get("layers").is_some());
+    assert!(re.req_str("failure").is_ok());
+}
+
+#[test]
+fn canary_is_part_of_the_instrument() {
+    let s = conformance::canary(7).expect("canary fires");
+    assert!(conformance::check_case_pair(&s.q, &s.plan_sw, &s.plan_hw, &s.xs).is_some());
+}
+
+#[test]
+fn fuzz_report_deterministic_and_seeds_replayable() {
+    let cfg = ConformConfig {
+        cases: 16,
+        seed: 5,
+        ..Default::default()
+    };
+    let a = conformance::run_fuzz(&cfg);
+    let b = conformance::run_fuzz(&cfg);
+    assert_eq!(a.cases, 16);
+    assert_eq!(a.plan_counts, b.plan_counts);
+    assert_eq!(a.patterns_total, b.patterns_total);
+    assert_eq!(a.failing, b.failing);
+    // replaying a case seed regenerates the same model
+    let mut r1 = Rng::new(conformance::case_seed(5, 3));
+    let mut r2 = Rng::new(conformance::case_seed(5, 3));
+    let q1 = gen::random_quant_mlp(&mut r1, &cfg.topology);
+    let q2 = gen::random_quant_mlp(&mut r2, &cfg.topology);
+    assert_eq!(q1.w, q2.w);
+    assert_eq!(q1.b, q2.b);
+}

@@ -337,3 +337,100 @@ fn select_for_threshold_monotone_in_budget() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Conformance-harness satellites (ISSUE 3): sweep semantics, signed
+// round-trips, product-width reference.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn netlist_sweep_is_semantics_preserving_on_fuzzed_netlists() {
+    // dead-gate elimination must never change any output bus value on
+    // any pattern — checked on raw randomly-built netlists (which carry
+    // plenty of dead logic) before and after `Netlist::sweep`.
+    use axmlp::conformance::gen::random_netlist;
+    forall_seeded(0x5EE9, 40, |rng| {
+        let pats = 70; // crosses the 64-pattern chunk edge
+        let (raw, inputs) = random_netlist(rng, pats);
+        let (swept, removed) = raw.sweep();
+        check(swept.n_gates() <= raw.n_gates(), "sweep never adds gates")?;
+        check(
+            raw.n_cells() == swept.n_cells() + removed,
+            "removed-count bookkeeping",
+        )?;
+        let before = simulate(&raw, &inputs, pats, false);
+        let after = simulate(&swept, &inputs, pats, false);
+        for bus in &raw.outputs {
+            check_eq(
+                before.outputs[&bus.name].clone(),
+                after.outputs[&bus.name].clone(),
+                &format!("bus {} diverged across sweep", bus.name),
+            )?;
+        }
+        // idempotence: sweeping a swept netlist removes nothing more
+        let (_, removed2) = swept.sweep();
+        check_eq(removed2, 0, "sweep idempotent")
+    });
+}
+
+#[test]
+fn as_signed_roundtrips_twos_complement_for_all_widths() {
+    use axmlp::sim::as_signed;
+    for w in 1usize..=16 {
+        let lo = -(1i64 << (w - 1));
+        let hi = (1i64 << (w - 1)) - 1;
+        // exhaustive for every width up to 16 bits
+        for v in lo..=hi {
+            let packed = (v as u64) & ((1u64 << w) - 1);
+            assert_eq!(as_signed(packed, w), v, "w={w} v={v}");
+        }
+        // high garbage bits beyond the bus width must be masked off
+        let mut rng = Rng::new(0xA5 ^ w as u64);
+        for _ in 0..200 {
+            let v = rng.range_i64(lo, hi);
+            let packed = (v as u64) & ((1u64 << w) - 1);
+            let garbage = rng.next_u64() << w;
+            assert_eq!(as_signed(packed | garbage, w), v, "w={w} v={v} (garbage)");
+        }
+    }
+}
+
+#[test]
+fn product_bits_matches_naive_i128_reference() {
+    use axmlp::axsum::product_bits;
+    // Eq. 5: n_i = $size(|w|) + $size(a). Reference recomputes both via
+    // an i128 bit-length loop, and checks sufficiency: 2^n_i bounds the
+    // largest reachable product (2^a_bits - 1) * |w|.
+    fn bitlen(mut v: i128) -> u32 {
+        let mut n = 0;
+        while v > 0 {
+            n += 1;
+            v >>= 1;
+        }
+        n
+    }
+    forall_seeded(0xB175, 500, |rng| {
+        let a_bits = 1 + rng.below(16);
+        let w = rng.range_i64(-(1 << 20), 1 << 20);
+        let got = product_bits(a_bits, w);
+        let want = if w == 0 {
+            0
+        } else {
+            bitlen(w.unsigned_abs() as i128) + a_bits as u32
+        };
+        check_eq(got, want, &format!("a_bits={a_bits} w={w}"))?;
+        if w != 0 {
+            let max_product = ((1i128 << a_bits) - 1) * (w.unsigned_abs() as i128);
+            check(
+                (1i128 << got) > max_product,
+                format!("2^{got} does not bound {max_product}"),
+            )?;
+            // and it is within one bit of minimal
+            check(
+                got <= bitlen(max_product) + 1,
+                format!("n_i={got} wasteful for max product {max_product}"),
+            )?;
+        }
+        Ok(())
+    });
+}

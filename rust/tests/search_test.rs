@@ -207,3 +207,47 @@ fn pipeline_genetic_strategy_never_worse_than_grid() {
         ga_out.q0_acc_train
     );
 }
+
+#[test]
+fn encode_grid_point_roundtrips_on_random_models() {
+    // ISSUE 3 satellite: the lossless-seeding claim from PR 2 holds on
+    // *random* topologies (1–3 layers, sparse zero weights, varying
+    // input precision), not just the shipped datasets: encoding a grid
+    // point and decoding the genome reproduces `derive_shifts`' plan
+    // bit-for-bit.
+    use axmlp::axsum::{derive_shifts, threshold_candidates};
+    use axmlp::conformance::gen::{self, TopologyRange};
+    use axmlp::util::prop::forall_seeded;
+
+    forall_seeded(0xE2C0DE, 30, |rng| {
+        let q = gen::random_quant_mlp(rng, &TopologyRange::default());
+        let xs = gen::mixed_stimulus(rng, &q, 40);
+        let sig = gen::significance_of(&q, &xs);
+        let space = SearchSpace::lossless(&q, &sig, 16);
+        for k in 1..=3u32 {
+            // thresholds from the grid's own candidate tables, plus the
+            // disable sentinel and a saturating value
+            let mut gs: Vec<Vec<f64>> = vec![vec![-1.0; q.n_layers()], vec![1e18; q.n_layers()]];
+            let mixed: Vec<f64> = (0..q.n_layers())
+                .map(|l| {
+                    let c = threshold_candidates(&sig, l, 6);
+                    c[rng.below(c.len())]
+                })
+                .collect();
+            gs.push(mixed);
+            for g in &gs {
+                let genome = space.encode_grid_point(k, g);
+                let decoded = space.decode(&q, &sig, &genome);
+                let derived = derive_shifts(&q, &sig, g, k);
+                if decoded != derived {
+                    return Err(format!(
+                        "genome decode diverged from derive_shifts (k={k}, g={g:?}, din={}, layers={})",
+                        q.din(),
+                        q.n_layers()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
