@@ -1,0 +1,106 @@
+//! Bench: bit-sliced forward engine vs the flattened per-sample forward
+//! (ISSUE 4 tentpole) — the accuracy-oracle side of the DSE inner loop.
+//!
+//! Emits `results/bench_bitslice.csv` and the machine-readable
+//! `BENCH_bitslice.json` (name, iters, ns/iter) tracked alongside
+//! `BENCH_dse.json` — see EXPERIMENTS.md §Perf ("Bit-sliced forward").
+//! The headline comparison is `flat_accuracy` vs `bitslice_accuracy` on
+//! identical data: both are bit-exact with `axsum::forward`, so the
+//! ratio is pure engine throughput.
+
+use axmlp::axsum::{
+    derive_shifts, mean_activations, significance, BitSliceEval, BitSliceScratch, FlatEval,
+    FlatScratch,
+};
+use axmlp::coordinator::{train_mlp0, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::dse::{
+    evaluate_design_packed, DseConfig, EngineScratch, EvalBackend, QuantData, SweepStimuli,
+};
+use axmlp::fixed::{quantize, quantize_inputs};
+use axmlp::sim::PackedStimulus;
+use axmlp::util::bench::{run, write_csv, write_json};
+
+fn main() {
+    let ctx = SharedContext::new();
+    let pcfg = PipelineConfig::default();
+    let ds = datasets::load("se", 2023).expect("dataset");
+    let q = quantize(&train_mlp0(&ds, &pcfg.train, 2023));
+    let xq_train = quantize_inputs(&ds.x_train);
+    let xq_test = quantize_inputs(&ds.x_test);
+    let data = QuantData {
+        x_train: &xq_train,
+        y_train: &ds.y_train,
+        x_test: &xq_test,
+        y_test: &ds.y_test,
+    };
+    let means = mean_activations(&q, &xq_train);
+    let sig = significance(&q, &means);
+    let g = vec![0.05, 0.05];
+    let plan = derive_shifts(&q, &sig, &g, 2);
+    let n_eval = xq_train.len().min(600);
+    let mut results = Vec::new();
+
+    // accuracy oracle head-to-head on identical capped data
+    let flat = FlatEval::new(&q, &plan);
+    let mut fs = FlatScratch::new();
+    results.push(run("flat_accuracy(se,600)", || {
+        std::hint::black_box(flat.accuracy_with(
+            &xq_train[..n_eval],
+            &ds.y_train[..n_eval],
+            &mut fs,
+        ));
+    }));
+
+    let packed_train = PackedStimulus::from_features(&xq_train[..n_eval], q.din(), q.in_bits)
+        .expect("train stimulus");
+    let bs = BitSliceEval::new(&q, &plan);
+    let mut bss = BitSliceScratch::new();
+    results.push(run("bitslice_accuracy(se,600)", || {
+        std::hint::black_box(bs.accuracy_packed(&packed_train, &ds.y_train[..n_eval], &mut bss));
+    }));
+
+    // full logit extraction (what the conformance engine pays)
+    let mut logits = Vec::new();
+    results.push(run("bitslice_forward_packed(se,600)", || {
+        bs.forward_packed(&packed_train, &mut logits, &mut bss);
+        std::hint::black_box(logits.len());
+    }));
+
+    // per-point plan compile (amortized once per design point)
+    results.push(run("bitslice_compile(se)", || {
+        std::hint::black_box(BitSliceEval::new(&q, &plan));
+    }));
+
+    // whole DSE point under each backend: accuracy + synthesis +
+    // simulation + cost estimate (the backend moves only the accuracy
+    // share, so this bounds the end-to-end sweep win)
+    for backend in [EvalBackend::Flat, EvalBackend::BitSlice] {
+        let cfg = DseConfig {
+            verify_circuit: false,
+            power_patterns: 128,
+            max_eval: 600,
+            backend,
+            ..Default::default()
+        };
+        let stim = SweepStimuli::prepare(&q, &data, &cfg).expect("stimulus");
+        let mut scratch = EngineScratch::new();
+        results.push(run(&format!("dse_point({})", backend.name()), || {
+            let plan = derive_shifts(&q, &sig, &g, 2);
+            std::hint::black_box(evaluate_design_packed(
+                &q,
+                plan,
+                2,
+                g.clone(),
+                &data,
+                &ctx.lib,
+                &cfg,
+                &stim,
+                &mut scratch,
+            ));
+        }));
+    }
+
+    write_csv("bench_bitslice.csv", &results);
+    write_json("BENCH_bitslice.json", &results);
+}

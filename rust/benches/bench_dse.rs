@@ -10,10 +10,10 @@ use axmlp::coordinator::{train_mlp0, PipelineConfig, SharedContext};
 use axmlp::datasets;
 use axmlp::dse::{
     evaluate_design, evaluate_design_packed, sweep, DseConfig, EngineScratch, QuantData,
+    SweepStimuli,
 };
 use axmlp::estimate::area_mm2;
 use axmlp::fixed::{quantize, quantize_inputs};
-use axmlp::sim::PackedStimulus;
 use axmlp::synth::{multiplier_netlist, MultStyle};
 use axmlp::util::bench::{run, write_csv, write_json};
 
@@ -48,11 +48,9 @@ fn main() {
         std::hint::black_box(evaluate_design(&q, plan, 2, g.clone(), &data, &ctx.lib, &cfg));
     }));
 
-    // sweep inner loop: per-sweep invariants (packed stimulus, worker
+    // sweep inner loop: per-sweep invariants (packed stimuli, worker
     // scratch) hoisted — what each point costs inside dse::sweep
-    let n_stim = xq_test.len().min(cfg.power_patterns);
-    let stimulus = &xq_test[..n_stim];
-    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let stim = SweepStimuli::prepare(&q, &data, &cfg).expect("stimulus");
     let mut scratch = EngineScratch::new();
     results.push(run("dse_point_prepared(seeds,k=2)", || {
         let plan = derive_shifts(&q, &sig, &g, 2);
@@ -64,8 +62,7 @@ fn main() {
             &data,
             &ctx.lib,
             &cfg,
-            &packed,
-            stimulus,
+            &stim,
             &mut scratch,
         ));
     }));

@@ -1,0 +1,772 @@
+//! Bit-sliced AxSum forward engine: 64 stimulus patterns per `u64` word.
+//!
+//! The software twin of `sim::simulate_packed`, one abstraction level up:
+//! instead of simulating the synthesized gate network, it evaluates the
+//! *integer model* (`axsum::neuron_value` semantics, bit-exact) with the
+//! same data layout the packed simulator uses — every value is stored as
+//! bit-planes, where plane `b` is a `u64` whose bit `p` is bit `b` of the
+//! value for stimulus pattern `p`. One ripple-carry pass over the planes
+//! therefore performs 64 forward passes at once, and the AxSum
+//! operations the paper's approximations are built from come almost for
+//! free at the word level:
+//!
+//!  * **shift-truncate** (`(p >> s) << s`, Armeniakos-style cross-layer
+//!    truncation) — zero the low `s` planes of the product;
+//!  * **constant multiply** (the bespoke MAC decomposition) — one
+//!    plane-shifted ripple-carry add per set bit of `|w|`;
+//!  * **ReLU / sign handling** — mask every plane with the complement of
+//!    the sign plane;
+//!  * **argmax** (class compare) — a word-level signed compare-and-select
+//!    tournament over the output planes.
+//!
+//! [`BitSliceEval`] mirrors [`FlatEval`](crate::axsum::FlatEval)'s
+//! plan-compilation API: build once per design point (all bus-width
+//! bookkeeping — the exact bound propagation `synth` applies — happens at
+//! compile time), then evaluate over thousands of samples through a
+//! caller-owned zero-alloc [`BitSliceScratch`]. The stimulus is the
+//! bit-transposed [`PackedStimulus`] the DSE already builds once per
+//! sweep for the netlist simulator, so the two engines literally share
+//! their input transpose.
+
+use crate::axsum::ShiftPlan;
+use crate::fixed::QuantMlp;
+use crate::sim::PackedStimulus;
+
+/// Bits needed to represent a non-negative value exactly (0 for 0).
+#[inline]
+fn bits_of(v: i64) -> u32 {
+    if v <= 0 {
+        0
+    } else {
+        64 - (v as u64).leading_zeros()
+    }
+}
+
+/// `acc[offset..] += addend` in bit-plane form (ripple-carry over the
+/// planes; each word operation advances 64 patterns at once). Plane
+/// widths are compiled from value bounds, so the final carry out of
+/// `acc`'s top plane is always zero for the unsigned accumulations.
+#[inline]
+fn add_shifted(acc: &mut [u64], addend: &[u64], offset: usize) {
+    let n = acc.len();
+    let mut carry = 0u64;
+    for (b, &ad) in addend.iter().enumerate() {
+        let i = offset + b;
+        debug_assert!(i < n, "bit-slice addend exceeds accumulator width");
+        let a = acc[i];
+        acc[i] = a ^ ad ^ carry;
+        carry = (a & ad) | (carry & (a ^ ad));
+    }
+    let mut i = offset + addend.len();
+    while carry != 0 && i < n {
+        let a = acc[i];
+        acc[i] = a ^ carry;
+        carry &= a;
+        i += 1;
+    }
+}
+
+/// `sp <- sp + !sn` over equal-width planes (mod 2^W): the ones'
+/// complement identity `sp - sn - 1`, exactly AxSum's split-sign merge.
+#[inline]
+fn merge_ones_complement(sp: &mut [u64], sn: &[u64]) {
+    let mut carry = 0u64;
+    for (a, &s) in sp.iter_mut().zip(sn) {
+        let b = !s;
+        let sum = *a ^ b ^ carry;
+        carry = (*a & b) | (carry & (*a ^ b));
+        *a = sum;
+    }
+}
+
+/// Broadcast a non-negative constant into bit planes (every pattern holds
+/// the same value).
+#[inline]
+fn broadcast(planes: &mut [u64], v: i64) {
+    debug_assert!(v >= 0);
+    for (b, p) in planes.iter_mut().enumerate() {
+        *p = if (v >> b) & 1 == 1 { u64::MAX } else { 0 };
+    }
+}
+
+/// One compiled product term: input plane span, decomposed constant, sign
+/// and truncation shift. Terms whose truncated product is constant zero
+/// are dropped at compile time (their `has_neg` effect is kept).
+#[derive(Clone, Debug)]
+struct BsTerm {
+    /// Plane offset of the input value in the layer's activation buffer.
+    off: usize,
+    /// Planes of the input value.
+    in_w: u32,
+    w_abs: u64,
+    neg: bool,
+    shift: u32,
+    /// Planes of the untruncated product (bound-derived).
+    prod_w: u32,
+}
+
+/// One compiled neuron: working width, split-sign initialisation and a
+/// term range into the layer's term table.
+#[derive(Clone, Debug)]
+struct BsNeuron {
+    /// Two's-complement working width in planes (covers `sp`, `sn` and
+    /// the merged result without overflow).
+    w: u32,
+    sp_init: i64,
+    sn_init: i64,
+    has_neg: bool,
+    t0: usize,
+    t1: usize,
+}
+
+#[derive(Clone, Debug)]
+struct BsLayer {
+    neurons: Vec<BsNeuron>,
+    terms: Vec<BsTerm>,
+    in_offsets: Vec<usize>,
+    in_widths: Vec<u32>,
+    in_planes: usize,
+    /// Destination plane layout: ReLU widths for hidden layers, the
+    /// signed working widths for the output layer.
+    dst_offsets: Vec<usize>,
+    dst_widths: Vec<u32>,
+    dst_planes: usize,
+    last: bool,
+}
+
+/// Caller-owned plane buffers for [`BitSliceEval`] — grown once, reused
+/// across design points (the sweep inner loop allocates nothing).
+#[derive(Default)]
+pub struct BitSliceScratch {
+    acts: Vec<u64>,
+    next: Vec<u64>,
+    sp: Vec<u64>,
+    sn: Vec<u64>,
+    prod: Vec<u64>,
+    out: Vec<u64>,
+    best: Vec<u64>,
+    idx: Vec<u64>,
+    ylanes: Vec<u64>,
+}
+
+impl BitSliceScratch {
+    pub fn new() -> BitSliceScratch {
+        BitSliceScratch::default()
+    }
+}
+
+/// A `(QuantMlp, ShiftPlan)` pair compiled for bit-sliced evaluation.
+/// Bit-exact with [`crate::axsum::forward`] and
+/// [`crate::axsum::FlatEval`] at logit level (pinned by the conformance
+/// harness, which runs it as a fifth differential engine).
+#[derive(Clone, Debug)]
+pub struct BitSliceEval {
+    layers: Vec<BsLayer>,
+    din: usize,
+    in_bits: usize,
+    dout: usize,
+    max_w: usize,
+    max_prod_w: usize,
+    /// Largest activation plane count across layers. Every hidden
+    /// destination buffer is some layer's input buffer, so this also
+    /// bounds the ping-pong `next` buffer.
+    max_in_planes: usize,
+    /// Signed compare width for the argmax tournament (max logit width + 1).
+    cmp_w: usize,
+    /// Planes of the predicted-class index (`ceil(log2 dout)`).
+    idx_planes: usize,
+}
+
+impl BitSliceEval {
+    /// Compile the plan: per-layer value bounds are propagated exactly as
+    /// `axsum::hidden_bounds` does (truncation caps products, the ones'
+    /// complement merge subtracts 1), sizing every accumulator to the
+    /// smallest plane count that provably cannot overflow.
+    pub fn new(q: &QuantMlp, plan: &ShiftPlan) -> BitSliceEval {
+        let n_layers = q.n_layers();
+        let mut in_hi: Vec<i64> = vec![(1i64 << q.in_bits) - 1; q.din()];
+        let mut layers: Vec<BsLayer> = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let last = l + 1 == n_layers;
+            let in_widths: Vec<u32> = in_hi.iter().map(|&h| bits_of(h)).collect();
+            let mut in_offsets = Vec::with_capacity(in_widths.len());
+            let mut acc = 0usize;
+            for &w in &in_widths {
+                in_offsets.push(acc);
+                acc += w as usize;
+            }
+            let in_planes = acc;
+
+            let mut terms: Vec<BsTerm> = Vec::new();
+            let mut neurons: Vec<BsNeuron> = Vec::with_capacity(q.w[l].len());
+            let mut next_hi: Vec<i64> = Vec::with_capacity(q.w[l].len());
+            for (j, row) in q.w[l].iter().enumerate() {
+                let bias = q.b[l][j];
+                let mut sp_hi: i64 = bias.max(0);
+                let mut sn_hi: i64 = (-bias).max(0);
+                let mut has_neg = bias < 0;
+                let t0 = terms.len();
+                for (i, &w) in row.iter().enumerate() {
+                    if w == 0 {
+                        continue;
+                    }
+                    if w < 0 {
+                        has_neg = true;
+                    }
+                    let s = plan.shifts[l][j][i];
+                    let w_abs = w.unsigned_abs();
+                    let p_hi = in_hi[i]
+                        .checked_mul(w_abs as i64)
+                        .expect("bit-slice product bound overflows i64");
+                    let prod_w = bits_of(p_hi);
+                    let t_hi = if s >= 63 { 0 } else { (p_hi >> s) << s };
+                    if w > 0 {
+                        sp_hi = sp_hi.checked_add(t_hi).expect("bit-slice sum bound overflow");
+                    } else {
+                        sn_hi = sn_hi.checked_add(t_hi).expect("bit-slice sum bound overflow");
+                    }
+                    if t_hi == 0 {
+                        // truncated to constant zero (or a zero-bound
+                        // input): no planes, but `has_neg` above still
+                        // mirrors neuron_value's bookkeeping
+                        continue;
+                    }
+                    terms.push(BsTerm {
+                        off: in_offsets[i],
+                        in_w: in_widths[i],
+                        w_abs,
+                        neg: w < 0,
+                        shift: s,
+                        prod_w,
+                    });
+                }
+                let w_bits = 1 + bits_of(sp_hi).max(bits_of(sn_hi));
+                assert!(
+                    w_bits <= 63,
+                    "bit-sliced accumulator needs {w_bits} planes (max 63)"
+                );
+                neurons.push(BsNeuron {
+                    w: w_bits,
+                    sp_init: bias.max(0),
+                    sn_init: (-bias).max(0),
+                    has_neg,
+                    t0,
+                    t1: terms.len(),
+                });
+                let hid = if has_neg { sp_hi - 1 } else { sp_hi };
+                next_hi.push(hid.max(0));
+            }
+
+            let dst_widths: Vec<u32> = if last {
+                neurons.iter().map(|n| n.w).collect()
+            } else {
+                next_hi.iter().map(|&h| bits_of(h)).collect()
+            };
+            let mut dst_offsets = Vec::with_capacity(dst_widths.len());
+            let mut acc = 0usize;
+            for &w in &dst_widths {
+                dst_offsets.push(acc);
+                acc += w as usize;
+            }
+            let dst_planes = acc;
+
+            layers.push(BsLayer {
+                neurons,
+                terms,
+                in_offsets,
+                in_widths,
+                in_planes,
+                dst_offsets,
+                dst_widths,
+                dst_planes,
+                last,
+            });
+            in_hi = next_hi;
+        }
+
+        let max_w = layers
+            .iter()
+            .flat_map(|l| l.neurons.iter())
+            .map(|n| n.w as usize)
+            .max()
+            .unwrap_or(1);
+        let max_prod_w = layers
+            .iter()
+            .flat_map(|l| l.terms.iter())
+            .map(|t| t.prod_w as usize)
+            .max()
+            .unwrap_or(1);
+        let max_in_planes = layers.iter().map(|l| l.in_planes).max().unwrap_or(0);
+        let out_layer = layers.last().expect("model has at least one layer");
+        let cmp_w = out_layer
+            .dst_widths
+            .iter()
+            .map(|&w| w as usize)
+            .max()
+            .unwrap_or(1)
+            + 1;
+        let dout = q.dout();
+        let idx_planes = if dout <= 1 {
+            0
+        } else {
+            bits_of((dout - 1) as i64) as usize
+        };
+        BitSliceEval {
+            din: q.din(),
+            in_bits: q.in_bits,
+            dout,
+            max_w,
+            max_prod_w,
+            max_in_planes,
+            cmp_w,
+            idx_planes,
+            layers,
+        }
+    }
+
+    /// Grow the scratch buffers to this model's compiled plane counts
+    /// (no-op once warm — buffers never shrink).
+    fn prepare(&self, s: &mut BitSliceScratch) {
+        let grow = |v: &mut Vec<u64>, n: usize| {
+            if v.len() < n {
+                v.resize(n, 0);
+            }
+        };
+        // acts and next swap roles across layers (and stay swapped
+        // across chunks), so both need the layer-wide maximum
+        grow(&mut s.acts, self.max_in_planes);
+        grow(&mut s.next, self.max_in_planes);
+        grow(&mut s.sp, self.max_w);
+        grow(&mut s.sn, self.max_w);
+        grow(&mut s.prod, self.max_prod_w);
+        grow(&mut s.out, self.layers.last().map_or(0, |l| l.dst_planes));
+        grow(&mut s.best, self.cmp_w);
+        grow(&mut s.idx, self.idx_planes);
+    }
+
+    /// Evaluate one 64-pattern chunk: input planes come straight from the
+    /// pre-transposed stimulus, the output layer's signed planes are left
+    /// in `s.out` (layout per the compiled `dst_offsets`/`dst_widths`).
+    fn forward_chunk(&self, stim: &PackedStimulus, chunk: usize, s: &mut BitSliceScratch) {
+        let l0 = &self.layers[0];
+        for i in 0..self.din {
+            let off = l0.in_offsets[i];
+            for b in 0..l0.in_widths[i] as usize {
+                s.acts[off + b] = stim.feature_lane(i, b, chunk);
+            }
+        }
+        for layer in &self.layers {
+            for (j, n) in layer.neurons.iter().enumerate() {
+                let w = n.w as usize;
+                broadcast(&mut s.sp[..w], n.sp_init);
+                if n.has_neg {
+                    broadcast(&mut s.sn[..w], n.sn_init);
+                }
+                for t in &layer.terms[n.t0..n.t1] {
+                    let pw = t.prod_w as usize;
+                    s.prod[..pw].fill(0);
+                    // constant multiply: one shifted add per set bit of |w|
+                    let mut wv = t.w_abs;
+                    while wv != 0 {
+                        let k = wv.trailing_zeros() as usize;
+                        let a_lo = t.off;
+                        let a_hi = t.off + t.in_w as usize;
+                        // (split borrows: prod and acts are disjoint fields)
+                        let (prod, acts) = (&mut s.prod, &s.acts);
+                        add_shifted(&mut prod[..pw], &acts[a_lo..a_hi], k);
+                        wv &= wv - 1;
+                    }
+                    // shift-truncate: zero the low `shift` planes
+                    s.prod[..(t.shift as usize).min(pw)].fill(0);
+                    if t.neg {
+                        add_shifted(&mut s.sn[..w], &s.prod[..pw], 0);
+                    } else {
+                        add_shifted(&mut s.sp[..w], &s.prod[..pw], 0);
+                    }
+                }
+                if n.has_neg {
+                    merge_ones_complement(&mut s.sp[..w], &s.sn[..w]);
+                }
+                let dw = layer.dst_widths[j] as usize;
+                let doff = layer.dst_offsets[j];
+                if layer.last {
+                    s.out[doff..doff + dw].copy_from_slice(&s.sp[..dw]);
+                } else {
+                    // ReLU: clear every plane where the sign plane is set
+                    let keep = !s.sp[w - 1];
+                    for b in 0..dw {
+                        s.next[doff + b] = s.sp[b] & keep;
+                    }
+                }
+            }
+            if !layer.last {
+                std::mem::swap(&mut s.acts, &mut s.next);
+            }
+        }
+    }
+
+    /// Integer logits for every stimulus pattern, `[pattern][dout]`
+    /// row-major — the bit-sliced analogue of
+    /// [`FlatEval::forward_batch`](crate::axsum::FlatEval::forward_batch).
+    pub fn forward_packed(
+        &self,
+        stim: &PackedStimulus,
+        logits: &mut Vec<i64>,
+        s: &mut BitSliceScratch,
+    ) {
+        self.prepare(s);
+        let patterns = stim.patterns();
+        logits.clear();
+        logits.resize(patterns * self.dout, 0);
+        let last = self.layers.last().expect("at least one layer");
+        for chunk in 0..patterns.div_ceil(64) {
+            self.forward_chunk(stim, chunk, s);
+            let base = chunk * 64;
+            let in_chunk = (patterns - base).min(64);
+            for j in 0..self.dout {
+                let w = last.dst_widths[j] as usize;
+                let off = last.dst_offsets[j];
+                let sign = s.out[off + w - 1];
+                for p in 0..in_chunk {
+                    let mut v: i64 = 0;
+                    for b in 0..w {
+                        v |= (((s.out[off + b] >> p) & 1) as i64) << b;
+                    }
+                    if (sign >> p) & 1 == 1 {
+                        // two's-complement sign extension (bitwise: safe
+                        // up to the full 63-plane width)
+                        v |= -1i64 << w;
+                    }
+                    logits[(base + p) * self.dout + j] = v;
+                }
+            }
+        }
+    }
+
+    /// Classification accuracy without ever leaving the sliced domain:
+    /// the argmax is a word-level signed compare-and-select tournament
+    /// (strict `>` update — identical tie-breaking to
+    /// `util::stats::argmax_i64`), and the label comparison is a plane
+    /// XNOR + popcount. `ys.len()` must equal `stim.patterns()`.
+    pub fn accuracy_packed(
+        &self,
+        stim: &PackedStimulus,
+        ys: &[usize],
+        s: &mut BitSliceScratch,
+    ) -> f64 {
+        if ys.is_empty() {
+            return 0.0;
+        }
+        self.count_correct(stim, ys, s) as f64 / ys.len() as f64
+    }
+
+    /// Count of patterns whose word-level argmax equals the label.
+    fn count_correct(&self, stim: &PackedStimulus, ys: &[usize], s: &mut BitSliceScratch) -> u64 {
+        assert_eq!(
+            ys.len(),
+            stim.patterns(),
+            "label count must match packed stimulus patterns"
+        );
+        self.prepare(s);
+        let max_y = ys.iter().copied().max().unwrap_or(0);
+        let ky = bits_of(max_y as i64) as usize;
+        if s.ylanes.len() < ky {
+            s.ylanes.resize(ky, 0);
+        }
+        let last = self.layers.last().expect("at least one layer");
+        let patterns = ys.len();
+        let mut ok_total = 0u64;
+        for chunk in 0..patterns.div_ceil(64) {
+            self.forward_chunk(stim, chunk, s);
+            let base = chunk * 64;
+            let in_chunk = (patterns - base).min(64);
+
+            // labels, bit-transposed for this chunk
+            for k in 0..ky {
+                let mut word = 0u64;
+                for (p, &y) in ys[base..base + in_chunk].iter().enumerate() {
+                    if (y >> k) & 1 == 1 {
+                        word |= 1u64 << p;
+                    }
+                }
+                s.ylanes[k] = word;
+            }
+
+            // argmax tournament: best starts at logit 0 / index 0
+            let w0 = last.dst_widths[0] as usize;
+            let off0 = last.dst_offsets[0];
+            let sign0 = s.out[off0 + w0 - 1];
+            for b in 0..self.cmp_w {
+                s.best[b] = if b < w0 { s.out[off0 + b] } else { sign0 };
+            }
+            s.idx[..self.idx_planes].fill(0);
+            for j in 1..self.dout {
+                let wj = last.dst_widths[j] as usize;
+                let offj = last.dst_offsets[j];
+                let signj = s.out[offj + wj - 1];
+                // m: patterns where best < cand (strict), via the sign of
+                // best - cand = best + !cand + 1 in cmp_w planes
+                let mut carry = u64::MAX;
+                let mut sum = 0u64;
+                for b in 0..self.cmp_w {
+                    let a = s.best[b];
+                    let c = !(if b < wj { s.out[offj + b] } else { signj });
+                    sum = a ^ c ^ carry;
+                    carry = (a & c) | (carry & (a ^ c));
+                }
+                let m = sum;
+                if m == 0 {
+                    continue;
+                }
+                for b in 0..self.cmp_w {
+                    let c = if b < wj { s.out[offj + b] } else { signj };
+                    s.best[b] = (m & c) | (!m & s.best[b]);
+                }
+                for (k, plane) in s.idx[..self.idx_planes].iter_mut().enumerate() {
+                    let jbit = if (j >> k) & 1 == 1 { u64::MAX } else { 0 };
+                    *plane = (m & jbit) | (!m & *plane);
+                }
+            }
+
+            // predicted == label (planes beyond either width compare as 0,
+            // so out-of-range labels count as misses instead of aliasing)
+            let mut eq = u64::MAX;
+            for k in 0..ky.max(self.idx_planes) {
+                let a = if k < self.idx_planes { s.idx[k] } else { 0 };
+                let b = if k < ky { s.ylanes[k] } else { 0 };
+                eq &= !(a ^ b);
+            }
+            let mask = if in_chunk == 64 {
+                u64::MAX
+            } else {
+                (1u64 << in_chunk) - 1
+            };
+            ok_total += (eq & mask).count_ones() as u64;
+        }
+        ok_total
+    }
+
+    /// Convenience wrapper over [`Self::forward_packed`]: packs `xs`
+    /// (validated against the model's `din`) per call. Sweep-shaped
+    /// callers should pack once and reuse the packed stimulus.
+    pub fn forward_batch(&self, xs: &[Vec<i64>], logits: &mut Vec<i64>, s: &mut BitSliceScratch) {
+        logits.clear();
+        if xs.is_empty() {
+            return;
+        }
+        let stim = PackedStimulus::from_features(xs, self.din, self.in_bits)
+            .expect("bit-slice stimulus matches model din");
+        self.forward_packed(&stim, logits, s);
+    }
+
+    /// Convenience wrapper over [`Self::accuracy_packed`] (packs per
+    /// call). Mirrors `FlatEval::accuracy_with` exactly: samples beyond
+    /// the label count score as misses (zip truncation) and the
+    /// denominator stays `xs.len()`.
+    pub fn accuracy_with(&self, xs: &[Vec<i64>], ys: &[usize], s: &mut BitSliceScratch) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let n = xs.len().min(ys.len());
+        if n == 0 {
+            return 0.0;
+        }
+        let stim = PackedStimulus::from_features(&xs[..n], self.din, self.in_bits)
+            .expect("bit-slice stimulus matches model din");
+        self.count_correct(&stim, &ys[..n], s) as f64 / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axsum::{self, FlatEval, FlatScratch};
+    use crate::util::rng::Rng;
+    use crate::util::stats::argmax_i64;
+
+    fn rand_q(rng: &mut Rng, din: usize, hidden: usize, dout: usize) -> QuantMlp {
+        QuantMlp {
+            w: vec![
+                (0..hidden)
+                    .map(|_| (0..din).map(|_| rng.range_i64(-127, 127)).collect())
+                    .collect(),
+                (0..dout)
+                    .map(|_| (0..hidden).map(|_| rng.range_i64(-127, 127)).collect())
+                    .collect(),
+            ],
+            b: vec![
+                (0..hidden).map(|_| rng.range_i64(-80, 80)).collect(),
+                (0..dout).map(|_| rng.range_i64(-80, 80)).collect(),
+            ],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        }
+    }
+
+    fn rand_plan(rng: &mut Rng, q: &QuantMlp) -> ShiftPlan {
+        let mut plan = ShiftPlan::exact(q);
+        for layer in plan.shifts.iter_mut() {
+            for row in layer.iter_mut() {
+                for s in row.iter_mut() {
+                    *s = rng.below(9) as u32;
+                }
+            }
+        }
+        plan
+    }
+
+    #[test]
+    fn add_shifted_matches_integer_add() {
+        // 64 independent lanes of a + (b << k) checked against i64 math
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            // widths chosen so addend << k always fits inside acc's planes
+            let wa = 8 + rng.below(5);
+            let wb = 1 + rng.below(4);
+            let k = rng.below(4);
+            let a: Vec<u64> = (0..64).map(|_| rng.next_u64() % (1u64 << (wa - 2))).collect();
+            let b: Vec<u64> = (0..64).map(|_| rng.next_u64() % (1u64 << wb)).collect();
+            // transpose into planes
+            let mut acc = vec![0u64; wa];
+            let mut add = vec![0u64; wb];
+            for p in 0..64 {
+                for (bit, plane) in acc.iter_mut().enumerate() {
+                    *plane |= ((a[p] >> bit) & 1) << p;
+                }
+                for (bit, plane) in add.iter_mut().enumerate() {
+                    *plane |= ((b[p] >> bit) & 1) << p;
+                }
+            }
+            add_shifted(&mut acc, &add, k);
+            for p in 0..64 {
+                let want = (a[p] + (b[p] << k)) & ((1u64 << wa) - 1);
+                let mut got = 0u64;
+                for (bit, plane) in acc.iter().enumerate() {
+                    got |= ((plane >> p) & 1) << bit;
+                }
+                assert_eq!(got, want, "lane {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn logits_bit_match_flat_eval_across_chunk_edges() {
+        let mut rng = Rng::new(91);
+        for total in [1usize, 40, 63, 64, 65, 129] {
+            let q = rand_q(&mut rng, 5, 4, 3);
+            let plan = rand_plan(&mut rng, &q);
+            let xs: Vec<Vec<i64>> = (0..total)
+                .map(|_| (0..5).map(|_| rng.range_i64(0, 15)).collect())
+                .collect();
+            let flat = FlatEval::new(&q, &plan);
+            let mut fs = FlatScratch::new();
+            let mut want = Vec::new();
+            flat.forward_batch(&xs, &mut want, &mut fs);
+            let bs = BitSliceEval::new(&q, &plan);
+            let mut s = BitSliceScratch::new();
+            let mut got = Vec::new();
+            bs.forward_batch(&xs, &mut got, &mut s);
+            assert_eq!(got, want, "{total} patterns");
+        }
+    }
+
+    #[test]
+    fn all_saturated_and_all_zero_inputs() {
+        let mut rng = Rng::new(17);
+        let q = rand_q(&mut rng, 6, 3, 3);
+        let plan = rand_plan(&mut rng, &q);
+        let xs = vec![vec![15i64; 6], vec![0i64; 6], vec![15i64; 6]];
+        let mut scratch = Vec::new();
+        let bs = BitSliceEval::new(&q, &plan);
+        let mut s = BitSliceScratch::new();
+        let mut got = Vec::new();
+        bs.forward_batch(&xs, &mut got, &mut s);
+        for (p, x) in xs.iter().enumerate() {
+            let want = axsum::forward(&q, &plan, x, &mut scratch);
+            assert_eq!(&got[p * 3..(p + 1) * 3], &want[..]);
+        }
+    }
+
+    #[test]
+    fn sliced_argmax_accuracy_matches_flat_including_out_of_range_labels() {
+        let mut rng = Rng::new(23);
+        for _ in 0..8 {
+            let q = rand_q(&mut rng, 4, 3, 3);
+            let plan = rand_plan(&mut rng, &q);
+            let xs: Vec<Vec<i64>> = (0..130)
+                .map(|_| (0..4).map(|_| rng.range_i64(0, 15)).collect())
+                .collect();
+            // labels include values ≥ dout: must count as misses, not
+            // alias into the low index planes
+            let ys: Vec<usize> = (0..130).map(|_| rng.below(5)).collect();
+            let flat = FlatEval::new(&q, &plan);
+            let mut fs = FlatScratch::new();
+            let want = flat.accuracy_with(&xs, &ys, &mut fs);
+            let bs = BitSliceEval::new(&q, &plan);
+            let mut s = BitSliceScratch::new();
+            assert_eq!(bs.accuracy_with(&xs, &ys, &mut s), want);
+        }
+    }
+
+    #[test]
+    fn single_output_and_single_layer_models() {
+        let mut rng = Rng::new(5);
+        // 1-layer perceptron, dout = 1 (idx_planes = 0)
+        let q = QuantMlp {
+            w: vec![vec![vec![7, -3, 0, 12]]],
+            b: vec![vec![-5]],
+            in_bits: 4,
+            w_scales: vec![1.0],
+        };
+        let plan = rand_plan(&mut rng, &q);
+        let xs: Vec<Vec<i64>> = (0..70)
+            .map(|_| (0..4).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let bs = BitSliceEval::new(&q, &plan);
+        let mut s = BitSliceScratch::new();
+        let mut got = Vec::new();
+        bs.forward_batch(&xs, &mut got, &mut s);
+        let mut scratch = Vec::new();
+        for (p, x) in xs.iter().enumerate() {
+            let want = axsum::forward(&q, &plan, x, &mut scratch);
+            assert_eq!(got[p], want[0]);
+        }
+        // argmax over one class is always 0
+        let ys = vec![0usize; xs.len()];
+        assert_eq!(bs.accuracy_with(&xs, &ys, &mut s), 1.0);
+        let ys_bad = vec![1usize; xs.len()];
+        assert_eq!(bs.accuracy_with(&xs, &ys_bad, &mut s), 0.0);
+    }
+
+    #[test]
+    fn scratch_reuse_across_models_is_clean() {
+        // one scratch across models of different sizes must not leak
+        // planes between evaluations
+        let mut rng = Rng::new(41);
+        let mut s = BitSliceScratch::new();
+        for (din, hidden, dout) in [(7, 5, 4), (2, 1, 2), (5, 3, 3)] {
+            let q = rand_q(&mut rng, din, hidden, dout);
+            let plan = rand_plan(&mut rng, &q);
+            let xs: Vec<Vec<i64>> = (0..65)
+                .map(|_| (0..din).map(|_| rng.range_i64(0, 15)).collect())
+                .collect();
+            let flat = FlatEval::new(&q, &plan);
+            let mut fs = FlatScratch::new();
+            let mut want = Vec::new();
+            flat.forward_batch(&xs, &mut want, &mut fs);
+            let bs = BitSliceEval::new(&q, &plan);
+            let mut got = Vec::new();
+            bs.forward_batch(&xs, &mut got, &mut s);
+            assert_eq!(got, want);
+            // prediction parity per pattern as well
+            let ys: Vec<usize> = xs
+                .iter()
+                .map(|x| {
+                    let l = flat.forward_into(x, &mut fs);
+                    argmax_i64(l)
+                })
+                .collect();
+            assert_eq!(bs.accuracy_with(&xs, &ys, &mut s), 1.0);
+        }
+    }
+}

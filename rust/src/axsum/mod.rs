@@ -10,9 +10,37 @@
 //!    products with `G_i ≤ G` (Eq. 5), with the exact bus-width
 //!    bookkeeping the bespoke circuit generator applies.
 
+pub mod bitslice;
+
+pub use bitslice::{BitSliceEval, BitSliceScratch};
+
 use crate::fixed::QuantMlp;
 use crate::synth::arith::ubits;
 use crate::util::stats::argmax_i64;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Count of NaN significance entries dropped before threshold-level
+/// selection (a NaN can only come from a degenerate activation capture —
+/// worth surfacing, but it must never panic a multi-hour sweep). Infinite
+/// entries are the documented "no hardware" sentinel and are dropped
+/// silently.
+static NAN_SIG_DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// Total NaN significance values dropped so far (process-wide; sweeps
+/// can snapshot before/after to report per-run counts).
+pub fn nan_sig_dropped() -> u64 {
+    NAN_SIG_DROPPED.load(Ordering::Relaxed)
+}
+
+/// Retain only finite significance values, counting dropped NaNs into
+/// the process-wide warning counter.
+fn keep_finite(v: &f64) -> bool {
+    if v.is_nan() {
+        NAN_SIG_DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+    v.is_finite()
+}
 
 /// Truncation plan: `shifts[layer][out][in]`, 0 = exact product.
 #[derive(Clone, Debug, PartialEq)]
@@ -396,9 +424,11 @@ pub fn threshold_candidates(sig: &Significance, layer: usize, max_levels: usize)
         .iter()
         .flat_map(|row| row.iter())
         .copied()
-        .filter(|v| v.is_finite())
+        .filter(keep_finite)
         .collect();
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a stray NaN that slipped past the filter must never be
+    // able to panic the whole sweep via partial_cmp().unwrap()
+    vals.sort_by(f64::total_cmp);
     vals.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
     let mut out = vec![-1.0f64];
     if vals.is_empty() {
@@ -432,9 +462,9 @@ pub fn neuron_threshold_levels(
     let mut vals: Vec<f64> = sig.g[layer][row]
         .iter()
         .copied()
-        .filter(|v| v.is_finite())
+        .filter(keep_finite)
         .collect();
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.sort_by(f64::total_cmp);
     // exact dedup only: near-but-not-equal values must stay distinct so
     // thresholding at a table value reproduces Eq. 5's `G_i ≤ G` set
     // exactly (the lossless grid-genome encoding depends on it)
@@ -660,6 +690,23 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn nan_significance_is_dropped_with_warning_not_a_panic() {
+        // regression: a NaN significance entry used to reach
+        // `sort_by(partial_cmp().unwrap())` and panic the whole sweep
+        let sig = Significance {
+            g: vec![vec![vec![0.5, f64::NAN, 0.25, f64::INFINITY, f64::NAN]]],
+        };
+        let before = nan_sig_dropped();
+        let cands = threshold_candidates(&sig, 0, 8);
+        assert_eq!(cands, vec![-1.0, 0.25, 0.5]);
+        let lv = neuron_threshold_levels(&sig, 0, 0, 8);
+        assert_eq!(lv, vec![0.25, 0.5]);
+        // ≥, not ==: the counter is process-wide and other parallel
+        // tests may legitimately drop NaNs of their own
+        assert!(nan_sig_dropped() - before >= 4, "2 NaNs per selection call");
     }
 
     #[test]

@@ -61,7 +61,9 @@ pub fn weight_approximate(
             }
         }
     }
-    moves.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    // total_cmp: a NaN saving (degenerate LUT entry) must sort
+    // deterministically instead of panicking the baseline sweep
+    moves.sort_by(|x, y| y.0.total_cmp(&x.0));
     for (_saving, l, j, i, cand) in moves {
         let old = q.w[l][j][i];
         q.w[l][j][i] = cand;

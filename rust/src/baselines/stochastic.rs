@@ -101,20 +101,23 @@ impl Stream {
 }
 
 /// Scaled MUX-tree sum of n streams: decodes to (Σ v_i) / 2^ceil(log2 n).
+///
+/// Odd level widths carry the unpaired stream through a MUX against a
+/// zero-valued stream, so it is halved exactly like every paired stream
+/// and the scale bookkeeping stays uniform (one `scale *= 2` per level;
+/// at most one zero pad per level instead of padding the whole input to
+/// a power of two). The old `expect("power-of-two tree")` panic path is
+/// gone: any stream count, including odd ones, reduces cleanly.
 pub fn mux_tree_sum(mut streams: Vec<Stream>, len: usize, rng: &mut Rng) -> (Stream, usize) {
     assert!(!streams.is_empty());
-    // pad to a power of two with zero-valued streams (bipolar 0 adds
-    // nothing to the sum) — exactly what the hardware tree does
-    let target = streams.len().next_power_of_two();
-    while streams.len() < target {
-        streams.push(Stream::encode(0.0, len, rng));
-    }
     let mut scale = 1usize;
     while streams.len() > 1 {
-        let mut next = Vec::with_capacity(streams.len() / 2);
+        let mut next = Vec::with_capacity(streams.len().div_ceil(2));
         let mut it = streams.into_iter();
         while let Some(a) = it.next() {
-            let b = it.next().expect("power-of-two tree");
+            // bipolar 0 adds nothing to the sum — the zero pad is what
+            // the hardware tree wires the dangling MUX input to
+            let b = it.next().unwrap_or_else(|| Stream::encode(0.0, len, rng));
             let sel = Stream::encode(0.0, len, rng); // P(1)=0.5
             next.push(a.mux(&b, &sel));
         }
@@ -295,6 +298,32 @@ mod tests {
         let got = s.decode(16384) * scale as f64;
         let want: f64 = vals.iter().sum();
         assert!((got - want).abs() < 0.15, "got {got} want {want}");
+    }
+
+    #[test]
+    fn mux_tree_handles_odd_stream_counts() {
+        // regression: a 3-input tree must reduce without the old
+        // power-of-two expect, carrying the unpaired stream with uniform
+        // scaling (scale = 2^ceil(log2 3) = 4)
+        let mut rng = Rng::new(7);
+        let vals = [0.4, -0.3, 0.6];
+        let streams: Vec<Stream> = vals
+            .iter()
+            .map(|&v| Stream::encode(v, 16384, &mut rng))
+            .collect();
+        let (s, scale) = mux_tree_sum(streams, 16384, &mut rng);
+        assert_eq!(scale, 4);
+        let got = s.decode(16384) * scale as f64;
+        let want: f64 = vals.iter().sum();
+        assert!((got - want).abs() < 0.15, "got {got} want {want}");
+        // every count 1..=9 reduces cleanly with the expected scale
+        for n in 1usize..=9 {
+            let streams: Vec<Stream> = (0..n)
+                .map(|_| Stream::encode(0.25, 1024, &mut rng))
+                .collect();
+            let (_, scale) = mux_tree_sum(streams, 1024, &mut rng);
+            assert_eq!(scale, n.next_power_of_two(), "n={n}");
+        }
     }
 
     #[test]

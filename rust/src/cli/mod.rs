@@ -103,6 +103,9 @@ FLAGS:
   --seed N               experiment seed (default 2023)
   --quick                reduced sweep sizes for fast runs
   --backend pjrt|rust    retraining backend (default pjrt, falls back)
+  --engine flat|bitslice DSE accuracy engine: per-sample flattened forward
+                         or the bit-sliced 64-patterns-per-word engine
+                         (bit-exact; see EXPERIMENTS.md §Perf)
   --threads N            worker threads (default: cores; AXMLP_THREADS)
   --dataset KEY          (verilog) dataset key, default ma
   --threshold T          (verilog) accuracy-loss budget, default 0.01

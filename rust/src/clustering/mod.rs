@@ -91,7 +91,7 @@ pub fn cluster_coefficients(lut: &AreaLut, k: usize, seed: u64) -> Clusters {
     // deterministic quantile init (stable across area scales, unlike
     // k-means++ sampling)
     let mut sorted = xs.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let mut centroids: Vec<f64> = (0..k)
         .map(|c| sorted[(2 * c + 1) * (n - 1) / (2 * k)])
         .collect();
@@ -138,7 +138,7 @@ pub fn cluster_coefficients(lut: &AreaLut, k: usize, seed: u64) -> Clusters {
 
     // renumber by ascending centroid
     let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by(|&a, &b| centroids[a].partial_cmp(&centroids[b]).unwrap());
+    order.sort_by(|&a, &b| centroids[a].total_cmp(&centroids[b]));
     let mut rank = vec![0usize; k];
     for (new, &old) in order.iter().enumerate() {
         rank[old] = new;

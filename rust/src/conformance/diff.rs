@@ -7,19 +7,22 @@
 //!
 //! 1. `axsum::forward` — the reference integer model (per-sample logits);
 //! 2. `axsum::FlatEval::forward_batch` — the DSE's flattened hot path;
-//! 3. `synth::build_mlp_ref` → `sim::simulate_packed` — the gate-level
+//! 3. `axsum::BitSliceEval` — the bit-sliced word-parallel forward (64
+//!    patterns per `u64`), compared at logit level;
+//! 4. `synth::build_mlp_ref` → `sim::simulate_packed` — the gate-level
 //!    circuit the DSE costs (class output, argmax semantics);
-//! 4. `synth::build_mlp_logits` → `sim::simulate_packed` — the same
+//! 5. `synth::build_mlp_logits` → `sim::simulate_packed` — the same
 //!    netlist family with the output-layer sums exposed, so the
 //!    hardware/software comparison happens at *logit* level, not just at
 //!    the argmax (which can mask per-neuron divergence).
 //!
-//! For fault-injection self-tests ([`check_case_pair`]) the netlist can
-//! be built from a *different* plan than the software model — corrupting
-//! one shift on one side must surface as a mismatch, which is how the
-//! harness proves it would catch a real software/hardware divergence.
+//! For fault-injection self-tests ([`check_case_all`]) the netlist — or
+//! the bit-sliced engine — can be built from a *different* plan than the
+//! reference model: corrupting one shift on one side must surface as a
+//! mismatch, which is how the harness proves it would catch a real
+//! divergence in either direction.
 
-use crate::axsum::{self, FlatEval, FlatScratch, ShiftPlan};
+use crate::axsum::{self, BitSliceEval, BitSliceScratch, FlatEval, FlatScratch, ShiftPlan};
 use crate::fixed::QuantMlp;
 use crate::sim::{as_signed, simulate_packed, PackedStimulus, SimScratch};
 use crate::synth::{build_mlp_logits, build_mlp_ref, MlpSpecRef, NeuronStyle};
@@ -63,16 +66,31 @@ fn spec_of<'a>(q: &'a QuantMlp, plan: &'a ShiftPlan, name: &'a str) -> MlpSpecRe
 /// Run every engine on the case and return the first divergence, or
 /// `None` when all engines agree on every pattern.
 pub fn check_case(q: &QuantMlp, plan: &ShiftPlan, xs: &[Vec<i64>]) -> Option<CaseFailure> {
-    check_case_pair(q, plan, plan, xs)
+    check_case_all(q, plan, plan, plan, xs)
 }
 
 /// [`check_case`] with independent software (`plan_sw`) and hardware
 /// (`plan_hw`) truncation plans. `plan_sw == plan_hw` is the conformance
-/// check; differing plans are the fault-injection path.
+/// check; differing plans are the netlist fault-injection path (the
+/// bit-sliced engine runs the software plan).
 pub fn check_case_pair(
     q: &QuantMlp,
     plan_sw: &ShiftPlan,
     plan_hw: &ShiftPlan,
+    xs: &[Vec<i64>],
+) -> Option<CaseFailure> {
+    check_case_all(q, plan_sw, plan_hw, plan_sw, xs)
+}
+
+/// Fully general differential check: independent plans for the reference
+/// software model (`plan_sw`), the synthesized netlists (`plan_hw`) and
+/// the bit-sliced engine (`plan_bs`). All equal = conformance; corrupting
+/// exactly one of them is the fault-injection path for that engine.
+pub fn check_case_all(
+    q: &QuantMlp,
+    plan_sw: &ShiftPlan,
+    plan_hw: &ShiftPlan,
+    plan_bs: &ShiftPlan,
     xs: &[Vec<i64>],
 ) -> Option<CaseFailure> {
     assert!(!xs.is_empty(), "conformance case needs at least one pattern");
@@ -104,8 +122,31 @@ pub fn check_case_pair(
         }
     }
 
-    // engines 3+4: synthesized netlists against the packed simulator
-    let packed = PackedStimulus::from_features(xs, q.din(), q.in_bits);
+    // one transpose for engines 3–5: the bit-sliced forward consumes the
+    // same PackedStimulus the netlist simulator does
+    let packed = PackedStimulus::from_features(xs, q.din(), q.in_bits)
+        .expect("conformance stimulus matches model din");
+
+    // engine 3: bit-sliced word-parallel forward, logit level
+    let bs = BitSliceEval::new(q, plan_bs);
+    let mut bss = BitSliceScratch::new();
+    let mut sliced = Vec::new();
+    bs.forward_packed(&packed, &mut sliced, &mut bss);
+    for (p, want) in logits_ref.iter().enumerate() {
+        let got = &sliced[p * dout..(p + 1) * dout];
+        for j in 0..dout {
+            if got[j] != want[j] {
+                return Some(CaseFailure {
+                    pattern: p,
+                    engines: ("axsum::forward", "BitSliceEval::forward_batch"),
+                    output: j,
+                    got: (want[j], got[j]),
+                });
+            }
+        }
+    }
+
+    // engines 4+5: synthesized netlists against the packed simulator
     let mut sim = SimScratch::new();
 
     let nl_class = build_mlp_ref(&spec_of(q, plan_hw, "conform_ref"));
@@ -166,6 +207,9 @@ pub struct Shrunk {
     pub q: QuantMlp,
     pub plan_sw: ShiftPlan,
     pub plan_hw: ShiftPlan,
+    /// Plan the bit-sliced engine ran (== `plan_sw` unless the failure
+    /// came from bitslice fault injection).
+    pub plan_bs: ShiftPlan,
     pub xs: Vec<Vec<i64>>,
     /// Original indices of the surviving input features.
     pub kept_inputs: Vec<usize>,
@@ -228,6 +272,7 @@ impl Shrunk {
                     ),
                     ("shifts_sw", mat_u32(&self.plan_sw.shifts[l])),
                     ("shifts_hw", mat_u32(&self.plan_hw.shifts[l])),
+                    ("shifts_bs", mat_u32(&self.plan_bs.shifts[l])),
                 ])
             })
             .collect();
@@ -259,6 +304,7 @@ struct ShrinkState {
     q: QuantMlp,
     plan_sw: ShiftPlan,
     plan_hw: ShiftPlan,
+    plan_bs: ShiftPlan,
     xs: Vec<Vec<i64>>,
     kept_inputs: Vec<usize>,
     kept_neurons: Vec<Vec<usize>>,
@@ -268,22 +314,27 @@ struct ShrinkState {
 impl ShrinkState {
     fn still_fails(&mut self) -> Option<CaseFailure> {
         self.attempts += 1;
-        check_case_pair(&self.q, &self.plan_sw, &self.plan_hw, &self.xs)
+        check_case_all(&self.q, &self.plan_sw, &self.plan_hw, &self.plan_bs, &self.xs)
+    }
+
+    fn plans_mut(&mut self) -> [&mut ShiftPlan; 3] {
+        [&mut self.plan_sw, &mut self.plan_hw, &mut self.plan_bs]
     }
 
     fn drop_neuron(&mut self, l: usize, j: usize) {
         self.q.w[l].remove(j);
         self.q.b[l].remove(j);
-        self.plan_sw.shifts[l].remove(j);
-        self.plan_hw.shifts[l].remove(j);
-        if l + 1 < self.q.n_layers() {
+        let next = l + 1 < self.q.n_layers();
+        for plan in self.plans_mut() {
+            plan.shifts[l].remove(j);
+            if next {
+                for row in plan.shifts[l + 1].iter_mut() {
+                    row.remove(j);
+                }
+            }
+        }
+        if next {
             for row in self.q.w[l + 1].iter_mut() {
-                row.remove(j);
-            }
-            for row in self.plan_sw.shifts[l + 1].iter_mut() {
-                row.remove(j);
-            }
-            for row in self.plan_hw.shifts[l + 1].iter_mut() {
                 row.remove(j);
             }
         }
@@ -294,11 +345,10 @@ impl ShrinkState {
         for row in self.q.w[0].iter_mut() {
             row.remove(i);
         }
-        for row in self.plan_sw.shifts[0].iter_mut() {
-            row.remove(i);
-        }
-        for row in self.plan_hw.shifts[0].iter_mut() {
-            row.remove(i);
+        for plan in self.plans_mut() {
+            for row in plan.shifts[0].iter_mut() {
+                row.remove(i);
+            }
         }
         for x in self.xs.iter_mut() {
             x.remove(i);
@@ -307,14 +357,16 @@ impl ShrinkState {
     }
 }
 
-/// Minimize a failing case. `plan_sw`/`plan_hw` are the plans the
-/// software and netlist engines ran (identical for organic conformance
-/// failures). The returned reproducer keeps the mismatch live at every
-/// step, so the surviving neuron set provably contains the divergence.
+/// Minimize a failing case. `plan_sw`/`plan_hw`/`plan_bs` are the plans
+/// the reference software, netlist and bit-sliced engines ran (all
+/// identical for organic conformance failures). The returned reproducer
+/// keeps the mismatch live at every step, so the surviving neuron set
+/// provably contains the divergence.
 pub fn shrink(
     q: &QuantMlp,
     plan_sw: &ShiftPlan,
     plan_hw: &ShiftPlan,
+    plan_bs: &ShiftPlan,
     xs: &[Vec<i64>],
     failure: CaseFailure,
 ) -> Shrunk {
@@ -322,6 +374,7 @@ pub fn shrink(
         q: q.clone(),
         plan_sw: plan_sw.clone(),
         plan_hw: plan_hw.clone(),
+        plan_bs: plan_bs.clone(),
         xs: xs.to_vec(),
         kept_inputs: (0..q.din()).collect(),
         kept_neurons: q.w.iter().map(|l| (0..l.len()).collect()).collect(),
@@ -385,6 +438,7 @@ pub fn shrink(
         q: st.q,
         plan_sw: st.plan_sw,
         plan_hw: st.plan_hw,
+        plan_bs: st.plan_bs,
         xs: st.xs,
         kept_inputs: st.kept_inputs,
         kept_neurons: st.kept_neurons,
@@ -425,11 +479,35 @@ mod tests {
         hw.shifts[0][0][0] = crate::axsum::product_bits(4, 7); // product -> 0
         let xs = gen::adversarial_stimulus(2, 4);
         let f = check_case_pair(&q, &sw, &hw, &xs).expect("corruption must diverge");
-        let s = shrink(&q, &sw, &hw, &xs, f);
+        let s = shrink(&q, &sw, &hw, &sw, &xs, f);
         assert_eq!(s.xs.len(), 1);
         assert_eq!(s.kept_neurons, vec![vec![0usize]], "{}", s.summary());
         assert_eq!(s.kept_inputs, vec![0usize], "{}", s.summary());
         assert!(s.summary().contains("L0:{0}"));
+    }
+
+    #[test]
+    fn corrupted_bitslice_shift_is_caught_and_shrunk() {
+        // the fifth engine is itself under differential guard: zeroing
+        // one product on the *bitslice* side only must diverge from the
+        // reference forward and shrink to the corrupted neuron
+        let q = crate::fixed::QuantMlp {
+            w: vec![vec![vec![7, 5], vec![3, 2]]],
+            b: vec![vec![0, 0]],
+            in_bits: 4,
+            w_scales: vec![1.0],
+        };
+        let sw = crate::axsum::ShiftPlan::exact(&q);
+        let mut bs = sw.clone();
+        bs.shifts[0][0][0] = crate::axsum::product_bits(4, 7); // product -> 0
+        let xs = gen::adversarial_stimulus(2, 4);
+        let f = check_case_all(&q, &sw, &sw, &bs, &xs).expect("bitslice corruption must diverge");
+        assert_eq!(f.engines.1, "BitSliceEval::forward_batch");
+        let s = shrink(&q, &sw, &sw, &bs, &xs, f);
+        assert_eq!(s.xs.len(), 1);
+        assert_eq!(s.kept_neurons, vec![vec![0usize]], "{}", s.summary());
+        // the shrunk reproducer still fails through the full engine set
+        assert!(check_case_all(&s.q, &s.plan_sw, &s.plan_hw, &s.plan_bs, &s.xs).is_some());
     }
 
     #[test]
@@ -466,7 +544,7 @@ mod tests {
                 continue;
             };
             caught += 1;
-            let s = shrink(&q, &plan, &hw, &xs, f);
+            let s = shrink(&q, &plan, &hw, &plan, &xs, f);
             assert_eq!(s.xs.len(), 1, "stimulus minimized");
             assert!(
                 s.kept_neurons[l].contains(&j),
@@ -478,6 +556,7 @@ mod tests {
             // reproducer serializes
             let js = s.to_json().pretty();
             assert!(js.contains("shifts_hw"));
+            assert!(js.contains("shifts_bs"));
         }
         // masked corruptions (ReLU-clamped neurons, zeroed downstream
         // columns) are legitimate; the handcrafted test above pins the

@@ -224,6 +224,41 @@ pub fn random_plan(rng: &mut Rng, q: &QuantMlp, xs: &[Vec<i64>]) -> (PlanKind, S
     (kind, plan_of_kind(rng, q, xs, kind))
 }
 
+/// Corrupt exactly one shift of `plan` at the model's largest-magnitude
+/// nonzero weight (the site most likely to provoke an observable
+/// divergence): full-width truncation if the product was live, restored
+/// to exact if it was already fully truncated. Returns the corrupted
+/// plan and the `(layer, neuron, input)` coordinates, or `None` when the
+/// model has no nonzero weight. Feeds the canary fault injection for
+/// *any* engine side (netlist or bitslice).
+pub fn corrupt_one_shift(
+    q: &QuantMlp,
+    plan: &ShiftPlan,
+) -> Option<(ShiftPlan, (usize, usize, usize))> {
+    let mut best: Option<(usize, usize, usize, i64)> = None;
+    for (l, layer) in q.w.iter().enumerate() {
+        for (j, row) in layer.iter().enumerate() {
+            for (i, &w) in row.iter().enumerate() {
+                let better = match best {
+                    None => true,
+                    Some((_, _, _, bw)) => w.abs() > bw.abs(),
+                };
+                if better {
+                    best = Some((l, j, i, w));
+                }
+            }
+        }
+    }
+    let (l, j, i, w) = best?;
+    if w == 0 {
+        return None;
+    }
+    let mut corrupt = plan.clone();
+    let full = crate::axsum::product_bits(q.in_bits, w);
+    corrupt.shifts[l][j][i] = if plan.shifts[l][j][i] >= full { 0 } else { full };
+    Some((corrupt, (l, j, i)))
+}
+
 // ---------------------------------------------------------------------------
 // Raw netlist generator (for the sweep semantics property).
 // ---------------------------------------------------------------------------

@@ -145,8 +145,9 @@ pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
     let genome_plan = space.decode(&q, &sig, &space.random_genome(&mut grng));
 
     let lib = EgtLibrary::egt_v1();
-    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits)?;
     let mut sim = SimScratch::new();
+    let mut bss = crate::axsum::BitSliceScratch::new();
 
     let mut plans_json = Vec::new();
     for (name, plan) in [
@@ -158,6 +159,19 @@ pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
         let acc_self = flat.accuracy_with(&xq_train[..nt], &self_train, &mut fs);
         let acc_data_train = flat.accuracy_with(&xq_train[..nt], &ds.y_train[..nt], &mut fs);
         let acc_data_test = flat.accuracy_with(&xq_test[..ne], &ds.y_test[..ne], &mut fs);
+
+        // the golden generator is itself a conformance check for the
+        // bit-sliced engine: any accuracy drift vs the flat forward on a
+        // registry topology surfaces as a golden error
+        let bs = crate::axsum::BitSliceEval::new(&q, plan);
+        let acc_bits = bs.accuracy_with(&xq_train[..nt], &self_train, &mut bss);
+        if acc_bits != acc_self {
+            return Err(format!(
+                "bit-sliced forward diverges from FlatEval on {}/{name}: {acc_bits} vs {acc_self} \
+                 — run `repro conform` for a shrunk reproducer",
+                cfg.key
+            ));
+        }
 
         let spec = MlpSpecRef {
             name: "golden",

@@ -12,11 +12,11 @@
 //!   (exact / arbitrary shifts / grid `derive_shifts` / genetic genomes
 //!   through `search::SearchSpace`), adversarial stimulus corners, and
 //!   raw netlists;
-//! * [`diff`] — runs each case through all the forwards the repo owns
-//!   (`axsum::forward`, `FlatEval::forward_batch`, and synthesized
-//!   netlists under `sim::simulate_packed`, compared at *logit* level)
-//!   and shrinks any mismatch to a minimal reproducer naming the
-//!   layer/neuron;
+//! * [`diff`] — runs each case through all five forwards the repo owns
+//!   (`axsum::forward`, `FlatEval::forward_batch`, the bit-sliced
+//!   `BitSliceEval`, and two synthesized netlists under
+//!   `sim::simulate_packed`, compared at *logit* level) and shrinks any
+//!   mismatch to a minimal reproducer naming the layer/neuron;
 //! * [`golden`] — committed JSON regression snapshots of accuracies,
 //!   cell histograms and area/power estimates, re-derived and diffed on
 //!   every run.
@@ -31,7 +31,7 @@ pub mod diff;
 pub mod gen;
 pub mod golden;
 
-pub use diff::{check_case, check_case_pair, shrink, CaseFailure, Shrunk};
+pub use diff::{check_case, check_case_all, check_case_pair, shrink, CaseFailure, Shrunk};
 pub use gen::{PlanKind, TopologyRange};
 pub use golden::{GoldenConfig, GoldenResult, GoldenStatus};
 
@@ -139,7 +139,7 @@ pub fn run_fuzz(cfg: &ConformConfig) -> FuzzReport {
             });
             report
                 .mismatches
-                .push(diff::shrink(&q, &plan, &plan, &xs, failure));
+                .push(diff::shrink(&q, &plan, &plan, &plan, &xs, failure));
             if report.mismatches.len() >= cfg.max_mismatches {
                 break;
             }
@@ -148,14 +148,41 @@ pub fn run_fuzz(cfg: &ConformConfig) -> FuzzReport {
     report
 }
 
-/// Fault-injection self-test: corrupt exactly one shift of a
-/// known-divergent model on the netlist side, and require the harness to
-/// (a) flag the case and (b) shrink it to a reproducer that still names
-/// the corrupted neuron. Returns the shrunk reproducer, or an error when
-/// the instrument failed to fire — in which case no green fuzz result
-/// can be trusted.
+/// Which engine the [`canary`] corrupts: the synthesized netlists or the
+/// bit-sliced software forward. The harness must catch a divergence in
+/// either direction — an instrument that can only see netlist faults
+/// would certify a broken bitslice engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    Netlist,
+    BitSlice,
+}
+
+impl FaultSite {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Netlist => "netlist",
+            FaultSite::BitSlice => "bitslice",
+        }
+    }
+
+    pub const ALL: [FaultSite; 2] = [FaultSite::Netlist, FaultSite::BitSlice];
+}
+
+/// Fault-injection self-test against the netlist engines (see
+/// [`canary_at`] for the general form).
 pub fn canary(seed: u64) -> Result<Shrunk, String> {
-    let mut rng = Rng::new(seed ^ 0xCA_4A_59);
+    canary_at(seed, FaultSite::Netlist)
+}
+
+/// Fault-injection self-test: corrupt exactly one shift of a
+/// known-divergent model on one engine's side (`site`), and require the
+/// harness to (a) flag the case and (b) shrink it to a reproducer that
+/// still names the corrupted neuron. Returns the shrunk reproducer, or
+/// an error when the instrument failed to fire — in which case no green
+/// fuzz result can be trusted.
+pub fn canary_at(seed: u64, site: FaultSite) -> Result<Shrunk, String> {
+    let mut rng = Rng::new(seed ^ 0xCA_4A_59 ^ ((site as u64) << 48));
     // widen until a corruption provokes divergence (ReLU clamps or
     // zeroed downstream columns can mask one; a handful of tries always
     // suffices in practice)
@@ -163,40 +190,29 @@ pub fn canary(seed: u64) -> Result<Shrunk, String> {
         let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
         let xs = gen::mixed_stimulus(&mut rng, &q, 33);
         let (_, plan) = gen::random_plan(&mut rng, &q, &xs);
-        // pick the largest-magnitude weight (most likely to matter)
-        let mut best: Option<(usize, usize, usize, i64)> = None;
-        for (l, layer) in q.w.iter().enumerate() {
-            for (j, row) in layer.iter().enumerate() {
-                for (i, &w) in row.iter().enumerate() {
-                    let better = match best {
-                        None => true,
-                        Some((_, _, _, bw)) => w.abs() > bw.abs(),
-                    };
-                    if better {
-                        best = Some((l, j, i, w));
-                    }
-                }
-            }
-        }
-        let Some((l, j, i, w)) = best else { continue };
-        if w == 0 {
+        let Some((corrupt, (l, j, _i))) = gen::corrupt_one_shift(&q, &plan) else {
             continue;
-        }
-        let mut hw = plan.clone();
-        let full = crate::axsum::product_bits(q.in_bits, w);
-        hw.shifts[l][j][i] = if plan.shifts[l][j][i] >= full { 0 } else { full };
-        if let Some(failure) = diff::check_case_pair(&q, &plan, &hw, &xs) {
-            let s = diff::shrink(&q, &plan, &hw, &xs, failure);
+        };
+        let (hw, bs) = match site {
+            FaultSite::Netlist => (&corrupt, &plan),
+            FaultSite::BitSlice => (&plan, &corrupt),
+        };
+        if let Some(failure) = diff::check_case_all(&q, &plan, hw, bs, &xs) {
+            let s = diff::shrink(&q, &plan, hw, bs, &xs, failure);
             if !s.kept_neurons[l].contains(&j) {
                 return Err(format!(
-                    "canary shrink lost the corrupted neuron L{l}/{j} (attempt {attempt}): {}",
+                    "{} canary shrink lost the corrupted neuron L{l}/{j} (attempt {attempt}): {}",
+                    site.name(),
                     s.summary()
                 ));
             }
             return Ok(s);
         }
     }
-    Err("canary could not provoke a divergence in 16 attempts".to_string())
+    Err(format!(
+        "{} canary could not provoke a divergence in 16 attempts",
+        site.name()
+    ))
 }
 
 #[cfg(test)]
@@ -246,5 +262,17 @@ mod tests {
         let s = canary(2023).expect("canary must fire");
         assert_eq!(s.xs.len(), 1, "canary reproducer minimized");
         assert!(s.summary().contains("surviving neurons"));
+    }
+
+    #[test]
+    fn bitslice_canary_fires_and_shrinks() {
+        // a fault injected into the bit-sliced engine (not the netlist)
+        // must be caught by the same instrument and shrink cleanly
+        let s = canary_at(2023, FaultSite::BitSlice).expect("bitslice canary must fire");
+        assert_eq!(s.xs.len(), 1, "bitslice canary reproducer minimized");
+        // the corruption lives in the bitslice plan: it must differ from
+        // the software plan in the surviving reproducer
+        assert_ne!(s.plan_bs, s.plan_sw);
+        assert_eq!(s.plan_hw, s.plan_sw);
     }
 }

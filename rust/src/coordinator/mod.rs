@@ -192,7 +192,8 @@ pub fn run_dataset(
     // and shared by every synthesis/simulation below (q0 and the
     // retrained models expose the same x0..x{d-1} input interface)
     let stimulus = &xq_test[..xq_test.len().min(cfg.dse.power_patterns)];
-    let packed = PackedStimulus::from_features(stimulus, q0.din(), q0.in_bits);
+    let packed = PackedStimulus::from_features(stimulus, q0.din(), q0.in_bits)
+        .map_err(anyhow::Error::msg)?;
     let mut sim_scratch = SimScratch::new();
     let baseline_costs = dse::circuit_costs_packed(
         &q0,
@@ -257,9 +258,13 @@ pub fn run_dataset(
             .cloned()
             .unwrap_or_else(|| {
                 // fall back to the exact point of the retrained model
+                // (NaN-hostile key: a degenerate accuracy must neither
+                // panic the pipeline nor win the selection)
                 designs
                     .iter()
-                    .max_by(|a, b| a.acc_train.partial_cmp(&b.acc_train).unwrap())
+                    .max_by(|a, b| {
+                        dse::acc_key(a.acc_train).total_cmp(&dse::acc_key(b.acc_train))
+                    })
                     .cloned()
                     .expect("non-empty DSE")
             });
@@ -343,6 +348,7 @@ mod tests {
                 threads: 4,
                 verify_circuit: false,
                 max_eval: 0,
+                ..DseConfig::default()
             },
             retrain: RetrainConfig {
                 epochs_per_level: 4,

@@ -4,16 +4,18 @@
 //! accuracy/area Pareto front.
 //!
 //! Sweep evaluation engine (see EXPERIMENTS.md §Perf): all per-sweep
-//! invariants are hoisted out of the per-point loop — the power stimulus
-//! is bit-transposed once into a [`PackedStimulus`], every worker owns one
-//! reusable [`EngineScratch`], the model is flattened per point into an
-//! `axsum::FlatEval`, netlists are built from borrowed specs (no weight
-//! clones), and grid points whose `(k, G)` settings derive to an identical
-//! [`ShiftPlan`] are synthesized/simulated once with the result fanned
-//! back out.
+//! invariants are hoisted out of the per-point loop — every stimulus the
+//! sweep touches is bit-transposed once into a [`SweepStimuli`], every
+//! worker owns one reusable [`EngineScratch`], the model is compiled per
+//! point into the selected accuracy engine ([`EvalBackend`]: flattened
+//! per-sample forward or the bit-sliced 64-patterns-per-word forward),
+//! netlists are built from borrowed specs (no weight clones), and grid
+//! points whose `(k, G)` settings derive to an identical [`ShiftPlan`]
+//! are synthesized/simulated once with the result fanned back out.
 
 use crate::axsum::{
-    self, derive_shifts, threshold_candidates, FlatEval, FlatScratch, ShiftPlan, Significance,
+    self, derive_shifts, threshold_candidates, BitSliceEval, BitSliceScratch, FlatEval,
+    FlatScratch, ShiftPlan, Significance,
 };
 use crate::estimate::{estimate_with_toggles, Costs};
 use crate::fixed::QuantMlp;
@@ -21,8 +23,34 @@ use crate::pdk::EgtLibrary;
 use crate::sim::{simulate_packed, PackedStimulus, SimScratch};
 use crate::synth::{build_mlp_ref, MlpSpecRef, NeuronStyle};
 use crate::util::pool::parallel_map_with;
+use crate::util::stats::argmax_i64;
 
 use std::collections::HashMap;
+
+/// Which software forward scores design-point accuracy (the netlist
+/// engine costing area/power is always `sim::simulate_packed`). Both
+/// backends are bit-exact with `axsum::forward` — the conformance
+/// harness runs all of them differentially — so the choice is purely a
+/// throughput knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvalBackend {
+    /// Per-sample flattened integer forward (`axsum::FlatEval`).
+    #[default]
+    Flat,
+    /// Bit-sliced word-parallel forward (`axsum::bitslice`): 64 stimulus
+    /// patterns per `u64` word, sharing the sweep's bit-transposed
+    /// stimulus with the netlist simulator.
+    BitSlice,
+}
+
+impl EvalBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            EvalBackend::Flat => "flat",
+            EvalBackend::BitSlice => "bitslice",
+        }
+    }
+}
 
 /// DSE parameters.
 #[derive(Clone, Debug)]
@@ -38,6 +66,8 @@ pub struct DseConfig {
     pub verify_circuit: bool,
     /// Cap on accuracy-evaluation samples per split (0 = use all).
     pub max_eval: usize,
+    /// Software accuracy engine for the sweep/search inner loop.
+    pub backend: EvalBackend,
 }
 
 impl Default for DseConfig {
@@ -48,6 +78,7 @@ impl Default for DseConfig {
             threads: crate::util::pool::default_threads(),
             verify_circuit: true,
             max_eval: 2000,
+            backend: EvalBackend::Flat,
         }
     }
 }
@@ -72,12 +103,16 @@ pub struct QuantData<'a> {
 }
 
 /// Reusable per-worker buffers for the sweep engine: simulation word /
-/// toggle / output staging plus the flattened-forward activation
-/// ping-pong. One per worker thread; the per-point loop allocates nothing.
+/// toggle / output staging, the flattened-forward activation ping-pong,
+/// and the bit-slice plane buffers + logit staging for the word-parallel
+/// backend. One per worker thread; the per-point loop allocates nothing.
 #[derive(Default)]
 pub struct EngineScratch {
     pub sim: SimScratch,
     pub flat: FlatScratch,
+    pub bits: BitSliceScratch,
+    /// Logit staging for the bit-sliced circuit-verify path.
+    pub logits: Vec<i64>,
 }
 
 impl EngineScratch {
@@ -94,6 +129,65 @@ pub(crate) fn power_stimulus<'a>(data: &QuantData<'a>, cfg: &DseConfig) -> &'a [
     &data.x_test[..data.x_test.len().min(cfg.power_patterns)]
 }
 
+/// Per-sweep evaluation stimuli, transposed exactly once and shared
+/// immutably by every design point: the power stimulus (bit-planes for
+/// the netlist simulator) plus — for the bit-sliced backend — the capped
+/// accuracy splits in the same layout. Build with [`SweepStimuli::prepare`]
+/// before entering the per-point loop.
+pub struct SweepStimuli<'a> {
+    /// Packed power stimulus (switching-activity simulation).
+    pub power: PackedStimulus,
+    /// The raw rows behind `power` (borrowed; drives the circuit verify).
+    pub power_rows: &'a [Vec<i64>],
+    /// Capped accuracy-sample counts (train / test).
+    pub nt: usize,
+    pub ne: usize,
+    /// Packed accuracy splits — `Some` only for [`EvalBackend::BitSlice`]
+    /// (the flat backend walks the raw rows).
+    pub train: Option<PackedStimulus>,
+    pub test: Option<PackedStimulus>,
+}
+
+impl<'a> SweepStimuli<'a> {
+    /// Pack every stimulus the sweep will touch. Errors are contextful
+    /// (row index + expected `din`) rather than a panic deep inside the
+    /// bit-transpose.
+    pub fn prepare(
+        q: &QuantMlp,
+        data: &QuantData<'a>,
+        cfg: &DseConfig,
+    ) -> Result<SweepStimuli<'a>, String> {
+        let cap = |n: usize| if cfg.max_eval == 0 { n } else { n.min(cfg.max_eval) };
+        let nt = cap(data.x_train.len());
+        let ne = cap(data.x_test.len());
+        let power_rows = power_stimulus(data, cfg);
+        let power = PackedStimulus::from_features(power_rows, q.din(), q.in_bits)?;
+        let (train, test) = match cfg.backend {
+            EvalBackend::Flat => (None, None),
+            EvalBackend::BitSlice => (
+                Some(PackedStimulus::from_features(
+                    &data.x_train[..nt],
+                    q.din(),
+                    q.in_bits,
+                )?),
+                Some(PackedStimulus::from_features(
+                    &data.x_test[..ne],
+                    q.din(),
+                    q.in_bits,
+                )?),
+            ),
+        };
+        Ok(SweepStimuli {
+            power,
+            power_rows,
+            nt,
+            ne,
+            train,
+            test,
+        })
+    }
+}
+
 /// Synthesize the circuit for (q, plan, style) and estimate its costs with
 /// switching activity from `stimulus` (integer input vectors). Returns the
 /// costs and the simulated class outputs.
@@ -108,7 +202,8 @@ pub fn circuit_costs(
     stimulus: &[Vec<i64>],
     lib: &EgtLibrary,
 ) -> (Costs, Vec<u64>) {
-    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits)
+        .expect("power stimulus rows match model din");
     let mut scratch = SimScratch::new();
     let costs = circuit_costs_packed(q, plan, style, &packed, lib, &mut scratch);
     let classes = scratch.outputs.first().cloned().unwrap_or_default();
@@ -148,7 +243,7 @@ pub fn circuit_costs_packed(
 
 /// Evaluate one design point end to end.
 ///
-/// Standalone wrapper over [`evaluate_design_packed`]: packs the stimulus
+/// Standalone wrapper over [`evaluate_design_packed`]: packs the stimuli
 /// and allocates scratch per call (bit-identical results).
 pub fn evaluate_design(
     q: &QuantMlp,
@@ -159,15 +254,16 @@ pub fn evaluate_design(
     lib: &EgtLibrary,
     cfg: &DseConfig,
 ) -> DesignEval {
-    let stimulus = power_stimulus(data, cfg);
-    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let stim = SweepStimuli::prepare(q, data, cfg).expect("evaluation stimulus rows match din");
     let mut scratch = EngineScratch::new();
-    evaluate_design_packed(q, plan, k, g, data, lib, cfg, &packed, stimulus, &mut scratch)
+    evaluate_design_packed(q, plan, k, g, data, lib, cfg, &stim, &mut scratch)
 }
 
 /// Evaluate one design point against per-sweep-invariant state: the
-/// pre-packed power stimulus (`packed` is the bit-transpose of
-/// `stimulus`) and a reusable per-worker scratch.
+/// pre-packed stimuli and a reusable per-worker scratch. The accuracy
+/// engine dispatches on [`DseConfig::backend`] — flat per-sample forward
+/// or the bit-sliced 64-patterns-per-word engine — with bit-identical
+/// results (pinned by `conformance::diff` and the engine parity tests).
 #[allow(clippy::too_many_arguments)]
 pub fn evaluate_design_packed(
     q: &QuantMlp,
@@ -177,25 +273,64 @@ pub fn evaluate_design_packed(
     data: &QuantData,
     lib: &EgtLibrary,
     cfg: &DseConfig,
-    packed: &PackedStimulus,
-    stimulus: &[Vec<i64>],
+    stim: &SweepStimuli,
     scratch: &mut EngineScratch,
 ) -> DesignEval {
-    let cap = |xs: &[Vec<i64>]| if cfg.max_eval == 0 { xs.len() } else { xs.len().min(cfg.max_eval) };
-    let nt = cap(data.x_train);
-    let ne = cap(data.x_test);
-    let flat = FlatEval::new(q, &plan);
-    let acc_train = flat.accuracy_with(&data.x_train[..nt], &data.y_train[..nt], &mut scratch.flat);
-    let acc_test = flat.accuracy_with(&data.x_test[..ne], &data.y_test[..ne], &mut scratch.flat);
-    let costs = circuit_costs_packed(q, &plan, NeuronStyle::AxSum, packed, lib, &mut scratch.sim);
+    let (nt, ne) = (stim.nt, stim.ne);
+    enum Fwd {
+        Flat(FlatEval),
+        Bits(BitSliceEval),
+    }
+    let (engine, acc_train, acc_test) = match cfg.backend {
+        EvalBackend::Flat => {
+            let flat = FlatEval::new(q, &plan);
+            let at =
+                flat.accuracy_with(&data.x_train[..nt], &data.y_train[..nt], &mut scratch.flat);
+            let ae = flat.accuracy_with(&data.x_test[..ne], &data.y_test[..ne], &mut scratch.flat);
+            (Fwd::Flat(flat), at, ae)
+        }
+        EvalBackend::BitSlice => {
+            let bs = BitSliceEval::new(q, &plan);
+            let train = stim.train.as_ref().expect("bitslice train stimulus packed");
+            let test = stim.test.as_ref().expect("bitslice test stimulus packed");
+            let at = if nt == 0 {
+                0.0
+            } else {
+                bs.accuracy_packed(train, &data.y_train[..nt], &mut scratch.bits)
+            };
+            let ae = if ne == 0 {
+                0.0
+            } else {
+                bs.accuracy_packed(test, &data.y_test[..ne], &mut scratch.bits)
+            };
+            (Fwd::Bits(bs), at, ae)
+        }
+    };
+    let costs =
+        circuit_costs_packed(q, &plan, NeuronStyle::AxSum, &stim.power, lib, &mut scratch.sim);
     if cfg.verify_circuit {
         let classes = scratch.sim.outputs.first().map(|v| v.as_slice()).unwrap_or(&[]);
-        for (x, &cls) in stimulus.iter().zip(classes) {
-            let sw = flat.predict(x, &mut scratch.flat);
-            assert_eq!(
-                sw, cls as usize,
-                "circuit/software divergence (substrate bug)"
-            );
+        match &engine {
+            Fwd::Flat(flat) => {
+                for (x, &cls) in stim.power_rows.iter().zip(classes) {
+                    let sw = flat.predict(x, &mut scratch.flat);
+                    assert_eq!(
+                        sw, cls as usize,
+                        "circuit/software divergence (substrate bug)"
+                    );
+                }
+            }
+            Fwd::Bits(bs) => {
+                bs.forward_packed(&stim.power, &mut scratch.logits, &mut scratch.bits);
+                let dout = q.dout();
+                for (p, &cls) in classes.iter().take(stim.power_rows.len()).enumerate() {
+                    let sw = argmax_i64(&scratch.logits[p * dout..(p + 1) * dout]);
+                    assert_eq!(
+                        sw, cls as usize,
+                        "circuit/software divergence (substrate bug)"
+                    );
+                }
+            }
         }
     }
     DesignEval {
@@ -271,8 +406,7 @@ pub fn sweep(
         });
         rep_of_point.push(id);
     }
-    let stimulus = power_stimulus(data, cfg);
-    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    let stim = SweepStimuli::prepare(q, data, cfg).expect("sweep stimulus rows match din");
     let rep_evals: Vec<DesignEval> =
         parallel_map_with(&reps, cfg.threads, EngineScratch::new, |scratch, &pi| {
             let (k, g) = &points[pi];
@@ -284,8 +418,7 @@ pub fn sweep(
                 data,
                 lib,
                 cfg,
-                &packed,
-                stimulus,
+                &stim,
                 scratch,
             )
         });
@@ -301,22 +434,38 @@ pub fn sweep(
         .collect()
 }
 
+/// Selection keys that rank a NaN metric as the *worst* value of its
+/// objective (accuracy → -∞, area/cost → +∞), so a degenerate
+/// evaluation can never be crowned by a sort or min/max — `total_cmp`
+/// alone would rank NaN above every real number.
+pub(crate) fn acc_key(v: f64) -> f64 {
+    if v.is_nan() {
+        f64::NEG_INFINITY
+    } else {
+        v
+    }
+}
+
+pub(crate) fn area_key(v: f64) -> f64 {
+    if v.is_nan() {
+        f64::INFINITY
+    } else {
+        v
+    }
+}
+
 /// Indices of the accuracy/area Pareto-optimal designs (maximize accuracy,
 /// minimize area), sorted by descending accuracy.
 pub fn pareto_front(designs: &[DesignEval], by_train: bool) -> Vec<usize> {
     let acc = |d: &DesignEval| if by_train { d.acc_train } else { d.acc_test };
     let mut idx: Vec<usize> = (0..designs.len()).collect();
+    // NaN-hostile ordering: a degenerate evaluation must neither panic
+    // the sweep (the old partial_cmp().unwrap()) nor win it (raw
+    // total_cmp ranks NaN as the *largest* value, i.e. best accuracy)
     idx.sort_by(|&a, &b| {
-        acc(&designs[b])
-            .partial_cmp(&acc(&designs[a]))
-            .unwrap()
-            .then(
-                designs[a]
-                    .costs
-                    .area_mm2
-                    .partial_cmp(&designs[b].costs.area_mm2)
-                    .unwrap(),
-            )
+        acc_key(acc(&designs[b])).total_cmp(&acc_key(acc(&designs[a]))).then(
+            area_key(designs[a].costs.area_mm2).total_cmp(&area_key(designs[b].costs.area_mm2)),
+        )
     });
     let mut front = Vec::new();
     let mut best_area = f64::INFINITY;
@@ -335,12 +484,7 @@ pub fn best_under_floor<'a>(designs: &'a [DesignEval], floor: f64) -> Option<&'a
     designs
         .iter()
         .filter(|d| d.acc_train >= floor - 1e-12)
-        .min_by(|a, b| {
-            a.costs
-                .area_mm2
-                .partial_cmp(&b.costs.area_mm2)
-                .unwrap_or(std::cmp::Ordering::Equal)
-        })
+        .min_by(|a, b| area_key(a.costs.area_mm2).total_cmp(&area_key(b.costs.area_mm2)))
 }
 
 /// Pick the smallest-area design whose *train* accuracy loss vs `acc0` is
@@ -404,6 +548,7 @@ mod tests {
             threads: 4,
             verify_circuit: true,
             max_eval: 0,
+            ..DseConfig::default()
         };
         let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
         assert!(designs.len() > 10);
@@ -440,6 +585,7 @@ mod tests {
             threads: 4,
             verify_circuit: true,
             max_eval: 0,
+            ..DseConfig::default()
         };
         let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
         let exact = designs
@@ -470,6 +616,7 @@ mod tests {
             threads: 4,
             verify_circuit: false,
             max_eval: 0,
+            ..DseConfig::default()
         };
         let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
         let picked = select_for_threshold(&designs, 1.0, 0.05).unwrap();
@@ -478,6 +625,43 @@ mod tests {
         // looser one
         let loose = select_for_threshold(&designs, 1.0, 0.20).unwrap();
         assert!(loose.costs.area_mm2 <= picked.costs.area_mm2 + 1e-12);
+    }
+
+    #[test]
+    fn bitslice_backend_sweep_is_bit_identical_to_flat() {
+        // the full grid sweep under the bit-sliced accuracy engine must
+        // reproduce the flat engine's evaluations exactly — accuracies,
+        // plans and costs (verify_circuit on exercises the bitslice
+        // circuit cross-check too)
+        let (q, xs, ys) = toy();
+        let data = QuantData {
+            x_train: &xs[..140],
+            y_train: &ys[..140],
+            x_test: &xs[140..],
+            y_test: &ys[140..],
+        };
+        let means = mean_activations(&q, data.x_train);
+        let sig = significance(&q, &means);
+        let mut cfg = DseConfig {
+            max_g_levels: 3,
+            power_patterns: 70, // crosses the 64-pattern chunk boundary
+            threads: 4,
+            verify_circuit: true,
+            max_eval: 90, // capped split: packs exactly the capped rows
+            ..DseConfig::default()
+        };
+        let flat = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+        cfg.backend = EvalBackend::BitSlice;
+        let bits = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+        assert_eq!(flat.len(), bits.len());
+        for (a, b) in flat.iter().zip(&bits) {
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.g, b.g);
+            assert_eq!(a.plan, b.plan);
+            assert_eq!(a.acc_train, b.acc_train);
+            assert_eq!(a.acc_test, b.acc_test);
+            assert_eq!(a.costs, b.costs);
+        }
     }
 
     #[test]
@@ -548,7 +732,7 @@ pub fn refine_per_neuron(
         // (threshold at the next-larger significance value of the row)
         let row_sig = &sig.g[l][j];
         let mut levels: Vec<f64> = row_sig.iter().copied().filter(|v| v.is_finite()).collect();
-        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        levels.sort_by(f64::total_cmp);
         let widths = crate::axsum::layer_input_widths(q, &plan);
         for &g in &levels {
             let mut cand = plan.clone();
@@ -624,6 +808,7 @@ mod refine_tests {
             threads: 2,
             verify_circuit: true,
             max_eval: 0,
+            ..DseConfig::default()
         };
         let base = evaluate_design(
             &q,

@@ -7,7 +7,7 @@ use crate::baselines::stochastic::{sc_accuracy, sc_mlp_costs, ScConfig};
 use crate::battery::Battery;
 use crate::coordinator::{run_dataset, train_mlp0, DatasetOutcome, PipelineConfig, SharedContext};
 use crate::datasets::{self, registry::REGISTRY};
-use crate::dse::circuit_costs;
+use crate::dse::{circuit_costs, EvalBackend};
 use crate::estimate::area_mm2;
 use crate::fixed::{quantize, quantize_inputs};
 use crate::pdk::limits;
@@ -36,6 +36,9 @@ pub struct ExpConfig {
     pub quick: bool,
     pub backend: BackendKind,
     pub threads: usize,
+    /// Software accuracy engine for the DSE/search inner loops
+    /// (`--engine flat|bitslice`).
+    pub engine: EvalBackend,
 }
 
 impl Default for ExpConfig {
@@ -46,6 +49,7 @@ impl Default for ExpConfig {
             quick: false,
             backend: BackendKind::Pjrt,
             threads: crate::util::pool::default_threads(),
+            engine: EvalBackend::Flat,
         }
     }
 }
@@ -57,6 +61,7 @@ impl ExpConfig {
             ..Default::default()
         };
         p.dse.threads = self.threads;
+        p.dse.backend = self.engine;
         if self.quick {
             p.dse.max_g_levels = 4;
             p.dse.power_patterns = 64;
@@ -813,15 +818,23 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
 ///    snapshots and diff strictly (`--bless` rewrites them; missing files
 ///    are bootstrapped and reported so they get committed).
 pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<()> {
-    use crate::conformance::{self, ConformConfig, GoldenStatus, PlanKind};
+    use crate::conformance::{self, ConformConfig, FaultSite, GoldenStatus, PlanKind};
 
     let mut failures: Vec<String> = Vec::new();
 
-    // 1. canary
+    // 1. canaries — one injected fault per corruptible engine side
+    // (netlist and bitslice); each must be caught and shrunk before any
+    // green fuzz run is trusted
     let t0 = std::time::Instant::now();
-    match conformance::canary(cfg.seed) {
-        Ok(s) => println!("canary: corruption caught and shrunk — {}", s.summary()),
-        Err(e) => failures.push(format!("canary: {e}")),
+    for site in FaultSite::ALL {
+        match conformance::canary_at(cfg.seed, site) {
+            Ok(s) => println!(
+                "canary[{}]: corruption caught and shrunk — {}",
+                site.name(),
+                s.summary()
+            ),
+            Err(e) => failures.push(format!("canary[{}]: {e}", site.name())),
+        }
     }
 
     // 2. fuzz

@@ -49,6 +49,11 @@ fn exp_config(args: &Args) -> Result<ExpConfig, String> {
         Some("rust") => BackendKind::Rust,
         Some(b) => return Err(format!("unknown backend `{b}` (pjrt|rust)")),
     };
+    cfg.engine = match args.flag("engine") {
+        None | Some("flat") => axmlp::dse::EvalBackend::Flat,
+        Some("bitslice") => axmlp::dse::EvalBackend::BitSlice,
+        Some(e) => return Err(format!("unknown engine `{e}` (flat|bitslice)")),
+    };
     Ok(cfg)
 }
 

@@ -43,10 +43,11 @@ pub mod nsga;
 use crate::axsum::{
     hidden_bounds, neuron_threshold_levels, product_bits, ShiftPlan, Significance,
 };
-use crate::dse::{evaluate_design_packed, DesignEval, DseConfig, EngineScratch, QuantData};
+use crate::dse::{
+    evaluate_design_packed, DesignEval, DseConfig, EngineScratch, QuantData, SweepStimuli,
+};
 use crate::fixed::QuantMlp;
 use crate::pdk::EgtLibrary;
-use crate::sim::PackedStimulus;
 use crate::synth::arith::ubits;
 use crate::util::pool::parallel_map_with;
 use crate::util::rng::Rng;
@@ -326,8 +327,7 @@ struct Evaluator<'a> {
     data: &'a QuantData<'a>,
     lib: &'a EgtLibrary,
     dse_cfg: &'a DseConfig,
-    packed: PackedStimulus,
-    stimulus: &'a [Vec<i64>],
+    stim: SweepStimuli<'a>,
     space: &'a SearchSpace,
     memo: FxHashMap<Vec<Vec<Vec<u32>>>, usize>,
     archive: Vec<DesignEval>,
@@ -374,8 +374,7 @@ impl<'a> Evaluator<'a> {
                         self.data,
                         self.lib,
                         self.dse_cfg,
-                        &self.packed,
-                        self.stimulus,
+                        &self.stim,
                         scratch,
                     )
                 },
@@ -516,18 +515,16 @@ pub fn nsga2(
     assert!(cfg.generations >= 1);
     let mut rng = Rng::new(cfg.seed ^ SEARCH_SEED_SALT);
 
-    // identical stimulus to the grid sweep: both strategies cost designs
-    // on the same packed vectors
-    let stimulus = crate::dse::power_stimulus(data, dse_cfg);
-    let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits);
+    // identical stimuli to the grid sweep: both strategies cost designs
+    // on the same packed vectors (and the same accuracy backend)
+    let stim = SweepStimuli::prepare(q, data, dse_cfg).expect("search stimulus rows match din");
     let mut ev = Evaluator {
         q,
         sig,
         data,
         lib,
         dse_cfg,
-        packed,
-        stimulus,
+        stim,
         space,
         memo: FxHashMap::default(),
         archive: Vec::new(),
@@ -777,6 +774,7 @@ mod tests {
             threads: 2,
             verify_circuit: false,
             max_eval: 0,
+            ..DseConfig::default()
         };
         let cfg = SearchConfig {
             seed: 7,

@@ -78,7 +78,33 @@ impl PackedStimulus {
     /// `width` bits wide — the input interface `synth::build_mlp`
     /// generates. An empty stimulus packs as a single all-zero pattern
     /// (matching the simulator's missing-input default).
-    pub fn from_features(xs: &[Vec<i64>], din: usize, width: usize) -> PackedStimulus {
+    ///
+    /// Every row is validated up front: a short (or long) feature vector,
+    /// or a value outside `[0, 2^width)` (which the bit-transpose would
+    /// silently mask to its low bits, diverging from the untransposed
+    /// engines), returns a contextful error naming the offending row
+    /// instead of panicking deep inside the packing loop.
+    pub fn from_features(
+        xs: &[Vec<i64>],
+        din: usize,
+        width: usize,
+    ) -> Result<PackedStimulus, String> {
+        // every non-negative i64 fits a width ≥ 63 bus, so only the
+        // narrower (real) widths get an upper-bound check
+        let out_of_range = |v: i64| v < 0 || (width < 63 && v >= 1i64 << width);
+        for (p, x) in xs.iter().enumerate() {
+            if x.len() != din {
+                return Err(format!(
+                    "stimulus row {p} has {} features, model expects din = {din}",
+                    x.len()
+                ));
+            }
+            if let Some((i, &v)) = x.iter().enumerate().find(|(_, &v)| out_of_range(v)) {
+                return Err(format!(
+                    "stimulus row {p} feature {i} = {v} outside [0, 2^{width})"
+                ));
+            }
+        }
         let patterns = xs.len().max(1);
         let chunks = patterns.div_ceil(64);
         let buses = (0..din)
@@ -88,11 +114,11 @@ impl PackedStimulus {
                 words: pack_bus(xs.iter().map(|x| x[i] as u64), width, chunks),
             })
             .collect();
-        PackedStimulus {
+        Ok(PackedStimulus {
             patterns,
             chunks,
             buses,
-        }
+        })
     }
 
     /// Pack a name→values stimulus map against `nl`'s input interface.
@@ -128,6 +154,23 @@ impl PackedStimulus {
 
     pub fn patterns(&self) -> usize {
         self.patterns
+    }
+
+    /// Number of 64-pattern chunks.
+    pub fn chunks(&self) -> usize {
+        self.chunks
+    }
+
+    /// Bit-plane word of feature bus `i` (bus order as packed — for
+    /// [`Self::from_features`] that is `x0..x{din-1}`), bit lane `bit`,
+    /// chunk `chunk`. Out-of-range bus/lane/chunk reads 0, matching the
+    /// simulator's missing-input default — this is the shared transpose
+    /// the bit-sliced forward engine (`axsum::bitslice`) consumes.
+    pub fn feature_lane(&self, i: usize, bit: usize, chunk: usize) -> u64 {
+        match self.buses.get(i) {
+            Some(b) if bit < b.width && chunk < self.chunks => b.words[bit * self.chunks + chunk],
+            _ => 0,
+        }
     }
 
     fn bus_index(&self, name: &str) -> Option<usize> {
@@ -519,7 +562,7 @@ mod tests {
             inputs.insert(format!("x{i}"), xs.iter().map(|x| x[i] as u64).collect());
         }
         let via_map = PackedStimulus::for_netlist(&nl, &inputs, xs.len());
-        let via_features = PackedStimulus::from_features(&xs, din, 4);
+        let via_features = PackedStimulus::from_features(&xs, din, 4).unwrap();
         let mut s1 = SimScratch::new();
         let mut s2 = SimScratch::new();
         simulate_packed(&nl, &via_map, true, &mut s1);
@@ -529,8 +572,42 @@ mod tests {
     }
 
     #[test]
+    fn short_feature_row_is_a_contextful_error_not_a_panic() {
+        // regression: a 2-feature row against din = 3 used to index out
+        // of bounds deep inside the bit-transpose loop
+        let xs = vec![vec![1i64, 2, 3], vec![1i64, 2]];
+        let err = PackedStimulus::from_features(&xs, 3, 4).unwrap_err();
+        assert!(err.contains("row 1"), "{err}");
+        assert!(err.contains("din = 3"), "{err}");
+        // long rows are rejected too (silently dropping features would
+        // hide a caller bug)
+        let err = PackedStimulus::from_features(&[vec![0i64; 5]], 3, 4).unwrap_err();
+        assert!(err.contains("5 features"), "{err}");
+        // out-of-range values are rejected too — the transpose would
+        // silently mask them to the low `width` bits, diverging from the
+        // untransposed engines
+        let err = PackedStimulus::from_features(&[vec![0, 16, 0]], 3, 4).unwrap_err();
+        assert!(err.contains("feature 1 = 16"), "{err}");
+        let err = PackedStimulus::from_features(&[vec![0, 0, -1]], 3, 4).unwrap_err();
+        assert!(err.contains("feature 2 = -1"), "{err}");
+    }
+
+    #[test]
+    fn feature_lane_out_of_range_reads_zero() {
+        let xs = vec![vec![15i64, 1]];
+        let stim = PackedStimulus::from_features(&xs, 2, 4).unwrap();
+        assert_eq!(stim.chunks(), 1);
+        assert_eq!(stim.feature_lane(0, 0, 0), 1); // bit 0 of 15, pattern 0
+        assert_eq!(stim.feature_lane(0, 3, 0), 1);
+        assert_eq!(stim.feature_lane(1, 1, 0), 0); // bit 1 of 1
+        assert_eq!(stim.feature_lane(0, 4, 0), 0); // lane past width
+        assert_eq!(stim.feature_lane(2, 0, 0), 0); // bus past din
+        assert_eq!(stim.feature_lane(0, 0, 1), 0); // chunk past end
+    }
+
+    #[test]
     fn empty_feature_stimulus_is_one_zero_pattern() {
-        let stim = PackedStimulus::from_features(&[], 3, 4);
+        let stim = PackedStimulus::from_features(&[], 3, 4).unwrap();
         assert_eq!(stim.patterns(), 1);
         let mut nl = Netlist::new("t");
         let x0 = nl.input_bus("x0", 4);

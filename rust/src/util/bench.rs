@@ -81,7 +81,7 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult 
             break;
         }
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let n = samples.len();
     let mean = samples.iter().sum::<f64>() / n as f64;
     BenchResult {

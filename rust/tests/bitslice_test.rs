@@ -1,0 +1,159 @@
+//! Property tests for the bit-sliced forward engine (ISSUE 4 tentpole):
+//! `BitSliceEval` must be *bit-exact* against `axsum::forward` and
+//! `FlatEval::forward_batch` on fuzzed models and plans of every decoder
+//! family, across the 64-pattern chunk edges and the adversarial
+//! stimulus corners (all-zero / all-saturated) — plus the end-to-end
+//! guarantee that a DSE sweep under the bitslice backend reproduces the
+//! flat backend's evaluations exactly.
+
+use axmlp::axsum::{self, BitSliceEval, BitSliceScratch, FlatEval, FlatScratch};
+use axmlp::conformance::gen::{self, PlanKind, TopologyRange};
+use axmlp::dse::{evaluate_design, DseConfig, EvalBackend, QuantData};
+use axmlp::pdk::EgtLibrary;
+use axmlp::sim::PackedStimulus;
+use axmlp::util::rng::Rng;
+
+#[test]
+fn bitslice_logits_match_reference_on_fuzzed_models_all_plan_families() {
+    let mut rng = Rng::new(0xB5);
+    let mut scratch = Vec::new();
+    for case in 0..30 {
+        let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+        // chunk-edge pattern counts: the packer's boundary handling is
+        // the likeliest divergence site
+        let total = [63usize, 64, 65, 1, 40, 129][case % 6];
+        let xs = gen::mixed_stimulus(&mut rng, &q, total);
+        let kind = PlanKind::ALL[case % PlanKind::ALL.len()];
+        let plan = gen::plan_of_kind(&mut rng, &q, &xs, kind);
+
+        let flat = FlatEval::new(&q, &plan);
+        let mut fs = FlatScratch::new();
+        let mut want = Vec::new();
+        flat.forward_batch(&xs, &mut want, &mut fs);
+
+        let bs = BitSliceEval::new(&q, &plan);
+        let mut bss = BitSliceScratch::new();
+        let mut got = Vec::new();
+        bs.forward_batch(&xs, &mut got, &mut bss);
+        assert_eq!(got, want, "case {case} ({}, {total} patterns)", kind.name());
+
+        // spot-check against the per-sample reference forward too
+        let dout = q.dout();
+        for (p, x) in xs.iter().enumerate().take(5) {
+            let r = axsum::forward(&q, &plan, x, &mut scratch);
+            assert_eq!(&got[p * dout..(p + 1) * dout], &r[..], "case {case} pattern {p}");
+        }
+    }
+}
+
+#[test]
+fn bitslice_forward_packed_shares_the_simulator_transpose() {
+    // the packed entry point consumes the exact PackedStimulus the
+    // netlist simulator uses — one transpose, two engines
+    let mut rng = Rng::new(0xB6);
+    let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+    let xs = gen::mixed_stimulus(&mut rng, &q, 65);
+    let plan = gen::plan_of_kind(&mut rng, &q, &xs, PlanKind::RandomShifts);
+    let packed = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
+
+    let bs = BitSliceEval::new(&q, &plan);
+    let mut bss = BitSliceScratch::new();
+    let mut via_packed = Vec::new();
+    bs.forward_packed(&packed, &mut via_packed, &mut bss);
+    let mut via_rows = Vec::new();
+    bs.forward_batch(&xs, &mut via_rows, &mut bss);
+    assert_eq!(via_packed, via_rows);
+}
+
+#[test]
+fn bitslice_accuracy_matches_flat_on_fuzzed_labels() {
+    let mut rng = Rng::new(0xB7);
+    for _ in 0..12 {
+        let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+        let xs = gen::mixed_stimulus(&mut rng, &q, 127);
+        let plan = gen::plan_of_kind(&mut rng, &q, &xs, PlanKind::Grid);
+        // random labels, deliberately including out-of-range classes
+        let ys: Vec<usize> = (0..xs.len()).map(|_| rng.below(q.dout() + 2)).collect();
+        let flat = FlatEval::new(&q, &plan);
+        let mut fs = FlatScratch::new();
+        let bs = BitSliceEval::new(&q, &plan);
+        let mut bss = BitSliceScratch::new();
+        assert_eq!(
+            bs.accuracy_with(&xs, &ys, &mut bss),
+            flat.accuracy_with(&xs, &ys, &mut fs)
+        );
+    }
+}
+
+#[test]
+fn all_saturated_stimulus_matches_at_chunk_edges() {
+    // every input at 2^in_bits - 1 maximizes carry depth in the sliced
+    // adders — the worst case for the ripple implementation
+    let mut rng = Rng::new(0xB8);
+    let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+    let a_max = (1i64 << q.in_bits) - 1;
+    for total in [63usize, 64, 65] {
+        let xs: Vec<Vec<i64>> = (0..total).map(|_| vec![a_max; q.din()]).collect();
+        let plan = gen::plan_of_kind(&mut rng, &q, &xs, PlanKind::RandomShifts);
+        let flat = FlatEval::new(&q, &plan);
+        let mut fs = FlatScratch::new();
+        let mut want = Vec::new();
+        flat.forward_batch(&xs, &mut want, &mut fs);
+        let bs = BitSliceEval::new(&q, &plan);
+        let mut bss = BitSliceScratch::new();
+        let mut got = Vec::new();
+        bs.forward_batch(&xs, &mut got, &mut bss);
+        assert_eq!(got, want, "{total} saturated patterns");
+    }
+}
+
+#[test]
+fn dse_point_under_bitslice_backend_is_bit_identical() {
+    // evaluate_design dispatches on DseConfig::backend; both backends
+    // must produce the same DesignEval for the same point (accuracy from
+    // different engines, costs from the same netlist simulation)
+    let mut rng = Rng::new(0xB9);
+    let q = gen::random_quant_mlp(
+        &mut rng,
+        &TopologyRange {
+            layers: (2, 2),
+            din: (4, 6),
+            dim: (2, 4),
+            ..TopologyRange::default()
+        },
+    );
+    let xs = gen::mixed_stimulus(&mut rng, &q, 160);
+    let plan0 = axsum::ShiftPlan::exact(&q);
+    let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&q, &plan0, x)).collect();
+    let data = QuantData {
+        x_train: &xs[..100],
+        y_train: &ys[..100],
+        x_test: &xs[100..],
+        y_test: &ys[100..],
+    };
+    let plan = gen::plan_of_kind(&mut rng, &q, &xs, PlanKind::Grid);
+    let lib = EgtLibrary::egt_v1();
+    let mut cfg = DseConfig {
+        max_g_levels: 3,
+        power_patterns: 70,
+        threads: 2,
+        verify_circuit: true,
+        max_eval: 0,
+        ..DseConfig::default()
+    };
+    let a = evaluate_design(&q, plan.clone(), 2, vec![0.0; q.n_layers()], &data, &lib, &cfg);
+    cfg.backend = EvalBackend::BitSlice;
+    let b = evaluate_design(&q, plan, 2, vec![0.0; q.n_layers()], &data, &lib, &cfg);
+    assert_eq!(a.acc_train, b.acc_train);
+    assert_eq!(a.acc_test, b.acc_test);
+    assert_eq!(a.costs, b.costs);
+    assert_eq!(a.plan, b.plan);
+}
+
+#[test]
+fn short_stimulus_row_errors_before_reaching_any_engine() {
+    // regression (ISSUE 4): a short feature row used to panic with an
+    // out-of-bounds index deep inside the bit-transpose
+    let err = PackedStimulus::from_features(&[vec![1i64, 2, 3], vec![4]], 3, 4).unwrap_err();
+    assert!(err.contains("row 1") && err.contains("din = 3"), "{err}");
+}

@@ -70,7 +70,7 @@ fn corrupting_one_shift_fails_with_reproducer_naming_the_neuron() {
     let xs = gen::adversarial_stimulus(3, 4);
     let failure =
         conformance::check_case_pair(&q, &sw, &hw, &xs).expect("corruption must be detected");
-    let shrunk = conformance::shrink(&q, &sw, &hw, &xs, failure);
+    let shrunk = conformance::shrink(&q, &sw, &hw, &sw, &xs, failure);
     assert!(
         shrunk.kept_neurons[1].contains(&0),
         "reproducer must name L1 neuron 0: {}",
@@ -87,8 +87,17 @@ fn corrupting_one_shift_fails_with_reproducer_naming_the_neuron() {
 
 #[test]
 fn canary_is_part_of_the_instrument() {
-    let s = conformance::canary(7).expect("canary fires");
-    assert!(conformance::check_case_pair(&s.q, &s.plan_sw, &s.plan_hw, &s.xs).is_some());
+    for site in conformance::FaultSite::ALL {
+        let s = conformance::canary_at(7, site).unwrap_or_else(|e| {
+            panic!("{} canary fires: {e}", site.name());
+        });
+        assert!(
+            conformance::check_case_all(&s.q, &s.plan_sw, &s.plan_hw, &s.plan_bs, &s.xs)
+                .is_some(),
+            "{} canary reproducer must still fail",
+            site.name()
+        );
+    }
 }
 
 #[test]

@@ -290,7 +290,7 @@ fn circuit_costs_wrapper_and_packed_core_agree_at_chunk_boundary() {
     for pats in [65usize, 128] {
         let xs = rand_inputs(&mut rng, 4, pats, 15);
         let (costs, classes) = circuit_costs(&q, &plan, NeuronStyle::AxSum, &xs, &lib);
-        let packed = PackedStimulus::from_features(&xs, q.din(), q.in_bits);
+        let packed = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
         let mut scratch = SimScratch::new();
         let costs2 = circuit_costs_packed(&q, &plan, NeuronStyle::AxSum, &packed, &lib, &mut scratch);
         assert_eq!(costs, costs2);
@@ -325,6 +325,7 @@ fn sweep_bit_matches_per_point_evaluation() {
         threads: 4,
         verify_circuit: true,
         max_eval: 0,
+        ..DseConfig::default()
     };
     let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
     let points = enumerate_points(&q, &sig, &cfg);
@@ -387,6 +388,7 @@ fn sweep_dedup_fan_out_covers_aliasing_points() {
         threads: 2,
         verify_circuit: true,
         max_eval: 0,
+        ..DseConfig::default()
     };
     let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
     let points = enumerate_points(&q, &sig, &cfg);

@@ -17,6 +17,7 @@ fn quick_cfg(thresholds: Vec<f64>) -> PipelineConfig {
             threads: 2,
             verify_circuit: true, // full circuit/software cross-check
             max_eval: 400,
+            ..DseConfig::default()
         },
         retrain: RetrainConfig {
             epochs_per_level: 4,

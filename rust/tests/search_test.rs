@@ -47,6 +47,7 @@ fn tiny_dse() -> DseConfig {
         threads: 4,
         verify_circuit: false,
         max_eval: 200,
+        ..DseConfig::default()
     }
 }
 
@@ -161,6 +162,7 @@ fn pipeline_genetic_strategy_never_worse_than_grid() {
             threads: 4,
             verify_circuit: false,
             max_eval: 0,
+            ..DseConfig::default()
         },
         retrain: RetrainConfig {
             epochs_per_level: 3,
