@@ -1,0 +1,83 @@
+//! Bench: sharded-sweep orchestration overhead vs the monolithic sweep,
+//! plus the checkpoint write/load round-trip cost.
+//!
+//! The sharded engine runs the same representatives through the same
+//! per-point evaluator, so any gap between `sweep_mono` and
+//! `sweep_sharded` is pure orchestration (partitioning, per-shard merge,
+//! fan-out); `sweep_resume` measures the pure-load path (every shard
+//! checkpointed — the engine only parses and validates JSON). Emits
+//! `results/bench_shard.csv` and `BENCH_shard.json` — see EXPERIMENTS.md
+//! §Shard.
+
+use axmlp::axsum::{mean_activations, significance};
+use axmlp::coordinator::{train_mlp0, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::dse::shard::{sweep_sharded, ShardConfig};
+use axmlp::dse::{sweep, DseConfig, QuantData};
+use axmlp::fixed::{quantize, quantize_inputs};
+use axmlp::util::bench::{run, write_csv, write_json};
+
+fn main() {
+    let ctx = SharedContext::new();
+    let pcfg = PipelineConfig::default();
+    let ds = datasets::load("se", 2023).expect("dataset");
+    let q = quantize(&train_mlp0(&ds, &pcfg.train, 2023));
+    let xq_train = quantize_inputs(&ds.x_train);
+    let xq_test = quantize_inputs(&ds.x_test);
+    let data = QuantData {
+        x_train: &xq_train,
+        y_train: &ds.y_train,
+        x_test: &xq_test,
+        y_test: &ds.y_test,
+    };
+    let means = mean_activations(&q, &xq_train);
+    let sig = significance(&q, &means);
+    let cfg = DseConfig {
+        max_g_levels: 3,
+        power_patterns: 64,
+        max_eval: 300,
+        verify_circuit: false,
+        ..Default::default()
+    };
+    let mut results = Vec::new();
+
+    results.push(run("sweep_mono(se,3g,300eval)", || {
+        std::hint::black_box(sweep(&q, &sig, &data, &ctx.lib, &cfg));
+    }));
+
+    for shards in [2usize, 8] {
+        let scfg = ShardConfig {
+            shards,
+            ..ShardConfig::default()
+        };
+        results.push(run(&format!("sweep_sharded(se,{shards}sh)"), || {
+            std::hint::black_box(
+                sweep_sharded(&q, &sig, &data, &ctx.lib, &cfg, &scfg).expect("sharded sweep"),
+            );
+        }));
+    }
+
+    // checkpointed pass once, then the pure resume/load path
+    let dir = std::env::temp_dir().join(format!("axmlp_bench_shard_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let ck = ShardConfig {
+        shards: 8,
+        checkpoint_dir: Some(dir.clone()),
+        resume: false,
+        stop_after: None,
+    };
+    sweep_sharded(&q, &sig, &data, &ctx.lib, &cfg, &ck).expect("checkpointed sweep");
+    let rc = ShardConfig {
+        resume: true,
+        ..ck
+    };
+    results.push(run("sweep_resume(se,8sh,pure-load)", || {
+        std::hint::black_box(
+            sweep_sharded(&q, &sig, &data, &ctx.lib, &cfg, &rc).expect("resumed sweep"),
+        );
+    }));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    write_csv("bench_shard.csv", &results);
+    write_json("BENCH_shard.json", &results);
+}

@@ -91,9 +91,13 @@ COMMANDS (one per paper table/figure — see DESIGN.md §6):
   refine        extension: per-neuron G refinement vs per-layer DSE
   search        NSGA-II genetic DSE over per-neuron genomes vs the grid
                 sweep (emits results/search_fronts.csv + BENCH_search.json)
+  sweep         sharded, checkpointable grid sweep (parity-checked against
+                the monolithic sweep; exercises an interrupt/resume cycle;
+                emits results/shard_summary.csv + BENCH_shard.json)
   conform       differential conformance harness: fuzzed netlist<->software
-                cross-validation (all forwards, logit-exact) + golden
-                regression diff under rust/tests/golden/
+                cross-validation (all forwards, logit-exact), the sweep-
+                level sharded-vs-monolithic engine, + golden regression
+                diff under rust/tests/golden/
   all           every experiment in sequence
   verilog       emit bespoke Verilog RTL for a dataset (--dataset, --threshold)
   smoke         PJRT runtime + artifact smoke test
@@ -115,6 +119,10 @@ FLAGS:
   --search-log           (search) per-generation front log on stderr
   --cases N              (conform) fuzzed differential cases (default 256)
   --bless                (conform) rewrite the golden snapshots
+  --shards N             (sweep) shard count (default 4)
+  --checkpoint-dir D     (sweep) shard checkpoint root
+                         (default results/shard_ckpt)
+  --resume               (sweep) skip shards already checkpointed
 ";
 
 #[cfg(test)]

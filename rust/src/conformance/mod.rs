@@ -12,11 +12,15 @@
 //!   (exact / arbitrary shifts / grid `derive_shifts` / genetic genomes
 //!   through `search::SearchSpace`), adversarial stimulus corners, and
 //!   raw netlists;
-//! * [`diff`] — runs each case through all five forwards the repo owns
-//!   (`axsum::forward`, `FlatEval::forward_batch`, the bit-sliced
-//!   `BitSliceEval`, and two synthesized netlists under
+//! * [`diff`] — runs each case through the five per-case forwards the
+//!   repo owns (`axsum::forward`, `FlatEval::forward_batch`, the
+//!   bit-sliced `BitSliceEval`, and two synthesized netlists under
 //!   `sim::simulate_packed`, compared at *logit* level) and shrinks any
 //!   mismatch to a minimal reproducer naming the layer/neuron;
+//! * [`sweep`] — the sixth, sweep-level differential engine: the sharded
+//!   checkpointable sweep (`dse::shard`) vs the monolithic `dse::sweep`,
+//!   including interrupt → checkpoint → resume cycles, with merged-front
+//!   equality and a divergence reducer naming the offending shard;
 //! * [`golden`] — committed JSON regression snapshots of accuracies,
 //!   cell histograms and area/power estimates, re-derived and diffed on
 //!   every run.
@@ -24,16 +28,19 @@
 //! Entry points: `repro conform [--cases N] [--bless]` (CLI),
 //! [`crate::experiments::exp_conform`], and [`run_fuzz`] /
 //! [`canary`] for tests. Before trusting a green fuzz run, [`canary`]
-//! injects a single-shift corruption and verifies the harness catches
-//! *and shrinks* it — an instrument that cannot fail cannot certify.
+//! injects a single-shift corruption (and [`sweep::sweep_canary`] a
+//! checkpoint corruption) and verifies the harness catches *and shrinks*
+//! it — an instrument that cannot fail cannot certify.
 
 pub mod diff;
 pub mod gen;
 pub mod golden;
+pub mod sweep;
 
 pub use diff::{check_case, check_case_all, check_case_pair, shrink, CaseFailure, Shrunk};
 pub use gen::{PlanKind, TopologyRange};
 pub use golden::{GoldenConfig, GoldenResult, GoldenStatus};
+pub use sweep::{check_sweep_case, run_sweep_fuzz, sweep_canary, SweepCaseOutcome, SweepDivergence};
 
 use crate::util::rng::Rng;
 

@@ -1,0 +1,421 @@
+//! Sweep-level differential engine — the **sixth** engine of the
+//! conformance matrix.
+//!
+//! The per-case engines ([`diff`](super::diff)) prove every *forward* is
+//! bit-exact; this module proves the sweep *orchestrations* are: for a
+//! fuzzed model/stimulus, the sharded checkpointable sweep
+//! (`dse::shard::sweep_sharded` — any shard count, with or without an
+//! interrupt/resume cycle through on-disk checkpoints) must reproduce the
+//! monolithic `dse::sweep` bit-for-bit, and the merged per-shard Pareto
+//! front must equal the front of the monolithic evaluation pool. A
+//! mismatch is reduced to a [`SweepDivergence`] naming the offending
+//! shard, representative and field.
+//!
+//! Like the per-case harness, the instrument proves it can fail before a
+//! green run is trusted: [`sweep_canary`] tampers one checkpointed shard
+//! on disk and requires the differential comparison after resume to flag
+//! exactly that shard.
+
+use crate::axsum::{mean_activations, significance, ShiftPlan};
+use crate::conformance::gen::{self, TopologyRange};
+use crate::dse::shard::{first_divergence, sweep_sharded, ShardConfig};
+use crate::dse::{self, DesignEval, DseConfig, EvalBackend, QuantData};
+use crate::pdk::EgtLibrary;
+use crate::util::json::{self, Json};
+use crate::util::pool::chunk_ranges;
+use crate::util::rng::Rng;
+
+use std::path::{Path, PathBuf};
+
+/// One divergence between the sharded and monolithic sweeps, reduced to
+/// the shard that produced the differing representative.
+#[derive(Clone, Debug)]
+pub struct SweepDivergence {
+    /// Shard whose evaluation (or checkpoint) disagrees.
+    pub shard: usize,
+    /// Global representative index (into the deduped work list).
+    pub rep: usize,
+    /// First fanned-out grid point exhibiting the mismatch.
+    pub point: usize,
+    /// Which eval field differed.
+    pub field: &'static str,
+    /// The two values, monolithic vs sharded.
+    pub detail: String,
+}
+
+impl SweepDivergence {
+    /// Sentinel `shard` value for divergences that no single shard
+    /// caused (eval-count mismatches, merged-front disagreements —
+    /// orchestration-level faults in fan-out or front merging).
+    pub const NO_SHARD: usize = usize::MAX;
+
+    /// One-line human summary naming the culpable shard (or the
+    /// orchestration, for faults no single shard caused).
+    pub fn summary(&self) -> String {
+        let site = if self.shard == Self::NO_SHARD {
+            "at the orchestration level".to_string()
+        } else {
+            format!("in shard {}", self.shard)
+        };
+        format!(
+            "sharded sweep diverges from monolithic {site} (rep {}, point {}): {} — {}",
+            self.rep, self.point, self.field, self.detail
+        )
+    }
+}
+
+/// A fuzzed sweep-differential case (derived deterministically from one
+/// seed): a small random model, labeled stimulus splits, the DSE knobs
+/// and the shard count.
+struct SweepCase {
+    q: crate::fixed::QuantMlp,
+    xs: Vec<Vec<i64>>,
+    ys: Vec<usize>,
+    cfg: DseConfig,
+    shards: usize,
+}
+
+fn build_case(seed: u64) -> SweepCase {
+    let mut rng = Rng::new(seed ^ 0x5A_4D_17);
+    // small topologies: each case runs a whole grid sweep (synthesis +
+    // simulation per representative), so the per-case model is kept tiny
+    let range = TopologyRange {
+        layers: (1, 2),
+        din: (2, 4),
+        dim: (2, 3),
+        in_bits: (2, 4),
+        ..TopologyRange::default()
+    };
+    let q = gen::random_quant_mlp(&mut rng, &range);
+    let xs = gen::mixed_stimulus(&mut rng, &q, 48);
+    let plan = ShiftPlan::exact(&q);
+    let ys: Vec<usize> = xs
+        .iter()
+        .map(|x| crate::axsum::predict(&q, &plan, x))
+        .collect();
+    let backend = if seed % 2 == 0 {
+        EvalBackend::Flat
+    } else {
+        EvalBackend::BitSlice
+    };
+    let cfg = DseConfig {
+        max_g_levels: 2,
+        power_patterns: 16,
+        threads: 2,
+        verify_circuit: true,
+        max_eval: 0,
+        backend,
+    };
+    let shards = 2 + rng.below(4);
+    SweepCase {
+        q,
+        xs,
+        ys,
+        cfg,
+        shards,
+    }
+}
+
+/// Compare two eval lists bit-for-bit (`dse::shard::first_divergence` —
+/// the same comparator every parity check uses); on a mismatch, map the
+/// fanned point back to its representative and shard.
+fn compare_evals(
+    mono: &[DesignEval],
+    sharded: &[DesignEval],
+    space: &dse::SweepSpace,
+    shards: usize,
+) -> Option<SweepDivergence> {
+    let (point, field, detail) = first_divergence(mono, sharded)?;
+    if field == "len" {
+        // an eval-count mismatch is a fan-out/orchestration fault, not
+        // any one shard's — don't blame shard 0
+        return Some(SweepDivergence {
+            shard: SweepDivergence::NO_SHARD,
+            rep: 0,
+            point: 0,
+            field,
+            detail,
+        });
+    }
+    let rep = space.rep_of_point.get(point).copied().unwrap_or(0);
+    let shard = chunk_ranges(space.reps.len(), shards)
+        .iter()
+        .position(|r| r.contains(&rep))
+        .unwrap_or(SweepDivergence::NO_SHARD);
+    Some(SweepDivergence {
+        shard,
+        rep,
+        point,
+        field,
+        detail,
+    })
+}
+
+/// Outcome of one sweep-differential case: the work that was done and
+/// the first divergence, if any.
+pub struct SweepCaseOutcome {
+    /// Representatives in the case's deduped space (evaluated by both
+    /// orchestrations).
+    pub reps: usize,
+    pub divergence: Option<SweepDivergence>,
+}
+
+/// Run one fuzzed sweep-differential case: monolithic sweep vs sharded
+/// sweep, plus — when `checkpoint_dir` is given — an interrupted
+/// (one-shard) first pass and a resumed second pass through on-disk
+/// checkpoints. The outcome carries the first divergence, or none when
+/// the orchestrations agree bit-for-bit (including the merged front).
+pub fn check_sweep_case(
+    seed: u64,
+    checkpoint_dir: Option<&Path>,
+) -> Result<SweepCaseOutcome, String> {
+    let case = build_case(seed);
+    let n_train = case.xs.len() * 3 / 4;
+    let data = QuantData {
+        x_train: &case.xs[..n_train],
+        y_train: &case.ys[..n_train],
+        x_test: &case.xs[n_train..],
+        y_test: &case.ys[n_train..],
+    };
+    let sig = significance(&case.q, &mean_activations(&case.q, data.x_train));
+    let lib = EgtLibrary::egt_v1();
+    let space = dse::sweep_space(&case.q, &sig, &case.cfg);
+    let reps = space.reps.len();
+    let done = |divergence| Ok(SweepCaseOutcome { reps, divergence });
+    let mono = dse::sweep(&case.q, &sig, &data, &lib, &case.cfg);
+
+    // 1. in-memory sharded run
+    let scfg = ShardConfig {
+        shards: case.shards,
+        ..ShardConfig::default()
+    };
+    let report =
+        sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &scfg).map_err(|e| e.to_string())?;
+    if let Some(d) = compare_evals(&mono, &report.evals, &space, case.shards) {
+        return done(Some(d));
+    }
+    // merged per-shard fronts must equal the direct front of the pool
+    let direct: Vec<usize> = dse::pareto_front(&report.evals, true);
+    if report.front.len() != direct.len() {
+        return done(Some(SweepDivergence {
+            shard: SweepDivergence::NO_SHARD,
+            rep: 0,
+            point: 0,
+            field: "merged front",
+            detail: format!(
+                "merged front has {} designs, direct front {}",
+                report.front.len(),
+                direct.len()
+            ),
+        }));
+    }
+    for (f, &di) in report.front.iter().zip(&direct) {
+        let d = &report.evals[di];
+        if f.acc_train.to_bits() != d.acc_train.to_bits()
+            || f.costs.area_mm2.to_bits() != d.costs.area_mm2.to_bits()
+        {
+            return done(Some(SweepDivergence {
+                shard: SweepDivergence::NO_SHARD,
+                rep: 0,
+                point: di,
+                field: "merged front",
+                detail: format!(
+                    "merged ({}, {}) vs direct ({}, {})",
+                    f.acc_train, f.costs.area_mm2, d.acc_train, d.costs.area_mm2
+                ),
+            }));
+        }
+    }
+
+    // 2. interrupt/resume cycle through on-disk checkpoints
+    if let Some(dir) = checkpoint_dir {
+        let interrupted = ShardConfig {
+            shards: case.shards,
+            checkpoint_dir: Some(dir.to_path_buf()),
+            resume: false,
+            stop_after: Some(1),
+        };
+        // the interrupted pass must refuse to return a partial result
+        if sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &interrupted).is_ok() {
+            return Err("interrupted sweep returned a full result".to_string());
+        }
+        let resumed_cfg = ShardConfig {
+            shards: case.shards,
+            checkpoint_dir: Some(dir.to_path_buf()),
+            resume: true,
+            stop_after: None,
+        };
+        let resumed = sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &resumed_cfg)
+            .map_err(|e| e.to_string())?;
+        if resumed.shards_resumed == 0 {
+            return Err("resume loaded no checkpointed shards".to_string());
+        }
+        if let Some(d) = compare_evals(&mono, &resumed.evals, &space, case.shards) {
+            return done(Some(d));
+        }
+    }
+    done(None)
+}
+
+/// Aggregate outcome of [`run_sweep_fuzz`].
+#[derive(Debug, Default)]
+pub struct SweepFuzzReport {
+    pub cases: u64,
+    /// Representatives evaluated across all cases (work actually done).
+    pub reps_total: usize,
+    pub divergences: Vec<SweepDivergence>,
+    /// Hard errors (I/O, interrupted-run misbehavior) per case.
+    pub errors: Vec<String>,
+}
+
+impl SweepFuzzReport {
+    pub fn ok(&self) -> bool {
+        self.divergences.is_empty() && self.errors.is_empty()
+    }
+}
+
+/// Fuzz `cases` sweep-differential cases under base `seed`. Odd cases
+/// additionally exercise a full interrupt → checkpoint → resume cycle in
+/// a scratch directory (removed afterwards).
+pub fn run_sweep_fuzz(cases: u64, seed: u64) -> SweepFuzzReport {
+    let mut report = SweepFuzzReport::default();
+    for i in 0..cases {
+        report.cases += 1;
+        let case_seed = crate::util::prop::case_seed(seed ^ 0x5EED, i);
+        let dir = scratch_dir(case_seed);
+        let ckpt = if i % 2 == 1 { Some(dir.as_path()) } else { None };
+        match check_sweep_case(case_seed, ckpt) {
+            Ok(outcome) => {
+                report.reps_total += outcome.reps;
+                if let Some(d) = outcome.divergence {
+                    report.divergences.push(d);
+                }
+            }
+            Err(e) => report.errors.push(format!("case {i} (seed {case_seed:#x}): {e}")),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    report
+}
+
+fn scratch_dir(tag: u64) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "axmlp_conform_sweep_{}_{tag:016x}",
+        std::process::id()
+    ))
+}
+
+/// Fault-injection self-test for the sweep engine: checkpoint a full
+/// sharded run, tamper one shard's recorded accuracy **on disk**, resume,
+/// and require the differential comparison to flag the divergence *and*
+/// name the tampered shard. An instrument that cannot catch a corrupted
+/// checkpoint cannot certify a resumed sweep.
+pub fn sweep_canary(seed: u64) -> Result<SweepDivergence, String> {
+    let case = build_case(seed ^ 0xCA_9A_7E);
+    let n_train = case.xs.len() * 3 / 4;
+    let data = QuantData {
+        x_train: &case.xs[..n_train],
+        y_train: &case.ys[..n_train],
+        x_test: &case.xs[n_train..],
+        y_test: &case.ys[n_train..],
+    };
+    let sig = significance(&case.q, &mean_activations(&case.q, data.x_train));
+    let lib = EgtLibrary::egt_v1();
+    let space = dse::sweep_space(&case.q, &sig, &case.cfg);
+    let mono = dse::sweep(&case.q, &sig, &data, &lib, &case.cfg);
+
+    let dir = scratch_dir(seed ^ 0xCA_9A_7E);
+    let run = (|| -> Result<SweepDivergence, String> {
+        // full checkpointed pass
+        let scfg = ShardConfig {
+            shards: case.shards,
+            checkpoint_dir: Some(dir.clone()),
+            resume: false,
+            stop_after: None,
+        };
+        sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &scfg).map_err(|e| e.to_string())?;
+
+        // tamper the first non-empty shard's first eval on disk
+        let ranges = chunk_ranges(space.reps.len(), case.shards);
+        let target = ranges
+            .iter()
+            .position(|r| !r.is_empty())
+            .ok_or("no non-empty shard to corrupt")?;
+        let path = dir.join(format!("shard_{target:04}.json"));
+        let raw = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+        let mut j = Json::parse(&raw).map_err(|e| e.to_string())?;
+        tamper_acc(&mut j).ok_or("shard JSON missing evals[0].acc_train")?;
+        json::write_atomic(&path, &j.pretty()).map_err(|e| e.to_string())?;
+
+        // resume must load the tampered value verbatim…
+        let rcfg = ShardConfig {
+            shards: case.shards,
+            checkpoint_dir: Some(dir.clone()),
+            resume: true,
+            stop_after: None,
+        };
+        let resumed =
+            sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &rcfg).map_err(|e| e.to_string())?;
+        if resumed.shards_resumed != case.shards {
+            return Err(format!(
+                "canary resume re-evaluated shards ({} of {} resumed)",
+                resumed.shards_resumed, case.shards
+            ));
+        }
+        // …and the differential comparison must name the tampered shard
+        let d = compare_evals(&mono, &resumed.evals, &space, case.shards)
+            .ok_or("tampered checkpoint was not detected")?;
+        if d.shard != target {
+            return Err(format!(
+                "canary named shard {} but the corruption is in shard {target}: {}",
+                d.shard,
+                d.summary()
+            ));
+        }
+        Ok(d)
+    })();
+    let _ = std::fs::remove_dir_all(&dir);
+    run
+}
+
+/// Nudge `evals[0].acc_train` in a parsed shard checkpoint. Returns
+/// `None` when the JSON does not have the expected shape.
+fn tamper_acc(j: &mut Json) -> Option<()> {
+    let Json::Obj(kvs) = j else { return None };
+    let (_, evals) = kvs.iter_mut().find(|(k, _)| k == "evals")?;
+    let Json::Arr(arr) = evals else { return None };
+    let Some(Json::Obj(eval0)) = arr.first_mut() else { return None };
+    let (_, acc) = eval0.iter_mut().find(|(k, _)| k == "acc_train")?;
+    let Json::Num(v) = acc else { return None };
+    *v = (*v - 0.25).abs() + 0.125; // any value that cannot equal the original
+    Some(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fuzzed_sweep_cases_agree() {
+        let report = run_sweep_fuzz(4, 2023);
+        assert!(
+            report.ok(),
+            "divergences: {:?}, errors: {:?}",
+            report
+                .divergences
+                .iter()
+                .map(|d| d.summary())
+                .collect::<Vec<_>>(),
+            report.errors
+        );
+        assert_eq!(report.cases, 4);
+        assert!(report.reps_total > 0);
+    }
+
+    #[test]
+    fn sweep_canary_fires_and_names_the_shard() {
+        let d = sweep_canary(2023).expect("canary must fire");
+        assert_eq!(d.field, "acc_train");
+        assert!(d.summary().contains("shard"));
+    }
+}

@@ -38,6 +38,33 @@ pub enum DseStrategy {
     /// points seed the initial population and the genetic archive front
     /// joins the design pool the threshold selection draws from.
     Genetic(SearchConfig),
+    /// The same grid space evaluated by the sharded, checkpointable
+    /// sweep engine (`dse::shard::sweep_sharded` — bit-identical to the
+    /// monolithic sweep). Checkpoints land under
+    /// `<checkpoint_dir>/<dataset>_t<threshold·1e4>` so every threshold
+    /// pass of every dataset resumes independently.
+    Sharded(ShardStrategy),
+}
+
+/// Parameters of [`DseStrategy::Sharded`].
+#[derive(Clone, Debug)]
+pub struct ShardStrategy {
+    /// Number of shards the deduped plan space is split into.
+    pub shards: usize,
+    /// Root checkpoint directory (`None` = in-memory sharding only).
+    pub checkpoint_dir: Option<String>,
+    /// Skip shards already checkpointed under `checkpoint_dir`.
+    pub resume: bool,
+}
+
+impl Default for ShardStrategy {
+    fn default() -> Self {
+        ShardStrategy {
+            shards: 4,
+            checkpoint_dir: None,
+            resume: false,
+        }
+    }
 }
 
 /// Pipeline configuration.
@@ -240,7 +267,21 @@ pub fn run_dataset(
         // AxSum DSE on the retrained model
         let means = mean_activations(qr, &xq_train);
         let sig = significance(qr, &means);
-        let mut designs = dse::sweep(qr, &sig, &data, &ctx.lib, &cfg.dse);
+        let mut designs = match &cfg.strategy {
+            DseStrategy::Sharded(sh) => {
+                let scfg = dse::shard::ShardConfig {
+                    shards: sh.shards,
+                    checkpoint_dir: sh.checkpoint_dir.as_ref().map(|d| {
+                        std::path::Path::new(d)
+                            .join(format!("{}_t{}", info.key, (t * 1e4).round() as u64))
+                    }),
+                    resume: sh.resume,
+                    stop_after: None,
+                };
+                dse::shard::sweep_sharded(qr, &sig, &data, &ctx.lib, &cfg.dse, &scfg)?.evals
+            }
+            _ => dse::sweep(qr, &sig, &data, &ctx.lib, &cfg.dse),
+        };
         // genetic strategy: NSGA-II over per-neuron genomes, seeded from
         // the grid's evaluated points; the archive front joins the pool
         if let DseStrategy::Genetic(scfg) = &cfg.strategy {

@@ -12,6 +12,13 @@
 //! netlists are built from borrowed specs (no weight clones), and grid
 //! points whose `(k, G)` settings derive to an identical [`ShiftPlan`]
 //! are synthesized/simulated once with the result fanned back out.
+//!
+//! For long-running multi-dataset sweeps, [`shard`] wraps the same space
+//! in a sharded, checkpointable, resumable orchestration
+//! ([`shard::sweep_sharded`]) that is pinned bit-identical to [`sweep`]
+//! and survives container death via atomic per-shard JSON checkpoints.
+
+pub mod shard;
 
 use crate::axsum::{
     self, derive_shifts, threshold_candidates, BitSliceEval, BitSliceScratch, FlatEval,
@@ -32,6 +39,16 @@ use std::collections::HashMap;
 /// backends are bit-exact with `axsum::forward` — the conformance
 /// harness runs all of them differentially — so the choice is purely a
 /// throughput knob.
+///
+/// ```
+/// use axmlp::dse::{DseConfig, EvalBackend};
+///
+/// assert_eq!(EvalBackend::Flat.name(), "flat");
+/// assert_eq!(EvalBackend::BitSlice.name(), "bitslice");
+/// // select the bit-sliced engine for a sweep:
+/// let cfg = DseConfig { backend: EvalBackend::BitSlice, ..DseConfig::default() };
+/// assert_eq!(cfg.backend, EvalBackend::BitSlice);
+/// ```
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum EvalBackend {
     /// Per-sample flattened integer forward (`axsum::FlatEval`).
@@ -134,6 +151,31 @@ pub(crate) fn power_stimulus<'a>(data: &QuantData<'a>, cfg: &DseConfig) -> &'a [
 /// the netlist simulator) plus — for the bit-sliced backend — the capped
 /// accuracy splits in the same layout. Build with [`SweepStimuli::prepare`]
 /// before entering the per-point loop.
+///
+/// ```
+/// use axmlp::dse::{DseConfig, QuantData, SweepStimuli};
+/// use axmlp::fixed::QuantMlp;
+///
+/// let q = QuantMlp {
+///     w: vec![vec![vec![3, -2]]],
+///     b: vec![vec![0]],
+///     in_bits: 4,
+///     w_scales: vec![1.0],
+/// };
+/// let xs = vec![vec![1, 2], vec![3, 4], vec![15, 0]];
+/// let ys = vec![0, 0, 0];
+/// let data = QuantData { x_train: &xs, y_train: &ys, x_test: &xs, y_test: &ys };
+/// let cfg = DseConfig { power_patterns: 2, max_eval: 0, ..DseConfig::default() };
+/// let stim = SweepStimuli::prepare(&q, &data, &cfg).unwrap();
+/// assert_eq!((stim.nt, stim.ne), (3, 3));
+/// assert_eq!(stim.power_rows.len(), 2);
+///
+/// // a stimulus row that does not match the model's input count is a
+/// // contextful error, not a panic deep inside the bit-transpose:
+/// let bad = vec![vec![1, 2, 3]];
+/// let bad_data = QuantData { x_train: &bad, y_train: &ys[..1], x_test: &bad, y_test: &ys[..1] };
+/// assert!(SweepStimuli::prepare(&q, &bad_data, &cfg).is_err());
+/// ```
 pub struct SweepStimuli<'a> {
     /// Packed power stimulus (switching-activity simulation).
     pub power: PackedStimulus,
@@ -373,22 +415,27 @@ pub fn enumerate_points(q: &QuantMlp, sig: &Significance, cfg: &DseConfig) -> Ve
     points
 }
 
-/// Full exhaustive sweep (parallel over design points).
-///
-/// Per-sweep-invariant work happens exactly once: the stimulus is packed
-/// up front, every worker owns one [`EngineScratch`], and — because
-/// distinct `(k, G)` grid points frequently derive to the *same*
-/// truncation plan (coarse significance distributions, saturated
-/// thresholds, the all-disabled degeneracy) — identical [`ShiftPlan`]s are
-/// synthesized/simulated once and the evaluation is fanned back out to
-/// every aliasing grid point, relabeled with that point's own `(k, g)`.
-pub fn sweep(
-    q: &QuantMlp,
-    sig: &Significance,
-    data: &QuantData,
-    lib: &EgtLibrary,
-    cfg: &DseConfig,
-) -> Vec<DesignEval> {
+/// The enumerated, plan-deduplicated design space of one sweep — the
+/// single source of truth shared by the monolithic [`sweep`] and the
+/// sharded [`shard::sweep_sharded`], so both orchestrations evaluate the
+/// exact same representative list in the exact same order.
+pub struct SweepSpace {
+    /// Every `(k, per-layer G)` grid point.
+    pub points: Vec<(u32, Vec<f64>)>,
+    /// `derive_shifts` outcome per point (index-aligned with `points`).
+    pub plans: Vec<ShiftPlan>,
+    /// Point index of each dedup representative, in first-seen order —
+    /// the actual evaluation work list.
+    pub reps: Vec<usize>,
+    /// Representative id (index into `reps`) for every point.
+    pub rep_of_point: Vec<usize>,
+}
+
+/// Enumerate the grid, derive every plan, and dedup identical
+/// [`ShiftPlan`]s (distinct `(k, G)` settings frequently derive to the
+/// same truncation plan: coarse significance distributions, saturated
+/// thresholds, the all-disabled degeneracy).
+pub fn sweep_space(q: &QuantMlp, sig: &Significance, cfg: &DseConfig) -> SweepSpace {
     let points = enumerate_points(q, sig, cfg);
     // derive every plan up front (cheap: software-only bookkeeping)
     let plans: Vec<ShiftPlan> = points
@@ -406,13 +453,80 @@ pub fn sweep(
         });
         rep_of_point.push(id);
     }
+    SweepSpace {
+        points,
+        plans,
+        reps,
+        rep_of_point,
+    }
+}
+
+impl SweepSpace {
+    /// Fan the representatives' evaluations back out to every grid point,
+    /// relabeled with each aliasing point's own `(k, g)`. `rep_evals`
+    /// must be index-aligned with `self.reps`.
+    pub fn fan_out(self, rep_evals: &[DesignEval]) -> Vec<DesignEval> {
+        assert_eq!(rep_evals.len(), self.reps.len(), "one eval per representative");
+        self.points
+            .into_iter()
+            .zip(self.rep_of_point)
+            .map(|((k, g), rid)| {
+                let mut e = rep_evals[rid].clone();
+                e.k = k;
+                e.g = g;
+                e
+            })
+            .collect()
+    }
+}
+
+/// Full exhaustive sweep (parallel over design points).
+///
+/// Per-sweep-invariant work happens exactly once: the stimulus is packed
+/// up front, every worker owns one [`EngineScratch`], and identical
+/// derived [`ShiftPlan`]s are synthesized/simulated once with the
+/// evaluation fanned back out to every aliasing grid point (see
+/// [`sweep_space`]). For checkpointable multi-shard orchestration of the
+/// same space see [`shard::sweep_sharded`] — pinned bit-identical to this
+/// function.
+///
+/// ```
+/// use axmlp::axsum::{self, mean_activations, significance, ShiftPlan};
+/// use axmlp::dse::{pareto_front, sweep, DseConfig, QuantData};
+/// use axmlp::fixed::QuantMlp;
+/// use axmlp::pdk::EgtLibrary;
+///
+/// let q = QuantMlp {
+///     w: vec![vec![vec![5, -3], vec![2, 7]], vec![vec![3, -2], vec![-4, 6]]],
+///     b: vec![vec![1, 0], vec![0, 1]],
+///     in_bits: 4,
+///     w_scales: vec![1.0, 1.0],
+/// };
+/// let xs: Vec<Vec<i64>> = (0..12).map(|i| vec![i % 16, (5 * i + 3) % 16]).collect();
+/// let plan = ShiftPlan::exact(&q);
+/// let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&q, &plan, x)).collect();
+/// let data = QuantData { x_train: &xs, y_train: &ys, x_test: &xs, y_test: &ys };
+/// let sig = significance(&q, &mean_activations(&q, &xs));
+/// let cfg = DseConfig { max_g_levels: 2, power_patterns: 8, threads: 2, ..DseConfig::default() };
+/// let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+/// assert!(!designs.is_empty());
+/// assert!(!pareto_front(&designs, true).is_empty());
+/// ```
+pub fn sweep(
+    q: &QuantMlp,
+    sig: &Significance,
+    data: &QuantData,
+    lib: &EgtLibrary,
+    cfg: &DseConfig,
+) -> Vec<DesignEval> {
+    let space = sweep_space(q, sig, cfg);
     let stim = SweepStimuli::prepare(q, data, cfg).expect("sweep stimulus rows match din");
     let rep_evals: Vec<DesignEval> =
-        parallel_map_with(&reps, cfg.threads, EngineScratch::new, |scratch, &pi| {
-            let (k, g) = &points[pi];
+        parallel_map_with(&space.reps, cfg.threads, EngineScratch::new, |scratch, &pi| {
+            let (k, g) = &space.points[pi];
             evaluate_design_packed(
                 q,
-                plans[pi].clone(),
+                space.plans[pi].clone(),
                 *k,
                 g.clone(),
                 data,
@@ -422,16 +536,7 @@ pub fn sweep(
                 scratch,
             )
         });
-    points
-        .into_iter()
-        .zip(rep_of_point)
-        .map(|((k, g), rid)| {
-            let mut e = rep_evals[rid].clone();
-            e.k = k;
-            e.g = g;
-            e
-        })
-        .collect()
+    space.fan_out(&rep_evals)
 }
 
 /// Selection keys that rank a NaN metric as the *worst* value of its

@@ -1,0 +1,901 @@
+//! Sharded, checkpointable orchestration of the exhaustive sweep.
+//!
+//! [`sweep_sharded`] partitions the deduplicated plan space of
+//! [`sweep_space`](super::sweep_space) into deterministic contiguous
+//! shards ([`crate::util::pool::chunk_ranges`]), evaluates each shard
+//! through the existing [`EvalBackend`](super::EvalBackend) dispatch with
+//! per-worker [`EngineScratch`](super::EngineScratch) (work-stealing
+//! *within* a shard via `pool::parallel_map_with`; shards complete in
+//! index order so per-shard results concatenate back into the exact
+//! monolithic evaluation order), and fans the representatives back out to
+//! every grid point. The result is **bit-identical** to
+//! [`sweep`](super::sweep) on the same space — pinned by unit tests, by
+//! `rust/tests/shard_test.rs`, and continuously by the sixth differential
+//! engine in `conformance::sweep`.
+//!
+//! ## Checkpoint / resume
+//!
+//! With [`ShardConfig::checkpoint_dir`] set, every completed shard is
+//! persisted as `shard_NNNN.json` next to a `manifest.json` describing
+//! the partition and a fingerprint of the swept space (model, plans,
+//! stimulus, backend). All checkpoint writes are **atomic**
+//! (`util::json::write_atomic`: temp file + rename), so a container that
+//! dies mid-write can never leave a truncated JSON that poisons a later
+//! resume. A resumed run ([`ShardConfig::resume`]) validates the manifest
+//! against the freshly re-derived space, loads every finished shard
+//! verbatim (accuracies and costs round-trip bit-exactly through the
+//! shortest-roundtrip f64 formatting of `util::json`), evaluates only the
+//! missing shards, and produces output bit-identical to an uninterrupted
+//! run. Any malformed or mismatching checkpoint file is a contextful
+//! [`ShardError`] naming the file — never a panic, never a silent
+//! re-evaluation against the wrong space.
+//!
+//! ## Front merging
+//!
+//! [`merge_fronts`] computes the global Pareto front from per-shard
+//! fronts: the union of per-shard front members is a provably sufficient
+//! candidate set (a design dominated within its shard is dominated
+//! globally), and stable sorting keeps tie-breaking identical to a direct
+//! [`pareto_front`](super::pareto_front) over the concatenated
+//! evaluations — asserted by a property test over fuzzed partitions.
+
+use super::{
+    evaluate_design_packed, pareto_front, sweep_space, DesignEval, DseConfig, EngineScratch,
+    QuantData, SweepSpace, SweepStimuli,
+};
+use crate::axsum::{ShiftPlan, Significance};
+use crate::estimate::Costs;
+use crate::fixed::QuantMlp;
+use crate::pdk::EgtLibrary;
+use crate::util::json::{self, Json};
+use crate::util::pool::{chunk_ranges, parallel_map_with};
+
+use std::hash::Hasher;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+/// Checkpoint format version (bump on any incompatible layout change).
+const CHECKPOINT_VERSION: u64 = 1;
+
+/// Sharded-sweep parameters.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Number of shards the deduplicated plan space is split into
+    /// (contiguous, balanced; shards beyond the rep count are empty but
+    /// keep indices stable). Must be ≥ 1.
+    pub shards: usize,
+    /// When set, completed shards and the space manifest are persisted
+    /// here (created if missing); when `None` the sweep runs fully
+    /// in-memory.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Load finished shards from `checkpoint_dir` instead of
+    /// re-evaluating them. Requires the checkpointed space to match the
+    /// current one (validated via manifest fingerprint *and* per-shard
+    /// plan equality). With no manifest present this is a fresh run.
+    pub resume: bool,
+    /// Evaluate at most this many *new* shards this run, then stop with
+    /// an "interrupted" [`ShardError`] after checkpointing them — the
+    /// budgeted-run / kill-mid-sweep hook (tests use it to simulate
+    /// container death deterministically).
+    pub stop_after: Option<usize>,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: 4,
+            checkpoint_dir: None,
+            resume: false,
+            stop_after: None,
+        }
+    }
+}
+
+/// Contextful sharded-sweep failure (checkpoint corruption, space
+/// mismatch, I/O, interruption). Implements `std::error::Error`, so `?`
+/// converts it into `anyhow::Error` at the coordinator/CLI boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardError(pub String);
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sharded sweep: {}", self.0)
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+fn err(msg: impl std::fmt::Display) -> ShardError {
+    ShardError(msg.to_string())
+}
+
+/// Outcome of a sharded sweep.
+pub struct ShardReport {
+    /// Every grid point's evaluation, fanned out — bit-identical to
+    /// [`sweep`](super::sweep) on the same `(q, sig, data, cfg)`.
+    pub evals: Vec<DesignEval>,
+    /// Global accuracy/area Pareto front over the dedup representatives,
+    /// computed by [`merge_fronts`] from the per-shard fronts.
+    pub front: Vec<DesignEval>,
+    /// Total shards in the partition.
+    pub shards_total: usize,
+    /// Shards evaluated by this run.
+    pub shards_evaluated: usize,
+    /// Shards loaded verbatim from the checkpoint.
+    pub shards_resumed: usize,
+    /// Dedup representatives (points actually synthesized/simulated).
+    pub reps_total: usize,
+    /// Grid points after fan-out (`evals.len()`).
+    pub points_total: usize,
+    /// Fingerprint of the swept space (also in the manifest).
+    pub fingerprint: u64,
+}
+
+/// Merge per-part Pareto fronts into the global front.
+///
+/// Equivalent to `pareto_front(&concat(parts))` — including tie-breaking
+/// order — but only re-ranks the per-part front members. The global front
+/// is a subset of the union of part fronts (domination is preserved under
+/// taking subsets that contain the dominator), and `pareto_front`'s
+/// stable sort breaks `(accuracy, area)` ties by list order, which the
+/// part-order concatenation preserves.
+///
+/// One theoretical caveat: `pareto_front`'s keep rule uses a `1e-12`
+/// area epsilon, so two *distinct* designs whose areas differ by less
+/// than the epsilon without being bit-equal could in principle make the
+/// prefiltered and direct computations disagree. Real cell-area sums
+/// differ by many orders of magnitude more than `1e-12` mm², and the
+/// fuzzed partition property test plus the conformance sweep engine
+/// watch the equality continuously.
+pub fn merge_fronts(parts: &[Vec<DesignEval>], by_train: bool) -> Vec<DesignEval> {
+    let mut candidates: Vec<DesignEval> = Vec::new();
+    for part in parts {
+        for &i in &pareto_front(part, by_train) {
+            candidates.push(part[i].clone());
+        }
+    }
+    pareto_front(&candidates, by_train)
+        .into_iter()
+        .map(|i| candidates[i].clone())
+        .collect()
+}
+
+/// First bit-level divergence between two eval lists, as
+/// `(index, field, "a vs b" detail)` — `None` when the lists are
+/// bit-identical. The single comparator behind every sharded-vs-
+/// monolithic parity check (exp_shard, conformance::sweep, the parity
+/// tests), so a future `DesignEval` field is added to the comparison in
+/// exactly one place.
+pub fn first_divergence(
+    a: &[DesignEval],
+    b: &[DesignEval],
+) -> Option<(usize, &'static str, String)> {
+    if a.len() != b.len() {
+        return Some((0, "len", format!("{} vs {} evals", a.len(), b.len())));
+    }
+    for (p, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.k != y.k || x.g != y.g {
+            let detail = format!("{:?} vs {:?}", (x.k, &x.g), (y.k, &y.g));
+            return Some((p, "point label (k, g)", detail));
+        }
+        if x.plan != y.plan {
+            return Some((p, "plan", "derived shift plans differ".to_string()));
+        }
+        if x.acc_train.to_bits() != y.acc_train.to_bits() {
+            return Some((p, "acc_train", format!("{} vs {}", x.acc_train, y.acc_train)));
+        }
+        if x.acc_test.to_bits() != y.acc_test.to_bits() {
+            return Some((p, "acc_test", format!("{} vs {}", x.acc_test, y.acc_test)));
+        }
+        if x.costs != y.costs {
+            return Some((p, "costs", format!("{:?} vs {:?}", x.costs, y.costs)));
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Space fingerprint.
+// ---------------------------------------------------------------------------
+
+/// Hash everything a shard evaluation depends on: model, backend and
+/// sampling knobs, the cost library, the enumerated points and derived
+/// plans, and the capped data splits (accuracies depend on the rows
+/// themselves). Two runs with equal fingerprints evaluate identical
+/// work; a resume against a different space is refused up front instead
+/// of silently mixing results.
+fn space_fingerprint(
+    q: &QuantMlp,
+    cfg: &DseConfig,
+    space: &SweepSpace,
+    data: &QuantData,
+    stim: &SweepStimuli,
+    lib: &EgtLibrary,
+) -> u64 {
+    let mut h = rustc_hash::FxHasher::default();
+    h.write(cfg.backend.name().as_bytes());
+    // checkpointed costs are only valid under the library they were
+    // estimated with
+    h.write(lib.name.as_bytes());
+    h.write_u64(lib.static_fraction.to_bits());
+    for kind in crate::pdk::CellKind::ALL {
+        let p = lib.params(kind);
+        h.write_u64(p.area_mm2.to_bits());
+        h.write_u64(p.delay_ms.to_bits());
+        h.write_u64(p.power_uw.to_bits());
+    }
+    h.write_usize(cfg.max_eval);
+    h.write_usize(cfg.power_patterns);
+    h.write_u8(cfg.verify_circuit as u8);
+    h.write_usize(q.in_bits);
+    for (lw, lb) in q.w.iter().zip(&q.b) {
+        for row in lw {
+            for &w in row {
+                h.write_i64(w);
+            }
+            h.write_u8(0xA1);
+        }
+        for &b in lb {
+            h.write_i64(b);
+        }
+        h.write_u8(0xA2);
+    }
+    h.write_usize(space.points.len());
+    for ((k, g), plan) in space.points.iter().zip(&space.plans) {
+        h.write_u32(*k);
+        for &x in g {
+            h.write_u64(x.to_bits());
+        }
+        for layer in &plan.shifts {
+            for row in layer {
+                for &s in row {
+                    h.write_u32(s);
+                }
+            }
+        }
+        h.write_u8(0xA3);
+    }
+    h.write_usize(stim.nt);
+    h.write_usize(stim.ne);
+    h.write_usize(stim.power_rows.len());
+    let mut rows = |xs: &[Vec<i64>], ys: &[usize]| {
+        for row in xs {
+            for &v in row {
+                h.write_i64(v);
+            }
+        }
+        for &y in ys {
+            h.write_usize(y);
+        }
+        h.write_u8(0xA4);
+    };
+    rows(&data.x_train[..stim.nt], &data.y_train[..stim.nt]);
+    rows(&data.x_test[..stim.ne], &data.y_test[..stim.ne]);
+    rows(stim.power_rows, &[]);
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint serialization.
+// ---------------------------------------------------------------------------
+
+fn shifts_to_json(shifts: &[Vec<Vec<u32>>]) -> Json {
+    Json::Arr(
+        shifts
+            .iter()
+            .map(|layer| {
+                Json::Arr(
+                    layer
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(row.iter().map(|&s| Json::Num(s as f64)).collect())
+                        })
+                        .collect(),
+                )
+            })
+            .collect(),
+    )
+}
+
+fn shifts_from_json(j: &Json) -> Result<Vec<Vec<Vec<u32>>>, String> {
+    const MALFORMED: &str = "malformed shifts tensor";
+    let mut out = Vec::new();
+    for layer in j.as_arr().ok_or(MALFORMED)? {
+        let mut rows = Vec::new();
+        for row in layer.as_arr().ok_or(MALFORMED)? {
+            let mut shifts = Vec::new();
+            for v in row.as_arr().ok_or(MALFORMED)? {
+                shifts.push(v.as_f64().ok_or(MALFORMED)? as u32);
+            }
+            rows.push(shifts);
+        }
+        out.push(rows);
+    }
+    Ok(out)
+}
+
+fn eval_to_json(e: &DesignEval) -> Json {
+    json::obj(vec![
+        ("k", Json::Num(e.k as f64)),
+        ("g", json::arr_f64(&e.g)),
+        ("shifts", shifts_to_json(&e.plan.shifts)),
+        ("acc_train", Json::Num(e.acc_train)),
+        ("acc_test", Json::Num(e.acc_test)),
+        (
+            "costs",
+            json::obj(vec![
+                ("area_mm2", Json::Num(e.costs.area_mm2)),
+                ("power_mw", Json::Num(e.costs.power_mw)),
+                ("delay_ms", Json::Num(e.costs.delay_ms)),
+                ("cells", Json::Num(e.costs.cells as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn eval_from_json(j: &Json) -> Result<DesignEval, String> {
+    let jstr = |e: json::JsonError| e.to_string();
+    let mut g = Vec::new();
+    for v in j
+        .req("g")
+        .map_err(jstr)?
+        .as_arr()
+        .ok_or("key `g` not an array")?
+    {
+        g.push(v.as_f64().ok_or("non-numeric g entry")?);
+    }
+    let costs = j.req("costs").map_err(jstr)?;
+    Ok(DesignEval {
+        k: j.req_usize("k").map_err(jstr)? as u32,
+        g,
+        plan: ShiftPlan {
+            shifts: shifts_from_json(j.req("shifts").map_err(jstr)?)?,
+        },
+        acc_train: j.req_f64("acc_train").map_err(jstr)?,
+        acc_test: j.req_f64("acc_test").map_err(jstr)?,
+        costs: Costs {
+            area_mm2: costs.req_f64("area_mm2").map_err(jstr)?,
+            power_mw: costs.req_f64("power_mw").map_err(jstr)?,
+            delay_ms: costs.req_f64("delay_ms").map_err(jstr)?,
+            cells: costs.req_usize("cells").map_err(jstr)?,
+        },
+    })
+}
+
+/// Shard checkpoint files currently present in `dir`, sorted by name.
+fn existing_shard_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("shard_") && name.ends_with(".json") {
+                out.push(entry.path());
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// An open checkpoint directory bound to one space fingerprint.
+struct Checkpoint {
+    dir: PathBuf,
+    fingerprint: u64,
+}
+
+impl Checkpoint {
+    fn manifest_path(dir: &Path) -> PathBuf {
+        dir.join("manifest.json")
+    }
+
+    fn shard_path(&self, s: usize) -> PathBuf {
+        self.dir.join(format!("shard_{s:04}.json"))
+    }
+
+    /// Open (and validate, on resume) or initialize (fresh run) the
+    /// checkpoint directory. A fresh run rewrites the manifest and
+    /// removes stale shard files so a later resume can only ever see
+    /// shards of the current space.
+    fn open(
+        dir: &Path,
+        fingerprint: u64,
+        ranges: &[Range<usize>],
+        n_reps: usize,
+        n_points: usize,
+        backend: &str,
+        resume: bool,
+    ) -> Result<Checkpoint, ShardError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| err(format!("cannot create checkpoint dir {}: {e}", dir.display())))?;
+        let ck = Checkpoint {
+            dir: dir.to_path_buf(),
+            fingerprint,
+        };
+        let mpath = Self::manifest_path(dir);
+        if resume && mpath.exists() {
+            let raw = std::fs::read_to_string(&mpath)
+                .map_err(|e| err(format!("cannot read manifest {}: {e}", mpath.display())))?;
+            let m = Json::parse(&raw).map_err(|e| {
+                err(format!(
+                    "corrupted manifest {}: {e} — delete the checkpoint dir to start over",
+                    mpath.display()
+                ))
+            })?;
+            let check = |key: &str, want: u64| -> Result<(), ShardError> {
+                let got = m
+                    .req(key)
+                    .and_then(|v| {
+                        v.as_f64()
+                            .ok_or_else(|| json::JsonError(format!("key `{key}` not a number")))
+                    })
+                    .map_err(|e| err(format!("corrupted manifest {}: {e}", mpath.display())))?
+                    as u64;
+                if got != want {
+                    return Err(err(format!(
+                        "manifest {} does not match this sweep ({key}: checkpoint has {got}, \
+                         current space needs {want}) — wrong dataset/config/checkpoint-dir?",
+                        mpath.display()
+                    )));
+                }
+                Ok(())
+            };
+            check("version", CHECKPOINT_VERSION)?;
+            check("shards", ranges.len() as u64)?;
+            check("reps", n_reps as u64)?;
+            check("points", n_points as u64)?;
+            let fp = m
+                .req_str("fingerprint")
+                .map_err(|e| err(format!("corrupted manifest {}: {e}", mpath.display())))?;
+            let want = format!("{fingerprint:016x}");
+            if fp != want {
+                return Err(err(format!(
+                    "manifest {} fingerprint {fp} does not match this sweep's {want} — the \
+                     checkpoint was written for a different model/stimulus/backend",
+                    mpath.display()
+                )));
+            }
+            return Ok(ck);
+        }
+        // a manifest-less resume must not silently destroy surviving
+        // shard checkpoints (e.g. a partial restore lost manifest.json):
+        // refuse and let the operator decide
+        if resume {
+            let orphans = existing_shard_files(dir);
+            if !orphans.is_empty() {
+                return Err(err(format!(
+                    "resume requested but {} has no manifest.json while {} shard checkpoint(s) \
+                     exist (first: {}) — restore the manifest, or delete the directory to start \
+                     over",
+                    dir.display(),
+                    orphans.len(),
+                    orphans[0].display()
+                )));
+            }
+        }
+        // fresh run (or resume into an empty dir): write the manifest and
+        // drop any stale shard files from a previous, different space
+        for p in existing_shard_files(dir) {
+            let _ = std::fs::remove_file(p);
+        }
+        let manifest = json::obj(vec![
+            ("version", Json::Num(CHECKPOINT_VERSION as f64)),
+            ("fingerprint", json::s(&format!("{fingerprint:016x}"))),
+            ("backend", json::s(backend)),
+            ("shards", Json::Num(ranges.len() as f64)),
+            ("reps", Json::Num(n_reps as f64)),
+            ("points", Json::Num(n_points as f64)),
+            (
+                "ranges",
+                Json::Arr(
+                    ranges
+                        .iter()
+                        .map(|r| {
+                            Json::Arr(vec![
+                                Json::Num(r.start as f64),
+                                Json::Num(r.end as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        json::write_atomic(&mpath, &manifest.pretty())
+            .map_err(|e| err(format!("cannot write manifest {}: {e}", mpath.display())))?;
+        Ok(ck)
+    }
+
+    /// Load shard `s` if its checkpoint file exists. Validates the
+    /// fingerprint, the shard index, the eval count against `expect`,
+    /// and each eval's `(k, g, plan)` against the space — any deviation
+    /// is a contextful error naming the file.
+    fn load_shard(
+        &self,
+        s: usize,
+        range: &Range<usize>,
+        space: &SweepSpace,
+    ) -> Result<Option<Vec<DesignEval>>, ShardError> {
+        let path = self.shard_path(s);
+        let raw = match std::fs::read_to_string(&path) {
+            Ok(r) => r,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(err(format!("cannot read shard {}: {e}", path.display()))),
+        };
+        let ctx = |msg: String| {
+            err(format!(
+                "corrupted shard checkpoint {}: {msg} — delete the file to re-evaluate",
+                path.display()
+            ))
+        };
+        let j = Json::parse(&raw).map_err(|e| ctx(e.to_string()))?;
+        let fp = j.req_str("fingerprint").map_err(|e| ctx(e.to_string()))?;
+        if fp != format!("{:016x}", self.fingerprint) {
+            return Err(ctx(format!(
+                "fingerprint {fp} does not match the current space {:016x}",
+                self.fingerprint
+            )));
+        }
+        if j.req_usize("shard").map_err(|e| ctx(e.to_string()))? != s {
+            return Err(ctx("shard index mismatch".into()));
+        }
+        let evals_j = j
+            .req("evals")
+            .map_err(|e| ctx(e.to_string()))?
+            .as_arr()
+            .ok_or_else(|| ctx("key `evals` not an array".into()))?;
+        if evals_j.len() != range.len() {
+            return Err(ctx(format!(
+                "has {} evals, shard covers {} representatives",
+                evals_j.len(),
+                range.len()
+            )));
+        }
+        let mut evals = Vec::with_capacity(evals_j.len());
+        for (offset, ej) in evals_j.iter().enumerate() {
+            let e = eval_from_json(ej).map_err(ctx)?;
+            let pi = space.reps[range.start + offset];
+            let (k, g) = &space.points[pi];
+            if e.k != *k || e.g != *g || e.plan != space.plans[pi] {
+                return Err(ctx(format!(
+                    "eval {offset} does not match representative {} of the current space",
+                    range.start + offset
+                )));
+            }
+            evals.push(e);
+        }
+        Ok(Some(evals))
+    }
+
+    /// Persist shard `s` atomically (temp file + rename): a run killed
+    /// mid-write leaves at worst a stale `.tmp`, never a truncated
+    /// `shard_NNNN.json`.
+    fn write_shard(&self, s: usize, evals: &[DesignEval]) -> Result<(), ShardError> {
+        let body = json::obj(vec![
+            ("fingerprint", json::s(&format!("{:016x}", self.fingerprint))),
+            ("shard", Json::Num(s as f64)),
+            ("evals", Json::Arr(evals.iter().map(eval_to_json).collect())),
+        ]);
+        let path = self.shard_path(s);
+        json::write_atomic(&path, &body.pretty())
+            .map_err(|e| err(format!("cannot write shard {}: {e}", path.display())))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The sharded sweep.
+// ---------------------------------------------------------------------------
+
+/// Sharded, checkpointable, resumable variant of [`sweep`](super::sweep)
+/// — same space, same engines, bit-identical `evals`.
+///
+/// ```
+/// use axmlp::axsum::{self, mean_activations, significance, ShiftPlan};
+/// use axmlp::dse::shard::{sweep_sharded, ShardConfig};
+/// use axmlp::dse::{sweep, DseConfig, QuantData};
+/// use axmlp::fixed::QuantMlp;
+/// use axmlp::pdk::EgtLibrary;
+///
+/// let q = QuantMlp {
+///     w: vec![vec![vec![5, -3], vec![2, 7]], vec![vec![3, -2], vec![-4, 6]]],
+///     b: vec![vec![1, 0], vec![0, 1]],
+///     in_bits: 4,
+///     w_scales: vec![1.0, 1.0],
+/// };
+/// let xs: Vec<Vec<i64>> = (0..12).map(|i| vec![i % 16, (5 * i + 3) % 16]).collect();
+/// let plan = ShiftPlan::exact(&q);
+/// let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&q, &plan, x)).collect();
+/// let data = QuantData { x_train: &xs, y_train: &ys, x_test: &xs, y_test: &ys };
+/// let sig = significance(&q, &mean_activations(&q, &xs));
+/// let cfg = DseConfig { max_g_levels: 2, power_patterns: 8, threads: 2, ..DseConfig::default() };
+/// let lib = EgtLibrary::egt_v1();
+///
+/// let mono = sweep(&q, &sig, &data, &lib, &cfg);
+/// let scfg = ShardConfig { shards: 3, ..ShardConfig::default() };
+/// let report = sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
+/// assert_eq!(report.evals.len(), mono.len());
+/// for (a, b) in report.evals.iter().zip(&mono) {
+///     assert_eq!(a.plan, b.plan);
+///     assert_eq!(a.acc_train, b.acc_train);
+///     assert_eq!(a.costs, b.costs);
+/// }
+/// ```
+pub fn sweep_sharded(
+    q: &QuantMlp,
+    sig: &Significance,
+    data: &QuantData,
+    lib: &EgtLibrary,
+    cfg: &DseConfig,
+    scfg: &ShardConfig,
+) -> Result<ShardReport, ShardError> {
+    if scfg.shards == 0 {
+        return Err(err("shard count must be at least 1"));
+    }
+    let space = sweep_space(q, sig, cfg);
+    let stim = SweepStimuli::prepare(q, data, cfg).map_err(err)?;
+    let fingerprint = space_fingerprint(q, cfg, &space, data, &stim, lib);
+    let ranges = chunk_ranges(space.reps.len(), scfg.shards);
+    let ckpt = match &scfg.checkpoint_dir {
+        Some(dir) => Some(Checkpoint::open(
+            dir,
+            fingerprint,
+            &ranges,
+            space.reps.len(),
+            space.points.len(),
+            cfg.backend.name(),
+            scfg.resume,
+        )?),
+        None => None,
+    };
+
+    let mut shard_evals: Vec<Option<Vec<DesignEval>>> = (0..ranges.len()).map(|_| None).collect();
+    let mut resumed = 0;
+    if scfg.resume {
+        if let Some(ck) = &ckpt {
+            for (s, range) in ranges.iter().enumerate() {
+                if let Some(evals) = ck.load_shard(s, range, &space)? {
+                    shard_evals[s] = Some(evals);
+                    resumed += 1;
+                }
+            }
+        }
+    }
+
+    let mut evaluated = 0;
+    for (s, range) in ranges.iter().enumerate() {
+        if shard_evals[s].is_some() {
+            continue;
+        }
+        if scfg.stop_after.is_some_and(|cap| evaluated >= cap) {
+            let fate = if ckpt.is_some() {
+                format!(
+                    "{} of {} shards are checkpointed — resume to continue",
+                    resumed + evaluated,
+                    ranges.len()
+                )
+            } else {
+                "no checkpoint dir is set, so the evaluated shards are discarded".to_string()
+            };
+            return Err(err(format!(
+                "interrupted after {evaluated} newly evaluated shards (stop_after): {fate}"
+            )));
+        }
+        let shard_reps = &space.reps[range.clone()];
+        let evals: Vec<DesignEval> =
+            parallel_map_with(shard_reps, cfg.threads, EngineScratch::new, |scratch, &pi| {
+                let (k, g) = &space.points[pi];
+                evaluate_design_packed(
+                    q,
+                    space.plans[pi].clone(),
+                    *k,
+                    g.clone(),
+                    data,
+                    lib,
+                    cfg,
+                    &stim,
+                    scratch,
+                )
+            });
+        if let Some(ck) = &ckpt {
+            ck.write_shard(s, &evals)?;
+        }
+        shard_evals[s] = Some(evals);
+        evaluated += 1;
+    }
+
+    let parts: Vec<Vec<DesignEval>> = shard_evals
+        .into_iter()
+        .map(|e| e.expect("every shard evaluated or resumed"))
+        .collect();
+    let front = merge_fronts(&parts, true);
+    let rep_evals: Vec<DesignEval> = parts.into_iter().flatten().collect();
+    debug_assert_eq!(rep_evals.len(), space.reps.len());
+    let reps_total = space.reps.len();
+    let points_total = space.points.len();
+    let evals = space.fan_out(&rep_evals);
+    Ok(ShardReport {
+        evals,
+        front,
+        shards_total: ranges.len(),
+        shards_evaluated: evaluated,
+        shards_resumed: resumed,
+        reps_total,
+        points_total,
+        fingerprint,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axsum::{mean_activations, significance};
+    use crate::util::rng::Rng;
+
+    fn toy() -> (QuantMlp, Vec<Vec<i64>>, Vec<usize>) {
+        let mut rng = Rng::new(31);
+        let q = QuantMlp {
+            w: vec![
+                (0..3)
+                    .map(|_| (0..4).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+                (0..3)
+                    .map(|_| (0..3).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+            ],
+            b: vec![
+                (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+                (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+            ],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        };
+        let xs: Vec<Vec<i64>> = (0..160)
+            .map(|_| (0..4).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let plan = ShiftPlan::exact(&q);
+        let ys: Vec<usize> = xs
+            .iter()
+            .map(|x| crate::axsum::predict(&q, &plan, x))
+            .collect();
+        (q, xs, ys)
+    }
+
+    fn assert_bit_identical(a: &[DesignEval], b: &[DesignEval]) {
+        if let Some((p, field, detail)) = first_divergence(a, b) {
+            panic!("eval lists diverge at {p} ({field}): {detail}");
+        }
+    }
+
+    #[test]
+    fn sharded_matches_monolithic_for_any_shard_count() {
+        let (q, xs, ys) = toy();
+        let data = QuantData {
+            x_train: &xs[..120],
+            y_train: &ys[..120],
+            x_test: &xs[120..],
+            y_test: &ys[120..],
+        };
+        let sig = significance(&q, &mean_activations(&q, data.x_train));
+        let cfg = DseConfig {
+            max_g_levels: 3,
+            power_patterns: 24,
+            threads: 4,
+            verify_circuit: false,
+            max_eval: 0,
+            ..DseConfig::default()
+        };
+        let lib = EgtLibrary::egt_v1();
+        let mono = super::super::sweep(&q, &sig, &data, &lib, &cfg);
+        for shards in [1usize, 2, 3, 7, 64] {
+            let scfg = ShardConfig {
+                shards,
+                ..ShardConfig::default()
+            };
+            let rep = sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
+            assert_bit_identical(&rep.evals, &mono);
+            assert_eq!(rep.shards_total, shards);
+            assert_eq!(rep.shards_evaluated + rep.shards_resumed, shards);
+            // merged per-shard fronts == direct front over the evals'
+            // rep-level pool (same designs dominate)
+            assert!(!rep.front.is_empty());
+        }
+    }
+
+    #[test]
+    fn merge_fronts_equals_direct_front_on_fuzzed_partitions() {
+        let (q, _, _) = toy();
+        let mut rng = Rng::new(99);
+        for round in 0..24 {
+            // fuzzed eval pool with deliberate duplicates and ties
+            let n = 3 + (rng.next_u64() % 40) as usize;
+            let evals: Vec<DesignEval> = (0..n)
+                .map(|i| {
+                    let acc = (rng.next_u64() % 7) as f64 / 6.0;
+                    let area = (rng.next_u64() % 5) as f64 * 0.5 + 0.25;
+                    DesignEval {
+                        k: (i % 3) as u32 + 1,
+                        g: vec![i as f64],
+                        plan: ShiftPlan::exact(&q),
+                        acc_train: acc,
+                        acc_test: acc,
+                        costs: Costs {
+                            area_mm2: area,
+                            power_mw: 1.0,
+                            delay_ms: 1.0,
+                            cells: i,
+                        },
+                    }
+                })
+                .collect();
+            // random contiguous partition (mirrors the shard layout)
+            let parts_n = 1 + (rng.next_u64() % 5) as usize;
+            let parts: Vec<Vec<DesignEval>> = chunk_ranges(evals.len(), parts_n)
+                .into_iter()
+                .map(|r| evals[r].to_vec())
+                .collect();
+            let merged = merge_fronts(&parts, true);
+            let direct: Vec<DesignEval> = pareto_front(&evals, true)
+                .into_iter()
+                .map(|i| evals[i].clone())
+                .collect();
+            assert_eq!(merged.len(), direct.len(), "round {round}");
+            for (m, d) in merged.iter().zip(&direct) {
+                // `g` carries the fuzzed unique id: equality pins not just
+                // the (acc, area) values but *which* design won the tie
+                assert_eq!(m.g, d.g, "round {round}");
+                assert_eq!(m.acc_train, d.acc_train);
+                assert_eq!(m.costs.area_mm2, d.costs.area_mm2);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_json_roundtrip_is_bit_exact() {
+        let (q, _, _) = toy();
+        let e = DesignEval {
+            k: 2,
+            g: vec![-1.0, 0.012345678901234567],
+            plan: ShiftPlan::exact(&q),
+            acc_train: 0.9871234567890123,
+            acc_test: 1.0 / 3.0,
+            costs: Costs {
+                area_mm2: 123.45678901234567,
+                power_mw: 9.869604401089358e-5,
+                delay_ms: 88.0,
+                cells: 1234,
+            },
+        };
+        let back = eval_from_json(&Json::parse(&eval_to_json(&e).pretty()).unwrap()).unwrap();
+        assert_eq!(back.k, e.k);
+        assert_eq!(back.g, e.g);
+        assert_eq!(back.plan, e.plan);
+        assert_eq!(back.acc_train.to_bits(), e.acc_train.to_bits());
+        assert_eq!(back.acc_test.to_bits(), e.acc_test.to_bits());
+        assert_eq!(back.costs.area_mm2.to_bits(), e.costs.area_mm2.to_bits());
+        assert_eq!(back.costs.power_mw.to_bits(), e.costs.power_mw.to_bits());
+        assert_eq!(back.costs, e.costs);
+    }
+
+    #[test]
+    fn zero_shards_is_an_error() {
+        let (q, xs, ys) = toy();
+        let data = QuantData {
+            x_train: &xs[..120],
+            y_train: &ys[..120],
+            x_test: &xs[120..],
+            y_test: &ys[120..],
+        };
+        let sig = significance(&q, &mean_activations(&q, data.x_train));
+        let cfg = DseConfig {
+            max_g_levels: 2,
+            power_patterns: 8,
+            threads: 1,
+            verify_circuit: false,
+            ..DseConfig::default()
+        };
+        let scfg = ShardConfig {
+            shards: 0,
+            ..ShardConfig::default()
+        };
+        assert!(sweep_sharded(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg, &scfg).is_err());
+    }
+}

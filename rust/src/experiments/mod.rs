@@ -799,14 +799,163 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
     Ok(())
 }
 
+/// `repro sweep` — the sharded, checkpointable sweep engine head-to-head
+/// with the monolithic `dse::sweep` on every selected dataset (no
+/// retraining: both orchestrations evaluate the same quantized model, so
+/// the comparison isolates the orchestration and measures its overhead).
+///
+/// Per dataset, three passes over the same space:
+///
+/// 1. monolithic `dse::sweep` (the reference);
+/// 2. sharded sweep with checkpoints under `<checkpoint_dir>/<key>`,
+///    parity-checked bit-for-bit against pass 1 (with `--resume`, pass 2
+///    loads whatever a previous — possibly killed — run checkpointed);
+/// 3. a resume pass, parity-checked again. On a fresh run (`--resume`
+///    not given) one shard checkpoint is first deleted to simulate a
+///    container death, so the pass exercises load + re-evaluate; under
+///    `--resume` nothing is ever deleted (the user is recovering real
+///    checkpoints) and the pass is a pure load.
+///
+/// This is the parity/benchmark harness for the engine; long production
+/// runs use the engine directly (`DseStrategy::Sharded` in the
+/// coordinator, or `dse::shard::sweep_sharded`), which never pays the
+/// monolithic reference pass. Emits `results/shard_summary.csv` and
+/// `BENCH_shard.json` (per-pass ns/representative trajectory records).
+pub fn exp_shard(
+    cfg: &ExpConfig,
+    shards: usize,
+    checkpoint_dir: &str,
+    resume: bool,
+) -> anyhow::Result<()> {
+    use crate::axsum::{mean_activations, significance};
+    use crate::dse::shard::{first_divergence, sweep_sharded, ShardConfig};
+    use crate::dse::{self, DesignEval, QuantData};
+    use crate::util::bench::{write_json, BenchResult};
+
+    // the shared parity comparator, rendered for the failure log
+    fn first_mismatch(mono: &[DesignEval], sharded: &[DesignEval]) -> Option<String> {
+        first_divergence(mono, sharded)
+            .map(|(p, field, detail)| format!("point {p} ({field}): {detail}"))
+    }
+
+    let ctx = SharedContext::new();
+    let pcfg = cfg.pipeline();
+    let mut t = Table::new(&[
+        "dataset", "points", "reps", "shards", "mono[s]", "sharded[s]", "resume[s]",
+        "resumed", "parity",
+    ]);
+    let mut bench_rows: Vec<BenchResult> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for key in &cfg.datasets {
+        let ds = datasets::load(key, cfg.seed)?;
+        let q0 = quantize(&train_mlp0(&ds, &pcfg.train, cfg.seed));
+        let xq_train = quantize_inputs(&ds.x_train);
+        let xq_test = quantize_inputs(&ds.x_test);
+        let data = QuantData {
+            x_train: &xq_train,
+            y_train: &ds.y_train,
+            x_test: &xq_test,
+            y_test: &ds.y_test,
+        };
+        let means = mean_activations(&q0, &xq_train);
+        let sig = significance(&q0, &means);
+
+        let t0 = std::time::Instant::now();
+        let mono = dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse);
+        let mono_s = t0.elapsed();
+
+        let dir = std::path::Path::new(checkpoint_dir).join(key);
+        let scfg = ShardConfig {
+            shards,
+            checkpoint_dir: Some(dir.clone()),
+            resume,
+            stop_after: None,
+        };
+        let t1 = std::time::Instant::now();
+        let rep1 = sweep_sharded(&q0, &sig, &data, &ctx.lib, &pcfg.dse, &scfg)?;
+        let shard_s = t1.elapsed();
+        let mut parity = "ok";
+        if let Some(m) = first_mismatch(&mono, &rep1.evals) {
+            parity = "FAIL";
+            failures.push(format!("[{key}] sharded != monolithic: {m}"));
+        }
+
+        // simulated container death: drop one finished shard, resume.
+        // Never under --resume — the user is recovering a real run and
+        // this experiment must not destroy their checkpoints.
+        if !resume {
+            let _ = std::fs::remove_file(dir.join("shard_0000.json"));
+        }
+        let rcfg = ShardConfig {
+            resume: true,
+            ..scfg.clone()
+        };
+        let t2 = std::time::Instant::now();
+        let rep2 = sweep_sharded(&q0, &sig, &data, &ctx.lib, &pcfg.dse, &rcfg)?;
+        let resume_s = t2.elapsed();
+        if let Some(m) = first_mismatch(&mono, &rep2.evals) {
+            parity = "FAIL";
+            failures.push(format!("[{key}] resumed != monolithic: {m}"));
+        }
+
+        t.row(vec![
+            key.clone(),
+            rep1.points_total.to_string(),
+            rep1.reps_total.to_string(),
+            rep1.shards_total.to_string(),
+            f2(mono_s.as_secs_f64()),
+            f2(shard_s.as_secs_f64()),
+            f2(resume_s.as_secs_f64()),
+            format!("{}/{}", rep2.shards_resumed, rep2.shards_total),
+            parity.into(),
+        ]);
+        let reps = rep1.reps_total.max(1) as f64;
+        for (name, d) in [
+            ("sweep_mono", mono_s),
+            ("sweep_sharded", shard_s),
+            ("sweep_resume", resume_s),
+        ] {
+            let ns = d.as_nanos() as f64 / reps;
+            bench_rows.push(BenchResult {
+                name: format!("{name}({key},shards{shards})"),
+                iters: rep1.reps_total as u64,
+                mean_ns: ns,
+                median_ns: ns,
+                min_ns: ns,
+                p95_ns: ns,
+            });
+        }
+        eprintln!(
+            "[{key}] sharded sweep done: {} reps / {} points, {} shards, parity {parity}",
+            rep1.reps_total, rep1.points_total, rep1.shards_total
+        );
+    }
+    t.emit(
+        &format!(
+            "Sweep — sharded checkpointable engine vs monolithic (shards={shards}; \
+             'resumed' counts checkpointed shards loaded after a simulated container death)"
+        ),
+        "shard_summary.csv",
+    );
+    write_json("BENCH_shard.json", &bench_rows);
+    if failures.is_empty() {
+        println!("sharded sweep OK: bit-identical to the monolithic sweep on every dataset");
+        Ok(())
+    } else {
+        Err(anyhow::Error::msg(failures.join("\n")))
+    }
+}
+
 /// `repro conform` — the differential conformance harness (ISSUE 3).
 ///
-/// Three stages, any failure turns the run red:
+/// Four stages, any failure turns the run red:
 ///
 /// 1. **canary** — inject a single-shift corruption on the netlist side
 ///    of a random model and require the harness to catch it *and* shrink
 ///    it to a reproducer naming the corrupted neuron (an instrument that
-///    cannot fail cannot certify a green run);
+///    cannot fail cannot certify a green run); the sweep-level canary
+///    does the same with a tampered shard checkpoint, which the resumed
+///    differential run must trace back to the corrupted shard;
 /// 2. **fuzz** — `cases` random `(QuantMlp, plan, stimulus)` triples
 ///    through every forward (`axsum::forward`, `FlatEval`,
 ///    `build_mlp_ref`/`build_mlp_logits` → `simulate_packed`), plan
@@ -814,7 +963,11 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
 ///    decoders, stimulus hitting saturation corners and 64-pattern chunk
 ///    edges. Mismatches are shrunk and dumped as
 ///    `results/conform_repro_*.json` (uploaded as CI artifacts);
-/// 3. **golden** — recompute the committed `rust/tests/golden/*.json`
+/// 3. **fuzz/sweep** — the sixth, sweep-level engine: fuzzed models run
+///    through the sharded checkpointable sweep (including interrupt →
+///    resume cycles) and compared bit-for-bit against the monolithic
+///    `dse::sweep`, merged Pareto fronts included;
+/// 4. **golden** — recompute the committed `rust/tests/golden/*.json`
 ///    snapshots and diff strictly (`--bless` rewrites them; missing files
 ///    are bootstrapped and reported so they get committed).
 pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<()> {
@@ -835,6 +988,12 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
             ),
             Err(e) => failures.push(format!("canary[{}]: {e}", site.name())),
         }
+    }
+    // the sweep-level instrument must also prove it can fail: a tampered
+    // shard checkpoint has to be traced back to the corrupted shard
+    match conformance::sweep_canary(cfg.seed) {
+        Ok(d) => println!("canary[sweep]: tampered checkpoint caught — {}", d.summary()),
+        Err(e) => failures.push(format!("canary[sweep]: {e}")),
     }
 
     // 2. fuzz
@@ -867,7 +1026,35 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
         failures.push(format!("fuzz mismatch (results/{name}): {}", m.summary()));
     }
 
-    // 3. goldens
+    // 3. sweep-level differential engine (sharded vs monolithic, with
+    // interrupt/resume cycles on odd cases) — whole sweeps per case, so
+    // the case budget scales down from the per-case fuzz budget
+    let sweep_cases = (cases / 32).clamp(2, 6);
+    let sreport = conformance::run_sweep_fuzz(sweep_cases, cfg.seed);
+    t.row(vec![
+        "fuzz/sweep".into(),
+        format!(
+            "{} sharded-vs-monolithic sweeps ({} reps evaluated)",
+            sreport.cases, sreport.reps_total
+        ),
+        if sreport.ok() {
+            "ok".into()
+        } else {
+            format!(
+                "{} DIVERGENCES, {} errors",
+                sreport.divergences.len(),
+                sreport.errors.len()
+            )
+        },
+    ]);
+    for d in &sreport.divergences {
+        failures.push(format!("sweep divergence: {}", d.summary()));
+    }
+    for e in &sreport.errors {
+        failures.push(format!("sweep fuzz error: {e}"));
+    }
+
+    // 4. goldens
     for g in conformance::golden::check_all(bless) {
         let detail = match &g.status {
             GoldenStatus::Drift(lines) => {

@@ -6,12 +6,16 @@
 //! into approximate bespoke printed circuits via printing-friendly
 //! coefficient retraining and AxSum summation truncation.
 //!
-//! Architecture (see DESIGN.md):
+//! Architecture (see README.md and ARCHITECTURE.md at the repository
+//! root for the module map, the engine matrix and the data-flow diagram):
 //! * **L3 (this crate)** — the co-design coordinator plus the full EDA
 //!   substrate (PDK model, netlist synthesis, logic simulation,
 //!   area/power/delay estimation, Verilog emission), the retraining
-//!   driver, the exhaustive DSE, the NSGA-II genetic DSE over per-neuron
-//!   approximation genomes (`search`), and the baselines \[2\]\[8\]\[15\].
+//!   driver, the exhaustive DSE ([`dse::sweep`]) with its sharded
+//!   checkpointable orchestration ([`dse::shard`]), the NSGA-II genetic
+//!   DSE over per-neuron approximation genomes ([`search`]), the
+//!   differential conformance harness ([`conformance`]) pinning every
+//!   engine bit-exact, and the baselines \[2\]\[8\]\[15\].
 //! * **L2/L1 (python, build-time only)** — JAX model + Pallas AxSum kernel,
 //!   AOT-lowered to HLO-text artifacts executed from Rust via PJRT
 //!   (`runtime`).

@@ -109,6 +109,15 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let scfg = search_config(args, &cfg).map_err(anyhow::Error::msg)?;
             experiments::exp_search(&cfg, &scfg)
         }
+        "sweep" => {
+            let cfg = exp_config(args).map_err(anyhow::Error::msg)?;
+            let shards = args.flag_usize("shards", 4).map_err(anyhow::Error::msg)?;
+            if shards == 0 {
+                return Err(anyhow::Error::msg("--shards must be at least 1"));
+            }
+            let dir = args.flag("checkpoint-dir").unwrap_or("results/shard_ckpt");
+            experiments::exp_shard(&cfg, shards, dir, args.flag_bool("resume"))
+        }
         "conform" => {
             let cfg = exp_config(args).map_err(anyhow::Error::msg)?;
             let cases = args.flag_u64("cases", 256).map_err(anyhow::Error::msg)?;

@@ -153,7 +153,7 @@ impl Runtime {
     }
 
     /// Batched AxSum forward via the fwd artifact: returns logits
-    /// [n][dout]. Pads the final batch with zero rows.
+    /// `[n][dout]`. Pads the final batch with zero rows.
     pub fn forward_logits(
         &self,
         key: &str,
@@ -235,7 +235,7 @@ impl Runtime {
     }
 }
 
-/// Pack layer `l` of a QuantMlp ([out][in]) into jax layout ([in][out])
+/// Pack layer `l` of a QuantMlp (`[out][in]`) into jax layout (`[in][out]`)
 /// flat f32 buffers: (w, b, shifts).
 pub fn pack_layer_jax(
     q: &QuantMlp,

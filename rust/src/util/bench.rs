@@ -101,7 +101,7 @@ pub fn run<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     r
 }
 
-/// Write accumulated results to results/<file>.csv with a header.
+/// Write accumulated results to `results/<file>.csv` with a header.
 pub fn write_csv(file: &str, results: &[BenchResult]) {
     let _ = std::fs::create_dir_all("results");
     let mut out = String::from("name,iters,mean_ns,median_ns,min_ns,p95_ns\n");

@@ -223,6 +223,37 @@ pub fn to_f32_vec(j: &Json) -> Result<Vec<f32>, JsonError> {
         .collect()
 }
 
+/// Write `content` to `path` atomically: the bytes land in a sibling
+/// `<name>.tmp` file first, are flushed to stable storage (`sync_all`),
+/// and only then renamed into place. A process killed mid-write (the
+/// recurring container-death scenario the sweep checkpoints exist for)
+/// can therefore never leave a truncated file at `path` — the worst
+/// case is a stale `.tmp` next to it, which later writers simply
+/// overwrite. The pre-rename fsync keeps the guarantee even across
+/// host-level death (power loss, VM preemption), where an unflushed
+/// rename could otherwise commit its metadata before the data blocks.
+pub fn write_atomic(path: &std::path::Path, content: &str) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let tmp = match path.file_name() {
+        Some(name) => {
+            let mut n = name.to_os_string();
+            n.push(".tmp");
+            path.with_file_name(n)
+        }
+        None => {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("atomic write target has no file name: {}", path.display()),
+            ))
+        }
+    };
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(content.as_bytes())?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+}
+
 #[derive(Debug, Clone)]
 pub struct JsonError(pub String);
 
@@ -468,5 +499,37 @@ mod tests {
         let xs = vec![1.0f32, -2.5, 0.125];
         let j = arr_f32(&xs);
         assert_eq!(to_f32_vec(&j).unwrap(), xs);
+    }
+
+    #[test]
+    fn f64_dump_parse_is_bit_exact() {
+        // the shard checkpoints rely on Display's shortest-roundtrip f64
+        // formatting surviving dump → parse with identical bits
+        for v in [
+            0.0f64,
+            1.0 / 3.0,
+            0.9871234567890123,
+            123456.78901234567,
+            f64::MIN_POSITIVE,
+            -9.869604401089358e-5,
+        ] {
+            let j = Json::Num(v);
+            let back = Json::parse(&j.dump()).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn write_atomic_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join(format!("axmlp_json_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.json");
+        write_atomic(&path, "{\"a\": 1}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"a\": 1}");
+        assert!(!dir.join("x.json.tmp").exists());
+        // overwrite is atomic too
+        write_atomic(&path, "{\"a\": 2}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"a\": 2}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -95,6 +95,29 @@ where
         .collect()
 }
 
+/// Split `0..n` into `k` deterministic contiguous ranges whose lengths
+/// differ by at most one (the first `n % k` ranges get the extra item).
+/// The sharded sweep engine uses this to partition the deduped plan
+/// space: contiguous-in-order ranges mean concatenating per-shard
+/// results in shard order reproduces the monolithic evaluation order
+/// exactly, which is what makes the sharded sweep provably bit-identical
+/// to [`parallel_map_with`] over the whole list. Empty ranges are
+/// returned when `k > n` so shard indices stay stable.
+pub fn chunk_ranges(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
+    let k = k.max(1);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for s in 0..k {
+        let len = base + usize::from(s < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
 /// Parallel-for over an index range with a shared accumulator reducer.
 pub fn parallel_reduce<R, F, G>(n: usize, threads: usize, init: R, f: F, combine: G) -> R
 where
@@ -171,5 +194,26 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_and_balance() {
+        for n in [0usize, 1, 5, 64, 337] {
+            for k in [1usize, 2, 3, 7, 64, 400] {
+                let ranges = chunk_ranges(n, k);
+                assert_eq!(ranges.len(), k.max(1));
+                // exact, in-order, gap-free cover of 0..n
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+                assert_eq!(next, n);
+                // balanced: lengths differ by at most one
+                let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(hi - lo <= 1, "n={n} k={k} lens={lens:?}");
+            }
+        }
     }
 }

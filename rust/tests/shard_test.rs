@@ -1,0 +1,401 @@
+//! Sharded-sweep engine: parity with the monolithic sweep, checkpoint /
+//! resume semantics (kill-mid-sweep, no re-evaluation of finished
+//! shards), and the corruption error paths (contextful errors, never a
+//! panic, never silently-wrong results).
+
+use axmlp::axsum::{self, mean_activations, significance, ShiftPlan, Significance};
+use axmlp::dse::shard::{first_divergence, sweep_sharded, ShardConfig};
+use axmlp::dse::{self, DesignEval, DseConfig, EvalBackend, QuantData};
+use axmlp::fixed::QuantMlp;
+use axmlp::pdk::EgtLibrary;
+use axmlp::util::rng::Rng;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "axmlp_shard_test_{}_{}_{}",
+        std::process::id(),
+        tag,
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Self-labeled toy model (exact forward generates the labels, so the
+/// exact design point scores 1.0 and truncation trades accuracy).
+fn toy(seed: u64) -> (QuantMlp, Vec<Vec<i64>>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let q = QuantMlp {
+        w: vec![
+            (0..3)
+                .map(|_| (0..4).map(|_| rng.range_i64(-90, 90)).collect())
+                .collect(),
+            (0..3)
+                .map(|_| (0..3).map(|_| rng.range_i64(-90, 90)).collect())
+                .collect(),
+        ],
+        b: vec![
+            (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+            (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+        ],
+        in_bits: 4,
+        w_scales: vec![1.0, 1.0],
+    };
+    let xs: Vec<Vec<i64>> = (0..180)
+        .map(|_| (0..4).map(|_| rng.range_i64(0, 15)).collect())
+        .collect();
+    let plan = ShiftPlan::exact(&q);
+    let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&q, &plan, x)).collect();
+    (q, xs, ys)
+}
+
+fn sig_of(q: &QuantMlp, xs: &[Vec<i64>]) -> Significance {
+    significance(q, &mean_activations(q, xs))
+}
+
+fn cfg_small(backend: EvalBackend) -> DseConfig {
+    DseConfig {
+        max_g_levels: 3,
+        power_patterns: 24,
+        threads: 4,
+        verify_circuit: false,
+        max_eval: 0,
+        backend,
+    }
+}
+
+fn assert_bit_identical(a: &[DesignEval], b: &[DesignEval]) {
+    if let Some((p, field, detail)) = first_divergence(a, b) {
+        panic!("eval lists diverge at {p} ({field}): {detail}");
+    }
+}
+
+#[test]
+fn sharded_sweep_matches_monolithic_under_both_backends() {
+    let (q, xs, ys) = toy(41);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    for backend in [EvalBackend::Flat, EvalBackend::BitSlice] {
+        let cfg = cfg_small(backend);
+        let mono = dse::sweep(&q, &sig, &data, &lib, &cfg);
+        for shards in [2usize, 5] {
+            let scfg = ShardConfig {
+                shards,
+                ..ShardConfig::default()
+            };
+            let rep = sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
+            assert_bit_identical(&rep.evals, &mono);
+        }
+    }
+}
+
+#[test]
+fn kill_mid_sweep_then_resume_is_bit_identical_and_skips_finished_shards() {
+    let (q, xs, ys) = toy(42);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let cfg = cfg_small(EvalBackend::Flat);
+    let mono = dse::sweep(&q, &sig, &data, &lib, &cfg);
+
+    let dir = scratch_dir("kill");
+    let shards = 4;
+    let killed = ShardConfig {
+        shards,
+        checkpoint_dir: Some(dir.clone()),
+        resume: false,
+        stop_after: Some(2), // die after 2 of 4 shards
+    };
+    let err = sweep_sharded(&q, &sig, &data, &lib, &cfg, &killed)
+        .err()
+        .expect("interrupted run must not return a full result");
+    assert!(err.to_string().contains("interrupted"), "{err}");
+    // exactly the finished shards are checkpointed, atomically (no .tmp)
+    for s in 0..shards {
+        let p = dir.join(format!("shard_{s:04}.json"));
+        assert_eq!(p.exists(), s < 2, "shard {s}");
+        assert!(!dir.join(format!("shard_{s:04}.json.tmp")).exists());
+    }
+
+    let resumed_cfg = ShardConfig {
+        shards,
+        checkpoint_dir: Some(dir.clone()),
+        resume: true,
+        stop_after: None,
+    };
+    let resumed = sweep_sharded(&q, &sig, &data, &lib, &cfg, &resumed_cfg).unwrap();
+    assert_eq!(resumed.shards_resumed, 2, "finished shards are not re-evaluated");
+    assert_eq!(resumed.shards_evaluated, 2);
+    assert_bit_identical(&resumed.evals, &mono);
+
+    // a second resume is a pure load (everything checkpointed now)
+    let again = sweep_sharded(&q, &sig, &data, &lib, &cfg, &resumed_cfg).unwrap();
+    assert_eq!(again.shards_resumed, shards);
+    assert_eq!(again.shards_evaluated, 0);
+    assert_bit_identical(&again.evals, &mono);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_loads_checkpoints_verbatim_instead_of_recomputing() {
+    // tamper one recorded accuracy on disk: the resumed sweep must carry
+    // the sentinel value through, proving finished shards are loaded,
+    // not re-evaluated (the conformance sweep canary then proves such a
+    // corruption is *caught* when differenced against the monolithic run)
+    let (q, xs, ys) = toy(43);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let cfg = cfg_small(EvalBackend::Flat);
+    let dir = scratch_dir("verbatim");
+    let scfg = ShardConfig {
+        shards: 3,
+        checkpoint_dir: Some(dir.clone()),
+        resume: false,
+        stop_after: None,
+    };
+    sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
+
+    let path = dir.join("shard_0000.json");
+    let sentinel = "0.123456789";
+    let sentinel_v: f64 = sentinel.parse().unwrap();
+    let raw = std::fs::read_to_string(&path).unwrap();
+    let needle = "\"acc_train\": ";
+    let at = raw.find(needle).expect("shard JSON records acc_train");
+    let end = raw[at + needle.len()..].find(',').unwrap() + at + needle.len();
+    let tampered = format!("{}{}{}", &raw[..at + needle.len()], sentinel, &raw[end..]);
+    std::fs::write(&path, tampered).unwrap();
+
+    let rcfg = ShardConfig {
+        resume: true,
+        ..scfg
+    };
+    let resumed = sweep_sharded(&q, &sig, &data, &lib, &cfg, &rcfg).unwrap();
+    assert_eq!(resumed.shards_resumed, 3);
+    let hits = resumed
+        .evals
+        .iter()
+        .filter(|e| e.acc_train.to_bits() == sentinel_v.to_bits())
+        .count();
+    assert!(hits > 0, "sentinel accuracy must surface in the resumed evals");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_manifest_is_a_contextful_error() {
+    let (q, xs, ys) = toy(44);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let cfg = cfg_small(EvalBackend::Flat);
+    let dir = scratch_dir("manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{\"version\": 1, truncated").unwrap();
+    let scfg = ShardConfig {
+        shards: 2,
+        checkpoint_dir: Some(dir.clone()),
+        resume: true,
+        stop_after: None,
+    };
+    let err = sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg)
+        .err()
+        .expect("corrupted manifest must fail the resume");
+    let msg = err.to_string();
+    assert!(msg.contains("manifest"), "{msg}");
+    assert!(msg.contains("manifest.json"), "names the file: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_shard_checkpoint_is_a_contextful_error() {
+    // atomic writes mean the engine itself can never produce a truncated
+    // shard file; if external corruption does, resume must refuse with an
+    // error naming the file — not panic, not silently re-evaluate
+    let (q, xs, ys) = toy(45);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let cfg = cfg_small(EvalBackend::Flat);
+    let dir = scratch_dir("truncated");
+    let scfg = ShardConfig {
+        shards: 3,
+        checkpoint_dir: Some(dir.clone()),
+        resume: false,
+        stop_after: None,
+    };
+    sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
+    let path = dir.join("shard_0001.json");
+    let raw = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &raw[..raw.len() / 2]).unwrap();
+
+    let rcfg = ShardConfig {
+        resume: true,
+        ..scfg
+    };
+    let err = sweep_sharded(&q, &sig, &data, &lib, &cfg, &rcfg)
+        .err()
+        .expect("truncated shard must fail the resume");
+    let msg = err.to_string();
+    assert!(msg.contains("shard_0001.json"), "names the file: {msg}");
+    assert!(msg.contains("delete the file"), "remediation hint: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifestless_resume_refuses_to_delete_orphan_shards() {
+    // a partial restore that lost manifest.json but kept shard files
+    // must not be silently wiped by a resume — the engine refuses and
+    // leaves the checkpoints untouched
+    let (q, xs, ys) = toy(47);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let cfg = cfg_small(EvalBackend::Flat);
+    let dir = scratch_dir("orphans");
+    let scfg = ShardConfig {
+        shards: 2,
+        checkpoint_dir: Some(dir.clone()),
+        resume: false,
+        stop_after: None,
+    };
+    sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
+    std::fs::remove_file(dir.join("manifest.json")).unwrap();
+
+    let rcfg = ShardConfig {
+        resume: true,
+        ..scfg
+    };
+    let err = sweep_sharded(&q, &sig, &data, &lib, &cfg, &rcfg)
+        .err()
+        .expect("manifest-less resume over surviving shards must refuse");
+    assert!(err.to_string().contains("no manifest.json"), "{err}");
+    // the orphaned checkpoints survived the refusal
+    assert!(dir.join("shard_0000.json").exists());
+    assert!(dir.join("shard_0001.json").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_refuses_a_checkpoint_from_a_different_space() {
+    // same directory, different backend → different fingerprint: the
+    // engine must refuse to mix results rather than resume wrong ones
+    let (q, xs, ys) = toy(46);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let dir = scratch_dir("space");
+    let scfg = ShardConfig {
+        shards: 2,
+        checkpoint_dir: Some(dir.clone()),
+        resume: false,
+        stop_after: None,
+    };
+    sweep_sharded(&q, &sig, &data, &lib, &cfg_small(EvalBackend::Flat), &scfg).unwrap();
+    let rcfg = ShardConfig {
+        resume: true,
+        ..scfg
+    };
+    let err = sweep_sharded(&q, &sig, &data, &lib, &cfg_small(EvalBackend::BitSlice), &rcfg)
+        .err()
+        .expect("fingerprint mismatch must fail the resume");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_strategy_pipeline_matches_grid_strategy() {
+    use axmlp::coordinator::{
+        run_dataset, DseStrategy, PipelineConfig, ShardStrategy, SharedContext,
+    };
+    use axmlp::datasets;
+    use axmlp::mlp::train::TrainConfig;
+    use axmlp::retrain::backend_rust::RustBackend;
+    use axmlp::retrain::RetrainConfig;
+
+    let ds = datasets::load("ma", 7).expect("dataset");
+    let base = PipelineConfig {
+        thresholds: vec![0.05],
+        dse: DseConfig {
+            max_g_levels: 3,
+            power_patterns: 32,
+            threads: 4,
+            verify_circuit: false,
+            max_eval: 0,
+            ..DseConfig::default()
+        },
+        retrain: RetrainConfig {
+            epochs_per_level: 3,
+            ..Default::default()
+        },
+        train: TrainConfig {
+            epochs: 40,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let ctx = SharedContext::new();
+    let grid_out = {
+        let mut be = RustBackend;
+        run_dataset(&ds, &base, &ctx, &mut be).unwrap()
+    };
+    let dir = scratch_dir("pipeline");
+    let sharded_out = {
+        let mut cfg = base.clone();
+        cfg.strategy = DseStrategy::Sharded(ShardStrategy {
+            shards: 3,
+            checkpoint_dir: Some(dir.to_string_lossy().into_owned()),
+            resume: false,
+        });
+        let mut be = RustBackend;
+        run_dataset(&ds, &cfg, &ctx, &mut be).unwrap()
+    };
+    // the sharded strategy must pick the exact same design
+    let (g, s) = (&grid_out.thresholds[0], &sharded_out.thresholds[0]);
+    assert_eq!(g.design.plan, s.design.plan);
+    assert_eq!(g.design.acc_train.to_bits(), s.design.acc_train.to_bits());
+    assert_eq!(g.design.costs, s.design.costs);
+    assert_eq!(grid_out.pareto_cloud, sharded_out.pareto_cloud);
+    // per-dataset/threshold checkpoints landed under the root
+    assert!(dir.join("ma_t500").join("manifest.json").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
