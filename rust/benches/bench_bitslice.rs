@@ -1,16 +1,21 @@
-//! Bench: bit-sliced forward engine vs the flattened per-sample forward
-//! (ISSUE 4 tentpole) — the accuracy-oracle side of the DSE inner loop.
+//! Bench: bit-sliced forward engines vs the flattened per-sample forward
+//! — the accuracy-oracle side of the DSE inner loop, plus the wide-word
+//! runtime (u128 / `Lanes4` planes, carry-save accumulation, chunk-level
+//! parallelism) whose patterns/sec is the headline throughput metric.
 //!
 //! Emits `results/bench_bitslice.csv` and the machine-readable
-//! `BENCH_bitslice.json` (name, iters, ns/iter) tracked alongside
-//! `BENCH_dse.json` — see EXPERIMENTS.md §Perf ("Bit-sliced forward").
-//! The headline comparison is `flat_accuracy` vs `bitslice_accuracy` on
-//! identical data: both are bit-exact with `axsum::forward`, so the
-//! ratio is pure engine throughput.
+//! `BENCH_bitslice.json` (name, iters, ns/iter, patterns_per_sec)
+//! tracked alongside `BENCH_dse.json` — see EXPERIMENTS.md §Perf.
+//!
+//! This binary is also the CI regression gate for the widened runtime:
+//! it exits non-zero when the widened planes fall below the serial u64
+//! baseline, or the parallel lane engine below 2x serial u64 (medians).
+//! Set `AXMLP_BENCH_NO_GATE=1` to measure without gating (e.g. on
+//! single-core or heavily loaded machines).
 
 use axmlp::axsum::{
-    derive_shifts, mean_activations, significance, BitSliceEval, BitSliceScratch, FlatEval,
-    FlatScratch,
+    derive_shifts, mean_activations, significance, AccumMode, BitSliceEval, BitSliceScratch,
+    FlatEval, FlatScratch, PlanCache,
 };
 use axmlp::coordinator::{train_mlp0, PipelineConfig, SharedContext};
 use axmlp::datasets;
@@ -18,8 +23,15 @@ use axmlp::dse::{
     evaluate_design_packed, DseConfig, EngineScratch, EvalBackend, QuantData, SweepStimuli,
 };
 use axmlp::fixed::{quantize, quantize_inputs};
-use axmlp::sim::PackedStimulus;
-use axmlp::util::bench::{run, write_csv, write_json};
+use axmlp::runtime::stream::{StreamConfig, StreamRunner};
+use axmlp::sim::{Lanes4, PackedStimulus};
+use axmlp::util::bench::{run, write_csv, write_json, BenchResult};
+use axmlp::util::pool;
+
+/// Throughput block: a multiple of every plane width (64/128/256) so no
+/// engine pays a partial last chunk, and enough chunks (16 x Lanes4) for
+/// the parallel path to spread across workers.
+const BLOCK: usize = 4096;
 
 fn main() {
     let ctx = SharedContext::new();
@@ -39,6 +51,7 @@ fn main() {
     let g = vec![0.05, 0.05];
     let plan = derive_shifts(&q, &sig, &g, 2);
     let n_eval = xq_train.len().min(600);
+    let threads = pool::default_threads();
     let mut results = Vec::new();
 
     // accuracy oracle head-to-head on identical capped data
@@ -54,7 +67,7 @@ fn main() {
 
     let packed_train = PackedStimulus::from_features(&xq_train[..n_eval], q.din(), q.in_bits)
         .expect("train stimulus");
-    let bs = BitSliceEval::new(&q, &plan);
+    let bs = BitSliceEval::new(&q, &plan).expect("plan compiles");
     let mut bss = BitSliceScratch::new();
     results.push(run("bitslice_accuracy(se,600)", || {
         std::hint::black_box(bs.accuracy_packed(&packed_train, &ds.y_train[..n_eval], &mut bss));
@@ -67,15 +80,83 @@ fn main() {
         std::hint::black_box(logits.len());
     }));
 
-    // per-point plan compile (amortized once per design point)
+    // per-point plan compile (amortized once per design point — and, via
+    // the PlanCache, once per *plan* across repeat visits)
     results.push(run("bitslice_compile(se)", || {
-        std::hint::black_box(BitSliceEval::new(&q, &plan));
+        std::hint::black_box(BitSliceEval::new(&q, &plan).expect("plan compiles"));
     }));
+    let cache = PlanCache::new();
+    results.push(run("bitslice_compile_cached(se)", || {
+        std::hint::black_box(cache.get_or_compile(&q, &plan).expect("plan compiles"));
+    }));
+
+    // ---- plane-width sweep: the wide-word runtime at BLOCK patterns ----
+    // serial per-width with persistent scratch, then the chunk-parallel
+    // path; patterns/sec at the median is the tracked BENCH figure
+    let xs_big: Vec<Vec<i64>> = (0..BLOCK).map(|i| xq_train[i % xq_train.len()].clone()).collect();
+    let packed_big =
+        PackedStimulus::from_features(&xs_big, q.din(), q.in_bits).expect("block stimulus");
+
+    let mut s64 = BitSliceScratch::<u64>::new();
+    results.push(
+        run(&format!("forward_u64_serial(se,{BLOCK})"), || {
+            bs.forward_packed_w(&packed_big, &mut logits, &mut s64, AccumMode::Ripple);
+            std::hint::black_box(logits.len());
+        })
+        .with_pps(BLOCK as u64),
+    );
+    let mut s128 = BitSliceScratch::<u128>::new();
+    results.push(
+        run(&format!("forward_u128_csa_serial(se,{BLOCK})"), || {
+            bs.forward_packed_w(&packed_big, &mut logits, &mut s128, AccumMode::CarrySave);
+            std::hint::black_box(logits.len());
+        })
+        .with_pps(BLOCK as u64),
+    );
+    let mut s256 = BitSliceScratch::<Lanes4>::new();
+    results.push(
+        run(&format!("forward_lanes4_csa_serial(se,{BLOCK})"), || {
+            bs.forward_packed_w(&packed_big, &mut logits, &mut s256, AccumMode::CarrySave);
+            std::hint::black_box(logits.len());
+        })
+        .with_pps(BLOCK as u64),
+    );
+    results.push(
+        run(&format!("forward_lanes4_csa_par{threads}(se,{BLOCK})"), || {
+            bs.forward_packed_par::<Lanes4>(&packed_big, &mut logits, threads, AccumMode::CarrySave);
+            std::hint::black_box(logits.len());
+        })
+        .with_pps(BLOCK as u64),
+    );
+
+    // the full streaming runtime (ingest + pack + widest engine + argmax)
+    let mut runner = StreamRunner::new(
+        &q,
+        &plan,
+        &cache,
+        StreamConfig {
+            backend: EvalBackend::BitSlice256,
+            threads,
+            flush_patterns: BLOCK,
+        },
+    )
+    .expect("stream runner");
+    results.push(
+        run(&format!("stream_classify_bitslice256(se,{BLOCK})"), || {
+            std::hint::black_box(runner.classify_all(&xs_big).expect("stream").len());
+        })
+        .with_pps(BLOCK as u64),
+    );
 
     // whole DSE point under each backend: accuracy + synthesis +
     // simulation + cost estimate (the backend moves only the accuracy
     // share, so this bounds the end-to-end sweep win)
-    for backend in [EvalBackend::Flat, EvalBackend::BitSlice] {
+    for backend in [
+        EvalBackend::Flat,
+        EvalBackend::BitSlice,
+        EvalBackend::BitSlice128,
+        EvalBackend::BitSlice256,
+    ] {
         let cfg = DseConfig {
             verify_circuit: false,
             power_patterns: 128,
@@ -87,20 +168,58 @@ fn main() {
         let mut scratch = EngineScratch::new();
         results.push(run(&format!("dse_point({})", backend.name()), || {
             let plan = derive_shifts(&q, &sig, &g, 2);
-            std::hint::black_box(evaluate_design_packed(
-                &q,
-                plan,
-                2,
-                g.clone(),
-                &data,
-                &ctx.lib,
-                &cfg,
-                &stim,
-                &mut scratch,
-            ));
+            std::hint::black_box(
+                evaluate_design_packed(
+                    &q,
+                    plan,
+                    2,
+                    g.clone(),
+                    &data,
+                    &ctx.lib,
+                    &cfg,
+                    &stim,
+                    &mut scratch,
+                )
+                .expect("dse point"),
+            );
         }));
     }
 
     write_csv("bench_bitslice.csv", &results);
     write_json("BENCH_bitslice.json", &results);
+
+    if std::env::var("AXMLP_BENCH_NO_GATE").map(|v| v == "1").unwrap_or(false) {
+        println!("gate: skipped (AXMLP_BENCH_NO_GATE=1)");
+        return;
+    }
+    if let Err(e) = gate(&results, threads) {
+        eprintln!("BENCH GATE FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("gate: widened planes >= u64 serial, parallel lanes >= 2x u64 serial");
+}
+
+/// CI regression gate over the median patterns/sec figures.
+fn gate(results: &[BenchResult], threads: usize) -> Result<(), String> {
+    let pps = |prefix: &str| -> Result<f64, String> {
+        results
+            .iter()
+            .find(|r| r.name.starts_with(prefix))
+            .and_then(|r| r.patterns_per_sec())
+            .ok_or_else(|| format!("missing throughput row `{prefix}*`"))
+    };
+    let base = pps("forward_u64_serial")?;
+    let widened = pps("forward_u128_csa_serial")?.max(pps("forward_lanes4_csa_serial")?);
+    if widened < base {
+        return Err(format!(
+            "widened serial planes ({widened:.0} pat/s) regressed below the u64 baseline ({base:.0} pat/s)"
+        ));
+    }
+    let par = pps("forward_lanes4_csa_par")?;
+    if threads >= 2 && par < 2.0 * base {
+        return Err(format!(
+            "parallel lane engine ({par:.0} pat/s, {threads} threads) below 2x the serial u64 baseline ({base:.0} pat/s)"
+        ));
+    }
+    Ok(())
 }

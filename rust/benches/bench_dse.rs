@@ -45,7 +45,9 @@ fn main() {
     // call (the pre-engine upper bound for one design point)
     results.push(run("dse_point(seeds,k=2)", || {
         let plan = derive_shifts(&q, &sig, &g, 2);
-        std::hint::black_box(evaluate_design(&q, plan, 2, g.clone(), &data, &ctx.lib, &cfg));
+        std::hint::black_box(
+            evaluate_design(&q, plan, 2, g.clone(), &data, &ctx.lib, &cfg).expect("design point"),
+        );
     }));
 
     // sweep inner loop: per-sweep invariants (packed stimuli, worker
@@ -54,17 +56,20 @@ fn main() {
     let mut scratch = EngineScratch::new();
     results.push(run("dse_point_prepared(seeds,k=2)", || {
         let plan = derive_shifts(&q, &sig, &g, 2);
-        std::hint::black_box(evaluate_design_packed(
-            &q,
-            plan,
-            2,
-            g.clone(),
-            &data,
-            &ctx.lib,
-            &cfg,
-            &stim,
-            &mut scratch,
-        ));
+        std::hint::black_box(
+            evaluate_design_packed(
+                &q,
+                plan,
+                2,
+                g.clone(),
+                &data,
+                &ctx.lib,
+                &cfg,
+                &stim,
+                &mut scratch,
+            )
+            .expect("design point"),
+        );
     }));
 
     // software accuracy oracle alone (flattened integer forward)
@@ -90,7 +95,7 @@ fn main() {
         ..Default::default()
     };
     results.push(run("dse_sweep(se,3g,300eval)", || {
-        std::hint::black_box(sweep(&q, &sig, &data, &ctx.lib, &sweep_cfg));
+        std::hint::black_box(sweep(&q, &sig, &data, &ctx.lib, &sweep_cfg).expect("sweep"));
     }));
 
     // ablation: multiplier decomposition style — total LUT area

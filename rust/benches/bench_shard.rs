@@ -42,7 +42,7 @@ fn main() {
     let mut results = Vec::new();
 
     results.push(run("sweep_mono(se,3g,300eval)", || {
-        std::hint::black_box(sweep(&q, &sig, &data, &ctx.lib, &cfg));
+        std::hint::black_box(sweep(&q, &sig, &data, &ctx.lib, &cfg).expect("sweep"));
     }));
 
     for shards in [2usize, 8] {

@@ -1,14 +1,15 @@
-//! Bit-sliced AxSum forward engine: 64 stimulus patterns per `u64` word.
+//! Bit-sliced AxSum forward engine: 64–256+ stimulus patterns per plane
+//! word.
 //!
 //! The software twin of `sim::simulate_packed`, one abstraction level up:
 //! instead of simulating the synthesized gate network, it evaluates the
 //! *integer model* (`axsum::neuron_value` semantics, bit-exact) with the
 //! same data layout the packed simulator uses — every value is stored as
-//! bit-planes, where plane `b` is a `u64` whose bit `p` is bit `b` of the
-//! value for stimulus pattern `p`. One ripple-carry pass over the planes
-//! therefore performs 64 forward passes at once, and the AxSum
-//! operations the paper's approximations are built from come almost for
-//! free at the word level:
+//! bit-planes, where plane `b` is a word whose bit `p` is bit `b` of the
+//! value for stimulus pattern `p`. One adder pass over the planes
+//! therefore performs [`PlaneWord::PATTERNS`] forward passes at once, and
+//! the AxSum operations the paper's approximations are built from come
+//! almost for free at the word level:
 //!
 //!  * **shift-truncate** (`(p >> s) << s`, Armeniakos-style cross-layer
 //!    truncation) — zero the low `s` planes of the product;
@@ -19,18 +20,50 @@
 //!  * **argmax** (class compare) — a word-level signed compare-and-select
 //!    tournament over the output planes.
 //!
+//! Three orthogonal throughput levers sit on top of that base engine, all
+//! pinned bit-identical to the serial `u64` ripple path (and to
+//! [`FlatEval`](crate::axsum::FlatEval)) by the conformance harness:
+//!
+//!  * **wide plane words** — every evaluation entry point is generic over
+//!    [`PlaneWord`] (`u64` / `u128` / [`Lanes4`](crate::sim::Lanes4)), so
+//!    one pass advances 64, 128 or 256 patterns over the *same* shared
+//!    [`PackedStimulus`] transpose;
+//!  * **carry-save accumulation** ([`AccumMode::CarrySave`]) — product
+//!    terms fold into a redundant `(sum, carry)` plane pair through a 3:2
+//!    compressor whose per-plane steps have no serial carry chain; the
+//!    single carry-propagate add is deferred to one final merge per
+//!    neuron accumulator;
+//!  * **parallel chunk loops** (`*_par` entry points) — wide chunks fan
+//!    out over `pool::parallel_map_with` workers, each with its own
+//!    [`BitSliceScratch`], for the batch-inference runtime and benches
+//!    (the DSE sweep is already parallel over design points and keeps the
+//!    serial per-point path).
+//!
 //! [`BitSliceEval`] mirrors [`FlatEval`](crate::axsum::FlatEval)'s
 //! plan-compilation API: build once per design point (all bus-width
 //! bookkeeping — the exact bound propagation `synth` applies — happens at
 //! compile time), then evaluate over thousands of samples through a
-//! caller-owned zero-alloc [`BitSliceScratch`]. The stimulus is the
-//! bit-transposed [`PackedStimulus`] the DSE already builds once per
-//! sweep for the netlist simulator, so the two engines literally share
-//! their input transpose.
+//! caller-owned zero-alloc [`BitSliceScratch`]. Compilation is fallible
+//! ([`PlanCompileError`] names the offending layer/neuron instead of
+//! panicking mid-sweep) and amortizable: [`PlanCache`] memoizes compiled
+//! engines on the plan's shift table — the same key `dse::sweep_space`
+//! dedups on — with process-wide [`plan_cache_hits`] /
+//! [`plan_cache_misses`] counters surfaced by `repro sweep` / `repro
+//! search`.
+
+use std::collections::hash_map::DefaultHasher;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use rustc_hash::FxHashMap;
 
 use crate::axsum::ShiftPlan;
 use crate::fixed::QuantMlp;
+use crate::sim::plane::PlaneWord;
 use crate::sim::PackedStimulus;
+use crate::util::pool::parallel_map_with;
 
 /// Bits needed to represent a non-negative value exactly (0 for 0).
 #[inline]
@@ -43,38 +76,70 @@ fn bits_of(v: i64) -> u32 {
 }
 
 /// `acc[offset..] += addend` in bit-plane form (ripple-carry over the
-/// planes; each word operation advances 64 patterns at once). Plane
-/// widths are compiled from value bounds, so the final carry out of
-/// `acc`'s top plane is always zero for the unsigned accumulations.
+/// planes; each word operation advances [`PlaneWord::PATTERNS`] patterns
+/// at once). Plane widths are compiled from value bounds, so the final
+/// carry out of `acc`'s top plane is always zero for the unsigned
+/// accumulations.
 #[inline]
-fn add_shifted(acc: &mut [u64], addend: &[u64], offset: usize) {
+fn add_shifted<W: PlaneWord>(acc: &mut [W], addend: &[W], offset: usize) {
     let n = acc.len();
-    let mut carry = 0u64;
+    let mut carry = W::ZERO;
     for (b, &ad) in addend.iter().enumerate() {
         let i = offset + b;
         debug_assert!(i < n, "bit-slice addend exceeds accumulator width");
         let a = acc[i];
-        acc[i] = a ^ ad ^ carry;
-        carry = (a & ad) | (carry & (a ^ ad));
+        acc[i] = a.xor(ad).xor(carry);
+        carry = a.and(ad).or(carry.and(a.xor(ad)));
     }
     let mut i = offset + addend.len();
-    while carry != 0 && i < n {
+    while !carry.is_zero() && i < n {
         let a = acc[i];
-        acc[i] = a ^ carry;
-        carry &= a;
+        acc[i] = a.xor(carry);
+        carry = carry.and(a);
         i += 1;
     }
+}
+
+/// 3:2 compressor step of the carry-save accumulation path: fold
+/// `addend` into the redundant `(sum, car)` accumulator pair. Every
+/// plane is compressed independently — `sum'[b] = sum ^ d ^ car` and
+/// `car'[b+1] = maj(sum, d, car)` — so unlike [`add_shifted`] there is
+/// no serial carry chain across planes; the cost of that freedom is one
+/// deferred carry-propagate add (`add_shifted(sum, car, 0)`) when the
+/// accumulator is finally read. The invariant `sum + car == value` holds
+/// after every call, and the carry out of the top plane is provably zero
+/// because the compiled width bounds the running value.
+#[inline]
+fn csa_add<W: PlaneWord>(sum: &mut [W], car: &mut [W], addend: &[W]) {
+    let w = sum.len();
+    debug_assert_eq!(car.len(), w);
+    debug_assert!(addend.len() <= w);
+    // descending so each step reads the *old* car[b] before step b-1
+    // overwrites it
+    for b in (0..w).rev() {
+        let a = sum[b];
+        let d = if b < addend.len() { addend[b] } else { W::ZERO };
+        let c = car[b];
+        sum[b] = a.xor(d).xor(c);
+        let m = a.and(d).or(d.and(c)).or(a.and(c));
+        if b + 1 < w {
+            car[b + 1] = m;
+        } else {
+            debug_assert!(m.is_zero(), "carry-save overflow past the compiled width");
+        }
+    }
+    car[0] = W::ZERO;
 }
 
 /// `sp <- sp + !sn` over equal-width planes (mod 2^W): the ones'
 /// complement identity `sp - sn - 1`, exactly AxSum's split-sign merge.
 #[inline]
-fn merge_ones_complement(sp: &mut [u64], sn: &[u64]) {
-    let mut carry = 0u64;
+fn merge_ones_complement<W: PlaneWord>(sp: &mut [W], sn: &[W]) {
+    let mut carry = W::ZERO;
     for (a, &s) in sp.iter_mut().zip(sn) {
-        let b = !s;
-        let sum = *a ^ b ^ carry;
-        carry = (*a & b) | (carry & (*a ^ b));
+        let b = s.not();
+        let sum = a.xor(b).xor(carry);
+        carry = a.and(b).or(carry.and(a.xor(b)));
         *a = sum;
     }
 }
@@ -82,12 +147,52 @@ fn merge_ones_complement(sp: &mut [u64], sn: &[u64]) {
 /// Broadcast a non-negative constant into bit planes (every pattern holds
 /// the same value).
 #[inline]
-fn broadcast(planes: &mut [u64], v: i64) {
+fn broadcast<W: PlaneWord>(planes: &mut [W], v: i64) {
     debug_assert!(v >= 0);
     for (b, p) in planes.iter_mut().enumerate() {
-        *p = if (v >> b) & 1 == 1 { u64::MAX } else { 0 };
+        *p = if (v >> b) & 1 == 1 { W::ONES } else { W::ZERO };
     }
 }
+
+/// Accumulation strategy for the neuron dot products. Both modes are
+/// bit-identical at every output (pinned by the conformance harness and
+/// the property tests); they differ only in the dependency structure of
+/// the plane operations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AccumMode {
+    /// Ripple-carry adds per term (the PR 4 baseline): fewest total word
+    /// ops, but every plane op depends on the previous plane's carry.
+    #[default]
+    Ripple,
+    /// 3:2 compressor per term, one deferred carry-propagate merge per
+    /// neuron accumulator: more word ops, but the per-term steps are
+    /// carry-chain-free and pipeline/vectorize freely — the win grows
+    /// with plane width (u128 / [`Lanes4`](crate::sim::Lanes4)).
+    CarrySave,
+}
+
+/// Contextful compile failure: which neuron's accumulator cannot be
+/// bit-sliced and why (replaces the PR 4 `assert!(width <= 63)` — DSE
+/// hot paths report instead of panicking, continuing ISSUE 4's
+/// panic-proofing).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanCompileError {
+    pub layer: usize,
+    pub neuron: usize,
+    pub detail: String,
+}
+
+impl fmt::Display for PlanCompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "bit-slice compile failed at layer {} neuron {}: {}",
+            self.layer, self.neuron, self.detail
+        )
+    }
+}
+
+impl std::error::Error for PlanCompileError {}
 
 /// One compiled product term: input plane span, decomposed constant, sign
 /// and truncation shift. Terms whose truncated product is constant zero
@@ -135,22 +240,44 @@ struct BsLayer {
 }
 
 /// Caller-owned plane buffers for [`BitSliceEval`] — grown once, reused
-/// across design points (the sweep inner loop allocates nothing).
-#[derive(Default)]
-pub struct BitSliceScratch {
-    acts: Vec<u64>,
-    next: Vec<u64>,
-    sp: Vec<u64>,
-    sn: Vec<u64>,
-    prod: Vec<u64>,
-    out: Vec<u64>,
-    best: Vec<u64>,
-    idx: Vec<u64>,
-    ylanes: Vec<u64>,
+/// across design points (the sweep inner loop allocates nothing). Generic
+/// over the plane word; `BitSliceScratch` with no argument is the `u64`
+/// baseline the DSE sweep uses.
+pub struct BitSliceScratch<W: PlaneWord = u64> {
+    acts: Vec<W>,
+    next: Vec<W>,
+    sp: Vec<W>,
+    sn: Vec<W>,
+    /// Carry planes of the redundant accumulators ([`AccumMode::CarrySave`]).
+    spc: Vec<W>,
+    snc: Vec<W>,
+    prod: Vec<W>,
+    out: Vec<W>,
+    best: Vec<W>,
+    idx: Vec<W>,
+    ylanes: Vec<W>,
 }
 
-impl BitSliceScratch {
-    pub fn new() -> BitSliceScratch {
+impl<W: PlaneWord> Default for BitSliceScratch<W> {
+    fn default() -> BitSliceScratch<W> {
+        BitSliceScratch {
+            acts: Vec::new(),
+            next: Vec::new(),
+            sp: Vec::new(),
+            sn: Vec::new(),
+            spc: Vec::new(),
+            snc: Vec::new(),
+            prod: Vec::new(),
+            out: Vec::new(),
+            best: Vec::new(),
+            idx: Vec::new(),
+            ylanes: Vec::new(),
+        }
+    }
+}
+
+impl<W: PlaneWord> BitSliceScratch<W> {
+    pub fn new() -> BitSliceScratch<W> {
         BitSliceScratch::default()
     }
 }
@@ -158,7 +285,10 @@ impl BitSliceScratch {
 /// A `(QuantMlp, ShiftPlan)` pair compiled for bit-sliced evaluation.
 /// Bit-exact with [`crate::axsum::forward`] and
 /// [`crate::axsum::FlatEval`] at logit level (pinned by the conformance
-/// harness, which runs it as a fifth differential engine).
+/// harness, which runs it — at every plane width and accumulation mode —
+/// in the differential engine matrix). The compiled plan is plane-layout
+/// bookkeeping only, so one compilation serves every [`PlaneWord`] width
+/// and [`AccumMode`].
 #[derive(Clone, Debug)]
 pub struct BitSliceEval {
     layers: Vec<BsLayer>,
@@ -181,8 +311,11 @@ impl BitSliceEval {
     /// Compile the plan: per-layer value bounds are propagated exactly as
     /// `axsum::hidden_bounds` does (truncation caps products, the ones'
     /// complement merge subtracts 1), sizing every accumulator to the
-    /// smallest plane count that provably cannot overflow.
-    pub fn new(q: &QuantMlp, plan: &ShiftPlan) -> BitSliceEval {
+    /// smallest plane count that provably cannot overflow. A neuron whose
+    /// accumulator bound exceeds 63 planes (logits must stay extractable
+    /// into `i64`) returns a [`PlanCompileError`] naming it instead of
+    /// panicking — callers in `dse`/`conformance` propagate.
+    pub fn new(q: &QuantMlp, plan: &ShiftPlan) -> Result<BitSliceEval, PlanCompileError> {
         let n_layers = q.n_layers();
         let mut in_hi: Vec<i64> = vec![(1i64 << q.in_bits) - 1; q.din()];
         let mut layers: Vec<BsLayer> = Vec::with_capacity(n_layers);
@@ -197,6 +330,11 @@ impl BitSliceEval {
             }
             let in_planes = acc;
 
+            let err = |j: usize, detail: String| PlanCompileError {
+                layer: l,
+                neuron: j,
+                detail,
+            };
             let mut terms: Vec<BsTerm> = Vec::new();
             let mut neurons: Vec<BsNeuron> = Vec::with_capacity(q.w[l].len());
             let mut next_hi: Vec<i64> = Vec::with_capacity(q.w[l].len());
@@ -215,15 +353,23 @@ impl BitSliceEval {
                     }
                     let s = plan.shifts[l][j][i];
                     let w_abs = w.unsigned_abs();
-                    let p_hi = in_hi[i]
-                        .checked_mul(w_abs as i64)
-                        .expect("bit-slice product bound overflows i64");
+                    let p_hi = in_hi[i].checked_mul(w_abs as i64).ok_or_else(|| {
+                        err(
+                            j,
+                            format!(
+                                "product bound {} x |{w}| (input {i}) overflows i64",
+                                in_hi[i]
+                            ),
+                        )
+                    })?;
                     let prod_w = bits_of(p_hi);
                     let t_hi = if s >= 63 { 0 } else { (p_hi >> s) << s };
+                    let sum_overflow =
+                        |j| err(j, "accumulator bound overflows i64".to_string());
                     if w > 0 {
-                        sp_hi = sp_hi.checked_add(t_hi).expect("bit-slice sum bound overflow");
+                        sp_hi = sp_hi.checked_add(t_hi).ok_or_else(|| sum_overflow(j))?;
                     } else {
-                        sn_hi = sn_hi.checked_add(t_hi).expect("bit-slice sum bound overflow");
+                        sn_hi = sn_hi.checked_add(t_hi).ok_or_else(|| sum_overflow(j))?;
                     }
                     if t_hi == 0 {
                         // truncated to constant zero (or a zero-bound
@@ -241,10 +387,14 @@ impl BitSliceEval {
                     });
                 }
                 let w_bits = 1 + bits_of(sp_hi).max(bits_of(sn_hi));
-                assert!(
-                    w_bits <= 63,
-                    "bit-sliced accumulator needs {w_bits} planes (max 63)"
-                );
+                if w_bits > 63 {
+                    return Err(err(
+                        j,
+                        format!(
+                            "accumulator needs {w_bits} planes (max 63 — logits must fit i64)"
+                        ),
+                    ));
+                }
                 neurons.push(BsNeuron {
                     w: w_bits,
                     sp_init: bias.max(0),
@@ -311,7 +461,7 @@ impl BitSliceEval {
         } else {
             bits_of((dout - 1) as i64) as usize
         };
-        BitSliceEval {
+        Ok(BitSliceEval {
             din: q.din(),
             in_bits: q.in_bits,
             dout,
@@ -321,15 +471,15 @@ impl BitSliceEval {
             cmp_w,
             idx_planes,
             layers,
-        }
+        })
     }
 
     /// Grow the scratch buffers to this model's compiled plane counts
     /// (no-op once warm — buffers never shrink).
-    fn prepare(&self, s: &mut BitSliceScratch) {
-        let grow = |v: &mut Vec<u64>, n: usize| {
+    fn prepare<W: PlaneWord>(&self, s: &mut BitSliceScratch<W>) {
+        let grow = |v: &mut Vec<W>, n: usize| {
             if v.len() < n {
-                v.resize(n, 0);
+                v.resize(n, W::ZERO);
             }
         };
         // acts and next swap roles across layers (and stay swapped
@@ -338,33 +488,49 @@ impl BitSliceEval {
         grow(&mut s.next, self.max_in_planes);
         grow(&mut s.sp, self.max_w);
         grow(&mut s.sn, self.max_w);
+        grow(&mut s.spc, self.max_w);
+        grow(&mut s.snc, self.max_w);
         grow(&mut s.prod, self.max_prod_w);
         grow(&mut s.out, self.layers.last().map_or(0, |l| l.dst_planes));
         grow(&mut s.best, self.cmp_w);
         grow(&mut s.idx, self.idx_planes);
     }
 
-    /// Evaluate one 64-pattern chunk: input planes come straight from the
-    /// pre-transposed stimulus, the output layer's signed planes are left
-    /// in `s.out` (layout per the compiled `dst_offsets`/`dst_widths`).
-    fn forward_chunk(&self, stim: &PackedStimulus, chunk: usize, s: &mut BitSliceScratch) {
+    /// Evaluate one `W::PATTERNS`-pattern chunk: input planes come
+    /// straight from the pre-transposed stimulus, the output layer's
+    /// signed planes are left in `s.out` (layout per the compiled
+    /// `dst_offsets`/`dst_widths`).
+    fn forward_chunk<W: PlaneWord>(
+        &self,
+        stim: &PackedStimulus,
+        chunk: usize,
+        accum: AccumMode,
+        s: &mut BitSliceScratch<W>,
+    ) {
+        let csa = accum == AccumMode::CarrySave;
         let l0 = &self.layers[0];
         for i in 0..self.din {
             let off = l0.in_offsets[i];
             for b in 0..l0.in_widths[i] as usize {
-                s.acts[off + b] = stim.feature_lane(i, b, chunk);
+                s.acts[off + b] = stim.feature_word::<W>(i, b, chunk);
             }
         }
         for layer in &self.layers {
             for (j, n) in layer.neurons.iter().enumerate() {
                 let w = n.w as usize;
                 broadcast(&mut s.sp[..w], n.sp_init);
+                if csa {
+                    s.spc[..w].fill(W::ZERO);
+                }
                 if n.has_neg {
                     broadcast(&mut s.sn[..w], n.sn_init);
+                    if csa {
+                        s.snc[..w].fill(W::ZERO);
+                    }
                 }
                 for t in &layer.terms[n.t0..n.t1] {
                     let pw = t.prod_w as usize;
-                    s.prod[..pw].fill(0);
+                    s.prod[..pw].fill(W::ZERO);
                     // constant multiply: one shifted add per set bit of |w|
                     let mut wv = t.w_abs;
                     while wv != 0 {
@@ -376,12 +542,33 @@ impl BitSliceEval {
                         add_shifted(&mut prod[..pw], &acts[a_lo..a_hi], k);
                         wv &= wv - 1;
                     }
-                    // shift-truncate: zero the low `shift` planes
-                    s.prod[..(t.shift as usize).min(pw)].fill(0);
-                    if t.neg {
-                        add_shifted(&mut s.sn[..w], &s.prod[..pw], 0);
+                    // shift-truncate: zero the low `shift` planes (the
+                    // product is in resolved form — truncating a redundant
+                    // (sum, carry) pair would not truncate its value,
+                    // which is why the compressor sits on the accumulator,
+                    // not the product)
+                    s.prod[..(t.shift as usize).min(pw)].fill(W::ZERO);
+                    let (acc, car) = if t.neg {
+                        (&mut s.sn, &mut s.snc)
                     } else {
-                        add_shifted(&mut s.sp[..w], &s.prod[..pw], 0);
+                        (&mut s.sp, &mut s.spc)
+                    };
+                    if csa {
+                        csa_add(&mut acc[..w], &mut car[..w], &s.prod[..pw]);
+                    } else {
+                        add_shifted(&mut acc[..w], &s.prod[..pw], 0);
+                    }
+                }
+                if csa {
+                    // the deferred carry-propagate: one ripple add per
+                    // accumulator, however many terms were compressed
+                    {
+                        let (sp, spc) = (&mut s.sp, &s.spc);
+                        add_shifted(&mut sp[..w], &spc[..w], 0);
+                    }
+                    if n.has_neg {
+                        let (sn, snc) = (&mut s.sn, &s.snc);
+                        add_shifted(&mut sn[..w], &snc[..w], 0);
                     }
                 }
                 if n.has_neg {
@@ -393,9 +580,9 @@ impl BitSliceEval {
                     s.out[doff..doff + dw].copy_from_slice(&s.sp[..dw]);
                 } else {
                     // ReLU: clear every plane where the sign plane is set
-                    let keep = !s.sp[w - 1];
+                    let keep = s.sp[w - 1].not();
                     for b in 0..dw {
-                        s.next[doff + b] = s.sp[b] & keep;
+                        s.next[doff + b] = s.sp[b].and(keep);
                     }
                 }
             }
@@ -405,41 +592,96 @@ impl BitSliceEval {
         }
     }
 
+    /// Extract the current chunk's logits from `s.out` into `out`
+    /// (`[pattern][dout]` row-major, `in_chunk * dout` slots).
+    fn chunk_logits<W: PlaneWord>(&self, s: &BitSliceScratch<W>, in_chunk: usize, out: &mut [i64]) {
+        let last = self.layers.last().expect("at least one layer");
+        for j in 0..self.dout {
+            let w = last.dst_widths[j] as usize;
+            let off = last.dst_offsets[j];
+            let sign = s.out[off + w - 1];
+            for p in 0..in_chunk {
+                let mut v: i64 = 0;
+                for b in 0..w {
+                    v |= (s.out[off + b].bit(p) as i64) << b;
+                }
+                if sign.bit(p) {
+                    // two's-complement sign extension (bitwise: safe
+                    // up to the full 63-plane width)
+                    v |= -1i64 << w;
+                }
+                out[p * self.dout + j] = v;
+            }
+        }
+    }
+
     /// Integer logits for every stimulus pattern, `[pattern][dout]`
     /// row-major — the bit-sliced analogue of
     /// [`FlatEval::forward_batch`](crate::axsum::FlatEval::forward_batch).
+    /// The `u64` ripple baseline; see [`Self::forward_packed_w`] for the
+    /// wide/carry-save variants.
     pub fn forward_packed(
         &self,
         stim: &PackedStimulus,
         logits: &mut Vec<i64>,
         s: &mut BitSliceScratch,
     ) {
+        self.forward_packed_w::<u64>(stim, logits, s, AccumMode::Ripple)
+    }
+
+    /// [`Self::forward_packed`] generalized over the plane word and
+    /// accumulation mode — bit-identical across every `(W, accum)`
+    /// combination.
+    pub fn forward_packed_w<W: PlaneWord>(
+        &self,
+        stim: &PackedStimulus,
+        logits: &mut Vec<i64>,
+        s: &mut BitSliceScratch<W>,
+        accum: AccumMode,
+    ) {
         self.prepare(s);
         let patterns = stim.patterns();
         logits.clear();
         logits.resize(patterns * self.dout, 0);
-        let last = self.layers.last().expect("at least one layer");
-        for chunk in 0..patterns.div_ceil(64) {
-            self.forward_chunk(stim, chunk, s);
-            let base = chunk * 64;
-            let in_chunk = (patterns - base).min(64);
-            for j in 0..self.dout {
-                let w = last.dst_widths[j] as usize;
-                let off = last.dst_offsets[j];
-                let sign = s.out[off + w - 1];
-                for p in 0..in_chunk {
-                    let mut v: i64 = 0;
-                    for b in 0..w {
-                        v |= (((s.out[off + b] >> p) & 1) as i64) << b;
-                    }
-                    if (sign >> p) & 1 == 1 {
-                        // two's-complement sign extension (bitwise: safe
-                        // up to the full 63-plane width)
-                        v |= -1i64 << w;
-                    }
-                    logits[(base + p) * self.dout + j] = v;
-                }
-            }
+        for chunk in 0..patterns.div_ceil(W::PATTERNS) {
+            self.forward_chunk(stim, chunk, accum, s);
+            let base = chunk * W::PATTERNS;
+            let in_chunk = (patterns - base).min(W::PATTERNS);
+            let lo = base * self.dout;
+            self.chunk_logits(s, in_chunk, &mut logits[lo..lo + in_chunk * self.dout]);
+        }
+    }
+
+    /// Parallel [`Self::forward_packed_w`]: wide chunks fan out over
+    /// `pool::parallel_map_with` workers, each owning its own scratch.
+    /// Chunks are independent, so the merged logits are bit-identical to
+    /// the serial path for any thread count. Meant for the batch-inference
+    /// runtime and benches — the DSE sweep is already parallel over design
+    /// points and must not nest workers.
+    pub fn forward_packed_par<W: PlaneWord>(
+        &self,
+        stim: &PackedStimulus,
+        logits: &mut Vec<i64>,
+        threads: usize,
+        accum: AccumMode,
+    ) {
+        let patterns = stim.patterns();
+        logits.clear();
+        logits.resize(patterns * self.dout, 0);
+        let chunks: Vec<usize> = (0..patterns.div_ceil(W::PATTERNS)).collect();
+        let parts: Vec<Vec<i64>> =
+            parallel_map_with(&chunks, threads, BitSliceScratch::<W>::new, |s, &chunk| {
+                self.prepare(s);
+                self.forward_chunk(stim, chunk, accum, s);
+                let base = chunk * W::PATTERNS;
+                let in_chunk = (patterns - base).min(W::PATTERNS);
+                let mut out = vec![0i64; in_chunk * self.dout];
+                self.chunk_logits(s, in_chunk, &mut out);
+                out
+            });
+        for (chunk, part) in parts.into_iter().enumerate() {
+            let lo = chunk * W::PATTERNS * self.dout;
+            logits[lo..lo + part.len()].copy_from_slice(&part);
         }
     }
 
@@ -447,103 +689,157 @@ impl BitSliceEval {
     /// the argmax is a word-level signed compare-and-select tournament
     /// (strict `>` update — identical tie-breaking to
     /// `util::stats::argmax_i64`), and the label comparison is a plane
-    /// XNOR + popcount. `ys.len()` must equal `stim.patterns()`.
+    /// XNOR + popcount. `ys.len()` must equal `stim.patterns()`. The
+    /// `u64` ripple baseline; see [`Self::accuracy_packed_w`].
     pub fn accuracy_packed(
         &self,
         stim: &PackedStimulus,
         ys: &[usize],
         s: &mut BitSliceScratch,
     ) -> f64 {
+        self.accuracy_packed_w::<u64>(stim, ys, s, AccumMode::Ripple)
+    }
+
+    /// [`Self::accuracy_packed`] generalized over the plane word and
+    /// accumulation mode.
+    pub fn accuracy_packed_w<W: PlaneWord>(
+        &self,
+        stim: &PackedStimulus,
+        ys: &[usize],
+        s: &mut BitSliceScratch<W>,
+        accum: AccumMode,
+    ) -> f64 {
         if ys.is_empty() {
             return 0.0;
         }
-        self.count_correct(stim, ys, s) as f64 / ys.len() as f64
+        self.count_correct_w(stim, ys, accum, s) as f64 / ys.len() as f64
     }
 
-    /// Count of patterns whose word-level argmax equals the label.
-    fn count_correct(&self, stim: &PackedStimulus, ys: &[usize], s: &mut BitSliceScratch) -> u64 {
+    /// Parallel [`Self::accuracy_packed_w`]: per-chunk correct counts
+    /// fan out over workers and sum — bit-identical to the serial path
+    /// for any thread count (integer counts commute).
+    pub fn accuracy_packed_par<W: PlaneWord>(
+        &self,
+        stim: &PackedStimulus,
+        ys: &[usize],
+        threads: usize,
+        accum: AccumMode,
+    ) -> f64 {
+        if ys.is_empty() {
+            return 0.0;
+        }
         assert_eq!(
             ys.len(),
             stim.patterns(),
             "label count must match packed stimulus patterns"
         );
+        let ky = bits_of(ys.iter().copied().max().unwrap_or(0) as i64) as usize;
+        let chunks: Vec<usize> = (0..ys.len().div_ceil(W::PATTERNS)).collect();
+        let counts: Vec<u64> =
+            parallel_map_with(&chunks, threads, BitSliceScratch::<W>::new, |s, &chunk| {
+                self.count_chunk_correct(stim, ys, ky, chunk, accum, s)
+            });
+        counts.iter().sum::<u64>() as f64 / ys.len() as f64
+    }
+
+    /// Count of patterns whose word-level argmax equals the label.
+    fn count_correct_w<W: PlaneWord>(
+        &self,
+        stim: &PackedStimulus,
+        ys: &[usize],
+        accum: AccumMode,
+        s: &mut BitSliceScratch<W>,
+    ) -> u64 {
+        assert_eq!(
+            ys.len(),
+            stim.patterns(),
+            "label count must match packed stimulus patterns"
+        );
+        let ky = bits_of(ys.iter().copied().max().unwrap_or(0) as i64) as usize;
+        let mut ok_total = 0u64;
+        for chunk in 0..ys.len().div_ceil(W::PATTERNS) {
+            ok_total += self.count_chunk_correct(stim, ys, ky, chunk, accum, s);
+        }
+        ok_total
+    }
+
+    /// One wide chunk of the sliced accuracy: forward, transpose the
+    /// chunk's labels, run the argmax tournament, popcount the matches.
+    fn count_chunk_correct<W: PlaneWord>(
+        &self,
+        stim: &PackedStimulus,
+        ys: &[usize],
+        ky: usize,
+        chunk: usize,
+        accum: AccumMode,
+        s: &mut BitSliceScratch<W>,
+    ) -> u64 {
         self.prepare(s);
-        let max_y = ys.iter().copied().max().unwrap_or(0);
-        let ky = bits_of(max_y as i64) as usize;
         if s.ylanes.len() < ky {
-            s.ylanes.resize(ky, 0);
+            s.ylanes.resize(ky, W::ZERO);
         }
         let last = self.layers.last().expect("at least one layer");
         let patterns = ys.len();
-        let mut ok_total = 0u64;
-        for chunk in 0..patterns.div_ceil(64) {
-            self.forward_chunk(stim, chunk, s);
-            let base = chunk * 64;
-            let in_chunk = (patterns - base).min(64);
+        self.forward_chunk(stim, chunk, accum, s);
+        let base = chunk * W::PATTERNS;
+        let in_chunk = (patterns - base).min(W::PATTERNS);
 
-            // labels, bit-transposed for this chunk
-            for k in 0..ky {
-                let mut word = 0u64;
-                for (p, &y) in ys[base..base + in_chunk].iter().enumerate() {
-                    if (y >> k) & 1 == 1 {
-                        word |= 1u64 << p;
-                    }
-                }
-                s.ylanes[k] = word;
-            }
-
-            // argmax tournament: best starts at logit 0 / index 0
-            let w0 = last.dst_widths[0] as usize;
-            let off0 = last.dst_offsets[0];
-            let sign0 = s.out[off0 + w0 - 1];
-            for b in 0..self.cmp_w {
-                s.best[b] = if b < w0 { s.out[off0 + b] } else { sign0 };
-            }
-            s.idx[..self.idx_planes].fill(0);
-            for j in 1..self.dout {
-                let wj = last.dst_widths[j] as usize;
-                let offj = last.dst_offsets[j];
-                let signj = s.out[offj + wj - 1];
-                // m: patterns where best < cand (strict), via the sign of
-                // best - cand = best + !cand + 1 in cmp_w planes
-                let mut carry = u64::MAX;
-                let mut sum = 0u64;
-                for b in 0..self.cmp_w {
-                    let a = s.best[b];
-                    let c = !(if b < wj { s.out[offj + b] } else { signj });
-                    sum = a ^ c ^ carry;
-                    carry = (a & c) | (carry & (a ^ c));
-                }
-                let m = sum;
-                if m == 0 {
-                    continue;
-                }
-                for b in 0..self.cmp_w {
-                    let c = if b < wj { s.out[offj + b] } else { signj };
-                    s.best[b] = (m & c) | (!m & s.best[b]);
-                }
-                for (k, plane) in s.idx[..self.idx_planes].iter_mut().enumerate() {
-                    let jbit = if (j >> k) & 1 == 1 { u64::MAX } else { 0 };
-                    *plane = (m & jbit) | (!m & *plane);
+        // labels, bit-transposed for this chunk
+        for k in 0..ky {
+            let mut word = W::ZERO;
+            for (p, &y) in ys[base..base + in_chunk].iter().enumerate() {
+                if (y >> k) & 1 == 1 {
+                    word.set_bit(p);
                 }
             }
-
-            // predicted == label (planes beyond either width compare as 0,
-            // so out-of-range labels count as misses instead of aliasing)
-            let mut eq = u64::MAX;
-            for k in 0..ky.max(self.idx_planes) {
-                let a = if k < self.idx_planes { s.idx[k] } else { 0 };
-                let b = if k < ky { s.ylanes[k] } else { 0 };
-                eq &= !(a ^ b);
-            }
-            let mask = if in_chunk == 64 {
-                u64::MAX
-            } else {
-                (1u64 << in_chunk) - 1
-            };
-            ok_total += (eq & mask).count_ones() as u64;
+            s.ylanes[k] = word;
         }
-        ok_total
+
+        // argmax tournament: best starts at logit 0 / index 0
+        let w0 = last.dst_widths[0] as usize;
+        let off0 = last.dst_offsets[0];
+        let sign0 = s.out[off0 + w0 - 1];
+        for b in 0..self.cmp_w {
+            s.best[b] = if b < w0 { s.out[off0 + b] } else { sign0 };
+        }
+        s.idx[..self.idx_planes].fill(W::ZERO);
+        for j in 1..self.dout {
+            let wj = last.dst_widths[j] as usize;
+            let offj = last.dst_offsets[j];
+            let signj = s.out[offj + wj - 1];
+            // m: patterns where best < cand (strict), via the sign of
+            // best - cand = best + !cand + 1 in cmp_w planes
+            let mut carry = W::ONES;
+            let mut sum = W::ZERO;
+            for b in 0..self.cmp_w {
+                let a = s.best[b];
+                let c = (if b < wj { s.out[offj + b] } else { signj }).not();
+                sum = a.xor(c).xor(carry);
+                carry = a.and(c).or(carry.and(a.xor(c)));
+            }
+            let m = sum;
+            if m.is_zero() {
+                continue;
+            }
+            for b in 0..self.cmp_w {
+                let c = if b < wj { s.out[offj + b] } else { signj };
+                s.best[b] = m.and(c).or(m.not().and(s.best[b]));
+            }
+            for (k, plane) in s.idx[..self.idx_planes].iter_mut().enumerate() {
+                let jbit = if (j >> k) & 1 == 1 { W::ONES } else { W::ZERO };
+                *plane = m.and(jbit).or(m.not().and(*plane));
+            }
+        }
+
+        // predicted == label (planes beyond either width compare as 0,
+        // so out-of-range labels count as misses instead of aliasing)
+        let mut eq = W::ONES;
+        for k in 0..ky.max(self.idx_planes) {
+            let a = if k < self.idx_planes { s.idx[k] } else { W::ZERO };
+            let b = if k < ky { s.ylanes[k] } else { W::ZERO };
+            eq = eq.and(a.xor(b).not());
+        }
+        eq.and(W::mask_low(in_chunk)).count_ones() as u64
     }
 
     /// Convenience wrapper over [`Self::forward_packed`]: packs `xs`
@@ -573,7 +869,102 @@ impl BitSliceEval {
         }
         let stim = PackedStimulus::from_features(&xs[..n], self.din, self.in_bits)
             .expect("bit-slice stimulus matches model din");
-        self.count_correct(&stim, &ys[..n], s) as f64 / xs.len() as f64
+        self.count_correct_w::<u64>(&stim, &ys[..n], AccumMode::Ripple, s) as f64 / xs.len() as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compiled-plan cache
+// ---------------------------------------------------------------------------
+
+static PLAN_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static PLAN_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of [`PlanCache`] lookups served without
+/// recompiling (mirrors `axsum::nan_sig_dropped`'s counter discipline:
+/// monotone, relaxed, compared as deltas).
+pub fn plan_cache_hits() -> u64 {
+    PLAN_CACHE_HITS.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of [`PlanCache`] lookups that had to compile.
+pub fn plan_cache_misses() -> u64 {
+    PLAN_CACHE_MISSES.load(Ordering::Relaxed)
+}
+
+fn model_fingerprint(q: &QuantMlp) -> u64 {
+    let mut h = DefaultHasher::new();
+    q.in_bits.hash(&mut h);
+    q.w.hash(&mut h);
+    q.b.hash(&mut h);
+    h.finish()
+}
+
+struct PlanCacheInner {
+    model_fp: Option<u64>,
+    map: FxHashMap<Vec<Vec<Vec<u32>>>, Arc<BitSliceEval>>,
+}
+
+/// Amortized compiled-plan cache: [`BitSliceEval`]s keyed on the plan's
+/// shift table — the same key `dse::sweep_space` dedups design points on
+/// and `search`'s evaluator memoizes on — so repeated genomes in
+/// search/sweep (and repeated operating points in the serving runtime)
+/// never recompile plane widths. One cache serves one model: if a call
+/// arrives with a different `QuantMlp` (fingerprint over weights/biases/
+/// `in_bits`), the cache clears itself rather than serve a stale engine.
+/// Thread-safe; compilation happens under the lock (plans compile in
+/// microseconds, and serializing compiles keeps them deduplicated).
+pub struct PlanCache {
+    inner: Mutex<PlanCacheInner>,
+}
+
+impl Default for PlanCache {
+    fn default() -> PlanCache {
+        PlanCache::new()
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(PlanCacheInner {
+                model_fp: None,
+                map: FxHashMap::default(),
+            }),
+        }
+    }
+
+    /// Cached compile: returns the shared engine for `(q, plan)`,
+    /// compiling at most once per distinct shift table. Compile errors
+    /// are not cached (the same broken plan will re-report).
+    pub fn get_or_compile(
+        &self,
+        q: &QuantMlp,
+        plan: &ShiftPlan,
+    ) -> Result<Arc<BitSliceEval>, PlanCompileError> {
+        let fp = model_fingerprint(q);
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        if inner.model_fp != Some(fp) {
+            inner.model_fp = Some(fp);
+            inner.map.clear();
+        }
+        if let Some(e) = inner.map.get(&plan.shifts) {
+            PLAN_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(e));
+        }
+        PLAN_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+        let compiled = Arc::new(BitSliceEval::new(q, plan)?);
+        inner.map.insert(plan.shifts.clone(), Arc::clone(&compiled));
+        Ok(compiled)
+    }
+
+    /// Number of distinct compiled plans currently held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("plan cache poisoned").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -581,6 +972,7 @@ impl BitSliceEval {
 mod tests {
     use super::*;
     use crate::axsum::{self, FlatEval, FlatScratch};
+    use crate::sim::plane::{Lanes, Lanes4};
     use crate::util::rng::Rng;
     use crate::util::stats::argmax_i64;
 
@@ -650,6 +1042,43 @@ mod tests {
     }
 
     #[test]
+    fn csa_accumulation_resolves_to_integer_sum() {
+        // fold several addends through the 3:2 compressor, resolve once,
+        // and compare every lane against plain integer accumulation
+        let mut rng = Rng::new(7);
+        for round in 0..40 {
+            let w = 12usize;
+            let n_terms = 1 + rng.below(6);
+            let mut want = [0u64; 64];
+            let mut sum = vec![0u64; w];
+            let mut car = vec![0u64; w];
+            for _ in 0..n_terms {
+                let vals: Vec<u64> = (0..64).map(|_| rng.next_u64() % (1u64 << 8)).collect();
+                let mut add = vec![0u64; 8];
+                for (p, &v) in vals.iter().enumerate() {
+                    for (bit, plane) in add.iter_mut().enumerate() {
+                        *plane |= ((v >> bit) & 1) << p;
+                    }
+                }
+                csa_add(&mut sum, &mut car, &add);
+                for (p, &v) in vals.iter().enumerate() {
+                    want[p] += v;
+                }
+            }
+            // deferred carry propagation: one ripple add
+            let carc = car.clone();
+            add_shifted(&mut sum, &carc, 0);
+            for (p, &wv) in want.iter().enumerate() {
+                let mut got = 0u64;
+                for (bit, plane) in sum.iter().enumerate() {
+                    got |= ((plane >> p) & 1) << bit;
+                }
+                assert_eq!(got, wv, "round {round} lane {p}");
+            }
+        }
+    }
+
+    #[test]
     fn logits_bit_match_flat_eval_across_chunk_edges() {
         let mut rng = Rng::new(91);
         for total in [1usize, 40, 63, 64, 65, 129] {
@@ -662,11 +1091,87 @@ mod tests {
             let mut fs = FlatScratch::new();
             let mut want = Vec::new();
             flat.forward_batch(&xs, &mut want, &mut fs);
-            let bs = BitSliceEval::new(&q, &plan);
+            let bs = BitSliceEval::new(&q, &plan).unwrap();
             let mut s = BitSliceScratch::new();
             let mut got = Vec::new();
             bs.forward_batch(&xs, &mut got, &mut s);
             assert_eq!(got, want, "{total} patterns");
+        }
+    }
+
+    #[test]
+    fn wide_words_and_carry_save_match_the_u64_ripple_path() {
+        // every (plane word, accumulation mode) pair — and the parallel
+        // chunk loop — must reproduce the u64 ripple logits bit-for-bit,
+        // across wide-chunk edges (127/128/129 for u128, 255/256/257 for
+        // Lanes4)
+        let mut rng = Rng::new(0xC5);
+        for total in [1usize, 64, 127, 128, 129, 255, 256, 257] {
+            let q = rand_q(&mut rng, 5, 4, 3);
+            let plan = rand_plan(&mut rng, &q);
+            let xs: Vec<Vec<i64>> = (0..total)
+                .map(|_| (0..5).map(|_| rng.range_i64(0, 15)).collect())
+                .collect();
+            let stim = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
+            let bs = BitSliceEval::new(&q, &plan).unwrap();
+
+            let mut s64 = BitSliceScratch::<u64>::new();
+            let mut want = Vec::new();
+            bs.forward_packed(&stim, &mut want, &mut s64);
+
+            let mut got = Vec::new();
+            bs.forward_packed_w(&stim, &mut got, &mut s64, AccumMode::CarrySave);
+            assert_eq!(got, want, "u64/csa, {total} patterns");
+
+            let mut s128 = BitSliceScratch::<u128>::new();
+            for accum in [AccumMode::Ripple, AccumMode::CarrySave] {
+                bs.forward_packed_w(&stim, &mut got, &mut s128, accum);
+                assert_eq!(got, want, "u128/{accum:?}, {total} patterns");
+            }
+            let mut s256 = BitSliceScratch::<Lanes4>::new();
+            let mut s2 = BitSliceScratch::<Lanes<2>>::new();
+            for accum in [AccumMode::Ripple, AccumMode::CarrySave] {
+                bs.forward_packed_w(&stim, &mut got, &mut s256, accum);
+                assert_eq!(got, want, "lanes4/{accum:?}, {total} patterns");
+                bs.forward_packed_w(&stim, &mut got, &mut s2, accum);
+                assert_eq!(got, want, "lanes2/{accum:?}, {total} patterns");
+            }
+            for threads in [1usize, 3] {
+                bs.forward_packed_par::<Lanes4>(&stim, &mut got, threads, AccumMode::CarrySave);
+                assert_eq!(got, want, "parallel({threads}), {total} patterns");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_and_parallel_accuracy_matches_u64() {
+        let mut rng = Rng::new(0xC6);
+        for total in [65usize, 129, 257] {
+            let q = rand_q(&mut rng, 4, 3, 3);
+            let plan = rand_plan(&mut rng, &q);
+            let xs: Vec<Vec<i64>> = (0..total)
+                .map(|_| (0..4).map(|_| rng.range_i64(0, 15)).collect())
+                .collect();
+            // labels deliberately include out-of-range classes
+            let ys: Vec<usize> = (0..total).map(|_| rng.below(q.dout() + 2)).collect();
+            let stim = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
+            let bs = BitSliceEval::new(&q, &plan).unwrap();
+            let mut s64 = BitSliceScratch::<u64>::new();
+            let want = bs.accuracy_packed(&stim, &ys, &mut s64);
+            let mut s128 = BitSliceScratch::<u128>::new();
+            assert_eq!(
+                bs.accuracy_packed_w(&stim, &ys, &mut s128, AccumMode::CarrySave),
+                want
+            );
+            let mut s256 = BitSliceScratch::<Lanes4>::new();
+            assert_eq!(
+                bs.accuracy_packed_w(&stim, &ys, &mut s256, AccumMode::Ripple),
+                want
+            );
+            assert_eq!(
+                bs.accuracy_packed_par::<Lanes4>(&stim, &ys, 3, AccumMode::CarrySave),
+                want
+            );
         }
     }
 
@@ -677,7 +1182,7 @@ mod tests {
         let plan = rand_plan(&mut rng, &q);
         let xs = vec![vec![15i64; 6], vec![0i64; 6], vec![15i64; 6]];
         let mut scratch = Vec::new();
-        let bs = BitSliceEval::new(&q, &plan);
+        let bs = BitSliceEval::new(&q, &plan).unwrap();
         let mut s = BitSliceScratch::new();
         let mut got = Vec::new();
         bs.forward_batch(&xs, &mut got, &mut s);
@@ -702,7 +1207,7 @@ mod tests {
             let flat = FlatEval::new(&q, &plan);
             let mut fs = FlatScratch::new();
             let want = flat.accuracy_with(&xs, &ys, &mut fs);
-            let bs = BitSliceEval::new(&q, &plan);
+            let bs = BitSliceEval::new(&q, &plan).unwrap();
             let mut s = BitSliceScratch::new();
             assert_eq!(bs.accuracy_with(&xs, &ys, &mut s), want);
         }
@@ -722,7 +1227,7 @@ mod tests {
         let xs: Vec<Vec<i64>> = (0..70)
             .map(|_| (0..4).map(|_| rng.range_i64(0, 15)).collect())
             .collect();
-        let bs = BitSliceEval::new(&q, &plan);
+        let bs = BitSliceEval::new(&q, &plan).unwrap();
         let mut s = BitSliceScratch::new();
         let mut got = Vec::new();
         bs.forward_batch(&xs, &mut got, &mut s);
@@ -754,7 +1259,7 @@ mod tests {
             let mut fs = FlatScratch::new();
             let mut want = Vec::new();
             flat.forward_batch(&xs, &mut want, &mut fs);
-            let bs = BitSliceEval::new(&q, &plan);
+            let bs = BitSliceEval::new(&q, &plan).unwrap();
             let mut got = Vec::new();
             bs.forward_batch(&xs, &mut got, &mut s);
             assert_eq!(got, want);
@@ -768,5 +1273,69 @@ mod tests {
                 .collect();
             assert_eq!(bs.accuracy_with(&xs, &ys, &mut s), 1.0);
         }
+    }
+
+    #[test]
+    fn compile_error_names_the_offending_neuron() {
+        // two saturated 55-bit inputs at weight 100 need a 64-plane
+        // accumulator — one past the i64-extractable limit
+        let q = QuantMlp {
+            w: vec![vec![vec![100, 100]]],
+            b: vec![vec![0]],
+            in_bits: 55,
+            w_scales: vec![1.0],
+        };
+        let plan = ShiftPlan::exact(&q);
+        let err = BitSliceEval::new(&q, &plan).unwrap_err();
+        assert_eq!((err.layer, err.neuron), (0, 0));
+        let msg = err.to_string();
+        assert!(msg.contains("layer 0") && msg.contains("neuron 0"), "{msg}");
+        assert!(msg.contains("planes"), "{msg}");
+
+        // and the i64-overflow bound check reports context too
+        let q2 = QuantMlp {
+            w: vec![vec![vec![127, 127]]],
+            b: vec![vec![0]],
+            in_bits: 60,
+            w_scales: vec![1.0],
+        };
+        let err2 = BitSliceEval::new(&q2, &ShiftPlan::exact(&q2)).unwrap_err();
+        assert!(err2.to_string().contains("overflows i64"), "{err2}");
+    }
+
+    #[test]
+    fn plan_cache_reuses_compiles_and_counts() {
+        let mut rng = Rng::new(0xCA);
+        let q = rand_q(&mut rng, 4, 3, 2);
+        let plan_a = rand_plan(&mut rng, &q);
+        let plan_b = rand_plan(&mut rng, &q);
+        let cache = PlanCache::new();
+        let (h0, m0) = (plan_cache_hits(), plan_cache_misses());
+        let a1 = cache.get_or_compile(&q, &plan_a).unwrap();
+        let a2 = cache.get_or_compile(&q, &plan_a).unwrap();
+        assert!(Arc::ptr_eq(&a1, &a2), "second lookup must share the compile");
+        let _b = cache.get_or_compile(&q, &plan_b).unwrap();
+        assert_eq!(cache.len(), 2);
+        // counters are process-wide (tests run concurrently): ≥ deltas
+        assert!(plan_cache_hits() >= h0 + 1);
+        assert!(plan_cache_misses() >= m0 + 2);
+
+        // a different model invalidates rather than aliasing stale engines
+        let q2 = rand_q(&mut rng, 5, 2, 2);
+        let plan2 = rand_plan(&mut rng, &q2);
+        let _c = cache.get_or_compile(&q2, &plan2).unwrap();
+        assert_eq!(cache.len(), 1);
+
+        // cached engines evaluate like fresh ones
+        let xs: Vec<Vec<i64>> = (0..30)
+            .map(|_| (0..5).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let mut s = BitSliceScratch::new();
+        let mut got = Vec::new();
+        _c.forward_batch(&xs, &mut got, &mut s);
+        let fresh = BitSliceEval::new(&q2, &plan2).unwrap();
+        let mut want = Vec::new();
+        fresh.forward_batch(&xs, &mut want, &mut s);
+        assert_eq!(got, want);
     }
 }

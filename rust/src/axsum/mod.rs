@@ -12,7 +12,10 @@
 
 pub mod bitslice;
 
-pub use bitslice::{BitSliceEval, BitSliceScratch};
+pub use bitslice::{
+    plan_cache_hits, plan_cache_misses, AccumMode, BitSliceEval, BitSliceScratch, PlanCache,
+    PlanCompileError,
+};
 
 use crate::fixed::QuantMlp;
 use crate::synth::arith::ubits;

@@ -107,9 +107,12 @@ FLAGS:
   --seed N               experiment seed (default 2023)
   --quick                reduced sweep sizes for fast runs
   --backend pjrt|rust    retraining backend (default pjrt, falls back)
-  --engine flat|bitslice DSE accuracy engine: per-sample flattened forward
-                         or the bit-sliced 64-patterns-per-word engine
-                         (bit-exact; see EXPERIMENTS.md §Perf)
+  --engine flat|bitslice|bitslice128|bitslice256
+                         DSE accuracy engine: per-sample flattened forward,
+                         or the bit-sliced plane engine at 64 (u64, ripple),
+                         128 (u128, carry-save) or 256 (4xu64 lanes,
+                         carry-save) patterns per pass — all bit-exact
+                         (see EXPERIMENTS.md §Perf)
   --threads N            worker threads (default: cores; AXMLP_THREADS)
   --dataset KEY          (verilog) dataset key, default ma
   --threshold T          (verilog) accuracy-loss budget, default 0.01

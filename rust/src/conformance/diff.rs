@@ -8,7 +8,9 @@
 //! 1. `axsum::forward` — the reference integer model (per-sample logits);
 //! 2. `axsum::FlatEval::forward_batch` — the DSE's flattened hot path;
 //! 3. `axsum::BitSliceEval` — the bit-sliced word-parallel forward (64
-//!    patterns per `u64`), compared at logit level;
+//!    patterns per `u64`, ripple accumulation), compared at logit level —
+//!    then re-run over the widened plane words (`u128`, `Lanes4`) and the
+//!    carry-save accumulation path, each pinned to the same logits;
 //! 4. `synth::build_mlp_ref` → `sim::simulate_packed` — the gate-level
 //!    circuit the DSE costs (class output, argmax semantics);
 //! 5. `synth::build_mlp_logits` → `sim::simulate_packed` — the same
@@ -22,9 +24,11 @@
 //! mismatch, which is how the harness proves it would catch a real
 //! divergence in either direction.
 
-use crate::axsum::{self, BitSliceEval, BitSliceScratch, FlatEval, FlatScratch, ShiftPlan};
+use crate::axsum::{
+    self, AccumMode, BitSliceEval, BitSliceScratch, FlatEval, FlatScratch, ShiftPlan,
+};
 use crate::fixed::QuantMlp;
-use crate::sim::{as_signed, simulate_packed, PackedStimulus, SimScratch};
+use crate::sim::{as_signed, simulate_packed, Lanes4, PackedStimulus, PlaneWord, SimScratch};
 use crate::synth::{build_mlp_logits, build_mlp_ref, MlpSpecRef, NeuronStyle};
 use crate::util::json::{self, Json};
 use crate::util::stats::argmax_i64;
@@ -50,6 +54,35 @@ impl std::fmt::Display for CaseFailure {
             self.pattern, self.engines.0, self.got.0, self.engines.1, self.got.1, self.output
         )
     }
+}
+
+/// One widened/carry-save pass of the already-compiled bit-slice engine,
+/// diffed against the reference logits.
+fn check_sliced_w<W: PlaneWord>(
+    bs: &BitSliceEval,
+    packed: &PackedStimulus,
+    logits_ref: &[Vec<i64>],
+    dout: usize,
+    accum: AccumMode,
+    engine: &'static str,
+) -> Option<CaseFailure> {
+    let mut s = BitSliceScratch::<W>::new();
+    let mut sliced = Vec::new();
+    bs.forward_packed_w(packed, &mut sliced, &mut s, accum);
+    for (p, want) in logits_ref.iter().enumerate() {
+        let got = &sliced[p * dout..(p + 1) * dout];
+        for j in 0..dout {
+            if got[j] != want[j] {
+                return Some(CaseFailure {
+                    pattern: p,
+                    engines: ("axsum::forward", engine),
+                    output: j,
+                    got: (want[j], got[j]),
+                });
+            }
+        }
+    }
+    None
 }
 
 fn spec_of<'a>(q: &'a QuantMlp, plan: &'a ShiftPlan, name: &'a str) -> MlpSpecRef<'a> {
@@ -127,8 +160,11 @@ pub fn check_case_all(
     let packed = PackedStimulus::from_features(xs, q.din(), q.in_bits)
         .expect("conformance stimulus matches model din");
 
-    // engine 3: bit-sliced word-parallel forward, logit level
-    let bs = BitSliceEval::new(q, plan_bs);
+    // engine 3: bit-sliced word-parallel forward, logit level (the
+    // generator keeps models inside the compilable plane budget, so a
+    // failed compile here is a harness bug, not a conformance finding)
+    let bs = BitSliceEval::new(q, plan_bs)
+        .expect("conformance model within the bit-slice plane budget");
     let mut bss = BitSliceScratch::new();
     let mut sliced = Vec::new();
     bs.forward_packed(&packed, &mut sliced, &mut bss);
@@ -144,6 +180,41 @@ pub fn check_case_all(
                 });
             }
         }
+    }
+
+    // engines 3b–3d: the same compiled plan through the widened plane
+    // words and the carry-save accumulation path, each pinned to the
+    // reference logits (carry-save over u64 isolates the compressor from
+    // word widening; the u128/Lanes4 runs cover the wide gather/extract)
+    if let Some(f) = check_sliced_w::<u64>(
+        &bs,
+        &packed,
+        &logits_ref,
+        dout,
+        AccumMode::CarrySave,
+        "BitSliceEval[u64,carry-save]",
+    ) {
+        return Some(f);
+    }
+    if let Some(f) = check_sliced_w::<u128>(
+        &bs,
+        &packed,
+        &logits_ref,
+        dout,
+        AccumMode::CarrySave,
+        "BitSliceEval[u128,carry-save]",
+    ) {
+        return Some(f);
+    }
+    if let Some(f) = check_sliced_w::<Lanes4>(
+        &bs,
+        &packed,
+        &logits_ref,
+        dout,
+        AccumMode::CarrySave,
+        "BitSliceEval[lanes4,carry-save]",
+    ) {
+        return Some(f);
     }
 
     // engines 4+5: synthesized netlists against the packed simulator

@@ -120,7 +120,8 @@ pub fn random_stimulus(rng: &mut Rng, din: usize, in_bits: usize, n: usize) -> V
 }
 
 /// Adversarial corners first, random fill up to exactly `total` patterns
-/// (callers pick `total` on 64-pattern chunk edges: 63/64/65/128/129).
+/// (callers pick `total` on plane-word chunk edges:
+/// 63/64/65/127/128/129/255/256/257 for the u64/u128/`Lanes4` widths).
 pub fn mixed_stimulus(rng: &mut Rng, q: &QuantMlp, total: usize) -> Vec<Vec<i64>> {
     let mut xs = adversarial_stimulus(q.din(), q.in_bits);
     xs.truncate(total);
@@ -348,7 +349,7 @@ mod tests {
     fn stimulus_in_range_and_exact_count() {
         let mut rng = Rng::new(2);
         let q = random_quant_mlp(&mut rng, &TopologyRange::default());
-        for total in [1usize, 63, 64, 65, 129] {
+        for total in [1usize, 63, 64, 65, 127, 129, 255, 257] {
             let xs = mixed_stimulus(&mut rng, &q, total);
             assert_eq!(xs.len(), total);
             let a_max = (1i64 << q.in_bits) - 1;

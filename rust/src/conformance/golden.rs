@@ -163,7 +163,8 @@ pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
         // the golden generator is itself a conformance check for the
         // bit-sliced engine: any accuracy drift vs the flat forward on a
         // registry topology surfaces as a golden error
-        let bs = crate::axsum::BitSliceEval::new(&q, plan);
+        let bs = crate::axsum::BitSliceEval::new(&q, plan)
+            .map_err(|e| format!("golden model {}/{name} failed bit-slice compile: {e}", cfg.key))?;
         let acc_bits = bs.accuracy_with(&xq_train[..nt], &self_train, &mut bss);
         if acc_bits != acc_self {
             return Err(format!(

@@ -12,9 +12,10 @@
 //!   (exact / arbitrary shifts / grid `derive_shifts` / genetic genomes
 //!   through `search::SearchSpace`), adversarial stimulus corners, and
 //!   raw netlists;
-//! * [`diff`] — runs each case through the five per-case forwards the
-//!   repo owns (`axsum::forward`, `FlatEval::forward_batch`, the
-//!   bit-sliced `BitSliceEval`, and two synthesized netlists under
+//! * [`diff`] — runs each case through every per-case forward the repo
+//!   owns (`axsum::forward`, `FlatEval::forward_batch`, the bit-sliced
+//!   `BitSliceEval` at u64/u128/`Lanes4` plane widths under both ripple
+//!   and carry-save accumulation, and two synthesized netlists under
 //!   `sim::simulate_packed`, compared at *logit* level) and shrinks any
 //!   mismatch to a minimal reproducer naming the layer/neuron;
 //! * [`sweep`] — the sixth, sweep-level differential engine: the sharded
@@ -68,9 +69,11 @@ impl Default for ConformConfig {
     }
 }
 
-/// Per-case pattern counts cycle the 64-pattern chunk edges the packed
-/// simulator is most likely to get wrong.
-const PATTERN_COUNTS: [usize; 5] = [63, 64, 65, 128, 129];
+/// Per-case pattern counts cycle the chunk edges the packed simulator and
+/// the bit-sliced engines are most likely to get wrong: the 64-pattern
+/// `u64` edges plus the 128-pattern `u128` and 256-pattern `Lanes4`
+/// plane-word edges (partial last chunks on every width).
+const PATTERN_COUNTS: [usize; 9] = [63, 64, 65, 127, 128, 129, 255, 256, 257];
 
 /// What `run_fuzz` recorded about one failing case so it replays
 /// exactly: the case seed plus the two choices derived from the case

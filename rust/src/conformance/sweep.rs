@@ -93,10 +93,13 @@ fn build_case(seed: u64) -> SweepCase {
         .iter()
         .map(|x| crate::axsum::predict(&q, &plan, x))
         .collect();
-    let backend = if seed % 2 == 0 {
-        EvalBackend::Flat
-    } else {
-        EvalBackend::BitSlice
+    // cycle every accuracy backend so the sweep-level engine continuously
+    // covers the flat, u64-ripple and widened carry-save bit-slice paths
+    let backend = match seed % 4 {
+        0 => EvalBackend::Flat,
+        1 => EvalBackend::BitSlice,
+        2 => EvalBackend::BitSlice128,
+        _ => EvalBackend::BitSlice256,
     };
     let cfg = DseConfig {
         max_g_levels: 2,
@@ -182,7 +185,7 @@ pub fn check_sweep_case(
     let space = dse::sweep_space(&case.q, &sig, &case.cfg);
     let reps = space.reps.len();
     let done = |divergence| Ok(SweepCaseOutcome { reps, divergence });
-    let mono = dse::sweep(&case.q, &sig, &data, &lib, &case.cfg);
+    let mono = dse::sweep(&case.q, &sig, &data, &lib, &case.cfg)?;
 
     // 1. in-memory sharded run
     let scfg = ShardConfig {
@@ -322,7 +325,7 @@ pub fn sweep_canary(seed: u64) -> Result<SweepDivergence, String> {
     let sig = significance(&case.q, &mean_activations(&case.q, data.x_train));
     let lib = EgtLibrary::egt_v1();
     let space = dse::sweep_space(&case.q, &sig, &case.cfg);
-    let mono = dse::sweep(&case.q, &sig, &data, &lib, &case.cfg);
+    let mono = dse::sweep(&case.q, &sig, &data, &lib, &case.cfg)?;
 
     let dir = scratch_dir(seed ^ 0xCA_9A_7E);
     let run = (|| -> Result<SweepDivergence, String> {

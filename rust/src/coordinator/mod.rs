@@ -280,7 +280,7 @@ pub fn run_dataset(
                 };
                 dse::shard::sweep_sharded(qr, &sig, &data, &ctx.lib, &cfg.dse, &scfg)?.evals
             }
-            _ => dse::sweep(qr, &sig, &data, &ctx.lib, &cfg.dse),
+            _ => dse::sweep(qr, &sig, &data, &ctx.lib, &cfg.dse).map_err(anyhow::Error::msg)?,
         };
         // genetic strategy: NSGA-II over per-neuron genomes, seeded from
         // the grid's evaluated points; the archive front joins the pool
@@ -290,7 +290,8 @@ pub fn run_dataset(
             let space = SearchSpace::lossless(qr, &sig, scfg.max_levels);
             let seeds = search::seed_genomes_from_grid(&space, qr, &designs);
             let sout =
-                search::nsga2(qr, &sig, &data, &ctx.lib, &cfg.dse, &scfg, &space, &seeds);
+                search::nsga2(qr, &sig, &data, &ctx.lib, &cfg.dse, &scfg, &space, &seeds)
+                    .map_err(anyhow::Error::msg)?;
             designs.extend(sout.front_evals());
         }
         // spend whatever budget retraining left: floor = acc0_train - T

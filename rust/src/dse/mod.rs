@@ -8,10 +8,12 @@
 //! sweep touches is bit-transposed once into a [`SweepStimuli`], every
 //! worker owns one reusable [`EngineScratch`], the model is compiled per
 //! point into the selected accuracy engine ([`EvalBackend`]: flattened
-//! per-sample forward or the bit-sliced 64-patterns-per-word forward),
-//! netlists are built from borrowed specs (no weight clones), and grid
-//! points whose `(k, G)` settings derive to an identical [`ShiftPlan`]
-//! are synthesized/simulated once with the result fanned back out.
+//! per-sample forward or the bit-sliced forward at 64/128/256 patterns
+//! per plane word, with bit-slice compiles amortized through the
+//! [`SweepStimuli`]'s shared `axsum::PlanCache`), netlists are built from
+//! borrowed specs (no weight clones), and grid points whose `(k, G)`
+//! settings derive to an identical [`ShiftPlan`] are
+//! synthesized/simulated once with the result fanned back out.
 //!
 //! For long-running multi-dataset sweeps, [`shard`] wraps the same space
 //! in a sharded, checkpointable, resumable orchestration
@@ -21,18 +23,19 @@
 pub mod shard;
 
 use crate::axsum::{
-    self, derive_shifts, threshold_candidates, BitSliceEval, BitSliceScratch, FlatEval,
-    FlatScratch, ShiftPlan, Significance,
+    self, derive_shifts, threshold_candidates, AccumMode, BitSliceEval, BitSliceScratch, FlatEval,
+    FlatScratch, PlanCache, ShiftPlan, Significance,
 };
 use crate::estimate::{estimate_with_toggles, Costs};
 use crate::fixed::QuantMlp;
 use crate::pdk::EgtLibrary;
-use crate::sim::{simulate_packed, PackedStimulus, SimScratch};
+use crate::sim::{simulate_packed, Lanes4, PackedStimulus, PlaneWord, SimScratch};
 use crate::synth::{build_mlp_ref, MlpSpecRef, NeuronStyle};
 use crate::util::pool::parallel_map_with;
 use crate::util::stats::argmax_i64;
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Which software forward scores design-point accuracy (the netlist
 /// engine costing area/power is always `sim::simulate_packed`). Both
@@ -45,9 +48,11 @@ use std::collections::HashMap;
 ///
 /// assert_eq!(EvalBackend::Flat.name(), "flat");
 /// assert_eq!(EvalBackend::BitSlice.name(), "bitslice");
-/// // select the bit-sliced engine for a sweep:
-/// let cfg = DseConfig { backend: EvalBackend::BitSlice, ..DseConfig::default() };
-/// assert_eq!(cfg.backend, EvalBackend::BitSlice);
+/// assert_eq!(EvalBackend::BitSlice128.name(), "bitslice128");
+/// assert_eq!(EvalBackend::BitSlice256.name(), "bitslice256");
+/// // select a bit-sliced engine for a sweep:
+/// let cfg = DseConfig { backend: EvalBackend::BitSlice256, ..DseConfig::default() };
+/// assert!(cfg.backend.is_bitslice());
 /// ```
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum EvalBackend {
@@ -55,9 +60,15 @@ pub enum EvalBackend {
     #[default]
     Flat,
     /// Bit-sliced word-parallel forward (`axsum::bitslice`): 64 stimulus
-    /// patterns per `u64` word, sharing the sweep's bit-transposed
-    /// stimulus with the netlist simulator.
+    /// patterns per `u64` word with ripple-carry accumulation, sharing
+    /// the sweep's bit-transposed stimulus with the netlist simulator.
     BitSlice,
+    /// Bit-sliced forward over `u128` plane words (128 patterns per
+    /// pass) with carry-save accumulation.
+    BitSlice128,
+    /// Bit-sliced forward over [`Lanes4`] plane words (256 patterns per
+    /// pass, auto-vectorizable lanes) with carry-save accumulation.
+    BitSlice256,
 }
 
 impl EvalBackend {
@@ -65,7 +76,15 @@ impl EvalBackend {
         match self {
             EvalBackend::Flat => "flat",
             EvalBackend::BitSlice => "bitslice",
+            EvalBackend::BitSlice128 => "bitslice128",
+            EvalBackend::BitSlice256 => "bitslice256",
         }
+    }
+
+    /// All bit-sliced variants share the packed accuracy splits and the
+    /// compiled-plan cache; only the plane word / accumulation differ.
+    pub fn is_bitslice(self) -> bool {
+        !matches!(self, EvalBackend::Flat)
     }
 }
 
@@ -128,6 +147,10 @@ pub struct EngineScratch {
     pub sim: SimScratch,
     pub flat: FlatScratch,
     pub bits: BitSliceScratch,
+    /// Wide-plane-word scratches for [`EvalBackend::BitSlice128`] /
+    /// [`EvalBackend::BitSlice256`] (empty unless that backend runs).
+    pub bits128: BitSliceScratch<u128>,
+    pub bits256: BitSliceScratch<Lanes4>,
     /// Logit staging for the bit-sliced circuit-verify path.
     pub logits: Vec<i64>,
 }
@@ -184,10 +207,14 @@ pub struct SweepStimuli<'a> {
     /// Capped accuracy-sample counts (train / test).
     pub nt: usize,
     pub ne: usize,
-    /// Packed accuracy splits — `Some` only for [`EvalBackend::BitSlice`]
+    /// Packed accuracy splits — `Some` only for the bit-sliced backends
     /// (the flat backend walks the raw rows).
     pub train: Option<PackedStimulus>,
     pub test: Option<PackedStimulus>,
+    /// Compiled bit-slice plan cache shared by every worker of the sweep:
+    /// grid points whose `(k, G)` settings derive to an already-compiled
+    /// [`ShiftPlan`] reuse the engine instead of recompiling.
+    pub plans: PlanCache,
 }
 
 impl<'a> SweepStimuli<'a> {
@@ -204,9 +231,8 @@ impl<'a> SweepStimuli<'a> {
         let ne = cap(data.x_test.len());
         let power_rows = power_stimulus(data, cfg);
         let power = PackedStimulus::from_features(power_rows, q.din(), q.in_bits)?;
-        let (train, test) = match cfg.backend {
-            EvalBackend::Flat => (None, None),
-            EvalBackend::BitSlice => (
+        let (train, test) = if cfg.backend.is_bitslice() {
+            (
                 Some(PackedStimulus::from_features(
                     &data.x_train[..nt],
                     q.din(),
@@ -217,7 +243,9 @@ impl<'a> SweepStimuli<'a> {
                     q.din(),
                     q.in_bits,
                 )?),
-            ),
+            )
+        } else {
+            (None, None)
         };
         Ok(SweepStimuli {
             power,
@@ -226,6 +254,7 @@ impl<'a> SweepStimuli<'a> {
             ne,
             train,
             test,
+            plans: PlanCache::new(),
         })
     }
 }
@@ -286,7 +315,8 @@ pub fn circuit_costs_packed(
 /// Evaluate one design point end to end.
 ///
 /// Standalone wrapper over [`evaluate_design_packed`]: packs the stimuli
-/// and allocates scratch per call (bit-identical results).
+/// and allocates scratch per call (bit-identical results). Errors carry
+/// the failing context (stimulus packing or bit-slice plan compilation).
 pub fn evaluate_design(
     q: &QuantMlp,
     plan: ShiftPlan,
@@ -295,17 +325,39 @@ pub fn evaluate_design(
     data: &QuantData,
     lib: &EgtLibrary,
     cfg: &DseConfig,
-) -> DesignEval {
-    let stim = SweepStimuli::prepare(q, data, cfg).expect("evaluation stimulus rows match din");
+) -> Result<DesignEval, String> {
+    let stim = SweepStimuli::prepare(q, data, cfg)?;
     let mut scratch = EngineScratch::new();
     evaluate_design_packed(q, plan, k, g, data, lib, cfg, &stim, &mut scratch)
+}
+
+/// Split-accuracy helper for the bit-sliced backends: empty splits score
+/// 0.0 (matching `FlatEval::accuracy_with` on an empty slice) instead of
+/// tripping the engine's non-empty assertion.
+fn packed_accuracy<W: PlaneWord>(
+    bs: &BitSliceEval,
+    stim: &PackedStimulus,
+    ys: &[usize],
+    accum: AccumMode,
+    scratch: &mut BitSliceScratch<W>,
+) -> f64 {
+    if ys.is_empty() {
+        0.0
+    } else {
+        bs.accuracy_packed_w(stim, ys, scratch, accum)
+    }
 }
 
 /// Evaluate one design point against per-sweep-invariant state: the
 /// pre-packed stimuli and a reusable per-worker scratch. The accuracy
 /// engine dispatches on [`DseConfig::backend`] — flat per-sample forward
-/// or the bit-sliced 64-patterns-per-word engine — with bit-identical
-/// results (pinned by `conformance::diff` and the engine parity tests).
+/// or the bit-sliced engine at 64 (`u64`/ripple), 128 (`u128`/carry-save)
+/// or 256 ([`Lanes4`]/carry-save) patterns per plane word — with
+/// bit-identical results (pinned by `conformance::diff` and the engine
+/// parity tests). Bit-slice compiles go through the [`SweepStimuli`]'s
+/// shared plan cache; a model/plan combination that cannot compile
+/// (accumulator wider than 63 planes, i64 bound overflow) surfaces as a
+/// contextful `Err` naming the offending layer and neuron.
 #[allow(clippy::too_many_arguments)]
 pub fn evaluate_design_packed(
     q: &QuantMlp,
@@ -317,11 +369,11 @@ pub fn evaluate_design_packed(
     cfg: &DseConfig,
     stim: &SweepStimuli,
     scratch: &mut EngineScratch,
-) -> DesignEval {
+) -> Result<DesignEval, String> {
     let (nt, ne) = (stim.nt, stim.ne);
     enum Fwd {
         Flat(FlatEval),
-        Bits(BitSliceEval),
+        Bits(Arc<BitSliceEval>),
     }
     let (engine, acc_train, acc_test) = match cfg.backend {
         EvalBackend::Flat => {
@@ -331,19 +383,28 @@ pub fn evaluate_design_packed(
             let ae = flat.accuracy_with(&data.x_test[..ne], &data.y_test[..ne], &mut scratch.flat);
             (Fwd::Flat(flat), at, ae)
         }
-        EvalBackend::BitSlice => {
-            let bs = BitSliceEval::new(q, &plan);
+        backend => {
+            let bs = stim
+                .plans
+                .get_or_compile(q, &plan)
+                .map_err(|e| format!("design point (k={k}) rejected: {e}"))?;
             let train = stim.train.as_ref().expect("bitslice train stimulus packed");
             let test = stim.test.as_ref().expect("bitslice test stimulus packed");
-            let at = if nt == 0 {
-                0.0
-            } else {
-                bs.accuracy_packed(train, &data.y_train[..nt], &mut scratch.bits)
-            };
-            let ae = if ne == 0 {
-                0.0
-            } else {
-                bs.accuracy_packed(test, &data.y_test[..ne], &mut scratch.bits)
+            let (yt, ye) = (&data.y_train[..nt], &data.y_test[..ne]);
+            let (at, ae) = match backend {
+                EvalBackend::BitSlice => (
+                    packed_accuracy(&bs, train, yt, AccumMode::Ripple, &mut scratch.bits),
+                    packed_accuracy(&bs, test, ye, AccumMode::Ripple, &mut scratch.bits),
+                ),
+                EvalBackend::BitSlice128 => (
+                    packed_accuracy(&bs, train, yt, AccumMode::CarrySave, &mut scratch.bits128),
+                    packed_accuracy(&bs, test, ye, AccumMode::CarrySave, &mut scratch.bits128),
+                ),
+                EvalBackend::BitSlice256 => (
+                    packed_accuracy(&bs, train, yt, AccumMode::CarrySave, &mut scratch.bits256),
+                    packed_accuracy(&bs, test, ye, AccumMode::CarrySave, &mut scratch.bits256),
+                ),
+                EvalBackend::Flat => unreachable!("flat handled above"),
             };
             (Fwd::Bits(bs), at, ae)
         }
@@ -363,7 +424,27 @@ pub fn evaluate_design_packed(
                 }
             }
             Fwd::Bits(bs) => {
-                bs.forward_packed(&stim.power, &mut scratch.logits, &mut scratch.bits);
+                match cfg.backend {
+                    EvalBackend::BitSlice => bs.forward_packed_w(
+                        &stim.power,
+                        &mut scratch.logits,
+                        &mut scratch.bits,
+                        AccumMode::Ripple,
+                    ),
+                    EvalBackend::BitSlice128 => bs.forward_packed_w(
+                        &stim.power,
+                        &mut scratch.logits,
+                        &mut scratch.bits128,
+                        AccumMode::CarrySave,
+                    ),
+                    EvalBackend::BitSlice256 => bs.forward_packed_w(
+                        &stim.power,
+                        &mut scratch.logits,
+                        &mut scratch.bits256,
+                        AccumMode::CarrySave,
+                    ),
+                    EvalBackend::Flat => unreachable!("flat handled above"),
+                }
                 let dout = q.dout();
                 for (p, &cls) in classes.iter().take(stim.power_rows.len()).enumerate() {
                     let sw = argmax_i64(&scratch.logits[p * dout..(p + 1) * dout]);
@@ -375,14 +456,14 @@ pub fn evaluate_design_packed(
             }
         }
     }
-    DesignEval {
+    Ok(DesignEval {
         k,
         g,
         plan,
         acc_train,
         acc_test,
         costs,
-    }
+    })
 }
 
 /// Enumerate the (k, per-layer G) grid.
@@ -508,7 +589,7 @@ impl SweepSpace {
 /// let data = QuantData { x_train: &xs, y_train: &ys, x_test: &xs, y_test: &ys };
 /// let sig = significance(&q, &mean_activations(&q, &xs));
 /// let cfg = DseConfig { max_g_levels: 2, power_patterns: 8, threads: 2, ..DseConfig::default() };
-/// let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+/// let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg).unwrap();
 /// assert!(!designs.is_empty());
 /// assert!(!pareto_front(&designs, true).is_empty());
 /// ```
@@ -518,9 +599,9 @@ pub fn sweep(
     data: &QuantData,
     lib: &EgtLibrary,
     cfg: &DseConfig,
-) -> Vec<DesignEval> {
+) -> Result<Vec<DesignEval>, String> {
     let space = sweep_space(q, sig, cfg);
-    let stim = SweepStimuli::prepare(q, data, cfg).expect("sweep stimulus rows match din");
+    let stim = SweepStimuli::prepare(q, data, cfg)?;
     let rep_evals: Vec<DesignEval> =
         parallel_map_with(&space.reps, cfg.threads, EngineScratch::new, |scratch, &pi| {
             let (k, g) = &space.points[pi];
@@ -535,8 +616,10 @@ pub fn sweep(
                 &stim,
                 scratch,
             )
-        });
-    space.fan_out(&rep_evals)
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(space.fan_out(&rep_evals))
 }
 
 /// Selection keys that rank a NaN metric as the *worst* value of its
@@ -655,7 +738,7 @@ mod tests {
             max_eval: 0,
             ..DseConfig::default()
         };
-        let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+        let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg).unwrap();
         assert!(designs.len() > 10);
         let front = pareto_front(&designs, true);
         assert!(!front.is_empty());
@@ -692,7 +775,7 @@ mod tests {
             max_eval: 0,
             ..DseConfig::default()
         };
-        let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+        let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg).unwrap();
         let exact = designs
             .iter()
             .find(|d| d.g.iter().all(|&g| g < 0.0))
@@ -723,7 +806,7 @@ mod tests {
             max_eval: 0,
             ..DseConfig::default()
         };
-        let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+        let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg).unwrap();
         let picked = select_for_threshold(&designs, 1.0, 0.05).unwrap();
         assert!(picked.acc_train >= 0.95 - 1e-9);
         // tighter budget never picks a smaller-or-equal-area design than a
@@ -733,11 +816,12 @@ mod tests {
     }
 
     #[test]
-    fn bitslice_backend_sweep_is_bit_identical_to_flat() {
-        // the full grid sweep under the bit-sliced accuracy engine must
-        // reproduce the flat engine's evaluations exactly — accuracies,
-        // plans and costs (verify_circuit on exercises the bitslice
-        // circuit cross-check too)
+    fn bitslice_backend_sweeps_are_bit_identical_to_flat() {
+        // the full grid sweep under every bit-sliced accuracy engine
+        // (u64/ripple, u128/carry-save, Lanes4/carry-save) must reproduce
+        // the flat engine's evaluations exactly — accuracies, plans and
+        // costs (verify_circuit on exercises the bitslice circuit
+        // cross-check too)
         let (q, xs, ys) = toy();
         let data = QuantData {
             x_train: &xs[..140],
@@ -755,17 +839,23 @@ mod tests {
             max_eval: 90, // capped split: packs exactly the capped rows
             ..DseConfig::default()
         };
-        let flat = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
-        cfg.backend = EvalBackend::BitSlice;
-        let bits = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
-        assert_eq!(flat.len(), bits.len());
-        for (a, b) in flat.iter().zip(&bits) {
-            assert_eq!(a.k, b.k);
-            assert_eq!(a.g, b.g);
-            assert_eq!(a.plan, b.plan);
-            assert_eq!(a.acc_train, b.acc_train);
-            assert_eq!(a.acc_test, b.acc_test);
-            assert_eq!(a.costs, b.costs);
+        let flat = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg).unwrap();
+        for backend in [
+            EvalBackend::BitSlice,
+            EvalBackend::BitSlice128,
+            EvalBackend::BitSlice256,
+        ] {
+            cfg.backend = backend;
+            let bits = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg).unwrap();
+            assert_eq!(flat.len(), bits.len(), "{}", backend.name());
+            for (a, b) in flat.iter().zip(&bits) {
+                assert_eq!(a.k, b.k);
+                assert_eq!(a.g, b.g);
+                assert_eq!(a.plan, b.plan);
+                assert_eq!(a.acc_train, b.acc_train, "{}", backend.name());
+                assert_eq!(a.acc_test, b.acc_test, "{}", backend.name());
+                assert_eq!(a.costs, b.costs);
+            }
         }
     }
 
@@ -810,7 +900,7 @@ pub fn refine_per_neuron(
     lib: &EgtLibrary,
     cfg: &DseConfig,
     floor: f64,
-) -> DesignEval {
+) -> Result<DesignEval, String> {
     let mut plan = base.plan.clone();
     let cap = |xs: &[Vec<i64>]| {
         if cfg.max_eval == 0 {
@@ -860,12 +950,14 @@ pub fn refine_per_neuron(
         best_area = f64::NAN; // recomputed below once at the end
     }
 
-    let refined = evaluate_design(q, plan, k, base.g.clone(), data, lib, cfg);
-    if refined.costs.area_mm2 < base.costs.area_mm2 && refined.acc_train + 1e-12 >= floor {
-        refined
-    } else {
-        base.clone()
-    }
+    let refined = evaluate_design(q, plan, k, base.g.clone(), data, lib, cfg)?;
+    Ok(
+        if refined.costs.area_mm2 < base.costs.area_mm2 && refined.acc_train + 1e-12 >= floor {
+            refined
+        } else {
+            base.clone()
+        },
+    )
 }
 
 #[cfg(test)]
@@ -923,9 +1015,12 @@ mod refine_tests {
             &data,
             &EgtLibrary::egt_v1(),
             &cfg,
-        );
+        )
+        .unwrap();
         let floor = base.acc_train - 0.05;
-        let refined = refine_per_neuron(&q, &base, &sig, 2, &data, &EgtLibrary::egt_v1(), &cfg, floor);
+        let refined =
+            refine_per_neuron(&q, &base, &sig, 2, &data, &EgtLibrary::egt_v1(), &cfg, floor)
+                .unwrap();
         assert!(refined.costs.area_mm2 <= base.costs.area_mm2 + 1e-9);
         assert!(refined.acc_train >= floor - 1e-12);
     }

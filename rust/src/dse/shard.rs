@@ -609,7 +609,7 @@ impl Checkpoint {
 /// let cfg = DseConfig { max_g_levels: 2, power_patterns: 8, threads: 2, ..DseConfig::default() };
 /// let lib = EgtLibrary::egt_v1();
 ///
-/// let mono = sweep(&q, &sig, &data, &lib, &cfg);
+/// let mono = sweep(&q, &sig, &data, &lib, &cfg).unwrap();
 /// let scfg = ShardConfig { shards: 3, ..ShardConfig::default() };
 /// let report = sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
 /// assert_eq!(report.evals.len(), mono.len());
@@ -694,7 +694,10 @@ pub fn sweep_sharded(
                     &stim,
                     scratch,
                 )
-            });
+            })
+            .into_iter()
+            .collect::<Result<Vec<_>, String>>()
+            .map_err(|e| err(format!("shard {s}: {e}")))?;
         if let Some(ck) = &ckpt {
             ck.write_shard(s, &evals)?;
         }
@@ -784,7 +787,7 @@ mod tests {
             ..DseConfig::default()
         };
         let lib = EgtLibrary::egt_v1();
-        let mono = super::super::sweep(&q, &sig, &data, &lib, &cfg);
+        let mono = super::super::sweep(&q, &sig, &data, &lib, &cfg).unwrap();
         for shards in [1usize, 2, 3, 7, 64] {
             let scfg = ShardConfig {
                 shards,

@@ -37,7 +37,7 @@ pub struct ExpConfig {
     pub backend: BackendKind,
     pub threads: usize,
     /// Software accuracy engine for the DSE/search inner loops
-    /// (`--engine flat|bitslice`).
+    /// (`--engine flat|bitslice|bitslice128|bitslice256`).
     pub engine: EvalBackend,
 }
 
@@ -674,14 +674,18 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
         let means = mean_activations(&q0, &xq_train);
         let sig = significance(&q0, &means);
 
-        let grid = dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse);
+        let cache_hits0 = crate::axsum::plan_cache_hits();
+        let cache_miss0 = crate::axsum::plan_cache_misses();
+        let grid =
+            dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse).map_err(anyhow::Error::msg)?;
         // lossless tables: the seeds must decode to exactly the grid's
         // plans, or the "ga never worse than grid" guarantee breaks on
         // wide-fan-in datasets (ca: 21 inputs > the default level cap)
         let space = SearchSpace::lossless(&q0, &sig, scfg.max_levels);
         let seeds = seed_genomes_from_grid(&space, &q0, &grid);
         let t0 = std::time::Instant::now();
-        let out = nsga2(&q0, &sig, &data, &ctx.lib, &pcfg.dse, scfg, &space, &seeds);
+        let out = nsga2(&q0, &sig, &data, &ctx.lib, &pcfg.dse, scfg, &space, &seeds)
+            .map_err(anyhow::Error::msg)?;
         let elapsed = t0.elapsed();
 
         // fronts CSV (accuracy/area Pareto view for both methods)
@@ -776,13 +780,17 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
             median_ns: elapsed.as_nanos() as f64 / out.requested.max(1) as f64,
             min_ns: elapsed.as_nanos() as f64 / out.requested.max(1) as f64,
             p95_ns: elapsed.as_nanos() as f64 / out.requested.max(1) as f64,
+            patterns_per_iter: None,
         });
         eprintln!(
-            "[{key}] search done in {:.1}s: {} unique evals / {} requested ({} memo hits)",
+            "[{key}] search done in {:.1}s: {} unique evals / {} requested ({} memo hits, \
+             plan cache {} hits / {} misses)",
             elapsed.as_secs_f64(),
             out.archive.len(),
             out.requested,
             out.memo_hits,
+            crate::axsum::plan_cache_hits() - cache_hits0,
+            crate::axsum::plan_cache_misses() - cache_miss0,
         );
     }
 
@@ -860,8 +868,10 @@ pub fn exp_shard(
         let means = mean_activations(&q0, &xq_train);
         let sig = significance(&q0, &means);
 
+        let cache_hits0 = crate::axsum::plan_cache_hits();
+        let cache_miss0 = crate::axsum::plan_cache_misses();
         let t0 = std::time::Instant::now();
-        let mono = dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse);
+        let mono = dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse).map_err(anyhow::Error::msg)?;
         let mono_s = t0.elapsed();
 
         let dir = std::path::Path::new(checkpoint_dir).join(key);
@@ -923,11 +933,17 @@ pub fn exp_shard(
                 median_ns: ns,
                 min_ns: ns,
                 p95_ns: ns,
+                patterns_per_iter: None,
             });
         }
         eprintln!(
-            "[{key}] sharded sweep done: {} reps / {} points, {} shards, parity {parity}",
-            rep1.reps_total, rep1.points_total, rep1.shards_total
+            "[{key}] sharded sweep done: {} reps / {} points, {} shards, parity {parity}, \
+             plan cache {} hits / {} misses",
+            rep1.reps_total,
+            rep1.points_total,
+            rep1.shards_total,
+            crate::axsum::plan_cache_hits() - cache_hits0,
+            crate::axsum::plan_cache_misses() - cache_miss0,
         );
     }
     t.emit(
@@ -1117,14 +1133,16 @@ pub fn exp_refine(cfg: &ExpConfig) -> anyhow::Result<()> {
         let acc0 = q0.accuracy_exact(&xq_train, &ds.y_train);
         let means = mean_activations(&q0, &xq_train);
         let sig = significance(&q0, &means);
-        let designs = dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse);
+        let designs =
+            dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse).map_err(anyhow::Error::msg)?;
         let floor = acc0 - 0.02;
         let Some(base) = dse::select_for_threshold(&designs, acc0, 0.02) else {
             continue;
         };
         let refined = refine_per_neuron(
             &q0, base, &sig, base.k.max(1), &data, &ctx.lib, &pcfg.dse, floor,
-        );
+        )
+        .map_err(anyhow::Error::msg)?;
         t.row(vec![
             key.clone(),
             f2(base.costs.area_cm2()),

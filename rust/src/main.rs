@@ -52,7 +52,13 @@ fn exp_config(args: &Args) -> Result<ExpConfig, String> {
     cfg.engine = match args.flag("engine") {
         None | Some("flat") => axmlp::dse::EvalBackend::Flat,
         Some("bitslice") => axmlp::dse::EvalBackend::BitSlice,
-        Some(e) => return Err(format!("unknown engine `{e}` (flat|bitslice)")),
+        Some("bitslice128") => axmlp::dse::EvalBackend::BitSlice128,
+        Some("bitslice256") => axmlp::dse::EvalBackend::BitSlice256,
+        Some(e) => {
+            return Err(format!(
+                "unknown engine `{e}` (flat|bitslice|bitslice128|bitslice256)"
+            ))
+        }
     };
     Ok(cfg)
 }

@@ -4,8 +4,13 @@
 //! `xla` crate (`HloModuleProto::from_text_file` → `XlaComputation` →
 //! `compile` → `execute`; see /opt/xla-example/load_hlo/ and DESIGN.md §3
 //! for why text, not serialized protos, is the interchange format).
+//!
+//! The pure-integer production path lives in [`stream`]: a buffered
+//! streaming classifier over the wide bit-sliced plane engines, with
+//! first-class patterns/sec accounting.
 
 pub mod backend_pjrt;
+pub mod stream;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

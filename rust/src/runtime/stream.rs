@@ -1,0 +1,498 @@
+//! Streaming batch-inference over the bit-sliced engines.
+//!
+//! The PJRT side of `runtime` executes AOT artifacts; this module is the
+//! *production* integer path: rows arrive one at a time (a sensor feed, a
+//! file reader, a benchmark driver), are buffered to a flush boundary,
+//! bit-transposed into a [`PackedStimulus`] block and pushed through the
+//! widest compiled plane engine in one pass — 64 patterns per `u64`
+//! plane word, 128 per `u128`, 256 per [`Lanes4`] — with the compiled
+//! plan amortized across runners through a shared [`PlanCache`].
+//!
+//! Throughput is a first-class output: every flush is timed and folded
+//! into [`StreamStats`], whose `patterns_per_sec` is the number the
+//! BENCH suite and `repro bench-bitslice` report.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::axsum::{
+    AccumMode, BitSliceEval, BitSliceScratch, FlatEval, FlatScratch, PlanCache, ShiftPlan,
+};
+use crate::dse::EvalBackend;
+use crate::fixed::QuantMlp;
+use crate::sim::{Lanes4, PackedStimulus};
+use crate::util::pool;
+use crate::util::stats::argmax_i64;
+
+/// Default flush boundary: a multiple of every plane width (64, 128,
+/// 256), so full blocks never leave a partial last chunk on any engine.
+pub const DEFAULT_FLUSH: usize = 4096;
+
+/// Streaming-runner parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    /// Which forward engine classifies each flushed block.
+    pub backend: EvalBackend,
+    /// Worker threads for the chunk-parallel bit-sliced path; `0` means
+    /// [`pool::default_threads`], `1` keeps the flush on the caller's
+    /// thread with persistent scratch (no spawn overhead).
+    pub threads: usize,
+    /// Rows buffered before an automatic flush; `0` means
+    /// [`DEFAULT_FLUSH`]. Any value works — partial plane chunks are
+    /// handled by the engines — but plane-width multiples waste nothing.
+    pub flush_patterns: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig {
+            backend: EvalBackend::BitSlice256,
+            threads: 0,
+            flush_patterns: DEFAULT_FLUSH,
+        }
+    }
+}
+
+/// Cumulative throughput accounting across flushes. Only engine time is
+/// counted (packing + forward + argmax), not the caller's time between
+/// [`StreamRunner::push`] calls.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    /// Rows classified so far (flushed; excludes rows still buffered).
+    pub patterns: u64,
+    /// Number of flushes performed.
+    pub flushes: u64,
+    /// Nanoseconds spent inside flushes.
+    pub engine_nanos: u128,
+}
+
+impl StreamStats {
+    /// Classified rows per second of engine time (0.0 before any flush).
+    pub fn patterns_per_sec(&self) -> f64 {
+        if self.engine_nanos == 0 {
+            0.0
+        } else {
+            self.patterns as f64 * 1e9 / self.engine_nanos as f64
+        }
+    }
+}
+
+enum Engine {
+    Flat(Box<FlatEval>),
+    Sliced(Arc<BitSliceEval>),
+}
+
+/// Buffered streaming classifier: `push` rows, collect predicted classes
+/// at each flush boundary, `finish` the tail, read [`StreamStats`].
+///
+/// ```
+/// use axmlp::axsum::{PlanCache, ShiftPlan};
+/// use axmlp::fixed::QuantMlp;
+/// use axmlp::runtime::stream::{StreamConfig, StreamRunner};
+///
+/// let q = QuantMlp {
+///     w: vec![vec![vec![3, -2], vec![1, 4]], vec![vec![2, -1], vec![-3, 2]]],
+///     b: vec![vec![1, 0], vec![0, 2]],
+///     in_bits: 4,
+///     w_scales: vec![1.0, 1.0],
+/// };
+/// let plan = ShiftPlan::exact(&q);
+/// let cache = PlanCache::new();
+/// let mut s = StreamRunner::new(&q, &plan, &cache, StreamConfig::default()).unwrap();
+/// for x in [[0i64, 1], [7, 3], [15, 0]] {
+///     assert!(s.push(&x).unwrap().is_none()); // below the flush boundary
+/// }
+/// let classes = s.finish().unwrap();
+/// assert_eq!(classes.len(), 3);
+/// assert_eq!(s.stats().patterns, 3);
+/// ```
+pub struct StreamRunner {
+    din: usize,
+    in_bits: usize,
+    dout: usize,
+    backend: EvalBackend,
+    threads: usize,
+    flush_patterns: usize,
+    engine: Engine,
+    buf: Vec<Vec<i64>>,
+    logits: Vec<i64>,
+    flat_s: FlatScratch,
+    s64: BitSliceScratch<u64>,
+    s128: BitSliceScratch<u128>,
+    s256: BitSliceScratch<Lanes4>,
+    stats: StreamStats,
+}
+
+impl StreamRunner {
+    /// Build a runner for `(q, plan)`. Bit-sliced backends compile (or
+    /// reuse) the shift plan through `plans` — constructing many runners
+    /// over the same plan pays the plan compile once.
+    pub fn new(
+        q: &QuantMlp,
+        plan: &ShiftPlan,
+        plans: &PlanCache,
+        cfg: StreamConfig,
+    ) -> Result<StreamRunner, String> {
+        let engine = if cfg.backend.is_bitslice() {
+            Engine::Sliced(
+                plans
+                    .get_or_compile(q, plan)
+                    .map_err(|e| format!("stream runner ({} backend): {e}", cfg.backend.name()))?,
+            )
+        } else {
+            Engine::Flat(Box::new(FlatEval::new(q, plan)))
+        };
+        Ok(StreamRunner {
+            din: q.din(),
+            in_bits: q.in_bits,
+            dout: q.dout(),
+            backend: cfg.backend,
+            threads: if cfg.threads == 0 {
+                pool::default_threads()
+            } else {
+                cfg.threads
+            },
+            flush_patterns: if cfg.flush_patterns == 0 {
+                DEFAULT_FLUSH
+            } else {
+                cfg.flush_patterns
+            },
+            engine,
+            buf: Vec::new(),
+            logits: Vec::new(),
+            flat_s: FlatScratch::default(),
+            s64: BitSliceScratch::new(),
+            s128: BitSliceScratch::new(),
+            s256: BitSliceScratch::new(),
+            stats: StreamStats::default(),
+        })
+    }
+
+    pub fn backend(&self) -> EvalBackend {
+        self.backend
+    }
+
+    /// Rows buffered and not yet classified.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        self.stats
+    }
+
+    /// Ingest one feature row. Returns the classes of a completed block
+    /// when this push crossed the flush boundary, `None` otherwise. Rows
+    /// are validated here — the same bounds [`PackedStimulus`] enforces —
+    /// so a malformed row is rejected without poisoning the buffer.
+    pub fn push(&mut self, x: &[i64]) -> Result<Option<Vec<usize>>, String> {
+        let row = self.stats.patterns as usize + self.buf.len();
+        if x.len() != self.din {
+            return Err(format!(
+                "stream row {row} has {} features, model expects din = {}",
+                x.len(),
+                self.din
+            ));
+        }
+        let bad = |v: i64| v < 0 || (self.in_bits < 63 && v >= 1i64 << self.in_bits);
+        if let Some((i, &v)) = x.iter().enumerate().find(|(_, &v)| bad(v)) {
+            return Err(format!(
+                "stream row {row} feature {i} = {v} outside [0, 2^{})",
+                self.in_bits
+            ));
+        }
+        self.buf.push(x.to_vec());
+        if self.buf.len() >= self.flush_patterns {
+            return self.flush().map(Some);
+        }
+        Ok(None)
+    }
+
+    /// Classify every buffered row now, regardless of the boundary.
+    /// Returns one predicted class per row, in push order.
+    pub fn flush(&mut self) -> Result<Vec<usize>, String> {
+        if self.buf.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        match &self.engine {
+            Engine::Flat(fe) => fe.forward_batch(&self.buf, &mut self.logits, &mut self.flat_s),
+            Engine::Sliced(bs) => {
+                let stim = PackedStimulus::from_features(&self.buf, self.din, self.in_bits)?;
+                let par = self.threads > 1;
+                match self.backend {
+                    EvalBackend::BitSlice => {
+                        if par {
+                            bs.forward_packed_par::<u64>(
+                                &stim,
+                                &mut self.logits,
+                                self.threads,
+                                AccumMode::Ripple,
+                            );
+                        } else {
+                            bs.forward_packed_w(
+                                &stim,
+                                &mut self.logits,
+                                &mut self.s64,
+                                AccumMode::Ripple,
+                            );
+                        }
+                    }
+                    EvalBackend::BitSlice128 => {
+                        if par {
+                            bs.forward_packed_par::<u128>(
+                                &stim,
+                                &mut self.logits,
+                                self.threads,
+                                AccumMode::CarrySave,
+                            );
+                        } else {
+                            bs.forward_packed_w(
+                                &stim,
+                                &mut self.logits,
+                                &mut self.s128,
+                                AccumMode::CarrySave,
+                            );
+                        }
+                    }
+                    EvalBackend::BitSlice256 => {
+                        if par {
+                            bs.forward_packed_par::<Lanes4>(
+                                &stim,
+                                &mut self.logits,
+                                self.threads,
+                                AccumMode::CarrySave,
+                            );
+                        } else {
+                            bs.forward_packed_w(
+                                &stim,
+                                &mut self.logits,
+                                &mut self.s256,
+                                AccumMode::CarrySave,
+                            );
+                        }
+                    }
+                    EvalBackend::Flat => unreachable!("flat backend uses Engine::Flat"),
+                }
+            }
+        }
+        let classes: Vec<usize> = (0..self.buf.len())
+            .map(|r| argmax_i64(&self.logits[r * self.dout..(r + 1) * self.dout]))
+            .collect();
+        self.stats.patterns += self.buf.len() as u64;
+        self.stats.flushes += 1;
+        self.stats.engine_nanos += t0.elapsed().as_nanos();
+        self.buf.clear();
+        Ok(classes)
+    }
+
+    /// Flush the tail and return its classes. The runner stays usable —
+    /// stats keep accumulating across `finish` calls.
+    pub fn finish(&mut self) -> Result<Vec<usize>, String> {
+        self.flush()
+    }
+
+    /// Convenience: stream a whole dataset through the runner and return
+    /// every predicted class in order (flush boundaries included).
+    pub fn classify_all(&mut self, xs: &[Vec<i64>]) -> Result<Vec<usize>, String> {
+        let mut out = Vec::with_capacity(xs.len());
+        for x in xs {
+            if let Some(mut block) = self.push(x)? {
+                out.append(&mut block);
+            }
+        }
+        out.append(&mut self.finish()?);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn model() -> QuantMlp {
+        QuantMlp {
+            w: vec![
+                vec![vec![5, -3, 2], vec![-1, 4, -6], vec![3, 3, -2], vec![-4, 1, 5]],
+                vec![vec![2, -1, 3, -2], vec![-3, 2, 1, 4], vec![1, -4, -1, 2]],
+            ],
+            b: vec![vec![3, -2, 0, 1], vec![1, 0, -1]],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        }
+    }
+
+    fn rows(n: usize, din: usize, in_bits: usize, seed: u64) -> Vec<Vec<i64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..din).map(|_| rng.range_i64(0, (1 << in_bits) - 1)).collect())
+            .collect()
+    }
+
+    fn flat_classes(q: &QuantMlp, plan: &ShiftPlan, xs: &[Vec<i64>]) -> Vec<usize> {
+        let fe = FlatEval::new(q, plan);
+        let mut s = FlatScratch::default();
+        xs.iter().map(|x| fe.predict(x, &mut s)).collect()
+    }
+
+    #[test]
+    fn streamed_classes_match_flat_across_flush_boundaries() {
+        let q = model();
+        let plan = ShiftPlan::exact(&q);
+        let cache = PlanCache::new();
+        for &n in &[1usize, 63, 64, 65, 127, 128, 129, 255, 256, 257] {
+            let xs = rows(n, q.din(), q.in_bits, 0xBEEF ^ n as u64);
+            let want = flat_classes(&q, &plan, &xs);
+            for backend in [
+                EvalBackend::Flat,
+                EvalBackend::BitSlice,
+                EvalBackend::BitSlice128,
+                EvalBackend::BitSlice256,
+            ] {
+                // a flush boundary that does NOT divide the plane widths,
+                // so blocks straddle partial chunks on every engine
+                for &flush in &[100usize, 64, DEFAULT_FLUSH] {
+                    let cfg = StreamConfig {
+                        backend,
+                        threads: 2,
+                        flush_patterns: flush,
+                    };
+                    let mut s = StreamRunner::new(&q, &plan, &cache, cfg).unwrap();
+                    let got = s.classify_all(&xs).unwrap();
+                    assert_eq!(
+                        got, want,
+                        "backend {} n {n} flush {flush}",
+                        backend.name()
+                    );
+                    assert_eq!(s.stats().patterns, n as u64);
+                    assert_eq!(s.pending(), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_flushes_agree() {
+        let q = model();
+        let plan = ShiftPlan::exact(&q);
+        let cache = PlanCache::new();
+        let xs = rows(300, q.din(), q.in_bits, 7);
+        let mut serial = StreamRunner::new(
+            &q,
+            &plan,
+            &cache,
+            StreamConfig {
+                backend: EvalBackend::BitSlice256,
+                threads: 1,
+                flush_patterns: 129,
+            },
+        )
+        .unwrap();
+        let mut par = StreamRunner::new(
+            &q,
+            &plan,
+            &cache,
+            StreamConfig {
+                backend: EvalBackend::BitSlice256,
+                threads: 4,
+                flush_patterns: 129,
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            serial.classify_all(&xs).unwrap(),
+            par.classify_all(&xs).unwrap()
+        );
+    }
+
+    #[test]
+    fn push_returns_block_exactly_at_boundary_and_stats_accumulate() {
+        let q = model();
+        let plan = ShiftPlan::exact(&q);
+        let cache = PlanCache::new();
+        let mut s = StreamRunner::new(
+            &q,
+            &plan,
+            &cache,
+            StreamConfig {
+                backend: EvalBackend::BitSlice,
+                threads: 1,
+                flush_patterns: 4,
+            },
+        )
+        .unwrap();
+        let xs = rows(10, q.din(), q.in_bits, 11);
+        let mut flushed = 0usize;
+        for (i, x) in xs.iter().enumerate() {
+            match s.push(x).unwrap() {
+                Some(block) => {
+                    assert_eq!(block.len(), 4);
+                    assert_eq!(i % 4, 3, "flush lands on every 4th push");
+                    flushed += block.len();
+                }
+                None => assert!(i % 4 != 3),
+            }
+        }
+        assert_eq!(flushed, 8);
+        assert_eq!(s.pending(), 2);
+        let tail = s.finish().unwrap();
+        assert_eq!(tail.len(), 2);
+        let st = s.stats();
+        assert_eq!(st.patterns, 10);
+        assert_eq!(st.flushes, 3);
+        assert!(st.patterns_per_sec() > 0.0);
+        // an empty finish is a no-op, not a fourth flush
+        assert!(s.finish().unwrap().is_empty());
+        assert_eq!(s.stats().flushes, 3);
+    }
+
+    #[test]
+    fn malformed_rows_are_rejected_without_poisoning_the_stream() {
+        let q = model();
+        let plan = ShiftPlan::exact(&q);
+        let cache = PlanCache::new();
+        let mut s =
+            StreamRunner::new(&q, &plan, &cache, StreamConfig::default()).unwrap();
+        let err = s.push(&[1, 2]).unwrap_err();
+        assert!(err.contains("din"), "{err}");
+        let err = s.push(&[1, 2, 16]).unwrap_err();
+        assert!(err.contains("outside"), "{err}");
+        let err = s.push(&[1, -1, 0]).unwrap_err();
+        assert!(err.contains("outside"), "{err}");
+        // good rows still classify after the rejections
+        assert!(s.push(&[1, 2, 3]).unwrap().is_none());
+        assert_eq!(s.finish().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn runners_share_one_compiled_plan_through_the_cache() {
+        let q = model();
+        let plan = ShiftPlan::exact(&q);
+        let cache = PlanCache::new();
+        let h0 = crate::axsum::plan_cache_hits();
+        let m0 = crate::axsum::plan_cache_misses();
+        let _a = StreamRunner::new(&q, &plan, &cache, StreamConfig::default()).unwrap();
+        let _b = StreamRunner::new(&q, &plan, &cache, StreamConfig::default()).unwrap();
+        // other tests run concurrently against the global counters, so
+        // only monotone deltas are asserted
+        assert!(crate::axsum::plan_cache_misses() >= m0 + 1);
+        assert!(crate::axsum::plan_cache_hits() >= h0 + 1);
+    }
+
+    #[test]
+    fn compile_rejection_surfaces_the_backend_in_the_error() {
+        // a 62-bit input bus times a 127 weight overflows the i64
+        // product bound, so the plan must be rejected at compile
+        let q = QuantMlp {
+            w: vec![vec![vec![127, 127]]],
+            b: vec![vec![0]],
+            in_bits: 62,
+            w_scales: vec![1.0],
+        };
+        let plan = ShiftPlan::exact(&q);
+        let cache = PlanCache::new();
+        let err = StreamRunner::new(&q, &plan, &cache, StreamConfig::default()).unwrap_err();
+        assert!(err.contains("bitslice256"), "{err}");
+    }
+}

@@ -337,7 +337,7 @@ struct Evaluator<'a> {
 }
 
 impl<'a> Evaluator<'a> {
-    fn evaluate(&mut self, genomes: &[Genome]) -> Vec<usize> {
+    fn evaluate(&mut self, genomes: &[Genome]) -> Result<Vec<usize>, String> {
         self.requested += genomes.len();
         // resolve each genome to an archive slot; collect unique misses
         // in first-seen order (deterministic regardless of thread count)
@@ -378,13 +378,15 @@ impl<'a> Evaluator<'a> {
                         scratch,
                     )
                 },
-            );
+            )
+            .into_iter()
+            .collect::<Result<Vec<_>, String>>()?;
             for e in evals {
                 self.objs.push(objectives(&e));
                 self.archive.push(e);
             }
         }
-        slots
+        Ok(slots)
     }
 }
 
@@ -510,14 +512,14 @@ pub fn nsga2(
     cfg: &SearchConfig,
     space: &SearchSpace,
     seeds: &[Genome],
-) -> SearchOutcome {
+) -> Result<SearchOutcome, String> {
     assert!(cfg.pop_size >= 4, "population too small for NSGA-II");
     assert!(cfg.generations >= 1);
     let mut rng = Rng::new(cfg.seed ^ SEARCH_SEED_SALT);
 
     // identical stimuli to the grid sweep: both strategies cost designs
     // on the same packed vectors (and the same accuracy backend)
-    let stim = SweepStimuli::prepare(q, data, dse_cfg).expect("search stimulus rows match din");
+    let stim = SweepStimuli::prepare(q, data, dse_cfg)?;
     let mut ev = Evaluator {
         q,
         sig,
@@ -545,7 +547,7 @@ pub fn nsga2(
     while init.len() < cfg.pop_size {
         init.push(space.random_genome(&mut rng));
     }
-    let init_slots = ev.evaluate(&init);
+    let init_slots = ev.evaluate(&init)?;
 
     // hypervolume reference: a hair above the largest area seen in the
     // initial generation (kept fixed so the per-generation series is
@@ -590,7 +592,7 @@ pub fn nsga2(
             mutate(&mut rng, space, &mut child, cfg.mutation_rate);
             offspring.push(child);
         }
-        let off_slots = ev.evaluate(&offspring);
+        let off_slots = ev.evaluate(&offspring)?;
 
         // (μ+λ) environmental selection
         let mut union: Vec<Genome> = pop;
@@ -627,14 +629,14 @@ pub fn nsga2(
             .then(a.cmp(&b))
     });
 
-    SearchOutcome {
+    Ok(SearchOutcome {
         archive: ev.archive,
         front,
         gens,
         requested: ev.requested,
         memo_hits: ev.memo_hits,
         hv_ref_area,
-    }
+    })
 }
 
 /// Encode every labeled grid-sweep evaluation as a seed genome (points
@@ -785,8 +787,8 @@ mod tests {
         };
         let lib = EgtLibrary::egt_v1();
         let space = SearchSpace::lossless(&q, &sig, cfg.max_levels);
-        let a = nsga2(&q, &sig, &data, &lib, &dse_cfg, &cfg, &space, &[]);
-        let b = nsga2(&q, &sig, &data, &lib, &dse_cfg, &cfg, &space, &[]);
+        let a = nsga2(&q, &sig, &data, &lib, &dse_cfg, &cfg, &space, &[]).unwrap();
+        let b = nsga2(&q, &sig, &data, &lib, &dse_cfg, &cfg, &space, &[]).unwrap();
         assert_eq!(a.front, b.front);
         assert_eq!(a.archive.len(), b.archive.len());
         assert_eq!(a.requested, b.requested);

@@ -22,6 +22,10 @@ use std::collections::HashMap;
 use crate::netlist::Netlist;
 use crate::pdk::CellKind;
 
+pub mod plane;
+
+pub use plane::{Lanes, Lanes4, PlaneWord};
+
 /// Result of a simulation run.
 #[derive(Clone, Debug)]
 pub struct SimResult {

@@ -1,0 +1,347 @@
+//! Plane words: the machine word a bit-plane is stored in.
+//!
+//! The bit-sliced engines (`sim::simulate_packed`, `axsum::bitslice`)
+//! store every value as *bit-planes*: plane `b` is a word whose bit `p`
+//! is bit `b` of the value for stimulus pattern `p`. Historically that
+//! word was hard-wired to `u64` (64 patterns per pass). [`PlaneWord`]
+//! abstracts the word so one ripple/carry-save pass can advance
+//!
+//!  * 64 patterns (`u64` — the baseline),
+//!  * 128 patterns (`u128` — two ALU ops per plane op on 64-bit
+//!    targets, but half the loop/bookkeeping overhead), or
+//!  * 256+ patterns ([`Lanes4`] — a portable-SIMD-shaped `[u64; N]`
+//!    newtype whose per-lane loops LLVM auto-vectorizes to SSE2/AVX2
+//!    vector ops; no nightly `std::simd` or extra dependency needed).
+//!
+//! The [`PackedStimulus`](crate::sim::PackedStimulus) transpose stays
+//! `u64`-grained on disk/in memory; [`PackedStimulus::feature_word`]
+//! gathers `W::PATTERNS / 64` consecutive 64-pattern sub-chunks into one
+//! wide plane word, so every width reads the *same* shared transpose and
+//! the engines stay bit-identical across widths by construction.
+//!
+//! ```
+//! use axmlp::sim::plane::{Lanes4, PlaneWord};
+//!
+//! // pattern capacity per plane word
+//! assert_eq!(<u64 as PlaneWord>::PATTERNS, 64);
+//! assert_eq!(<u128 as PlaneWord>::PATTERNS, 128);
+//! assert_eq!(<Lanes4 as PlaneWord>::PATTERNS, 256);
+//!
+//! // a plane word is just a bag of per-pattern bits
+//! let mut w = <u128 as PlaneWord>::ZERO;
+//! w.set_bit(70);
+//! assert!(w.bit(70) && !w.bit(71));
+//! assert_eq!(w.count_ones(), 1);
+//!
+//! // word-level boolean algebra is what makes one op = W::PATTERNS
+//! // forward passes: here, a 256-wide full-adder sum plane
+//! let (a, b, c) = (Lanes4::ONES, Lanes4::ZERO, Lanes4::ONES);
+//! let sum = a.xor(b).xor(c);
+//! assert_eq!(sum, Lanes4::ZERO);
+//! ```
+
+use crate::sim::PackedStimulus;
+
+/// One plane word: `PATTERNS` stimulus patterns advanced per bitwise op.
+///
+/// Implementations are thin wrappers over word-level boolean algebra —
+/// everything the bit-sliced AxSum engine needs (ripple and carry-save
+/// adders, sign masks, compare-select tournaments, popcount scoring)
+/// is expressible in these ten operations. See the [module
+/// docs](self) for a worked example and the width trade-offs.
+pub trait PlaneWord: Copy + PartialEq + Eq + std::fmt::Debug + Send + Sync + 'static {
+    /// Stimulus patterns carried per word (always a multiple of 64).
+    const PATTERNS: usize;
+    /// All pattern bits clear.
+    const ZERO: Self;
+    /// All pattern bits set.
+    const ONES: Self;
+
+    fn not(self) -> Self;
+    fn and(self, o: Self) -> Self;
+    fn or(self, o: Self) -> Self;
+    fn xor(self, o: Self) -> Self;
+    fn is_zero(self) -> bool;
+    fn count_ones(self) -> u32;
+    /// Bit of pattern `p` (`p < PATTERNS`).
+    fn bit(self, p: usize) -> bool;
+    /// Set the bit of pattern `p` (`p < PATTERNS`).
+    fn set_bit(&mut self, p: usize);
+    /// Word with the low `n` pattern bits set (`n <= PATTERNS`) — the
+    /// tail mask for a partial final chunk.
+    fn mask_low(n: usize) -> Self;
+    /// Assemble a wide word from its 64-pattern sub-words: `f(s)` must
+    /// return the `u64` carrying patterns `64*s .. 64*(s+1)`.
+    fn gather(f: impl FnMut(usize) -> u64) -> Self;
+}
+
+impl PlaneWord for u64 {
+    const PATTERNS: usize = 64;
+    const ZERO: Self = 0;
+    const ONES: Self = u64::MAX;
+
+    #[inline(always)]
+    fn not(self) -> Self {
+        !self
+    }
+    #[inline(always)]
+    fn and(self, o: Self) -> Self {
+        self & o
+    }
+    #[inline(always)]
+    fn or(self, o: Self) -> Self {
+        self | o
+    }
+    #[inline(always)]
+    fn xor(self, o: Self) -> Self {
+        self ^ o
+    }
+    #[inline(always)]
+    fn is_zero(self) -> bool {
+        self == 0
+    }
+    #[inline(always)]
+    fn count_ones(self) -> u32 {
+        u64::count_ones(self)
+    }
+    #[inline(always)]
+    fn bit(self, p: usize) -> bool {
+        (self >> p) & 1 == 1
+    }
+    #[inline(always)]
+    fn set_bit(&mut self, p: usize) {
+        *self |= 1u64 << p;
+    }
+    #[inline(always)]
+    fn mask_low(n: usize) -> Self {
+        if n >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << n) - 1
+        }
+    }
+    #[inline(always)]
+    fn gather(mut f: impl FnMut(usize) -> u64) -> Self {
+        f(0)
+    }
+}
+
+impl PlaneWord for u128 {
+    const PATTERNS: usize = 128;
+    const ZERO: Self = 0;
+    const ONES: Self = u128::MAX;
+
+    #[inline(always)]
+    fn not(self) -> Self {
+        !self
+    }
+    #[inline(always)]
+    fn and(self, o: Self) -> Self {
+        self & o
+    }
+    #[inline(always)]
+    fn or(self, o: Self) -> Self {
+        self | o
+    }
+    #[inline(always)]
+    fn xor(self, o: Self) -> Self {
+        self ^ o
+    }
+    #[inline(always)]
+    fn is_zero(self) -> bool {
+        self == 0
+    }
+    #[inline(always)]
+    fn count_ones(self) -> u32 {
+        u128::count_ones(self)
+    }
+    #[inline(always)]
+    fn bit(self, p: usize) -> bool {
+        (self >> p) & 1 == 1
+    }
+    #[inline(always)]
+    fn set_bit(&mut self, p: usize) {
+        *self |= 1u128 << p;
+    }
+    #[inline(always)]
+    fn mask_low(n: usize) -> Self {
+        if n >= 128 {
+            u128::MAX
+        } else {
+            (1u128 << n) - 1
+        }
+    }
+    #[inline(always)]
+    fn gather(mut f: impl FnMut(usize) -> u64) -> Self {
+        (f(0) as u128) | ((f(1) as u128) << 64)
+    }
+}
+
+/// Portable-SIMD-shaped plane word: `N` independent `u64` lanes, so all
+/// per-lane loops are trivially vectorizable (`std::simd` is nightly-only
+/// and the vendor set is frozen, so this relies on LLVM's auto-vectorizer
+/// — the 32-byte alignment keeps `Lanes<4>` one AVX2 register).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(align(32))]
+pub struct Lanes<const N: usize>(pub [u64; N]);
+
+/// 256 patterns per plane word (one AVX2 register per plane op).
+pub type Lanes4 = Lanes<4>;
+
+impl<const N: usize> PlaneWord for Lanes<N> {
+    const PATTERNS: usize = 64 * N;
+    const ZERO: Self = Lanes([0u64; N]);
+    const ONES: Self = Lanes([u64::MAX; N]);
+
+    #[inline(always)]
+    fn not(self) -> Self {
+        let mut o = self.0;
+        for v in o.iter_mut() {
+            *v = !*v;
+        }
+        Lanes(o)
+    }
+    #[inline(always)]
+    fn and(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (v, w) in r.iter_mut().zip(o.0) {
+            *v &= w;
+        }
+        Lanes(r)
+    }
+    #[inline(always)]
+    fn or(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (v, w) in r.iter_mut().zip(o.0) {
+            *v |= w;
+        }
+        Lanes(r)
+    }
+    #[inline(always)]
+    fn xor(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (v, w) in r.iter_mut().zip(o.0) {
+            *v ^= w;
+        }
+        Lanes(r)
+    }
+    #[inline(always)]
+    fn is_zero(self) -> bool {
+        self.0.iter().all(|&v| v == 0)
+    }
+    #[inline(always)]
+    fn count_ones(self) -> u32 {
+        self.0.iter().map(|v| v.count_ones()).sum()
+    }
+    #[inline(always)]
+    fn bit(self, p: usize) -> bool {
+        (self.0[p / 64] >> (p % 64)) & 1 == 1
+    }
+    #[inline(always)]
+    fn set_bit(&mut self, p: usize) {
+        self.0[p / 64] |= 1u64 << (p % 64);
+    }
+    #[inline(always)]
+    fn mask_low(n: usize) -> Self {
+        let mut r = [0u64; N];
+        for (s, v) in r.iter_mut().enumerate() {
+            let lo = s * 64;
+            *v = if n >= lo + 64 {
+                u64::MAX
+            } else if n > lo {
+                (1u64 << (n - lo)) - 1
+            } else {
+                0
+            };
+        }
+        Lanes(r)
+    }
+    #[inline(always)]
+    fn gather(mut f: impl FnMut(usize) -> u64) -> Self {
+        Lanes(std::array::from_fn(&mut f))
+    }
+}
+
+impl PackedStimulus {
+    /// Wide-word view of the shared transpose: the plane word of feature
+    /// bus `i`, bit lane `bit`, *wide* chunk `chunk` (each wide chunk
+    /// covers `W::PATTERNS / 64` consecutive 64-pattern chunks of
+    /// [`Self::feature_lane`]). Sub-chunks past the stimulus read 0, so
+    /// tail patterns of a partial final wide chunk evaluate the all-zero
+    /// stimulus and are masked out by the callers' tail handling —
+    /// exactly the narrow engine's partial-chunk semantics, which is what
+    /// keeps every plane width bit-identical.
+    pub fn feature_word<W: PlaneWord>(&self, i: usize, bit: usize, chunk: usize) -> W {
+        let subs = W::PATTERNS / 64;
+        W::gather(|s| self.feature_lane(i, bit, chunk * subs + s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_word<W: PlaneWord>() {
+        assert_eq!(W::PATTERNS % 64, 0);
+        assert!(W::ZERO.is_zero() && !W::ONES.is_zero());
+        assert_eq!(W::ONES.count_ones() as usize, W::PATTERNS);
+        assert_eq!(W::ZERO.not(), W::ONES);
+        assert_eq!(W::mask_low(0), W::ZERO);
+        assert_eq!(W::mask_low(W::PATTERNS), W::ONES);
+        for p in [0, 1, 63, W::PATTERNS / 2, W::PATTERNS - 1] {
+            let mut w = W::ZERO;
+            w.set_bit(p);
+            assert!(w.bit(p), "pattern {p}");
+            assert_eq!(w.count_ones(), 1);
+            assert_eq!(w.and(W::ONES), w);
+            assert_eq!(w.or(W::ZERO), w);
+            assert_eq!(w.xor(w), W::ZERO);
+            // mask_low(p) excludes pattern p, mask_low(p+1) includes it
+            assert!(!w.and(W::mask_low(p)).bit(p));
+            assert!(w.and(W::mask_low(p + 1)).bit(p));
+        }
+    }
+
+    #[test]
+    fn word_algebra_all_widths() {
+        check_word::<u64>();
+        check_word::<u128>();
+        check_word::<Lanes<2>>();
+        check_word::<Lanes4>();
+    }
+
+    #[test]
+    fn gather_orders_subwords_low_to_high() {
+        let w: u128 = PlaneWord::gather(|s| (s as u64) + 1);
+        assert_eq!(w, 1u128 | (2u128 << 64));
+        let l: Lanes4 = PlaneWord::gather(|s| s as u64);
+        assert_eq!(l.0, [0, 1, 2, 3]);
+        // pattern indexing agrees with the gather order
+        let mut v: Lanes4 = PlaneWord::gather(|s| if s == 2 { 1 } else { 0 });
+        assert!(v.bit(128) && !v.bit(64));
+        v.set_bit(64);
+        assert!(v.bit(64));
+    }
+
+    #[test]
+    fn feature_word_matches_feature_lane() {
+        let xs: Vec<Vec<i64>> = (0..200).map(|p| vec![(p % 16) as i64, 15]).collect();
+        let stim = PackedStimulus::from_features(&xs, 2, 4).unwrap();
+        for bit in 0..4 {
+            for wide in 0..2 {
+                let w: u128 = stim.feature_word(0, bit, wide);
+                let l: Lanes4 = stim.feature_word(0, bit, wide);
+                for sub in 0..2 {
+                    let narrow = stim.feature_lane(0, bit, wide * 2 + sub);
+                    assert_eq!((w >> (64 * sub)) as u64, narrow);
+                }
+                for sub in 0..4 {
+                    assert_eq!(l.0[sub], stim.feature_lane(0, bit, wide * 4 + sub));
+                }
+            }
+            // past the stimulus: zero, like feature_lane
+            let tail: Lanes4 = stim.feature_word(0, bit, 9);
+            assert_eq!(tail, Lanes4::ZERO);
+        }
+    }
+}

@@ -15,12 +15,38 @@ pub struct BenchResult {
     pub median_ns: f64,
     pub min_ns: f64,
     pub p95_ns: f64,
+    /// Stimulus patterns classified per iteration — set via [`with_pps`]
+    /// on throughput benches so `patterns_per_sec` lands in the JSON
+    /// trajectory (`BENCH_*.json`); absent for latency-style rows.
+    ///
+    /// [`with_pps`]: BenchResult::with_pps
+    pub patterns_per_iter: Option<u64>,
 }
 
 impl BenchResult {
+    /// Tag this result as a throughput bench over `patterns` rows per
+    /// iteration, re-reporting with the derived patterns/sec figure.
+    pub fn with_pps(mut self, patterns: u64) -> BenchResult {
+        self.patterns_per_iter = Some(patterns);
+        self.report();
+        self
+    }
+
+    /// Patterns per second at the *median* sample (robust against
+    /// scheduler noise), when [`with_pps`](BenchResult::with_pps) tagged
+    /// this result.
+    pub fn patterns_per_sec(&self) -> Option<f64> {
+        self.patterns_per_iter
+            .map(|p| p as f64 * 1e9 / self.median_ns.max(1.0))
+    }
+
     pub fn report(&self) {
+        let pps = match self.patterns_per_sec() {
+            Some(p) => format!("  {:>12.0} pat/s", p),
+            None => String::new(),
+        };
         println!(
-            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  min {:>12}  p95 {:>12}",
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  min {:>12}  p95 {:>12}{pps}",
             self.name,
             self.iters,
             fmt_ns(self.mean_ns),
@@ -39,8 +65,12 @@ impl BenchResult {
 
     /// One JSON object per result (names must not contain `"` or `\`).
     pub fn json_row(&self) -> String {
+        let pps = match self.patterns_per_sec() {
+            Some(p) => format!(",\"patterns_per_sec\":{p:.1}"),
+            None => String::new(),
+        };
         format!(
-            "{{\"name\":\"{}\",\"iters\":{},\"ns_per_iter\":{:.1},\"median_ns\":{:.1},\"min_ns\":{:.1},\"p95_ns\":{:.1}}}",
+            "{{\"name\":\"{}\",\"iters\":{},\"ns_per_iter\":{:.1},\"median_ns\":{:.1},\"min_ns\":{:.1},\"p95_ns\":{:.1}{pps}}}",
             self.name, self.iters, self.mean_ns, self.median_ns, self.min_ns, self.p95_ns
         )
     }
@@ -91,6 +121,7 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult 
         median_ns: samples[n / 2],
         min_ns: samples[0],
         p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        patterns_per_iter: None,
     }
 }
 
@@ -143,11 +174,19 @@ mod tests {
             median_ns: 1200.0,
             min_ns: 1100.0,
             p95_ns: 1500.0,
+            patterns_per_iter: None,
         };
         let j = crate::util::json::Json::parse(&r.json_row()).expect("valid json");
         assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("dse_point(seeds,k=2)"));
         assert_eq!(j.get("iters").and_then(|v| v.as_usize()), Some(10));
         assert!(j.get("ns_per_iter").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(j.get("patterns_per_sec").is_none());
+
+        let r = r.with_pps(4096);
+        let j = crate::util::json::Json::parse(&r.json_row()).expect("valid json");
+        // 4096 patterns / 1200 ns median ≈ 3.41e9 pat/s
+        let pps = j.get("patterns_per_sec").and_then(|v| v.as_f64()).unwrap();
+        assert!((pps - 4096.0 * 1e9 / 1200.0).abs() < 1.0, "{pps}");
     }
 
     #[test]

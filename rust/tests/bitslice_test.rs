@@ -1,27 +1,48 @@
-//! Property tests for the bit-sliced forward engine (ISSUE 4 tentpole):
-//! `BitSliceEval` must be *bit-exact* against `axsum::forward` and
-//! `FlatEval::forward_batch` on fuzzed models and plans of every decoder
-//! family, across the 64-pattern chunk edges and the adversarial
-//! stimulus corners (all-zero / all-saturated) — plus the end-to-end
-//! guarantee that a DSE sweep under the bitslice backend reproduces the
-//! flat backend's evaluations exactly.
+//! Property tests for the bit-sliced forward engines (ISSUE 4 tentpole,
+//! widened in ISSUE 6): `BitSliceEval` must be *bit-exact* against
+//! `axsum::forward` and `FlatEval::forward_batch` on fuzzed models and
+//! plans of every decoder family — at every plane width (u64, u128,
+//! `Lanes4`) under both ripple and carry-save accumulation, across the
+//! 64/128/256-pattern chunk edges and the adversarial stimulus corners
+//! (all-zero / all-saturated inputs, all-saturated weights) — plus the
+//! end-to-end guarantee that a DSE point under any bitslice backend
+//! reproduces the flat backend's evaluation exactly.
 
-use axmlp::axsum::{self, BitSliceEval, BitSliceScratch, FlatEval, FlatScratch};
+use axmlp::axsum::{self, AccumMode, BitSliceEval, BitSliceScratch, FlatEval, FlatScratch};
 use axmlp::conformance::gen::{self, PlanKind, TopologyRange};
 use axmlp::dse::{evaluate_design, DseConfig, EvalBackend, QuantData};
+use axmlp::fixed::QuantMlp;
 use axmlp::pdk::EgtLibrary;
-use axmlp::sim::PackedStimulus;
+use axmlp::sim::{Lanes4, PackedStimulus};
 use axmlp::util::rng::Rng;
+
+/// Every (plane width, accumulation mode) combination must reproduce
+/// `want` exactly on `packed`.
+fn assert_all_widths(bs: &BitSliceEval, packed: &PackedStimulus, want: &[i64], ctx: &str) {
+    let mut s64 = BitSliceScratch::<u64>::new();
+    let mut s128 = BitSliceScratch::<u128>::new();
+    let mut s256 = BitSliceScratch::<Lanes4>::new();
+    let mut got = Vec::new();
+    for accum in [AccumMode::Ripple, AccumMode::CarrySave] {
+        bs.forward_packed_w(packed, &mut got, &mut s64, accum);
+        assert_eq!(got, want, "{ctx} u64/{accum:?}");
+        bs.forward_packed_w(packed, &mut got, &mut s128, accum);
+        assert_eq!(got, want, "{ctx} u128/{accum:?}");
+        bs.forward_packed_w(packed, &mut got, &mut s256, accum);
+        assert_eq!(got, want, "{ctx} lanes4/{accum:?}");
+    }
+}
 
 #[test]
 fn bitslice_logits_match_reference_on_fuzzed_models_all_plan_families() {
     let mut rng = Rng::new(0xB5);
     let mut scratch = Vec::new();
-    for case in 0..30 {
+    // chunk-edge pattern counts for every plane width: the packer's (and
+    // widened gatherer's) boundary handling is the likeliest divergence
+    const TOTALS: [usize; 11] = [63, 64, 65, 127, 128, 129, 255, 256, 257, 1, 40];
+    for case in 0..33 {
         let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
-        // chunk-edge pattern counts: the packer's boundary handling is
-        // the likeliest divergence site
-        let total = [63usize, 64, 65, 1, 40, 129][case % 6];
+        let total = TOTALS[case % TOTALS.len()];
         let xs = gen::mixed_stimulus(&mut rng, &q, total);
         let kind = PlanKind::ALL[case % PlanKind::ALL.len()];
         let plan = gen::plan_of_kind(&mut rng, &q, &xs, kind);
@@ -31,11 +52,16 @@ fn bitslice_logits_match_reference_on_fuzzed_models_all_plan_families() {
         let mut want = Vec::new();
         flat.forward_batch(&xs, &mut want, &mut fs);
 
-        let bs = BitSliceEval::new(&q, &plan);
+        let bs = BitSliceEval::new(&q, &plan).unwrap();
         let mut bss = BitSliceScratch::new();
         let mut got = Vec::new();
         bs.forward_batch(&xs, &mut got, &mut bss);
         assert_eq!(got, want, "case {case} ({}, {total} patterns)", kind.name());
+
+        // the widened planes and carry-save accumulation over the same
+        // packed stimulus must agree bit-for-bit
+        let packed = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
+        assert_all_widths(&bs, &packed, &want, &format!("case {case} ({total} patterns)"));
 
         // spot-check against the per-sample reference forward too
         let dout = q.dout();
@@ -56,7 +82,7 @@ fn bitslice_forward_packed_shares_the_simulator_transpose() {
     let plan = gen::plan_of_kind(&mut rng, &q, &xs, PlanKind::RandomShifts);
     let packed = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
 
-    let bs = BitSliceEval::new(&q, &plan);
+    let bs = BitSliceEval::new(&q, &plan).unwrap();
     let mut bss = BitSliceScratch::new();
     let mut via_packed = Vec::new();
     bs.forward_packed(&packed, &mut via_packed, &mut bss);
@@ -66,21 +92,40 @@ fn bitslice_forward_packed_shares_the_simulator_transpose() {
 }
 
 #[test]
-fn bitslice_accuracy_matches_flat_on_fuzzed_labels() {
+fn bitslice_accuracy_matches_flat_on_fuzzed_labels_all_widths() {
     let mut rng = Rng::new(0xB7);
-    for _ in 0..12 {
+    for round in 0..12 {
         let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
-        let xs = gen::mixed_stimulus(&mut rng, &q, 127);
+        let total = [127usize, 128, 129, 255, 256, 257][round % 6];
+        let xs = gen::mixed_stimulus(&mut rng, &q, total);
         let plan = gen::plan_of_kind(&mut rng, &q, &xs, PlanKind::Grid);
         // random labels, deliberately including out-of-range classes
         let ys: Vec<usize> = (0..xs.len()).map(|_| rng.below(q.dout() + 2)).collect();
         let flat = FlatEval::new(&q, &plan);
         let mut fs = FlatScratch::new();
-        let bs = BitSliceEval::new(&q, &plan);
+        let want = flat.accuracy_with(&xs, &ys, &mut fs);
+        let bs = BitSliceEval::new(&q, &plan).unwrap();
         let mut bss = BitSliceScratch::new();
+        assert_eq!(bs.accuracy_with(&xs, &ys, &mut bss), want);
+
+        let packed = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
+        let mut s128 = BitSliceScratch::<u128>::new();
+        let mut s256 = BitSliceScratch::<Lanes4>::new();
         assert_eq!(
-            bs.accuracy_with(&xs, &ys, &mut bss),
-            flat.accuracy_with(&xs, &ys, &mut fs)
+            bs.accuracy_packed_w(&packed, &ys, &mut s128, AccumMode::CarrySave),
+            want,
+            "u128 round {round}"
+        );
+        assert_eq!(
+            bs.accuracy_packed_w(&packed, &ys, &mut s256, AccumMode::CarrySave),
+            want,
+            "lanes4 round {round}"
+        );
+        // and the chunk-parallel path
+        assert_eq!(
+            bs.accuracy_packed_par::<Lanes4>(&packed, &ys, 3, AccumMode::CarrySave),
+            want,
+            "lanes4 parallel round {round}"
         );
     }
 }
@@ -88,28 +133,61 @@ fn bitslice_accuracy_matches_flat_on_fuzzed_labels() {
 #[test]
 fn all_saturated_stimulus_matches_at_chunk_edges() {
     // every input at 2^in_bits - 1 maximizes carry depth in the sliced
-    // adders — the worst case for the ripple implementation
+    // adders — the worst case for ripple *and* for the deferred
+    // carry-save merge
     let mut rng = Rng::new(0xB8);
     let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
     let a_max = (1i64 << q.in_bits) - 1;
-    for total in [63usize, 64, 65] {
+    for total in [63usize, 64, 65, 127, 128, 129, 255, 256, 257] {
         let xs: Vec<Vec<i64>> = (0..total).map(|_| vec![a_max; q.din()]).collect();
         let plan = gen::plan_of_kind(&mut rng, &q, &xs, PlanKind::RandomShifts);
         let flat = FlatEval::new(&q, &plan);
         let mut fs = FlatScratch::new();
         let mut want = Vec::new();
         flat.forward_batch(&xs, &mut want, &mut fs);
-        let bs = BitSliceEval::new(&q, &plan);
+        let bs = BitSliceEval::new(&q, &plan).unwrap();
         let mut bss = BitSliceScratch::new();
         let mut got = Vec::new();
         bs.forward_batch(&xs, &mut got, &mut bss);
         assert_eq!(got, want, "{total} saturated patterns");
+        let packed = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
+        assert_all_widths(&bs, &packed, &want, &format!("{total} saturated patterns"));
     }
 }
 
 #[test]
-fn dse_point_under_bitslice_backend_is_bit_identical() {
-    // evaluate_design dispatches on DseConfig::backend; both backends
+fn all_saturated_weights_match_across_widths() {
+    // weights pinned to the quantized extremes (+127 / -127) drive every
+    // accumulator to its compile-time bound — the corner where a
+    // carry-save plane-count error or a widened-gather masking bug would
+    // surface first
+    let mut rng = Rng::new(0xBA);
+    for round in 0..4 {
+        let mut q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+        let mut flip = round % 2 == 0;
+        for layer in &mut q.w {
+            for row in layer.iter_mut() {
+                for w in row.iter_mut() {
+                    *w = if flip { 127 } else { -127 };
+                    flip = !flip;
+                }
+            }
+        }
+        let xs = gen::mixed_stimulus(&mut rng, &q, 129);
+        let plan = gen::plan_of_kind(&mut rng, &q, &xs, PlanKind::ALL[round % PlanKind::ALL.len()]);
+        let flat = FlatEval::new(&q, &plan);
+        let mut fs = FlatScratch::new();
+        let mut want = Vec::new();
+        flat.forward_batch(&xs, &mut want, &mut fs);
+        let bs = BitSliceEval::new(&q, &plan).unwrap();
+        let packed = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
+        assert_all_widths(&bs, &packed, &want, &format!("saturated weights round {round}"));
+    }
+}
+
+#[test]
+fn dse_point_under_every_bitslice_backend_is_bit_identical() {
+    // evaluate_design dispatches on DseConfig::backend; all backends
     // must produce the same DesignEval for the same point (accuracy from
     // different engines, costs from the same netlist simulation)
     let mut rng = Rng::new(0xB9);
@@ -141,13 +219,61 @@ fn dse_point_under_bitslice_backend_is_bit_identical() {
         max_eval: 0,
         ..DseConfig::default()
     };
-    let a = evaluate_design(&q, plan.clone(), 2, vec![0.0; q.n_layers()], &data, &lib, &cfg);
-    cfg.backend = EvalBackend::BitSlice;
-    let b = evaluate_design(&q, plan, 2, vec![0.0; q.n_layers()], &data, &lib, &cfg);
-    assert_eq!(a.acc_train, b.acc_train);
-    assert_eq!(a.acc_test, b.acc_test);
-    assert_eq!(a.costs, b.costs);
-    assert_eq!(a.plan, b.plan);
+    let a = evaluate_design(&q, plan.clone(), 2, vec![0.0; q.n_layers()], &data, &lib, &cfg)
+        .unwrap();
+    for backend in [
+        EvalBackend::BitSlice,
+        EvalBackend::BitSlice128,
+        EvalBackend::BitSlice256,
+    ] {
+        cfg.backend = backend;
+        let b = evaluate_design(
+            &q,
+            plan.clone(),
+            2,
+            vec![0.0; q.n_layers()],
+            &data,
+            &lib,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(a.acc_train, b.acc_train, "{}", backend.name());
+        assert_eq!(a.acc_test, b.acc_test, "{}", backend.name());
+        assert_eq!(a.costs, b.costs, "{}", backend.name());
+        assert_eq!(a.plan, b.plan, "{}", backend.name());
+    }
+}
+
+#[test]
+fn plan_compile_rejection_propagates_as_contextful_error() {
+    // a 60-bit input bus times a 127 weight overflows the i64 product
+    // bound: the DSE point must surface a Result naming the rejection,
+    // not panic inside the engine (the old `assert!(width <= 63)` path)
+    let q = QuantMlp {
+        w: vec![vec![vec![127, 127], vec![-127, 127]]],
+        b: vec![vec![0, 0]],
+        in_bits: 60,
+        w_scales: vec![1.0],
+    };
+    let plan = axsum::ShiftPlan::exact(&q);
+    let xs: Vec<Vec<i64>> = (0..8).map(|i| vec![i as i64, (i * 3) as i64]).collect();
+    let ys: Vec<usize> = (0..8).map(|i| i % 2).collect();
+    let data = QuantData {
+        x_train: &xs[..6],
+        y_train: &ys[..6],
+        x_test: &xs[6..],
+        y_test: &ys[6..],
+    };
+    let lib = EgtLibrary::egt_v1();
+    let cfg = DseConfig {
+        verify_circuit: false,
+        power_patterns: 16,
+        backend: EvalBackend::BitSlice256,
+        ..DseConfig::default()
+    };
+    let err = evaluate_design(&q, plan, 2, vec![0.0], &data, &lib, &cfg).unwrap_err();
+    assert!(err.contains("rejected"), "{err}");
+    assert!(err.contains("overflows i64"), "{err}");
 }
 
 #[test]

@@ -327,7 +327,7 @@ fn sweep_bit_matches_per_point_evaluation() {
         max_eval: 0,
         ..DseConfig::default()
     };
-    let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+    let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg).unwrap();
     let points = enumerate_points(&q, &sig, &cfg);
     assert_eq!(designs.len(), points.len());
     for (d, (k, g)) in designs.iter().zip(&points) {
@@ -340,7 +340,8 @@ fn sweep_bit_matches_per_point_evaluation() {
             &data,
             &EgtLibrary::egt_v1(),
             &cfg,
-        );
+        )
+        .unwrap();
         assert_eq!(d.k, want.k);
         assert_eq!(d.g, want.g);
         assert_eq!(d.plan, want.plan);
@@ -390,7 +391,7 @@ fn sweep_dedup_fan_out_covers_aliasing_points() {
         max_eval: 0,
         ..DseConfig::default()
     };
-    let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg);
+    let designs = sweep(&q, &sig, &data, &EgtLibrary::egt_v1(), &cfg).unwrap();
     let points = enumerate_points(&q, &sig, &cfg);
     assert_eq!(designs.len(), points.len());
     // find an aliasing (k=2, g) / (k=3, g) pair and check label + result

@@ -64,7 +64,7 @@ fn grid_seeded_search_never_worse_than_grid() {
     let lib = EgtLibrary::egt_v1();
     let means = mean_activations(&q0, &xt);
     let sig = significance(&q0, &means);
-    let grid = dse::sweep(&q0, &sig, &data, &lib, &cfg);
+    let grid = dse::sweep(&q0, &sig, &data, &lib, &cfg).unwrap();
 
     let scfg = SearchConfig {
         seed: 3,
@@ -76,7 +76,7 @@ fn grid_seeded_search_never_worse_than_grid() {
     let space = SearchSpace::lossless(&q0, &sig, scfg.max_levels);
     let seeds = seed_genomes_from_grid(&space, &q0, &grid);
     assert_eq!(seeds.len(), grid.len(), "every grid point seeds the GA");
-    let out = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg, &space, &seeds);
+    let out = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg, &space, &seeds).unwrap();
 
     // the archive covers every seed evaluation, so at every accuracy
     // floor the genetic pick is at least as small as the grid pick
@@ -117,7 +117,7 @@ fn nsga2_same_seed_same_front_grid_seeded() {
     let lib = EgtLibrary::egt_v1();
     let means = mean_activations(&q0, &xt);
     let sig = significance(&q0, &means);
-    let grid = dse::sweep(&q0, &sig, &data, &lib, &cfg);
+    let grid = dse::sweep(&q0, &sig, &data, &lib, &cfg).unwrap();
     let scfg = SearchConfig {
         seed: 42,
         pop_size: 10,
@@ -127,8 +127,8 @@ fn nsga2_same_seed_same_front_grid_seeded() {
     let space = SearchSpace::lossless(&q0, &sig, scfg.max_levels);
     let seeds = seed_genomes_from_grid(&space, &q0, &grid);
 
-    let a = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg, &space, &seeds);
-    let b = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg, &space, &seeds);
+    let a = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg, &space, &seeds).unwrap();
+    let b = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg, &space, &seeds).unwrap();
     assert_eq!(a.front, b.front);
     assert_eq!(a.requested, b.requested);
     assert_eq!(a.memo_hits, b.memo_hits);
@@ -144,7 +144,7 @@ fn nsga2_same_seed_same_front_grid_seeded() {
     // a different seed explores a different trajectory (same archive
     // prefix from the seeds, but different random fill / offspring)
     let scfg2 = SearchConfig { seed: 43, ..scfg };
-    let c = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg2, &space, &seeds);
+    let c = nsga2(&q0, &sig, &data, &lib, &cfg, &scfg2, &space, &seeds).unwrap();
     assert!(
         c.requested == a.requested,
         "request budget is seed-independent"

@@ -87,7 +87,7 @@ fn sharded_sweep_matches_monolithic_under_both_backends() {
     let lib = EgtLibrary::egt_v1();
     for backend in [EvalBackend::Flat, EvalBackend::BitSlice] {
         let cfg = cfg_small(backend);
-        let mono = dse::sweep(&q, &sig, &data, &lib, &cfg);
+        let mono = dse::sweep(&q, &sig, &data, &lib, &cfg).unwrap();
         for shards in [2usize, 5] {
             let scfg = ShardConfig {
                 shards,
@@ -111,7 +111,7 @@ fn kill_mid_sweep_then_resume_is_bit_identical_and_skips_finished_shards() {
     let sig = sig_of(&q, data.x_train);
     let lib = EgtLibrary::egt_v1();
     let cfg = cfg_small(EvalBackend::Flat);
-    let mono = dse::sweep(&q, &sig, &data, &lib, &cfg);
+    let mono = dse::sweep(&q, &sig, &data, &lib, &cfg).unwrap();
 
     let dir = scratch_dir("kill");
     let shards = 4;
