@@ -9,8 +9,10 @@
 //!
 //! This binary is also the CI regression gate for the widened runtime:
 //! it exits non-zero when the widened planes fall below the serial u64
-//! baseline, or the parallel lane engine below 2x serial u64 (medians).
-//! Set `AXMLP_BENCH_NO_GATE=1` to measure without gating (e.g. on
+//! baseline, the parallel lane engine below 2x serial u64 (medians), or
+//! the telemetry-instrumented streaming path below 0.95x the
+//! uninstrumented one (the `obs` overhead budget). Set
+//! `AXMLP_BENCH_NO_GATE=1` to measure without gating (e.g. on
 //! single-core or heavily loaded machines).
 
 use axmlp::axsum::{
@@ -148,6 +150,17 @@ fn main() {
         .with_pps(BLOCK as u64),
     );
 
+    // the same streaming path with telemetry recording on — the gate
+    // below holds the instrumented runtime to >= 0.95x the bare one
+    axmlp::obs::set_enabled(true);
+    results.push(
+        run(&format!("stream_classify_obs_on(se,{BLOCK})"), || {
+            std::hint::black_box(runner.classify_all(&xs_big).expect("stream").len());
+        })
+        .with_pps(BLOCK as u64),
+    );
+    axmlp::obs::set_enabled(false);
+
     // whole DSE point under each backend: accuracy + synthesis +
     // simulation + cost estimate (the backend moves only the accuracy
     // share, so this bounds the end-to-end sweep win)
@@ -196,7 +209,10 @@ fn main() {
         eprintln!("BENCH GATE FAILED: {e}");
         std::process::exit(1);
     }
-    println!("gate: widened planes >= u64 serial, parallel lanes >= 2x u64 serial");
+    println!(
+        "gate: widened planes >= u64 serial, parallel lanes >= 2x u64 serial, \
+         telemetry overhead <= 5%"
+    );
 }
 
 /// CI regression gate over the median patterns/sec figures.
@@ -219,6 +235,13 @@ fn gate(results: &[BenchResult], threads: usize) -> Result<(), String> {
     if threads >= 2 && par < 2.0 * base {
         return Err(format!(
             "parallel lane engine ({par:.0} pat/s, {threads} threads) below 2x the serial u64 baseline ({base:.0} pat/s)"
+        ));
+    }
+    let stream_off = pps("stream_classify_bitslice256")?;
+    let stream_on = pps("stream_classify_obs_on")?;
+    if stream_on < 0.95 * stream_off {
+        return Err(format!(
+            "telemetry overhead: instrumented stream ({stream_on:.0} pat/s) below 0.95x the uninstrumented one ({stream_off:.0} pat/s)"
         ));
     }
     Ok(())

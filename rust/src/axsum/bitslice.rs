@@ -54,7 +54,6 @@
 use std::collections::hash_map::DefaultHasher;
 use std::fmt;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use rustc_hash::FxHashMap;
@@ -877,19 +876,18 @@ impl BitSliceEval {
 // Compiled-plan cache
 // ---------------------------------------------------------------------------
 
-static PLAN_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
-static PLAN_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
-
 /// Process-wide count of [`PlanCache`] lookups served without
 /// recompiling (mirrors `axsum::nan_sig_dropped`'s counter discipline:
-/// monotone, relaxed, compared as deltas).
+/// monotone, relaxed, compared as deltas). Backed by the registered
+/// `plan_cache.hits` counter, which also carries a per-run view via
+/// [`crate::obs::begin_run`].
 pub fn plan_cache_hits() -> u64 {
-    PLAN_CACHE_HITS.load(Ordering::Relaxed)
+    crate::obs::counters::PLAN_CACHE_HITS.total()
 }
 
 /// Process-wide count of [`PlanCache`] lookups that had to compile.
 pub fn plan_cache_misses() -> u64 {
-    PLAN_CACHE_MISSES.load(Ordering::Relaxed)
+    crate::obs::counters::PLAN_CACHE_MISSES.total()
 }
 
 fn model_fingerprint(q: &QuantMlp) -> u64 {
@@ -949,10 +947,10 @@ impl PlanCache {
             inner.map.clear();
         }
         if let Some(e) = inner.map.get(&plan.shifts) {
-            PLAN_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+            crate::obs::counters::PLAN_CACHE_HITS.incr();
             return Ok(Arc::clone(e));
         }
-        PLAN_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+        crate::obs::counters::PLAN_CACHE_MISSES.incr();
         let compiled = Arc::new(BitSliceEval::new(q, plan)?);
         inner.map.insert(plan.shifts.clone(), Arc::clone(&compiled));
         Ok(compiled)

@@ -18,29 +18,25 @@ pub use bitslice::{
 };
 
 use crate::fixed::QuantMlp;
+use crate::obs;
 use crate::synth::arith::ubits;
 use crate::util::stats::argmax_i64;
 
-use std::sync::atomic::{AtomicU64, Ordering};
-
-/// Count of NaN significance entries dropped before threshold-level
-/// selection (a NaN can only come from a degenerate activation capture —
-/// worth surfacing, but it must never panic a multi-hour sweep). Infinite
-/// entries are the documented "no hardware" sentinel and are dropped
-/// silently.
-static NAN_SIG_DROPPED: AtomicU64 = AtomicU64::new(0);
-
-/// Total NaN significance values dropped so far (process-wide; sweeps
-/// can snapshot before/after to report per-run counts).
+/// Total NaN significance values dropped so far (process-wide and
+/// monotone; the registered `axsum.nan_sig_dropped` counter also carries
+/// a per-run view via [`obs::begin_run`]). A NaN can only come from a
+/// degenerate activation capture — worth surfacing, but it must never
+/// panic a multi-hour sweep. Infinite entries are the documented
+/// "no hardware" sentinel and are dropped silently.
 pub fn nan_sig_dropped() -> u64 {
-    NAN_SIG_DROPPED.load(Ordering::Relaxed)
+    obs::counters::NAN_SIG_DROPPED.total()
 }
 
 /// Retain only finite significance values, counting dropped NaNs into
 /// the process-wide warning counter.
 fn keep_finite(v: &f64) -> bool {
     if v.is_nan() {
-        NAN_SIG_DROPPED.fetch_add(1, Ordering::Relaxed);
+        obs::counters::NAN_SIG_DROPPED.incr();
     }
     v.is_finite()
 }

@@ -33,6 +33,10 @@ impl Args {
                 } else {
                     out.flags.insert(stripped.to_string(), "true".to_string());
                 }
+            } else if a == "-v" {
+                // the one short flag (alias of --verbose); everything
+                // else is long-form only
+                out.flags.insert("verbose".to_string(), "true".to_string());
             } else if out.command.is_none() {
                 out.command = Some(a);
             } else {
@@ -126,6 +130,11 @@ FLAGS:
   --checkpoint-dir D     (sweep) shard checkpoint root
                          (default results/shard_ckpt)
   --resume               (sweep) skip shards already checkpointed
+  --metrics-out FILE     enable telemetry and write a metrics.json
+                         snapshot (span tree, counters, histograms);
+                         the span tree is also printed on exit
+  --quiet                only warnings and errors on the console
+  -v, --verbose          also emit debug-level logs
 ";
 
 #[cfg(test)]
@@ -165,5 +174,14 @@ mod tests {
     fn trailing_bool_flag() {
         let a = parse(&["x", "--quick"]);
         assert!(a.flag_bool("quick"));
+    }
+
+    #[test]
+    fn short_v_is_verbose_not_a_positional() {
+        let a = parse(&["sweep", "-v", "--metrics-out", "m.json"]);
+        assert_eq!(a.command.as_deref(), Some("sweep"));
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.flag("metrics-out"), Some("m.json"));
+        assert!(a.positionals.is_empty());
     }
 }

@@ -122,9 +122,11 @@ pub fn case_seed(seed: u64, i: u64) -> u64 {
 /// the software forwards and the synthesized/simulated netlists is
 /// shrunk and collected.
 pub fn run_fuzz(cfg: &ConformConfig) -> FuzzReport {
+    let _span = crate::obs::span("conform.fuzz");
     let mut report = FuzzReport::default();
     for i in 0..cfg.cases {
         report.cases += 1;
+        crate::obs::counters::CONFORM_CASES.incr();
         let mut rng = Rng::new(case_seed(cfg.seed, i));
         let q = gen::random_quant_mlp(&mut rng, &cfg.topology);
         let total = PATTERN_COUNTS[(i as usize) % PATTERN_COUNTS.len()];
@@ -147,6 +149,7 @@ pub fn run_fuzz(cfg: &ConformConfig) -> FuzzReport {
                 kind,
                 forced_kind: forced,
             });
+            crate::obs::counters::CONFORM_SHRINKS.incr();
             report
                 .mismatches
                 .push(diff::shrink(&q, &plan, &plan, &plan, &xs, failure));

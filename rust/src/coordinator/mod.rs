@@ -198,8 +198,12 @@ pub fn run_dataset(
     backend: &mut dyn TrainBackend,
 ) -> anyhow::Result<DatasetOutcome> {
     let info = ds.info;
+    let _span = crate::obs::span("coordinator.dataset");
     // 1. MLP0
-    let mlp0 = train_mlp0(ds, &cfg.train, cfg.seed);
+    let mlp0 = {
+        let _s = crate::obs::span("coordinator.train");
+        train_mlp0(ds, &cfg.train, cfg.seed)
+    };
     let mlp0_acc_test = mlp0.accuracy(&ds.x_test, &ds.y_test);
 
     // 2. quantize
@@ -222,14 +226,17 @@ pub fn run_dataset(
     let packed = PackedStimulus::from_features(stimulus, q0.din(), q0.in_bits)
         .map_err(anyhow::Error::msg)?;
     let mut sim_scratch = SimScratch::new();
-    let baseline_costs = dse::circuit_costs_packed(
-        &q0,
-        &ShiftPlan::exact(&q0),
-        NeuronStyle::ExactBespoke,
-        &packed,
-        &ctx.lib,
-        &mut sim_scratch,
-    );
+    let baseline_costs = {
+        let _s = crate::obs::span("coordinator.baseline");
+        dse::circuit_costs_packed(
+            &q0,
+            &ShiftPlan::exact(&q0),
+            NeuronStyle::ExactBespoke,
+            &packed,
+            &ctx.lib,
+            &mut sim_scratch,
+        )
+    };
 
     // 4. clustering (cached) + per-model area LUTs for Eq. (1)
     let clusters = ctx.clusters();
@@ -239,18 +246,23 @@ pub fn run_dataset(
     let mut results: Vec<ThresholdResult> = Vec::new();
     let mut pareto_cloud: Vec<(f64, f64, f64, u32, usize)> = Vec::new();
     for &t in &cfg.thresholds {
+        // one aggregated `coordinator.threshold` node: count = #thresholds
+        let _t_span = crate::obs::span("coordinator.threshold");
         let mut rcfg = cfg.retrain.clone();
         rcfg.threshold = t;
         rcfg.seed = cfg.seed ^ ((t * 1e4) as u64);
-        let outcome: RetrainOutcome = printing_friendly_retrain(
-            &q0,
-            &xq_train,
-            &ds.y_train,
-            clusters,
-            &area_model,
-            &rcfg,
-            backend,
-        )?;
+        let outcome: RetrainOutcome = {
+            let _s = crate::obs::span("coordinator.retrain");
+            printing_friendly_retrain(
+                &q0,
+                &xq_train,
+                &ds.y_train,
+                clusters,
+                &area_model,
+                &rcfg,
+                backend,
+            )?
+        };
         let qr = &outcome.q;
 
         // "Only Retrain": retrained coefficients, exact conventional circuit

@@ -370,6 +370,30 @@ pub fn evaluate_design_packed(
     stim: &SweepStimuli,
     scratch: &mut EngineScratch,
 ) -> Result<DesignEval, String> {
+    // per-point latency histogram (`dse.eval_point_ns`): timing only —
+    // the evaluation itself is untouched, so results stay bit-identical
+    // with telemetry on or off
+    let t0 = crate::obs::enabled().then(std::time::Instant::now);
+    let out = eval_point_inner(q, plan, k, g, data, lib, cfg, stim, scratch);
+    if let Some(t0) = t0 {
+        let ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        crate::obs::eval_point_ns().record(ns);
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn eval_point_inner(
+    q: &QuantMlp,
+    plan: ShiftPlan,
+    k: u32,
+    g: Vec<f64>,
+    data: &QuantData,
+    lib: &EgtLibrary,
+    cfg: &DseConfig,
+    stim: &SweepStimuli,
+    scratch: &mut EngineScratch,
+) -> Result<DesignEval, String> {
     let (nt, ne) = (stim.nt, stim.ne);
     enum Fwd {
         Flat(FlatEval),
@@ -534,6 +558,9 @@ pub fn sweep_space(q: &QuantMlp, sig: &Significance, cfg: &DseConfig) -> SweepSp
         });
         rep_of_point.push(id);
     }
+    // dedup fan-out: grid points folded onto an already-planned
+    // representative (always-on `dse.dedup_fanout` counter)
+    crate::obs::counters::DEDUP_FANOUT.add((points.len() - reps.len()) as u64);
     SweepSpace {
         points,
         plans,
@@ -600,6 +627,7 @@ pub fn sweep(
     lib: &EgtLibrary,
     cfg: &DseConfig,
 ) -> Result<Vec<DesignEval>, String> {
+    let _span = crate::obs::span("dse.sweep");
     let space = sweep_space(q, sig, cfg);
     let stim = SweepStimuli::prepare(q, data, cfg)?;
     let rep_evals: Vec<DesignEval> =

@@ -568,11 +568,15 @@ impl Checkpoint {
 
     /// Persist shard `s` atomically (temp file + rename): a run killed
     /// mid-write leaves at worst a stale `.tmp`, never a truncated
-    /// `shard_NNNN.json`.
-    fn write_shard(&self, s: usize, evals: &[DesignEval]) -> Result<(), ShardError> {
+    /// `shard_NNNN.json`. `eval_ns` records the shard's wall-clock
+    /// evaluation time in the checkpoint — telemetry metadata only;
+    /// [`Checkpoint::load_shard`] ignores it, so resume parity and the
+    /// fingerprint contract are untouched.
+    fn write_shard(&self, s: usize, evals: &[DesignEval], eval_ns: u64) -> Result<(), ShardError> {
         let body = json::obj(vec![
             ("fingerprint", json::s(&format!("{:016x}", self.fingerprint))),
             ("shard", Json::Num(s as f64)),
+            ("eval_ns", Json::Num(eval_ns as f64)),
             ("evals", Json::Arr(evals.iter().map(eval_to_json).collect())),
         ]);
         let path = self.shard_path(s);
@@ -630,6 +634,7 @@ pub fn sweep_sharded(
     if scfg.shards == 0 {
         return Err(err("shard count must be at least 1"));
     }
+    let _span = crate::obs::span("dse.sweep_sharded");
     let space = sweep_space(q, sig, cfg);
     let stim = SweepStimuli::prepare(q, data, cfg).map_err(err)?;
     let fingerprint = space_fingerprint(q, cfg, &space, data, &stim, lib);
@@ -655,6 +660,7 @@ pub fn sweep_sharded(
                 if let Some(evals) = ck.load_shard(s, range, &space)? {
                     shard_evals[s] = Some(evals);
                     resumed += 1;
+                    crate::obs::counters::SHARD_RESUMED.incr();
                 }
             }
         }
@@ -679,6 +685,10 @@ pub fn sweep_sharded(
                 "interrupted after {evaluated} newly evaluated shards (stop_after): {fate}"
             )));
         }
+        // per-shard sub-span (`dse.sweep_sharded/shardNNNN`) plus the
+        // wall-clock eval time recorded into the shard's checkpoint file
+        let shard_span = crate::obs::span(&format!("shard{s:04}"));
+        let t0 = std::time::Instant::now();
         let shard_reps = &space.reps[range.clone()];
         let evals: Vec<DesignEval> =
             parallel_map_with(shard_reps, cfg.threads, EngineScratch::new, |scratch, &pi| {
@@ -698,8 +708,11 @@ pub fn sweep_sharded(
             .into_iter()
             .collect::<Result<Vec<_>, String>>()
             .map_err(|e| err(format!("shard {s}: {e}")))?;
+        let eval_ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        drop(shard_span);
+        crate::obs::counters::SHARD_EVALUATED.add(evals.len() as u64);
         if let Some(ck) = &ckpt {
-            ck.write_shard(s, &evals)?;
+            ck.write_shard(s, &evals, eval_ns)?;
         }
         shard_evals[s] = Some(evals);
         evaluated += 1;

@@ -88,7 +88,7 @@ pub fn run_pipeline_all(cfg: &ExpConfig) -> anyhow::Result<Vec<DatasetOutcome>> 
         BackendKind::Pjrt => match Runtime::new(Runtime::default_dir()) {
             Ok(rt) => Some(rt),
             Err(e) => {
-                eprintln!("warn: PJRT runtime unavailable ({e}); using native backend");
+                crate::log!(Warn, "PJRT runtime unavailable ({e}); using native backend");
                 None
             }
         },
@@ -105,7 +105,8 @@ pub fn run_pipeline_all(cfg: &ExpConfig) -> anyhow::Result<Vec<DatasetOutcome>> 
             let mut be = RustBackend;
             run_dataset(&ds, &pcfg, &ctx, &mut be)?
         };
-        eprintln!(
+        crate::log!(
+            Info,
             "[{key}] pipeline done in {:.1}s (backend: {})",
             t0.elapsed().as_secs_f64(),
             if runtime.is_some() { "pjrt" } else { "rust" }
@@ -448,7 +449,8 @@ pub fn exp_fig6(cfg: &ExpConfig) -> anyhow::Result<Vec<DatasetOutcome>> {
         "Fig 8 — printed-battery classification (paper: 2/10 baseline → 9/10 ours; ≤10cm²/30mW platform caps)",
         "fig8_battery.csv",
     );
-    println!(
+    crate::log!(
+        Info,
         "(platform constraints: ≤{} cm², ≤{} mW)",
         limits::MAX_AREA_CM2,
         limits::MAX_POWER_MW
@@ -674,8 +676,9 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
         let means = mean_activations(&q0, &xq_train);
         let sig = significance(&q0, &means);
 
-        let cache_hits0 = crate::axsum::plan_cache_hits();
-        let cache_miss0 = crate::axsum::plan_cache_misses();
+        // per-dataset counter window: back-to-back runs must not report
+        // cumulative cross-contaminated cache numbers
+        crate::obs::begin_run();
         let grid =
             dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse).map_err(anyhow::Error::msg)?;
         // lossless tables: the seeds must decode to exactly the grid's
@@ -782,15 +785,16 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
             p95_ns: elapsed.as_nanos() as f64 / out.requested.max(1) as f64,
             patterns_per_iter: None,
         });
-        eprintln!(
+        crate::log!(
+            Info,
             "[{key}] search done in {:.1}s: {} unique evals / {} requested ({} memo hits, \
              plan cache {} hits / {} misses)",
             elapsed.as_secs_f64(),
             out.archive.len(),
             out.requested,
             out.memo_hits,
-            crate::axsum::plan_cache_hits() - cache_hits0,
-            crate::axsum::plan_cache_misses() - cache_miss0,
+            crate::obs::run_value("plan_cache.hits"),
+            crate::obs::run_value("plan_cache.misses"),
         );
     }
 
@@ -868,8 +872,8 @@ pub fn exp_shard(
         let means = mean_activations(&q0, &xq_train);
         let sig = significance(&q0, &means);
 
-        let cache_hits0 = crate::axsum::plan_cache_hits();
-        let cache_miss0 = crate::axsum::plan_cache_misses();
+        // per-dataset counter window (see exp_search): fresh cache stats
+        crate::obs::begin_run();
         let t0 = std::time::Instant::now();
         let mono = dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse).map_err(anyhow::Error::msg)?;
         let mono_s = t0.elapsed();
@@ -936,14 +940,15 @@ pub fn exp_shard(
                 patterns_per_iter: None,
             });
         }
-        eprintln!(
+        crate::log!(
+            Info,
             "[{key}] sharded sweep done: {} reps / {} points, {} shards, parity {parity}, \
              plan cache {} hits / {} misses",
             rep1.reps_total,
             rep1.points_total,
             rep1.shards_total,
-            crate::axsum::plan_cache_hits() - cache_hits0,
-            crate::axsum::plan_cache_misses() - cache_miss0,
+            crate::obs::run_value("plan_cache.hits"),
+            crate::obs::run_value("plan_cache.misses"),
         );
     }
     t.emit(
@@ -955,7 +960,10 @@ pub fn exp_shard(
     );
     write_json("BENCH_shard.json", &bench_rows);
     if failures.is_empty() {
-        println!("sharded sweep OK: bit-identical to the monolithic sweep on every dataset");
+        crate::log!(
+            Info,
+            "sharded sweep OK: bit-identical to the monolithic sweep on every dataset"
+        );
         Ok(())
     } else {
         Err(anyhow::Error::msg(failures.join("\n")))
@@ -997,7 +1005,8 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
     let t0 = std::time::Instant::now();
     for site in FaultSite::ALL {
         match conformance::canary_at(cfg.seed, site) {
-            Ok(s) => println!(
+            Ok(s) => crate::log!(
+                Info,
                 "canary[{}]: corruption caught and shrunk — {}",
                 site.name(),
                 s.summary()
@@ -1008,7 +1017,7 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
     // the sweep-level instrument must also prove it can fail: a tampered
     // shard checkpoint has to be traced back to the corrupted shard
     match conformance::sweep_canary(cfg.seed) {
-        Ok(d) => println!("canary[sweep]: tampered checkpoint caught — {}", d.summary()),
+        Ok(d) => crate::log!(Info, "canary[sweep]: tampered checkpoint caught — {}", d.summary()),
         Err(e) => failures.push(format!("canary[sweep]: {e}")),
     }
 
@@ -1100,7 +1109,7 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
     );
 
     if failures.is_empty() {
-        println!("conformance OK: all engines bit-exact, goldens stable");
+        crate::log!(Info, "conformance OK: all engines bit-exact, goldens stable");
         Ok(())
     } else {
         Err(anyhow::Error::msg(failures.join("\n")))

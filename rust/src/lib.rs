@@ -35,6 +35,7 @@ pub mod dse;
 pub mod experiments;
 pub mod fixed;
 pub mod mlp;
+pub mod obs;
 pub mod retrain;
 pub mod runtime;
 pub mod netlist;

@@ -20,8 +20,27 @@ fn main() {
         println!("{USAGE}");
         return;
     };
-    if let Err(e) = run(&cmd, &args) {
-        eprintln!("error: {e}");
+    if args.flag_bool("quiet") {
+        axmlp::obs::set_level(axmlp::obs::Level::Warn);
+    } else if args.flag_bool("verbose") {
+        axmlp::obs::set_level(axmlp::obs::Level::Debug);
+    }
+    let metrics_out = args.flag("metrics-out").map(std::path::PathBuf::from);
+    if metrics_out.is_some() {
+        axmlp::obs::set_enabled(true);
+    }
+    let result = run(&cmd, &args);
+    // the snapshot is written even when the run failed: a partial span
+    // tree is exactly what a failed run needs for a post-mortem
+    if let Some(path) = &metrics_out {
+        match axmlp::obs::write_metrics(path) {
+            Ok(()) => axmlp::log!(Info, "wrote {}", path.display()),
+            Err(e) => axmlp::log!(Warn, "could not write {}: {e}", path.display()),
+        }
+        axmlp::log!(Info, "{}", axmlp::obs::render());
+    }
+    if let Err(e) = result {
+        axmlp::log!(Error, "{e}");
         std::process::exit(1);
     }
 }
@@ -92,7 +111,8 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "smoke" => {
             let rt = Runtime::new(Runtime::default_dir())?;
             rt.smoke()?;
-            println!(
+            axmlp::log!(
+                Info,
                 "runtime OK: platform={}, {} topologies indexed",
                 rt.platform(),
                 rt.index.topologies.len()
@@ -188,7 +208,8 @@ fn cmd_verilog(args: &Args) -> anyhow::Result<()> {
     let v = axmlp::verilog::to_verilog(&nl);
     let _ = std::fs::create_dir_all("results");
     std::fs::write(&out_path, &v)?;
-    println!(
+    axmlp::log!(
+        Info,
         "wrote {out_path}: module axmlp_{key}, {} cells, {:.2} cm², {:.1} mW, acc(test) {:.3}",
         nl.n_cells(),
         tr.design.costs.area_cm2(),

@@ -1,0 +1,353 @@
+//! Named counters, gauges and log2-bucketed latency histograms.
+//!
+//! Counters are process-wide statics updated with one relaxed
+//! `fetch_add`, cheap enough to stay always-on in hot paths — which is
+//! what keeps the legacy monotone accessors (`axsum::plan_cache_hits`,
+//! `axsum::nan_sig_dropped`) working unchanged on top of the registry.
+//! Per-run views come from [`begin_run`]: a snapshot-and-reset that
+//! marks the current totals as the new baseline without ever winding a
+//! raw counter back, so concurrent before/after-delta call sites keep
+//! their invariants.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Monotonic, process-wide event counter (relaxed atomic `u64`).
+///
+/// ```
+/// let c = axmlp::obs::Counter::new();
+/// c.add(2);
+/// c.incr();
+/// assert_eq!(c.total(), 3);
+/// ```
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter {
+            v: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Lifetime total. Monotone: the registry never winds a counter
+    /// back, so before/after-delta call sites stay correct even when a
+    /// run boundary ([`begin_run`]) lands between their two reads.
+    pub fn total(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// The registered instruments, one per migrated legacy counter plus the
+/// new per-subsystem event counts. Names are the stable identifiers of
+/// the `metrics.json` schema.
+pub mod counters {
+    use super::Counter;
+
+    /// `PlanCache` lookups served from the cache.
+    pub static PLAN_CACHE_HITS: Counter = Counter::new();
+    /// `PlanCache` lookups that had to compile a fresh engine.
+    pub static PLAN_CACHE_MISSES: Counter = Counter::new();
+    /// NaN significance entries dropped before level selection.
+    pub static NAN_SIG_DROPPED: Counter = Counter::new();
+    /// Grid points folded onto an already-planned representative
+    /// (`sweep_space` dedup fan-out: `points - representatives`).
+    pub static DEDUP_FANOUT: Counter = Counter::new();
+    /// Sharded-sweep representatives evaluated live this process.
+    pub static SHARD_EVALUATED: Counter = Counter::new();
+    /// Sharded-sweep shards skipped by checkpoint resume.
+    pub static SHARD_RESUMED: Counter = Counter::new();
+    /// Conformance fuzz cases executed.
+    pub static CONFORM_CASES: Counter = Counter::new();
+    /// Conformance mismatches shrunk to minimal reproducers.
+    pub static CONFORM_SHRINKS: Counter = Counter::new();
+    /// Patterns ingested by the streaming runtime.
+    pub static STREAM_PATTERNS: Counter = Counter::new();
+    /// Flushes executed by the streaming runtime.
+    pub static STREAM_FLUSHES: Counter = Counter::new();
+    /// Genomes whose evaluation was requested by the genetic search.
+    pub static SEARCH_EVALS_REQUESTED: Counter = Counter::new();
+    /// Genome evaluations served from the search memo table.
+    pub static SEARCH_MEMO_HITS: Counter = Counter::new();
+}
+
+/// Name → instrument table driving snapshots, `metrics.json` and the
+/// per-run baselines. Append-only: removing or renaming an entry is a
+/// schema break.
+static REGISTRY: &[(&str, &Counter)] = &[
+    ("plan_cache.hits", &counters::PLAN_CACHE_HITS),
+    ("plan_cache.misses", &counters::PLAN_CACHE_MISSES),
+    ("axsum.nan_sig_dropped", &counters::NAN_SIG_DROPPED),
+    ("dse.dedup_fanout", &counters::DEDUP_FANOUT),
+    ("shard.evaluated", &counters::SHARD_EVALUATED),
+    ("shard.resumed", &counters::SHARD_RESUMED),
+    ("conform.cases", &counters::CONFORM_CASES),
+    ("conform.shrinks", &counters::CONFORM_SHRINKS),
+    ("stream.patterns", &counters::STREAM_PATTERNS),
+    ("stream.flushes", &counters::STREAM_FLUSHES),
+    ("search.evals_requested", &counters::SEARCH_EVALS_REQUESTED),
+    ("search.memo_hits", &counters::SEARCH_MEMO_HITS),
+];
+
+fn bases() -> &'static Mutex<Vec<u64>> {
+    static B: OnceLock<Mutex<Vec<u64>>> = OnceLock::new();
+    B.get_or_init(|| Mutex::new(vec![0; REGISTRY.len()]))
+}
+
+/// Snapshot-and-reset: mark every registered counter's current total as
+/// the start of a new run. Subsequent [`counter_rows`] /
+/// [`run_value`] reads report values relative to this mark while the
+/// raw totals stay monotone — this is what lets back-to-back
+/// experiments in one process report clean per-run counts instead of
+/// cumulative, cross-contaminated ones.
+pub fn begin_run() {
+    let mut b = bases().lock().unwrap();
+    for (i, (_, c)) in REGISTRY.iter().enumerate() {
+        b[i] = c.total();
+    }
+}
+
+/// `(name, run_value, lifetime_total)` for every registered counter,
+/// in registry (schema) order.
+pub fn counter_rows() -> Vec<(&'static str, u64, u64)> {
+    let b = bases().lock().unwrap();
+    REGISTRY
+        .iter()
+        .enumerate()
+        .map(|(i, (name, c))| {
+            let total = c.total();
+            (*name, total.saturating_sub(b[i]), total)
+        })
+        .collect()
+}
+
+/// Per-run value (events since the last [`begin_run`]) of one
+/// registered counter; 0 for unknown names.
+pub fn run_value(name: &str) -> u64 {
+    counter_rows()
+        .iter()
+        .find(|(n, _, _)| *n == name)
+        .map(|(_, run, _)| *run)
+        .unwrap_or(0)
+}
+
+fn gauges() -> &'static Mutex<Vec<(String, f64)>> {
+    static G: OnceLock<Mutex<Vec<(String, f64)>>> = OnceLock::new();
+    G.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Set (or create) a named gauge — a last-write-wins instantaneous
+/// value (e.g. the current Pareto-front size per search generation).
+/// No-op while the registry is disabled.
+pub fn gauge_set(name: &str, value: f64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let mut g = gauges().lock().unwrap();
+    if let Some(slot) = g.iter_mut().find(|(n, _)| n == name) {
+        slot.1 = value;
+    } else {
+        g.push((name.to_string(), value));
+        g.sort_by(|a, b| a.0.cmp(&b.0));
+    }
+}
+
+/// All gauges, sorted by name.
+pub fn gauge_rows() -> Vec<(String, f64)> {
+    gauges().lock().unwrap().clone()
+}
+
+pub(crate) fn reset_gauges() {
+    gauges().lock().unwrap().clear();
+}
+
+/// Number of log2 buckets: index `i ≥ 1` counts samples whose
+/// bit-length is `i` (`ns ∈ [2^(i-1), 2^i)`); index 0 counts 0 ns.
+/// The top bucket absorbs everything ≥ 2^46 ns (~19.5 h).
+pub const HIST_BUCKETS: usize = 48;
+
+/// Log2-bucketed latency histogram with count/sum/min/max, all relaxed
+/// atomics — recording is wait-free and never blocks a worker.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+/// Point-in-time copy of one [`Histogram`]; zero buckets are omitted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum_ns: u64,
+    /// 0 when `count == 0`.
+    pub min_ns: u64,
+    pub max_ns: u64,
+    /// `(bucket index, count)`; bucket `i` covers `[2^(i-1), 2^i)` ns.
+    pub buckets: Vec<(u32, u64)>,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` in nanoseconds.
+    pub fn bucket_le_ns(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            (1u64 << i.min(63)) - 1
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+        self.min.fetch_min(ns, Ordering::Relaxed);
+        self.max.fetch_max(ns, Ordering::Relaxed);
+        let b = (64 - ns.leading_zeros()) as usize;
+        self.buckets[b.min(HIST_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let min = self.min.load(Ordering::Relaxed);
+        HistSnapshot {
+            count,
+            sum_ns: self.sum.load(Ordering::Relaxed),
+            min_ns: if count == 0 { 0 } else { min },
+            max_ns: self.max.load(Ordering::Relaxed),
+            buckets: self
+                .buckets
+                .iter()
+                .enumerate()
+                .filter_map(|(i, b)| {
+                    let n = b.load(Ordering::Relaxed);
+                    (n > 0).then_some((i as u32, n))
+                })
+                .collect(),
+        }
+    }
+
+    pub(crate) fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Per-point DSE evaluation latency (accuracy + synthesis + simulation
+/// + cost estimate for one design point).
+pub fn eval_point_ns() -> &'static Histogram {
+    static H: OnceLock<Histogram> = OnceLock::new();
+    H.get_or_init(Histogram::new)
+}
+
+/// Streaming-runtime flush latency (pack + widest engine + argmax for
+/// one buffered block).
+pub fn stream_flush_ns() -> &'static Histogram {
+    static H: OnceLock<Histogram> = OnceLock::new();
+    H.get_or_init(Histogram::new)
+}
+
+/// `(name, snapshot)` for every registered histogram, in schema order.
+pub fn hist_rows() -> Vec<(&'static str, HistSnapshot)> {
+    vec![
+        ("dse.eval_point_ns", eval_point_ns().snapshot()),
+        ("stream.flush_ns", stream_flush_ns().snapshot()),
+    ]
+}
+
+pub(crate) fn reset_hists() {
+    eval_point_ns().reset();
+    stream_flush_ns().reset();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_monotone_and_cheap_to_read() {
+        let c = Counter::new();
+        assert_eq!(c.total(), 0);
+        c.add(41);
+        c.incr();
+        assert_eq!(c.total(), 42);
+    }
+
+    #[test]
+    fn histogram_buckets_by_bit_length() {
+        let h = Histogram::new();
+        h.record(0);
+        h.record(1);
+        h.record(2);
+        h.record(3);
+        h.record(1024);
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum_ns, 1030);
+        assert_eq!(s.min_ns, 0);
+        assert_eq!(s.max_ns, 1024);
+        // 0 → bucket 0, 1 → bucket 1, {2,3} → bucket 2, 1024 → bucket 11
+        assert_eq!(s.buckets, vec![(0, 1), (1, 1), (2, 2), (11, 1)]);
+        assert_eq!(Histogram::bucket_le_ns(0), 0);
+        assert_eq!(Histogram::bucket_le_ns(2), 3);
+        assert_eq!(Histogram::bucket_le_ns(11), 2047);
+    }
+
+    #[test]
+    fn empty_histogram_snapshot_is_zeroed() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.min_ns, 0);
+        assert_eq!(s.max_ns, 0);
+        assert!(s.buckets.is_empty());
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_ordered() {
+        let rows = counter_rows();
+        assert_eq!(rows.len(), REGISTRY.len());
+        for w in rows.windows(2) {
+            assert_ne!(w[0].0, w[1].0);
+        }
+        // run value can never exceed the lifetime total
+        for (_, run, total) in rows {
+            assert!(run <= total);
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! Observability: hierarchical timing spans, named counters and gauges,
+//! latency histograms, and a leveled [`crate::log!`] macro — hand-rolled
+//! on std atomics (no `tracing`/`log` crates in the offline vendor set,
+//! same discipline as `util::prop`).
+//!
+//! Design contract:
+//!
+//! * **Results-neutral.** Instruments only read clocks and bump
+//!   atomics; they never change evaluation order, RNG streams or f64
+//!   arithmetic, so goldens, sweep fronts and every differential engine
+//!   stay bit-identical with telemetry on or off (pinned by
+//!   `tests/obs_test.rs`).
+//! * **Near-zero disabled cost.** A span or histogram site checks one
+//!   relaxed atomic ([`enabled`]) and bails; counters are one relaxed
+//!   `fetch_add` and stay always-on, which is what keeps the legacy
+//!   monotone accessors (`axsum::plan_cache_hits`,
+//!   `axsum::nan_sig_dropped`) working unchanged on top of the
+//!   registry.
+//! * **Stable schema.** [`metrics_json`] emits `{version, spans,
+//!   counters, gauges, histograms}`; names and keys are append-only
+//!   identifiers (see ARCHITECTURE.md §Observability).
+//!
+//! Span taxonomy (the `/`-joined aggregation paths):
+//!
+//! ```text
+//! coordinator.dataset            one per dataset pipeline run
+//!   coordinator.train            float MLP0 training
+//!   coordinator.baseline         exact bespoke baseline synthesis
+//!   coordinator.threshold        one per accuracy-loss threshold
+//!     coordinator.retrain        printing-friendly retraining
+//!     dse.sweep                  monolithic grid sweep
+//!     dse.sweep_sharded          sharded sweep orchestration
+//!       shard[NNNN]              one per shard evaluated live
+//!     search.nsga2               genetic DSE
+//!       search.gen               one per generation (aggregated)
+//! conform.fuzz                   conformance fuzz campaign
+//! ```
+
+mod metrics;
+mod span;
+
+pub use metrics::{
+    begin_run, counter_rows, counters, gauge_rows, gauge_set, hist_rows, run_value, Counter,
+    HistSnapshot, Histogram, HIST_BUCKETS,
+};
+pub use span::{ambient, current_path, render, span, span_rows, AmbientGuard, SpanGuard, SpanStat};
+
+use crate::util::json::{self, Json};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+/// Log verbosity, most severe first. The active level admits itself and
+/// everything more severe: `--quiet` → [`Level::Warn`], default →
+/// [`Level::Info`], `-v` → [`Level::Debug`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    fn rank(self) -> u8 {
+        match self {
+            Level::Error => 0,
+            Level::Warn => 1,
+            Level::Info => 2,
+            Level::Debug => 3,
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+
+/// Is the metrics registry (spans, histograms, gauges) recording?
+/// Counters are always-on regardless.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span/histogram/gauge recording on or off (`repro` enables it
+/// when `--metrics-out` is given).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Set the active log level.
+pub fn set_level(l: Level) {
+    LEVEL.store(l.rank(), Ordering::Relaxed);
+}
+
+/// The active log level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Would a message at level `l` be emitted right now? The [`crate::log!`]
+/// macro checks this before formatting, so suppressed messages cost one
+/// atomic load and no allocation.
+#[inline]
+pub fn log_enabled(l: Level) -> bool {
+    l.rank() <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one already-formatted message (use via [`crate::log!`]): info
+/// goes to stdout, error/warn (prefixed) and debug go to stderr.
+pub fn log_emit(l: Level, msg: &str) {
+    match l {
+        Level::Error => eprintln!("error: {msg}"),
+        Level::Warn => eprintln!("warn: {msg}"),
+        Level::Info => println!("{msg}"),
+        Level::Debug => eprintln!("{msg}"),
+    }
+}
+
+/// Leveled logging: `crate::log!(Warn, "fell back to {}", name)`.
+///
+/// The first argument is a bare [`Level`](crate::obs::Level) variant;
+/// the rest is a `format!` argument list. Messages below the active
+/// level (set from `--quiet` / `-v`) are skipped before formatting.
+#[macro_export]
+macro_rules! log {
+    ($lvl:ident, $($arg:tt)*) => {
+        if $crate::obs::log_enabled($crate::obs::Level::$lvl) {
+            $crate::obs::log_emit($crate::obs::Level::$lvl, &format!($($arg)*));
+        }
+    };
+}
+
+pub use crate::log;
+
+fn span_json(path: &str, st: &SpanStat) -> Json {
+    json::obj(vec![
+        ("path", json::s(path)),
+        ("count", json::num(st.count as f64)),
+        ("total_ns", json::num(st.total_ns as f64)),
+        ("min_ns", json::num(st.min_ns as f64)),
+        ("max_ns", json::num(st.max_ns as f64)),
+        ("mean_ns", json::num(st.mean_ns() as f64)),
+    ])
+}
+
+fn hist_json(name: &str, h: &HistSnapshot) -> Json {
+    json::obj(vec![
+        ("name", json::s(name)),
+        ("count", json::num(h.count as f64)),
+        ("sum_ns", json::num(h.sum_ns as f64)),
+        ("min_ns", json::num(h.min_ns as f64)),
+        ("max_ns", json::num(h.max_ns as f64)),
+        (
+            "buckets",
+            Json::Arr(
+                h.buckets
+                    .iter()
+                    .map(|&(i, n)| {
+                        json::obj(vec![
+                            ("le_ns", json::num(Histogram::bucket_le_ns(i as usize) as f64)),
+                            ("count", json::num(n as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Stable-schema snapshot of every instrument:
+/// `{version, spans, counters, gauges, histograms}`. Counter rows carry
+/// both the per-run value (since the last [`begin_run`]) and the
+/// process-lifetime total.
+pub fn metrics_json() -> Json {
+    let spans: Vec<Json> = span_rows().iter().map(|(p, st)| span_json(p, st)).collect();
+    let counters: Vec<Json> = counter_rows()
+        .iter()
+        .map(|&(name, run, total)| {
+            json::obj(vec![
+                ("name", json::s(name)),
+                ("value", json::num(run as f64)),
+                ("total", json::num(total as f64)),
+            ])
+        })
+        .collect();
+    let gauges: Vec<Json> = gauge_rows()
+        .iter()
+        .map(|(name, v)| json::obj(vec![("name", json::s(name)), ("value", json::num(*v))]))
+        .collect();
+    let hists: Vec<Json> = hist_rows().iter().map(|(n, h)| hist_json(n, h)).collect();
+    json::obj(vec![
+        ("version", json::num(1.0)),
+        ("spans", Json::Arr(spans)),
+        ("counters", Json::Arr(counters)),
+        ("gauges", Json::Arr(gauges)),
+        ("histograms", Json::Arr(hists)),
+    ])
+}
+
+/// Write [`metrics_json`] to `path` atomically (tmp + fsync + rename).
+pub fn write_metrics(path: &std::path::Path) -> std::io::Result<()> {
+    json::write_atomic(path, &metrics_json().pretty())
+}
+
+/// Clear spans, histograms and gauges and re-baseline every counter —
+/// a full registry reset for tests and back-to-back in-process runs.
+/// Counter lifetime totals stay monotone.
+pub fn reset_all() {
+    span::reset_spans();
+    metrics::reset_hists();
+    metrics::reset_gauges();
+    begin_run();
+}
+
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    use std::sync::{Mutex, OnceLock};
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating_orders_severities() {
+        let _l = test_lock();
+        let was = level();
+        set_level(Level::Warn);
+        assert!(log_enabled(Level::Error));
+        assert!(log_enabled(Level::Warn));
+        assert!(!log_enabled(Level::Info));
+        assert!(!log_enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(log_enabled(Level::Debug));
+        set_level(was);
+        assert_eq!(level(), was);
+    }
+
+    #[test]
+    fn metrics_json_has_stable_schema() {
+        let _l = test_lock();
+        set_enabled(true);
+        {
+            let _s = span("obstest.schema");
+        }
+        gauge_set("obstest.gauge", 7.5);
+        let j = metrics_json();
+        assert_eq!(j.req_f64("version").unwrap(), 1.0);
+        for key in ["spans", "counters", "gauges", "histograms"] {
+            assert!(j.req(key).unwrap().as_arr().is_some(), "missing {key}");
+        }
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        let row = spans
+            .iter()
+            .find(|s| s.get("path").and_then(Json::as_str) == Some("obstest.schema"))
+            .expect("schema span row");
+        for key in ["count", "total_ns", "min_ns", "max_ns", "mean_ns"] {
+            assert!(row.req_f64(key).is_ok(), "span row missing {key}");
+        }
+        // round-trip through the serializer and parser
+        let back = Json::parse(&j.pretty()).expect("parses");
+        assert_eq!(back.req_f64("version").unwrap(), 1.0);
+        assert!(back
+            .get("gauges")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|g| g.get("name").and_then(Json::as_str) == Some("obstest.gauge")));
+    }
+
+    #[test]
+    fn begin_run_rebaselines_counters() {
+        let _l = test_lock();
+        counters::CONFORM_SHRINKS.add(5);
+        begin_run();
+        assert_eq!(run_value("conform.shrinks"), 0);
+        counters::CONFORM_SHRINKS.add(3);
+        assert_eq!(run_value("conform.shrinks"), 3);
+        let total = counters::CONFORM_SHRINKS.total();
+        assert!(total >= 8, "lifetime total stays monotone, got {total}");
+    }
+
+    #[test]
+    fn log_macro_formats_lazily() {
+        let _l = test_lock();
+        let was = level();
+        set_level(Level::Error);
+        let mut evaluated = false;
+        // closure side effect must not run for a suppressed level
+        let mut probe = || {
+            evaluated = true;
+            "x"
+        };
+        if log_enabled(Level::Debug) {
+            log_emit(Level::Debug, probe());
+        }
+        assert!(!evaluated);
+        set_level(was);
+        crate::log!(Debug, "suppressed unless -v: {}", 1);
+    }
+}

@@ -1,0 +1,293 @@
+//! Hierarchical timing spans.
+//!
+//! A span is opened with [`span`] and closed by dropping the returned
+//! RAII guard. Each thread keeps a stack of open span names; on close,
+//! the joined `a/b/c` path is merged into one global aggregated tree of
+//! call-count / total / min / max nanos. Worker threads spawned by
+//! `util::pool` inherit the spawning thread's innermost path as an
+//! *ambient prefix* (see [`current_path`] / [`ambient`]), so spans
+//! opened inside `parallel_map_with` workers nest under the caller's
+//! span and the per-thread stacks merge into a single tree.
+//!
+//! When the registry is disabled ([`crate::obs::enabled`] false) a span
+//! costs one relaxed atomic load and records nothing.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+struct SpanStack {
+    /// Path prefix inherited from the spawning thread (pool workers).
+    ambient: Option<String>,
+    /// Names of the spans currently open on this thread, outermost first.
+    names: Vec<String>,
+}
+
+impl SpanStack {
+    fn path(&self) -> String {
+        let mut p = self.ambient.clone().unwrap_or_default();
+        for n in &self.names {
+            if !p.is_empty() {
+                p.push('/');
+            }
+            p.push_str(n);
+        }
+        p
+    }
+}
+
+thread_local! {
+    static STACK: RefCell<SpanStack> = RefCell::new(SpanStack {
+        ambient: None,
+        names: Vec::new(),
+    });
+}
+
+/// Aggregated statistics of one span path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanStat {
+    pub count: u64,
+    pub total_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl SpanStat {
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.total_ns / self.count
+        }
+    }
+}
+
+fn tree() -> &'static Mutex<BTreeMap<String, SpanStat>> {
+    static T: OnceLock<Mutex<BTreeMap<String, SpanStat>>> = OnceLock::new();
+    T.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// RAII guard returned by [`span`]; dropping it closes the span and
+/// merges its duration into the global aggregated tree.
+#[must_use = "a span is timed until the guard drops — bind it with `let _span = ...`"]
+pub struct SpanGuard {
+    start: Option<Instant>,
+}
+
+/// Open a timing span. While the returned guard lives, spans opened on
+/// the same thread (or in pool workers spawned under it) nest beneath
+/// it; the aggregated tree keys nodes by the joined `parent/child`
+/// path, so repeated visits of the same path fold into one node.
+///
+/// ```
+/// axmlp::obs::set_enabled(true);
+/// {
+///     let _s = axmlp::obs::span("doc.outer");
+///     let _t = axmlp::obs::span("doc.inner");
+/// }
+/// let rows = axmlp::obs::span_rows();
+/// assert!(rows.iter().any(|(p, st)| p == "doc.outer/doc.inner" && st.count == 1));
+/// ```
+pub fn span(name: &str) -> SpanGuard {
+    if !crate::obs::enabled() {
+        return SpanGuard { start: None };
+    }
+    STACK.with(|s| s.borrow_mut().names.push(name.to_string()));
+    SpanGuard {
+        start: Some(Instant::now()),
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start.take() else {
+            return;
+        };
+        let ns = u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        let path = STACK.with(|s| {
+            let mut st = s.borrow_mut();
+            let path = st.path();
+            st.names.pop();
+            path
+        });
+        record(&path, ns);
+    }
+}
+
+fn record(path: &str, ns: u64) {
+    let mut t = tree().lock().unwrap();
+    let e = t.entry(path.to_string()).or_insert(SpanStat {
+        count: 0,
+        total_ns: 0,
+        min_ns: u64::MAX,
+        max_ns: 0,
+    });
+    e.count += 1;
+    e.total_ns += ns;
+    e.min_ns = e.min_ns.min(ns);
+    e.max_ns = e.max_ns.max(ns);
+}
+
+/// Full path of the innermost open span on this thread, or `None` when
+/// the registry is disabled or no span is open. `util::pool` captures
+/// this before spawning workers and installs it in each worker via
+/// [`ambient`], which is what merges worker-side spans into the
+/// caller's tree.
+pub fn current_path() -> Option<String> {
+    if !crate::obs::enabled() {
+        return None;
+    }
+    STACK.with(|s| {
+        let p = s.borrow().path();
+        if p.is_empty() {
+            None
+        } else {
+            Some(p)
+        }
+    })
+}
+
+/// Guard installing an inherited span-path prefix on the current
+/// thread; dropping it restores the previous prefix.
+pub struct AmbientGuard {
+    prev: Option<String>,
+    active: bool,
+}
+
+/// Install `prefix` (as captured by [`current_path`]) as this thread's
+/// ambient span prefix. `None` is a no-op guard, so callers can thread
+/// the captured value through unconditionally.
+pub fn ambient(prefix: Option<String>) -> AmbientGuard {
+    match prefix {
+        None => AmbientGuard {
+            prev: None,
+            active: false,
+        },
+        Some(p) => {
+            let prev = STACK.with(|s| s.borrow_mut().ambient.replace(p));
+            AmbientGuard { prev, active: true }
+        }
+    }
+}
+
+impl Drop for AmbientGuard {
+    fn drop(&mut self) {
+        if self.active {
+            let prev = self.prev.take();
+            STACK.with(|s| s.borrow_mut().ambient = prev);
+        }
+    }
+}
+
+/// `(path, stats)` for every aggregated span, sorted by path (parents
+/// sort before their children).
+pub fn span_rows() -> Vec<(String, SpanStat)> {
+    tree()
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect()
+}
+
+pub(crate) fn reset_spans() {
+    tree().lock().unwrap().clear();
+}
+
+fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Human-readable span tree: one line per path, indented by depth, with
+/// call count and total/mean/min/max durations in adaptive units.
+pub fn render() -> String {
+    let rows = span_rows();
+    if rows.is_empty() {
+        return "(no spans recorded)\n".to_string();
+    }
+    let label = |path: &str| {
+        let depth = path.matches('/').count();
+        let name = path.rsplit('/').next().unwrap_or(path);
+        format!("{}{}", "  ".repeat(depth), name)
+    };
+    let width = rows.iter().map(|(p, _)| label(p).len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (path, st) in &rows {
+        let _ = writeln!(
+            out,
+            "{:<width$}  {:>7}x  total {:>9}  mean {:>9}  min {:>9}  max {:>9}",
+            label(path),
+            st.count,
+            fmt_ns(st.total_ns),
+            fmt_ns(st.mean_ns()),
+            fmt_ns(st.min_ns),
+            fmt_ns(st.max_ns),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_spans_build_slash_paths() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        {
+            let _a = span("spantest.outer");
+            let _b = span("spantest.mid");
+            let _c = span("spantest.leaf");
+        }
+        let rows = span_rows();
+        let find = |p: &str| rows.iter().find(|(k, _)| k == p).map(|(_, s)| s.clone());
+        let leaf = find("spantest.outer/spantest.mid/spantest.leaf").expect("leaf span");
+        assert!(leaf.count >= 1);
+        assert!(leaf.max_ns >= leaf.min_ns);
+        assert!(find("spantest.outer").is_some());
+    }
+
+    #[test]
+    fn ambient_prefix_nests_and_restores() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        {
+            let _amb = ambient(Some("ambtest.parent".to_string()));
+            let _s = span("ambtest.child");
+        }
+        assert_eq!(current_path(), None);
+        let rows = span_rows();
+        assert!(rows.iter().any(|(p, _)| p == "ambtest.parent/ambtest.child"));
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _l = crate::obs::test_lock();
+        let was = crate::obs::enabled();
+        crate::obs::set_enabled(false);
+        {
+            let _s = span("spantest.disabled");
+        }
+        crate::obs::set_enabled(was);
+        assert!(!span_rows().iter().any(|(p, _)| p.contains("spantest.disabled")));
+    }
+
+    #[test]
+    fn render_formats_durations() {
+        assert_eq!(fmt_ns(12), "12ns");
+        assert_eq!(fmt_ns(2_500), "2.5us");
+        assert_eq!(fmt_ns(3_500_000), "3.5ms");
+        assert_eq!(fmt_ns(1_500_000_000), "1.50s");
+    }
+}

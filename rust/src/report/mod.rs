@@ -74,8 +74,8 @@ impl Table {
 
     /// Print to stdout and save `results/<name>.csv`.
     pub fn emit(&self, title: &str, csv_name: &str) {
-        println!("\n== {title} ==");
-        println!("{}", self.render());
+        crate::log!(Info, "\n== {title} ==");
+        crate::log!(Info, "{}", self.render());
         write_results(csv_name, &self.to_csv());
     }
 }
@@ -85,8 +85,8 @@ pub fn write_results(name: &str, content: &str) {
     let _ = std::fs::create_dir_all("results");
     let path = format!("results/{name}");
     match std::fs::write(&path, content) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("warn: cannot write {path}: {e}"),
+        Ok(()) => crate::log!(Info, "wrote {path}"),
+        Err(e) => crate::log!(Warn, "cannot write {path}: {e}"),
     }
 }
 

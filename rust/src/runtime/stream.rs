@@ -279,9 +279,15 @@ impl StreamRunner {
         let classes: Vec<usize> = (0..self.buf.len())
             .map(|r| argmax_i64(&self.logits[r * self.dout..(r + 1) * self.dout]))
             .collect();
+        let engine_nanos = t0.elapsed().as_nanos();
         self.stats.patterns += self.buf.len() as u64;
         self.stats.flushes += 1;
-        self.stats.engine_nanos += t0.elapsed().as_nanos();
+        self.stats.engine_nanos += engine_nanos;
+        crate::obs::counters::STREAM_PATTERNS.add(self.buf.len() as u64);
+        crate::obs::counters::STREAM_FLUSHES.incr();
+        if crate::obs::enabled() {
+            crate::obs::stream_flush_ns().record(u64::try_from(engine_nanos).unwrap_or(u64::MAX));
+        }
         self.buf.clear();
         Ok(classes)
     }

@@ -339,6 +339,7 @@ struct Evaluator<'a> {
 impl<'a> Evaluator<'a> {
     fn evaluate(&mut self, genomes: &[Genome]) -> Result<Vec<usize>, String> {
         self.requested += genomes.len();
+        crate::obs::counters::SEARCH_EVALS_REQUESTED.add(genomes.len() as u64);
         // resolve each genome to an archive slot; collect unique misses
         // in first-seen order (deterministic regardless of thread count)
         let mut slots: Vec<usize> = Vec::with_capacity(genomes.len());
@@ -349,6 +350,7 @@ impl<'a> Evaluator<'a> {
             let slot = match self.memo.get(&plan.shifts) {
                 Some(&s) => {
                     self.memo_hits += 1;
+                    crate::obs::counters::SEARCH_MEMO_HITS.incr();
                     s
                 }
                 None => {
@@ -417,16 +419,28 @@ fn population_stats(
         evaluated: ev.archive.len(),
         requested: ev.requested,
     };
-    if log {
-        eprintln!(
-            "[search] gen {:>3}: front {:>3}, hv {:.4}, best acc {:.4}, min area {:.2} mm², {} evals ({} requested)",
-            stats.gen,
-            stats.front_size,
-            stats.hypervolume,
-            stats.best_acc_train,
-            stats.min_area_mm2,
-            stats.evaluated,
-            stats.requested,
+    crate::obs::gauge_set("search.front_size", stats.front_size as f64);
+    crate::obs::gauge_set("search.hypervolume", stats.hypervolume);
+    // `--search-log` promotes the per-generation line to info; otherwise
+    // it rides at debug and appears under `-v`
+    let lvl = if log {
+        crate::obs::Level::Info
+    } else {
+        crate::obs::Level::Debug
+    };
+    if crate::obs::log_enabled(lvl) {
+        crate::obs::log_emit(
+            lvl,
+            &format!(
+                "[search] gen {:>3}: front {:>3}, hv {:.4}, best acc {:.4}, min area {:.2} mm², {} evals ({} requested)",
+                stats.gen,
+                stats.front_size,
+                stats.hypervolume,
+                stats.best_acc_train,
+                stats.min_area_mm2,
+                stats.evaluated,
+                stats.requested,
+            ),
         );
     }
     stats
@@ -515,6 +529,7 @@ pub fn nsga2(
 ) -> Result<SearchOutcome, String> {
     assert!(cfg.pop_size >= 4, "population too small for NSGA-II");
     assert!(cfg.generations >= 1);
+    let _span = crate::obs::span("search.nsga2");
     let mut rng = Rng::new(cfg.seed ^ SEARCH_SEED_SALT);
 
     // identical stimuli to the grid sweep: both strategies cost designs
@@ -574,6 +589,8 @@ pub fn nsga2(
     gens.push(population_stats(&ev, &pop_slots, 0, hv_ref_area, cfg.log));
 
     for gen in 1..=cfg.generations {
+        // one aggregated `search.nsga2/search.gen` node: count = #gens
+        let _gen_span = crate::obs::span("search.gen");
         // parent ranking for tournament selection
         let pop_objs: Vec<nsga::Objectives> =
             pop_slots.iter().map(|&s| ev.objs[s]).collect();

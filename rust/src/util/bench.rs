@@ -45,7 +45,8 @@ impl BenchResult {
             Some(p) => format!("  {:>12.0} pat/s", p),
             None => String::new(),
         };
-        println!(
+        crate::log!(
+            Info,
             "{:<44} {:>10} iters  mean {:>12}  median {:>12}  min {:>12}  p95 {:>12}{pps}",
             self.name,
             self.iters,
@@ -142,9 +143,9 @@ pub fn write_csv(file: &str, results: &[BenchResult]) {
     }
     let path = format!("results/{file}");
     if let Err(e) = std::fs::write(&path, out) {
-        eprintln!("warn: could not write {path}: {e}");
+        crate::log!(Warn, "could not write {path}: {e}");
     } else {
-        println!("wrote {path}");
+        crate::log!(Info, "wrote {path}");
     }
 }
 
@@ -155,9 +156,9 @@ pub fn write_json(path: &str, results: &[BenchResult]) {
     let rows: Vec<String> = results.iter().map(|r| format!("  {}", r.json_row())).collect();
     let out = format!("[\n{}\n]\n", rows.join(",\n"));
     if let Err(e) = std::fs::write(path, out) {
-        eprintln!("warn: could not write {path}: {e}");
+        crate::log!(Warn, "could not write {path}: {e}");
     } else {
-        println!("wrote {path}");
+        crate::log!(Info, "wrote {path}");
     }
 }
 

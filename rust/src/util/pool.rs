@@ -58,19 +58,26 @@ where
         let mut state = init();
         return items.iter().map(|item| f(&mut state, item)).collect();
     }
+    // capture the caller's open span path (None when telemetry is off)
+    // so worker-side spans nest under it and the per-thread stacks merge
+    // into one aggregated tree — see `obs::span`
+    let ambient = crate::obs::current_path();
     let next = AtomicUsize::new(0);
+    let (next_ref, init_ref, f_ref) = (&next, &init, &f);
     let buckets: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
-                scope.spawn(|| {
-                    let mut state = init();
+                let ambient = ambient.clone();
+                scope.spawn(move || {
+                    let _ambient = crate::obs::ambient(ambient);
+                    let mut state = init_ref();
                     let mut local: Vec<(usize, R)> = Vec::new();
                     loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
-                        local.push((i, f(&mut state, &items[i])));
+                        local.push((i, f_ref(&mut state, &items[i])));
                     }
                     local
                 })

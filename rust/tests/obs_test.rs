@@ -1,0 +1,180 @@
+//! Observability integration: span aggregation across pool workers,
+//! per-run counter windows, the on-disk metrics.json schema, and the
+//! results-neutrality guarantee — the sweep is bit-identical with
+//! telemetry on or off.
+
+use axmlp::axsum::{self, mean_activations, significance, ShiftPlan, Significance};
+use axmlp::dse::shard::first_divergence;
+use axmlp::dse::{self, DseConfig, EvalBackend, QuantData};
+use axmlp::fixed::QuantMlp;
+use axmlp::obs;
+use axmlp::pdk::EgtLibrary;
+use axmlp::util::json::Json;
+use axmlp::util::pool;
+use axmlp::util::rng::Rng;
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// The obs registry is process-global; tests toggling it must not
+/// interleave. (The lib unit tests hold their own lock in a separate
+/// test process, so the two suites cannot race each other.)
+fn lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Self-labeled toy model (exact forward generates the labels, so the
+/// exact design point scores 1.0 and truncation trades accuracy).
+fn toy(seed: u64) -> (QuantMlp, Vec<Vec<i64>>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let q = QuantMlp {
+        w: vec![
+            (0..3)
+                .map(|_| (0..4).map(|_| rng.range_i64(-90, 90)).collect())
+                .collect(),
+            (0..3)
+                .map(|_| (0..3).map(|_| rng.range_i64(-90, 90)).collect())
+                .collect(),
+        ],
+        b: vec![
+            (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+            (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+        ],
+        in_bits: 4,
+        w_scales: vec![1.0, 1.0],
+    };
+    let xs: Vec<Vec<i64>> = (0..180)
+        .map(|_| (0..4).map(|_| rng.range_i64(0, 15)).collect())
+        .collect();
+    let plan = ShiftPlan::exact(&q);
+    let ys: Vec<usize> = xs.iter().map(|x| axsum::predict(&q, &plan, x)).collect();
+    (q, xs, ys)
+}
+
+fn sig_of(q: &QuantMlp, xs: &[Vec<i64>]) -> Significance {
+    significance(q, &mean_activations(q, xs))
+}
+
+#[test]
+fn span_tree_merges_pool_worker_spans_under_the_caller() {
+    let _l = lock();
+    obs::set_enabled(true);
+    obs::reset_all();
+    let items: Vec<u64> = (0..64).collect();
+    let out = {
+        let _outer = obs::span("obsit.outer");
+        pool::parallel_map(&items, 4, |&x| {
+            let _s = obs::span("obsit.item");
+            // enough work that the span duration cannot round to zero
+            let mut acc = x;
+            for i in 0..5_000u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            std::hint::black_box(acc)
+        })
+    };
+    obs::set_enabled(false);
+    assert_eq!(out.len(), 64);
+    let rows = obs::span_rows();
+    let find = |p: &str| rows.iter().find(|(k, _)| k == p).map(|(_, s)| s.clone());
+    // deterministic count, nondeterministic-but-positive nanos
+    let item = find("obsit.outer/obsit.item").expect("worker spans nest under the caller");
+    assert_eq!(item.count, 64);
+    assert!(item.total_ns > 0);
+    assert!(item.min_ns <= item.max_ns);
+    assert_eq!(find("obsit.outer").expect("outer span").count, 1);
+    // the worker threads are gone: no orphan `obsit.item` root node
+    assert!(find("obsit.item").is_none());
+}
+
+#[test]
+fn begin_run_windows_counters_without_losing_totals() {
+    let _l = lock();
+    obs::counters::DEDUP_FANOUT.add(4);
+    obs::begin_run();
+    assert_eq!(obs::run_value("dse.dedup_fanout"), 0);
+    obs::counters::DEDUP_FANOUT.add(2);
+    assert_eq!(obs::run_value("dse.dedup_fanout"), 2);
+    assert!(obs::counters::DEDUP_FANOUT.total() >= 6);
+    obs::begin_run();
+    assert_eq!(obs::run_value("dse.dedup_fanout"), 0);
+}
+
+#[test]
+fn write_metrics_emits_the_stable_schema_on_disk() {
+    let _l = lock();
+    obs::set_enabled(true);
+    obs::reset_all();
+    {
+        let _s = obs::span("obsit.write");
+    }
+    obs::gauge_set("obsit.gauge", 1.25);
+    let path = std::env::temp_dir().join(format!("axmlp_obs_test_{}.json", std::process::id()));
+    obs::write_metrics(&path).unwrap();
+    obs::set_enabled(false);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.req_f64("version").unwrap(), 1.0);
+    let named = |arr: &str, key: &str, want: &str| {
+        j.get(arr)
+            .and_then(Json::as_arr)
+            .map(|rows| {
+                rows.iter()
+                    .any(|r| r.get(key).and_then(Json::as_str) == Some(want))
+            })
+            .unwrap_or(false)
+    };
+    assert!(named("spans", "path", "obsit.write"));
+    assert!(named("gauges", "name", "obsit.gauge"));
+    // every registered counter row is present with value and total
+    for (name, _, _) in obs::counter_rows() {
+        assert!(named("counters", "name", name), "missing counter {name}");
+    }
+    for hist in ["dse.eval_point_ns", "stream.flush_ns"] {
+        assert!(named("histograms", "name", hist), "missing histogram {hist}");
+    }
+}
+
+#[test]
+fn sweep_is_bit_identical_with_telemetry_on_and_off() {
+    let _l = lock();
+    let (q, xs, ys) = toy(2023);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let cfg = DseConfig {
+        max_g_levels: 3,
+        power_patterns: 24,
+        threads: 4,
+        verify_circuit: false,
+        max_eval: 0,
+        backend: EvalBackend::BitSlice,
+    };
+    obs::set_enabled(false);
+    let off = dse::sweep(&q, &sig, &data, &lib, &cfg).unwrap();
+    obs::set_enabled(true);
+    obs::reset_all();
+    let on = dse::sweep(&q, &sig, &data, &lib, &cfg).unwrap();
+    obs::set_enabled(false);
+    if let Some((p, field, detail)) = first_divergence(&off, &on) {
+        panic!("telemetry changed sweep results at point {p} ({field}): {detail}");
+    }
+    // and the instrumented run actually recorded its instruments: one
+    // histogram sample per deduped representative (≤ grid points)
+    assert!(obs::span_rows().iter().any(|(p, _)| p == "dse.sweep"));
+    let hists = obs::hist_rows();
+    let eval = hists
+        .iter()
+        .find(|(n, _)| *n == "dse.eval_point_ns")
+        .expect("eval histogram registered");
+    assert!(eval.1.count > 0 && eval.1.count <= off.len() as u64);
+    assert!(eval.1.sum_ns > 0);
+}
