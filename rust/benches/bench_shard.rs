@@ -64,7 +64,7 @@ fn main() {
         shards: 8,
         checkpoint_dir: Some(dir.clone()),
         resume: false,
-        stop_after: None,
+        ..ShardConfig::default()
     };
     sweep_sharded(&q, &sig, &data, &ctx.lib, &cfg, &ck).expect("checkpointed sweep");
     let rc = ShardConfig {

@@ -130,6 +130,16 @@ FLAGS:
   --checkpoint-dir D     (sweep) shard checkpoint root
                          (default results/shard_ckpt)
   --resume               (sweep) skip shards already checkpointed
+  --claim                (sweep) multi-process mode: partition the sweep
+                         with peer processes via per-shard claim files
+                         in the checkpoint dir (leaderless; kill-safe —
+                         expired leases are stolen by live peers)
+  --owner-id ID          (sweep) claimer identity in claim files and
+                         claims.log (default pid<PID>; must be unique
+                         per live claimer)
+  --lease-ms N           (sweep) claim lease duration in ms (default
+                         5000); a claim not renewed for this long is
+                         considered dead and stolen
   --metrics-out FILE     enable telemetry and write a metrics.json
                          snapshot (span tree, counters, histograms);
                          the span tree is also printed on exit

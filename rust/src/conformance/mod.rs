@@ -41,7 +41,10 @@ pub mod sweep;
 pub use diff::{check_case, check_case_all, check_case_pair, shrink, CaseFailure, Shrunk};
 pub use gen::{PlanKind, TopologyRange};
 pub use golden::{GoldenConfig, GoldenResult, GoldenStatus};
-pub use sweep::{check_sweep_case, run_sweep_fuzz, sweep_canary, SweepCaseOutcome, SweepDivergence};
+pub use sweep::{
+    check_sweep_case, claim_canary, run_sweep_fuzz, sweep_canary, SweepCaseOutcome,
+    SweepDivergence,
+};
 
 use crate::util::rng::Rng;
 

@@ -18,7 +18,7 @@
 
 use crate::axsum::{mean_activations, significance, ShiftPlan};
 use crate::conformance::gen::{self, TopologyRange};
-use crate::dse::shard::{first_divergence, sweep_sharded, ShardConfig};
+use crate::dse::shard::{first_divergence, forge_claim, sweep_sharded, ClaimConfig, ShardConfig};
 use crate::dse::{self, DesignEval, DseConfig, EvalBackend, QuantData};
 use crate::pdk::EgtLibrary;
 use crate::util::json::{self, Json};
@@ -237,6 +237,7 @@ pub fn check_sweep_case(
             checkpoint_dir: Some(dir.to_path_buf()),
             resume: false,
             stop_after: Some(1),
+            ..ShardConfig::default()
         };
         // the interrupted pass must refuse to return a partial result
         if sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &interrupted).is_ok() {
@@ -246,7 +247,7 @@ pub fn check_sweep_case(
             shards: case.shards,
             checkpoint_dir: Some(dir.to_path_buf()),
             resume: true,
-            stop_after: None,
+            ..ShardConfig::default()
         };
         let resumed = sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &resumed_cfg)
             .map_err(|e| e.to_string())?;
@@ -256,6 +257,60 @@ pub fn check_sweep_case(
         if let Some(d) = compare_evals(&mono, &resumed.evals, &space, case.shards) {
             return done(Some(d));
         }
+
+        // 3. concurrent claimers: several leaderless workers race the
+        // claim protocol through one shared checkpoint dir (threads
+        // stand in for processes — the protocol is entirely file-based)
+        // and every worker's merged result must match the monolith
+        let claim_dir = PathBuf::from(format!("{}_claim", dir.display()));
+        let _ = std::fs::remove_dir_all(&claim_dir);
+        let n_claimers = 2 + (seed % 2) as usize;
+        let results: Vec<Result<_, String>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_claimers)
+                .map(|i| {
+                    let claim_dir = claim_dir.clone();
+                    let (case, sig, data, lib) = (&case, &sig, &data, &lib);
+                    scope.spawn(move || {
+                        let ccfg = ShardConfig {
+                            shards: case.shards,
+                            checkpoint_dir: Some(claim_dir),
+                            resume: false,
+                            stop_after: None,
+                            claim: Some(ClaimConfig {
+                                owner_id: format!("fuzz-claimer-{i}"),
+                                // skewed leases: slow claimers must still
+                                // respect fast claimers' live heartbeats
+                                lease_ms: 200 + 150 * i as u64,
+                                kill_at: None,
+                            }),
+                        };
+                        sweep_sharded(&case.q, sig, data, lib, &case.cfg, &ccfg)
+                            .map_err(|e| e.to_string())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err("claimer panicked".to_string())))
+                .collect()
+        });
+        let mut evaluated_total = 0;
+        for (i, r) in results.iter().enumerate() {
+            let rep = r.as_ref().map_err(|e| format!("claimer {i}: {e}"))?;
+            evaluated_total += rep.shards_evaluated;
+            if let Some(d) = compare_evals(&mono, &rep.evals, &space, case.shards) {
+                return done(Some(d));
+            }
+        }
+        // every shard was evaluated by at least one claimer (duplicates
+        // are possible under steal races and are benign)
+        if evaluated_total < case.shards {
+            return Err(format!(
+                "{n_claimers} claimers evaluated only {evaluated_total} of {} shards",
+                case.shards
+            ));
+        }
+        let _ = std::fs::remove_dir_all(&claim_dir);
     }
     done(None)
 }
@@ -334,7 +389,7 @@ pub fn sweep_canary(seed: u64) -> Result<SweepDivergence, String> {
             shards: case.shards,
             checkpoint_dir: Some(dir.clone()),
             resume: false,
-            stop_after: None,
+            ..ShardConfig::default()
         };
         sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &scfg).map_err(|e| e.to_string())?;
 
@@ -355,7 +410,7 @@ pub fn sweep_canary(seed: u64) -> Result<SweepDivergence, String> {
             shards: case.shards,
             checkpoint_dir: Some(dir.clone()),
             resume: true,
-            stop_after: None,
+            ..ShardConfig::default()
         };
         let resumed =
             sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &rcfg).map_err(|e| e.to_string())?;
@@ -376,6 +431,88 @@ pub fn sweep_canary(seed: u64) -> Result<SweepDivergence, String> {
             ));
         }
         Ok(d)
+    })();
+    let _ = std::fs::remove_dir_all(&dir);
+    run
+}
+
+/// Fault-injection self-test for the claim protocol: forge a dead
+/// peer's claim (ancient heartbeat, lease sequence 7) on shard 0, then
+/// run a live claimer against the directory. The claimer must detect
+/// the expired lease, steal it under a strictly larger sequence, finish
+/// the sweep bit-identical to the monolith, and leave a `claims.log`
+/// audit trail recording the steal. A claim protocol that cannot
+/// reclaim a dead peer's shard cannot certify a multi-process sweep.
+pub fn claim_canary(seed: u64) -> Result<String, String> {
+    let case = build_case(seed ^ 0xC1_A1_33);
+    let n_train = case.xs.len() * 3 / 4;
+    let data = QuantData {
+        x_train: &case.xs[..n_train],
+        y_train: &case.ys[..n_train],
+        x_test: &case.xs[n_train..],
+        y_test: &case.ys[n_train..],
+    };
+    let sig = significance(&case.q, &mean_activations(&case.q, data.x_train));
+    let lib = EgtLibrary::egt_v1();
+    let space = dse::sweep_space(&case.q, &sig, &case.cfg);
+    let mono = dse::sweep(&case.q, &sig, &data, &lib, &case.cfg)?;
+
+    let dir = scratch_dir(seed ^ 0xC1_A1_33);
+    let _ = std::fs::remove_dir_all(&dir);
+    let run = (|| -> Result<String, String> {
+        // materialize the manifest without evaluating anything
+        // (stop_after 0 interrupts before the first claim)
+        let init = ShardConfig {
+            shards: case.shards,
+            checkpoint_dir: Some(dir.clone()),
+            stop_after: Some(0),
+            claim: Some(ClaimConfig {
+                owner_id: "canary-init".to_string(),
+                lease_ms: 1000,
+                kill_at: None,
+            }),
+            ..ShardConfig::default()
+        };
+        if sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &init).is_ok() {
+            return Err("stop_after(0) claimer returned a full result".to_string());
+        }
+        // a dead peer's claim: heartbeat from the epoch, sequence 7
+        forge_claim(&dir, 0, "canary-dead-peer", 7, 1).map_err(|e| e.to_string())?;
+
+        let ccfg = ShardConfig {
+            shards: case.shards,
+            checkpoint_dir: Some(dir.clone()),
+            claim: Some(ClaimConfig {
+                owner_id: "canary-live".to_string(),
+                lease_ms: 100,
+                kill_at: None,
+            }),
+            ..ShardConfig::default()
+        };
+        let report =
+            sweep_sharded(&case.q, &sig, &data, &lib, &case.cfg, &ccfg).map_err(|e| e.to_string())?;
+        if report.shards_stolen < 1 {
+            return Err("the forged stale lease was not stolen".to_string());
+        }
+        if let Some(d) = compare_evals(&mono, &report.evals, &space, case.shards) {
+            return Err(format!("claimed sweep diverged: {}", d.summary()));
+        }
+        // the audit trail must record the steal under a bumped sequence
+        let log = std::fs::read_to_string(dir.join("claims.log")).map_err(|e| e.to_string())?;
+        let stole = log.lines().filter_map(|l| Json::parse(l).ok()).any(|j| {
+            j.req_str("event").ok() == Some("steal")
+                && j.req_usize("shard").ok() == Some(0)
+                && j.req_usize("seq").ok() == Some(8)
+        });
+        if !stole {
+            return Err(format!(
+                "claims.log has no steal of shard 0 at sequence 8:\n{log}"
+            ));
+        }
+        Ok(format!(
+            "stole {} stale lease(s); {} shards evaluated, parity with monolithic sweep held",
+            report.shards_stolen, report.shards_evaluated
+        ))
     })();
     let _ = std::fs::remove_dir_all(&dir);
     run
@@ -420,5 +557,11 @@ mod tests {
         let d = sweep_canary(2023).expect("canary must fire");
         assert_eq!(d.field, "acc_train");
         assert!(d.summary().contains("shard"));
+    }
+
+    #[test]
+    fn claim_canary_steals_the_forged_stale_lease() {
+        let summary = claim_canary(2023).expect("claim canary must pass");
+        assert!(summary.contains("stole"), "summary: {summary}");
     }
 }

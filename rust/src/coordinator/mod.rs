@@ -55,6 +55,14 @@ pub struct ShardStrategy {
     pub checkpoint_dir: Option<String>,
     /// Skip shards already checkpointed under `checkpoint_dir`.
     pub resume: bool,
+    /// Multi-process claiming: coordinate with peer `repro` processes
+    /// through per-shard claim files under `checkpoint_dir` (which
+    /// becomes mandatory). See `dse::shard::ClaimConfig`.
+    pub claim: bool,
+    /// Claimer identity (`None` = the per-machine `pid<PID>` default).
+    pub owner_id: Option<String>,
+    /// Claim lease duration in milliseconds.
+    pub lease_ms: u64,
 }
 
 impl Default for ShardStrategy {
@@ -63,6 +71,9 @@ impl Default for ShardStrategy {
             shards: 4,
             checkpoint_dir: None,
             resume: false,
+            claim: false,
+            owner_id: None,
+            lease_ms: 5000,
         }
     }
 }
@@ -289,6 +300,14 @@ pub fn run_dataset(
                     }),
                     resume: sh.resume,
                     stop_after: None,
+                    claim: sh.claim.then(|| dse::shard::ClaimConfig {
+                        owner_id: sh
+                            .owner_id
+                            .clone()
+                            .unwrap_or_else(|| format!("pid{}", std::process::id())),
+                        lease_ms: sh.lease_ms,
+                        kill_at: None,
+                    }),
                 };
                 dse::shard::sweep_sharded(qr, &sig, &data, &ctx.lib, &cfg.dse, &scfg)?.evals
             }

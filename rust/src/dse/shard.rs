@@ -30,6 +30,29 @@
 //! [`ShardError`] naming the file — never a panic, never a silent
 //! re-evaluation against the wrong space.
 //!
+//! ## Distributed claiming
+//!
+//! With [`ShardConfig::claim`] set, N independently launched processes
+//! partition one sweep through the same checkpoint directory without a
+//! leader: each unfinished shard is guarded by an atomic claim file
+//! (`shard_NNNN.claim`, holding the owner id, a monotone lease
+//! sequence, and a heartbeat renewed by a background tick), published
+//! with the create-exclusive [`write_exclusive`](json::write_exclusive)
+//! so exactly one racer wins. A claim whose heartbeat is older than
+//! [`ClaimConfig::lease_ms`] has expired and is reclaimed by
+//! work-stealing under a strictly larger sequence number, so a killed
+//! or wedged worker's shards finish elsewhere. Correctness never
+//! depends on the claims: every process derives the identical partition
+//! from the fingerprinted space, and whichever process evaluates shard
+//! `s` writes bit-identical bytes through an atomic rename, so even a
+//! double acquisition under a rename race only duplicates work — it can
+//! never change the merged result (the full argument is in
+//! ARCHITECTURE.md §Distributed claiming). A lease sequence observed to
+//! go *backwards* means the claim file was forged or rolled back and is
+//! refused as a contextful [`ShardError::StaleLease`]. Every claim,
+//! steal, release, and loss is appended to a `claims.log` audit trail
+//! in the checkpoint dir.
+//!
 //! ## Front merging
 //!
 //! [`merge_fronts`] computes the global Pareto front from per-shard
@@ -53,6 +76,9 @@ use crate::util::pool::{chunk_ranges, parallel_map_with};
 use std::hash::Hasher;
 use std::ops::Range;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Checkpoint format version (bump on any incompatible layout change).
 const CHECKPOINT_VERSION: u64 = 1;
@@ -78,6 +104,10 @@ pub struct ShardConfig {
     /// budgeted-run / kill-mid-sweep hook (tests use it to simulate
     /// container death deterministically).
     pub stop_after: Option<usize>,
+    /// Multi-process mode: coordinate with peer processes through
+    /// per-shard claim files in `checkpoint_dir` (which becomes
+    /// mandatory). `None` keeps the single-process behaviour.
+    pub claim: Option<ClaimConfig>,
 }
 
 impl Default for ShardConfig {
@@ -87,26 +117,115 @@ impl Default for ShardConfig {
             checkpoint_dir: None,
             resume: false,
             stop_after: None,
+            claim: None,
         }
     }
 }
 
+/// Multi-process claiming parameters ([`ShardConfig::claim`]).
+#[derive(Clone, Debug)]
+pub struct ClaimConfig {
+    /// Identity stamped into claim files and the `claims.log` audit
+    /// trail. Every live claimer needs a unique id — two live claimers
+    /// sharing one produce indistinguishable claim files and are
+    /// refused as a [`ShardError::ClaimRace`]. The default, `pid<PID>`,
+    /// is unique per machine; give cross-machine claimers explicit
+    /// `--owner-id`s.
+    pub owner_id: String,
+    /// Lease duration in milliseconds: a claim whose heartbeat is older
+    /// than this has expired and gets stolen. The background tick
+    /// renews at a third of this, so wedged — not just dead — workers
+    /// lose their shards too. Must be ≥ 1.
+    pub lease_ms: u64,
+    /// Fault injection for the claim-protocol tests: abort with an
+    /// "interrupted" [`ShardError`] at a chosen write site, leaving
+    /// every file exactly as a `kill -9` there would.
+    pub kill_at: Option<KillSite>,
+}
+
+impl Default for ClaimConfig {
+    fn default() -> Self {
+        ClaimConfig {
+            owner_id: format!("pid{}", std::process::id()),
+            lease_ms: 5000,
+            kill_at: None,
+        }
+    }
+}
+
+/// Crash sites [`ClaimConfig::kill_at`] can simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillSite {
+    /// Before the checkpoint dir is opened: no manifest, no claims.
+    PreManifest,
+    /// After the first claim is acquired, before evaluating: a live
+    /// claim file is left behind to go stale.
+    PostClaim,
+    /// After evaluating the first claimed shard, before its checkpoint
+    /// is written: the work is lost and the claim left to go stale.
+    MidShard,
+}
+
 /// Contextful sharded-sweep failure (checkpoint corruption, space
-/// mismatch, I/O, interruption). Implements `std::error::Error`, so `?`
-/// converts it into `anyhow::Error` at the coordinator/CLI boundary.
+/// mismatch, I/O, interruption, claim-protocol violations). Implements
+/// `std::error::Error`, so `?` converts it into `anyhow::Error` at the
+/// coordinator/CLI boundary.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct ShardError(pub String);
+pub enum ShardError {
+    /// Checkpoint corruption, space mismatch, configuration or I/O.
+    Msg(String),
+    /// The run stopped early on purpose: the `stop_after` budget ran
+    /// out, or a `kill_at` fault-injection site fired.
+    Interrupted { evaluated: usize, detail: String },
+    /// Two live claimers are using the same owner id — their claim
+    /// files are indistinguishable, so neither can safely proceed.
+    ClaimRace {
+        shard: usize,
+        owner: String,
+        detail: String,
+    },
+    /// A shard's lease sequence went backwards: the claim file was
+    /// forged or rolled back (e.g. a restored backup), so the
+    /// checkpoint dir can no longer be trusted.
+    StaleLease {
+        shard: usize,
+        owner: String,
+        detail: String,
+    },
+}
 
 impl std::fmt::Display for ShardError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "sharded sweep: {}", self.0)
+        match self {
+            ShardError::Msg(m) => write!(f, "sharded sweep: {m}"),
+            ShardError::Interrupted { evaluated, detail } => write!(
+                f,
+                "sharded sweep: interrupted after {evaluated} newly evaluated shards {detail}"
+            ),
+            ShardError::ClaimRace {
+                shard,
+                owner,
+                detail,
+            } => write!(
+                f,
+                "sharded sweep: claim race on shard {shard}: owner id `{owner}` {detail}"
+            ),
+            ShardError::StaleLease {
+                shard,
+                owner,
+                detail,
+            } => write!(
+                f,
+                "sharded sweep: stale lease on shard {shard} (owner `{owner}`): {detail}"
+            ),
+        }
     }
 }
 
 impl std::error::Error for ShardError {}
 
 fn err(msg: impl std::fmt::Display) -> ShardError {
-    ShardError(msg.to_string())
+    ShardError::Msg(msg.to_string())
 }
 
 /// Outcome of a sharded sweep.
@@ -121,8 +240,12 @@ pub struct ShardReport {
     pub shards_total: usize,
     /// Shards evaluated by this run.
     pub shards_evaluated: usize,
-    /// Shards loaded verbatim from the checkpoint.
+    /// Shards loaded verbatim from the checkpoint (in claim mode this
+    /// includes shards finished by live peers).
     pub shards_resumed: usize,
+    /// Shards this run acquired by stealing an expired peer lease
+    /// (always 0 outside claim mode).
+    pub shards_stolen: usize,
     /// Dedup representatives (points actually synthesized/simulated).
     pub reps_total: usize,
     /// Grid points after fan-out (`evals.len()`).
@@ -363,19 +486,253 @@ fn eval_from_json(j: &Json) -> Result<DesignEval, String> {
 }
 
 /// Shard checkpoint files currently present in `dir`, sorted by name.
+/// Only exact `shard_<digits>.json` names count: claim files, tmp
+/// staging files and anything else a crashed writer might strand are
+/// never pattern-matched as checkpoints.
 fn existing_shard_files(dir: &Path) -> Vec<PathBuf> {
     let mut out = Vec::new();
     if let Ok(rd) = std::fs::read_dir(dir) {
         for entry in rd.flatten() {
             let name = entry.file_name();
             let name = name.to_string_lossy();
-            if name.starts_with("shard_") && name.ends_with(".json") {
+            let mid = name
+                .strip_prefix("shard_")
+                .and_then(|rest| rest.strip_suffix(".json"));
+            if mid.is_some_and(|m| !m.is_empty() && m.bytes().all(|b| b.is_ascii_digit())) {
                 out.push(entry.path());
             }
         }
     }
     out.sort();
     out
+}
+
+/// Reap orphan `*.tmp` staging files left behind by writers killed
+/// inside `write_atomic` / `write_exclusive`. Files younger than
+/// `min_age` are spared: in claim mode a live peer may be mid-write
+/// (single-process opens pass `Duration::ZERO` and reap everything).
+fn reap_stale_tmp(dir: &Path, min_age: Duration) {
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            if !entry.file_name().to_string_lossy().ends_with(".tmp") {
+                continue;
+            }
+            let old_enough = entry
+                .metadata()
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .map_or(true, |age| age >= min_age);
+            if old_enough {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Claim files: leaderless multi-process shard ownership.
+// ---------------------------------------------------------------------------
+
+/// Milliseconds since the Unix epoch — the clock claim heartbeats are
+/// stamped with. Wall-clock skew between claimers only stretches or
+/// shrinks lease patience; it can never corrupt results (see the
+/// determinism argument in the module docs).
+fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// On-disk claim record (`shard_NNNN.claim`): who is evaluating the
+/// shard, under which monotone lease sequence, last renewed when.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct ClaimFile {
+    owner: String,
+    seq: u64,
+    heartbeat_ms: u64,
+}
+
+impl ClaimFile {
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("owner", json::s(&self.owner)),
+            ("seq", Json::Num(self.seq as f64)),
+            ("heartbeat_ms", Json::Num(self.heartbeat_ms as f64)),
+        ])
+    }
+}
+
+/// What a shard's claim file currently says, with corruption explicit
+/// so the caller can tell "no claim" / "unreadable claim" (both
+/// claimable) apart from a live lease.
+enum ClaimState {
+    Missing,
+    Corrupt,
+    Valid(ClaimFile),
+}
+
+fn read_claim(path: &Path) -> ClaimState {
+    let raw = match std::fs::read_to_string(path) {
+        Ok(r) => r,
+        Err(_) => return ClaimState::Missing,
+    };
+    let parsed = Json::parse(&raw).ok().and_then(|j| {
+        Some(ClaimFile {
+            owner: j.req_str("owner").ok()?.to_string(),
+            seq: j.req_usize("seq").ok()? as u64,
+            heartbeat_ms: j.req_f64("heartbeat_ms").ok()? as u64,
+        })
+    });
+    match parsed {
+        Some(c) => ClaimState::Valid(c),
+        None => ClaimState::Corrupt,
+    }
+}
+
+/// Append one event to the `claims.log` audit trail: JSONL, written
+/// with a single `O_APPEND` write so concurrent claimers interleave
+/// whole lines. Best-effort — auditing never fails the sweep.
+fn audit(dir: &Path, event: &str, shard: usize, owner: &str, seq: u64) {
+    use std::io::Write as _;
+    let line = json::obj(vec![
+        ("ts_ms", Json::Num(now_ms() as f64)),
+        ("event", json::s(event)),
+        ("shard", Json::Num(shard as f64)),
+        ("owner", json::s(owner)),
+        ("seq", Json::Num(seq as f64)),
+    ])
+    .dump();
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join("claims.log"))
+    {
+        let _ = f.write_all(format!("{line}\n").as_bytes());
+    }
+}
+
+/// Test and canary hook: write an arbitrary claim file, bypassing the
+/// claim protocol. Simulates a crashed peer (ancient heartbeat that a
+/// live claimer must steal) or a forged / rolled-back lease sequence
+/// that the protocol must detect as a [`ShardError::StaleLease`].
+pub fn forge_claim(
+    dir: &Path,
+    shard: usize,
+    owner: &str,
+    seq: u64,
+    heartbeat_ms: u64,
+) -> std::io::Result<()> {
+    let claim = ClaimFile {
+        owner: owner.to_string(),
+        seq,
+        heartbeat_ms,
+    };
+    json::write_atomic(
+        &dir.join(format!("shard_{shard:04}.claim")),
+        &claim.to_json().pretty(),
+    )
+}
+
+/// Holds one shard's lease: a background tick renews the heartbeat
+/// every `lease_ms / 3` until the guard is dropped (release) or
+/// [`abandon`](LeaseGuard::abandon)ed (simulated crash — the claim file
+/// is left on disk to go stale so a peer must steal it).
+struct LeaseGuard {
+    stop: Arc<AtomicBool>,
+    tick: Option<std::thread::JoinHandle<()>>,
+    dir: PathBuf,
+    path: PathBuf,
+    shard: usize,
+    mine: ClaimFile,
+    abandoned: bool,
+}
+
+impl LeaseGuard {
+    fn start(
+        dir: PathBuf,
+        path: PathBuf,
+        shard: usize,
+        mine: ClaimFile,
+        lease_ms: u64,
+    ) -> LeaseGuard {
+        let stop = Arc::new(AtomicBool::new(false));
+        let tick = {
+            let stop = Arc::clone(&stop);
+            let path = path.clone();
+            let mine = mine.clone();
+            std::thread::spawn(move || {
+                let period = Duration::from_millis((lease_ms / 3).max(5));
+                let slice = Duration::from_millis(2);
+                'renew: loop {
+                    let mut waited = Duration::ZERO;
+                    while waited < period {
+                        if stop.load(Ordering::Relaxed) {
+                            break 'renew;
+                        }
+                        std::thread::sleep(slice);
+                        waited += slice;
+                    }
+                    match read_claim(&path) {
+                        ClaimState::Valid(c) if c.owner == mine.owner && c.seq == mine.seq => {
+                            let renewed = ClaimFile {
+                                heartbeat_ms: now_ms(),
+                                ..c
+                            };
+                            let _ = json::write_atomic(&path, &renewed.to_json().pretty());
+                        }
+                        // lease stolen by a peer, or already released:
+                        // stop renewing (the evaluation itself stays
+                        // correct either way — see the module docs)
+                        _ => break 'renew,
+                    }
+                }
+            })
+        };
+        LeaseGuard {
+            stop,
+            tick: Some(tick),
+            dir,
+            path,
+            shard,
+            mine,
+            abandoned: false,
+        }
+    }
+
+    /// Simulated crash: stop the tick but leave the claim file on disk
+    /// with its last heartbeat, exactly as `kill -9` would.
+    fn abandon(mut self) {
+        self.abandoned = true;
+    }
+}
+
+impl Drop for LeaseGuard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.tick.take() {
+            let _ = t.join();
+        }
+        if self.abandoned {
+            return;
+        }
+        match read_claim(&self.path) {
+            ClaimState::Valid(c) if c.owner == self.mine.owner && c.seq == self.mine.seq => {
+                let _ = std::fs::remove_file(&self.path);
+                audit(&self.dir, "release", self.shard, &self.mine.owner, self.mine.seq);
+            }
+            _ => audit(&self.dir, "lost", self.shard, &self.mine.owner, self.mine.seq),
+        }
+    }
+}
+
+/// One round of the claim state machine for one shard.
+enum ClaimOutcome {
+    /// We hold the lease until the guard drops.
+    Acquired { guard: LeaseGuard, stolen: bool },
+    /// A live peer holds the lease — poll again later.
+    Held,
 }
 
 /// An open checkpoint directory bound to one space fingerprint.
@@ -393,10 +750,104 @@ impl Checkpoint {
         self.dir.join(format!("shard_{s:04}.json"))
     }
 
+    fn claim_path(&self, s: usize) -> PathBuf {
+        self.dir.join(format!("shard_{s:04}.claim"))
+    }
+
+    /// Validate an existing manifest against the freshly derived space:
+    /// version, partition shape, and fingerprint must all match.
+    fn validate_manifest(
+        mpath: &Path,
+        fingerprint: u64,
+        n_shards: usize,
+        n_reps: usize,
+        n_points: usize,
+    ) -> Result<(), ShardError> {
+        let raw = std::fs::read_to_string(mpath)
+            .map_err(|e| err(format!("cannot read manifest {}: {e}", mpath.display())))?;
+        let m = Json::parse(&raw).map_err(|e| {
+            err(format!(
+                "corrupted manifest {}: {e} — delete the checkpoint dir to start over",
+                mpath.display()
+            ))
+        })?;
+        let check = |key: &str, want: u64| -> Result<(), ShardError> {
+            let got = m
+                .req(key)
+                .and_then(|v| {
+                    v.as_f64()
+                        .ok_or_else(|| json::JsonError(format!("key `{key}` not a number")))
+                })
+                .map_err(|e| err(format!("corrupted manifest {}: {e}", mpath.display())))?
+                as u64;
+            if got != want {
+                return Err(err(format!(
+                    "manifest {} does not match this sweep ({key}: checkpoint has {got}, \
+                     current space needs {want}) — wrong dataset/config/checkpoint-dir?",
+                    mpath.display()
+                )));
+            }
+            Ok(())
+        };
+        check("version", CHECKPOINT_VERSION)?;
+        check("shards", n_shards as u64)?;
+        check("reps", n_reps as u64)?;
+        check("points", n_points as u64)?;
+        let fp = m
+            .req_str("fingerprint")
+            .map_err(|e| err(format!("corrupted manifest {}: {e}", mpath.display())))?;
+        let want = format!("{fingerprint:016x}");
+        if fp != want {
+            return Err(err(format!(
+                "manifest {} fingerprint {fp} does not match this sweep's {want} — the \
+                 checkpoint was written for a different model/stimulus/backend",
+                mpath.display()
+            )));
+        }
+        Ok(())
+    }
+
+    fn manifest_body(
+        fingerprint: u64,
+        ranges: &[Range<usize>],
+        n_reps: usize,
+        n_points: usize,
+        backend: &str,
+    ) -> String {
+        json::obj(vec![
+            ("version", Json::Num(CHECKPOINT_VERSION as f64)),
+            ("fingerprint", json::s(&format!("{fingerprint:016x}"))),
+            ("backend", json::s(backend)),
+            ("shards", Json::Num(ranges.len() as f64)),
+            ("reps", Json::Num(n_reps as f64)),
+            ("points", Json::Num(n_points as f64)),
+            (
+                "ranges",
+                Json::Arr(
+                    ranges
+                        .iter()
+                        .map(|r| {
+                            Json::Arr(vec![
+                                Json::Num(r.start as f64),
+                                Json::Num(r.end as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .pretty()
+    }
+
     /// Open (and validate, on resume) or initialize (fresh run) the
-    /// checkpoint directory. A fresh run rewrites the manifest and
-    /// removes stale shard files so a later resume can only ever see
-    /// shards of the current space.
+    /// checkpoint directory. A fresh single-process run rewrites the
+    /// manifest and removes stale shard files so a later resume can
+    /// only ever see shards of the current space. In claim mode the
+    /// first claimer in publishes the manifest with a create-exclusive
+    /// write, every later (or race-losing) claimer validates it, and
+    /// existing shard files are never deleted — they are peers' work,
+    /// and `load_shard` validates each against the fingerprint before
+    /// trusting it.
     fn open(
         dir: &Path,
         fingerprint: u64,
@@ -405,56 +856,59 @@ impl Checkpoint {
         n_points: usize,
         backend: &str,
         resume: bool,
+        claim: Option<&ClaimConfig>,
     ) -> Result<Checkpoint, ShardError> {
         std::fs::create_dir_all(dir)
             .map_err(|e| err(format!("cannot create checkpoint dir {}: {e}", dir.display())))?;
+        // orphan `*.tmp` staging files from writers killed mid-write
+        // must neither accumulate forever nor ever be read as
+        // checkpoints: single-process opens reap them all, claim mode
+        // spares anything a live peer could still be renaming
+        let min_age = match claim {
+            Some(cc) => Duration::from_millis(cc.lease_ms.saturating_mul(2)),
+            None => Duration::ZERO,
+        };
+        reap_stale_tmp(dir, min_age);
         let ck = Checkpoint {
             dir: dir.to_path_buf(),
             fingerprint,
         };
         let mpath = Self::manifest_path(dir);
-        if resume && mpath.exists() {
-            let raw = std::fs::read_to_string(&mpath)
-                .map_err(|e| err(format!("cannot read manifest {}: {e}", mpath.display())))?;
-            let m = Json::parse(&raw).map_err(|e| {
-                err(format!(
-                    "corrupted manifest {}: {e} — delete the checkpoint dir to start over",
-                    mpath.display()
-                ))
-            })?;
-            let check = |key: &str, want: u64| -> Result<(), ShardError> {
-                let got = m
-                    .req(key)
-                    .and_then(|v| {
-                        v.as_f64()
-                            .ok_or_else(|| json::JsonError(format!("key `{key}` not a number")))
-                    })
-                    .map_err(|e| err(format!("corrupted manifest {}: {e}", mpath.display())))?
-                    as u64;
-                if got != want {
-                    return Err(err(format!(
-                        "manifest {} does not match this sweep ({key}: checkpoint has {got}, \
-                         current space needs {want}) — wrong dataset/config/checkpoint-dir?",
-                        mpath.display()
-                    )));
-                }
-                Ok(())
-            };
-            check("version", CHECKPOINT_VERSION)?;
-            check("shards", ranges.len() as u64)?;
-            check("reps", n_reps as u64)?;
-            check("points", n_points as u64)?;
-            let fp = m
-                .req_str("fingerprint")
-                .map_err(|e| err(format!("corrupted manifest {}: {e}", mpath.display())))?;
-            let want = format!("{fingerprint:016x}");
-            if fp != want {
+        if claim.is_some() {
+            if mpath.exists() {
+                Self::validate_manifest(&mpath, fingerprint, ranges.len(), n_reps, n_points)?;
+                return Ok(ck);
+            }
+            // like a manifest-less resume: shard checkpoints with no
+            // manifest mean the dir lost state — refuse to guess
+            let orphans = existing_shard_files(dir);
+            if !orphans.is_empty() {
                 return Err(err(format!(
-                    "manifest {} fingerprint {fp} does not match this sweep's {want} — the \
-                     checkpoint was written for a different model/stimulus/backend",
-                    mpath.display()
+                    "{} has no manifest.json while {} shard checkpoint(s) exist (first: {}) — \
+                     restore the manifest, or delete the directory to start over",
+                    dir.display(),
+                    orphans.len(),
+                    orphans[0].display()
                 )));
             }
+            let body = Self::manifest_body(fingerprint, ranges, n_reps, n_points, backend);
+            match json::write_exclusive(&mpath, &body) {
+                Ok(true) => {}
+                // lost the create race: validate the winner's manifest
+                Ok(false) => {
+                    Self::validate_manifest(&mpath, fingerprint, ranges.len(), n_reps, n_points)?
+                }
+                Err(e) => {
+                    return Err(err(format!(
+                        "cannot write manifest {}: {e}",
+                        mpath.display()
+                    )))
+                }
+            }
+            return Ok(ck);
+        }
+        if resume && mpath.exists() {
+            Self::validate_manifest(&mpath, fingerprint, ranges.len(), n_reps, n_points)?;
             return Ok(ck);
         }
         // a manifest-less resume must not silently destroy surviving
@@ -478,31 +932,118 @@ impl Checkpoint {
         for p in existing_shard_files(dir) {
             let _ = std::fs::remove_file(p);
         }
-        let manifest = json::obj(vec![
-            ("version", Json::Num(CHECKPOINT_VERSION as f64)),
-            ("fingerprint", json::s(&format!("{fingerprint:016x}"))),
-            ("backend", json::s(backend)),
-            ("shards", Json::Num(ranges.len() as f64)),
-            ("reps", Json::Num(n_reps as f64)),
-            ("points", Json::Num(n_points as f64)),
-            (
-                "ranges",
-                Json::Arr(
-                    ranges
-                        .iter()
-                        .map(|r| {
-                            Json::Arr(vec![
-                                Json::Num(r.start as f64),
-                                Json::Num(r.end as f64),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ]);
-        json::write_atomic(&mpath, &manifest.pretty())
-            .map_err(|e| err(format!("cannot write manifest {}: {e}", mpath.display())))?;
+        json::write_atomic(
+            &mpath,
+            &Self::manifest_body(fingerprint, ranges, n_reps, n_points, backend),
+        )
+        .map_err(|e| err(format!("cannot write manifest {}: {e}", mpath.display())))?;
         Ok(ck)
+    }
+
+    /// One step of the claim state machine for shard `s`. `seen_seq`
+    /// tracks the highest lease sequence this process has observed per
+    /// shard: sequences only ever grow (claims bump past the previous
+    /// holder, renewals keep theirs), so a regression is a forged or
+    /// rolled-back claim and is refused as [`ShardError::StaleLease`].
+    fn try_claim(
+        &self,
+        s: usize,
+        cc: &ClaimConfig,
+        seen_seq: &mut [u64],
+    ) -> Result<ClaimOutcome, ShardError> {
+        let path = self.claim_path(s);
+        let prev_seq = match read_claim(&path) {
+            ClaimState::Missing => {
+                // unclaimed: publish create-exclusive — of N concurrent
+                // racers exactly one hard-link wins
+                let mine = ClaimFile {
+                    owner: cc.owner_id.clone(),
+                    seq: seen_seq[s] + 1,
+                    heartbeat_ms: now_ms(),
+                };
+                return match json::write_exclusive(&path, &mine.to_json().pretty()) {
+                    Ok(true) => {
+                        seen_seq[s] = mine.seq;
+                        crate::obs::counters::SHARD_CLAIMED.incr();
+                        audit(&self.dir, "claim", s, &mine.owner, mine.seq);
+                        Ok(ClaimOutcome::Acquired {
+                            guard: LeaseGuard::start(
+                                self.dir.clone(),
+                                path,
+                                s,
+                                mine,
+                                cc.lease_ms,
+                            ),
+                            stolen: false,
+                        })
+                    }
+                    // lost the create race; the winner is live
+                    Ok(false) => Ok(ClaimOutcome::Held),
+                    Err(e) => Err(err(format!("cannot write claim {}: {e}", path.display()))),
+                };
+            }
+            // an unreadable claim cannot be a live lease: treat it as
+            // instantly expired and steal over it
+            ClaimState::Corrupt => seen_seq[s],
+            ClaimState::Valid(c) => {
+                if c.seq < seen_seq[s] {
+                    return Err(ShardError::StaleLease {
+                        shard: s,
+                        owner: c.owner,
+                        detail: format!(
+                            "lease sequence went backwards ({} after {}) — the claim file was \
+                             forged or rolled back; refusing to trust this checkpoint dir",
+                            c.seq, seen_seq[s]
+                        ),
+                    });
+                }
+                seen_seq[s] = c.seq;
+                let age_ms = now_ms().saturating_sub(c.heartbeat_ms);
+                if age_ms <= cc.lease_ms {
+                    if c.owner == cc.owner_id {
+                        return Err(ShardError::ClaimRace {
+                            shard: s,
+                            owner: c.owner,
+                            detail: "is held live by a peer with our id — every claimer needs \
+                                     a unique --owner-id"
+                                .to_string(),
+                        });
+                    }
+                    return Ok(ClaimOutcome::Held);
+                }
+                c.seq
+            }
+        };
+        // expired (or corrupt) lease: steal under a strictly larger
+        // sequence, then read back. If a rival stealer's rename landed
+        // after ours we yield; a missed detection here only duplicates
+        // work, never changes results (shard bytes are deterministic
+        // and the shard write is an atomic rename).
+        crate::obs::counters::SHARD_LEASE_EXPIRED.incr();
+        let mine = ClaimFile {
+            owner: cc.owner_id.clone(),
+            seq: prev_seq.max(seen_seq[s]) + 1,
+            heartbeat_ms: now_ms(),
+        };
+        json::write_atomic(&path, &mine.to_json().pretty())
+            .map_err(|e| err(format!("cannot steal claim {}: {e}", path.display())))?;
+        seen_seq[s] = mine.seq;
+        match read_claim(&path) {
+            ClaimState::Valid(back) if back == mine => {
+                crate::obs::counters::SHARD_CLAIMED.incr();
+                crate::obs::counters::SHARD_STOLEN.incr();
+                audit(&self.dir, "steal", s, &mine.owner, mine.seq);
+                Ok(ClaimOutcome::Acquired {
+                    guard: LeaseGuard::start(self.dir.clone(), path, s, mine, cc.lease_ms),
+                    stolen: true,
+                })
+            }
+            ClaimState::Valid(back) => {
+                seen_seq[s] = seen_seq[s].max(back.seq);
+                Ok(ClaimOutcome::Held)
+            }
+            _ => Ok(ClaimOutcome::Held),
+        }
     }
 
     /// Load shard `s` if its checkpoint file exists. Validates the
@@ -634,6 +1175,25 @@ pub fn sweep_sharded(
     if scfg.shards == 0 {
         return Err(err("shard count must be at least 1"));
     }
+    if let Some(cc) = &scfg.claim {
+        if scfg.checkpoint_dir.is_none() {
+            return Err(err(
+                "claim mode needs a checkpoint dir — the claim files and shard checkpoints \
+                 are the coordination substrate",
+            ));
+        }
+        if cc.lease_ms == 0 {
+            return Err(err("claim lease must be at least 1 ms"));
+        }
+        if cc.kill_at == Some(KillSite::PreManifest) {
+            return Err(ShardError::Interrupted {
+                evaluated: 0,
+                detail: "(kill_at PreManifest): simulated crash before the checkpoint dir \
+                         was opened"
+                    .to_string(),
+            });
+        }
+    }
     let _span = crate::obs::span("dse.sweep_sharded");
     let space = sweep_space(q, sig, cfg);
     let stim = SweepStimuli::prepare(q, data, cfg).map_err(err)?;
@@ -648,13 +1208,16 @@ pub fn sweep_sharded(
             space.points.len(),
             cfg.backend.name(),
             scfg.resume,
+            scfg.claim.as_ref(),
         )?),
         None => None,
     };
 
     let mut shard_evals: Vec<Option<Vec<DesignEval>>> = (0..ranges.len()).map(|_| None).collect();
     let mut resumed = 0;
-    if scfg.resume {
+    // in claim mode every finished shard on disk is a resume source,
+    // whether written by us in an earlier life or by a live peer
+    if scfg.resume || scfg.claim.is_some() {
         if let Some(ck) = &ckpt {
             for (s, range) in ranges.iter().enumerate() {
                 if let Some(evals) = ck.load_shard(s, range, &space)? {
@@ -666,27 +1229,13 @@ pub fn sweep_sharded(
         }
     }
 
-    let mut evaluated = 0;
-    for (s, range) in ranges.iter().enumerate() {
-        if shard_evals[s].is_some() {
-            continue;
-        }
-        if scfg.stop_after.is_some_and(|cap| evaluated >= cap) {
-            let fate = if ckpt.is_some() {
-                format!(
-                    "{} of {} shards are checkpointed — resume to continue",
-                    resumed + evaluated,
-                    ranges.len()
-                )
-            } else {
-                "no checkpoint dir is set, so the evaluated shards are discarded".to_string()
-            };
-            return Err(err(format!(
-                "interrupted after {evaluated} newly evaluated shards (stop_after): {fate}"
-            )));
-        }
-        // per-shard sub-span (`dse.sweep_sharded/shardNNNN`) plus the
-        // wall-clock eval time recorded into the shard's checkpoint file
+    // evaluate one shard live: per-shard sub-span
+    // (`dse.sweep_sharded/shardNNNN`) plus the wall-clock eval time
+    // recorded into the shard's checkpoint file. Note the latency
+    // histogram (`dse.eval_point_ns`) only ever records inside
+    // `evaluate_design_packed` — resumed/loaded shards never re-feed
+    // their persisted timings (pinned by `tests/obs_test.rs`).
+    let eval_shard = |s: usize, range: &Range<usize>| -> Result<(Vec<DesignEval>, u64), ShardError> {
         let shard_span = crate::obs::span(&format!("shard{s:04}"));
         let t0 = std::time::Instant::now();
         let shard_reps = &space.reps[range.clone()];
@@ -711,11 +1260,111 @@ pub fn sweep_sharded(
         let eval_ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
         drop(shard_span);
         crate::obs::counters::SHARD_EVALUATED.add(evals.len() as u64);
-        if let Some(ck) = &ckpt {
-            ck.write_shard(s, &evals, eval_ns)?;
+        Ok((evals, eval_ns))
+    };
+    let budget_stop = |evaluated: usize, resumed: usize, has_ckpt: bool| -> ShardError {
+        let fate = if has_ckpt {
+            format!(
+                "{} of {} shards are checkpointed — resume to continue",
+                resumed + evaluated,
+                ranges.len()
+            )
+        } else {
+            "no checkpoint dir is set, so the evaluated shards are discarded".to_string()
+        };
+        ShardError::Interrupted {
+            evaluated,
+            detail: format!("(stop_after): {fate}"),
         }
-        shard_evals[s] = Some(evals);
-        evaluated += 1;
+    };
+
+    let mut evaluated = 0;
+    let mut stolen = 0;
+    match (&scfg.claim, &ckpt) {
+        (Some(cc), Some(ck)) => {
+            let mut seen_seq = vec![0u64; ranges.len()];
+            let poll = Duration::from_millis((cc.lease_ms / 4).clamp(5, 500));
+            while !shard_evals.iter().all(|e| e.is_some()) {
+                let mut progressed = false;
+                for (s, range) in ranges.iter().enumerate() {
+                    if shard_evals[s].is_some() {
+                        continue;
+                    }
+                    // a peer may have finished the shard since our last
+                    // pass — its checkpoint is a resume source
+                    if let Some(evals) = ck.load_shard(s, range, &space)? {
+                        crate::obs::counters::SHARD_RESUMED.incr();
+                        shard_evals[s] = Some(evals);
+                        resumed += 1;
+                        progressed = true;
+                        continue;
+                    }
+                    if scfg.stop_after.is_some_and(|cap| evaluated >= cap) {
+                        return Err(budget_stop(evaluated, resumed, true));
+                    }
+                    let (guard, was_stolen) = match ck.try_claim(s, cc, &mut seen_seq)? {
+                        ClaimOutcome::Held => continue,
+                        ClaimOutcome::Acquired { guard, stolen } => (guard, stolen),
+                    };
+                    if was_stolen {
+                        stolen += 1;
+                    }
+                    if evaluated == 0 && cc.kill_at == Some(KillSite::PostClaim) {
+                        guard.abandon();
+                        return Err(ShardError::Interrupted {
+                            evaluated,
+                            detail: format!(
+                                "(kill_at PostClaim): simulated crash holding the claim on \
+                                 shard {s} — the lease goes stale for a peer to steal"
+                            ),
+                        });
+                    }
+                    let (evals, eval_ns) = eval_shard(s, range)?;
+                    if evaluated == 0 && cc.kill_at == Some(KillSite::MidShard) {
+                        guard.abandon();
+                        return Err(ShardError::Interrupted {
+                            evaluated,
+                            detail: format!(
+                                "(kill_at MidShard): simulated crash after evaluating shard \
+                                 {s} but before checkpointing it"
+                            ),
+                        });
+                    }
+                    ck.write_shard(s, &evals, eval_ns)?;
+                    drop(guard); // release the lease (audited)
+                    shard_evals[s] = Some(evals);
+                    evaluated += 1;
+                    progressed = true;
+                }
+                if !progressed && !shard_evals.iter().all(|e| e.is_some()) {
+                    // every unfinished shard is held by a live peer:
+                    // wait out part of a lease, recording the blocked
+                    // time in the claim-wait histogram
+                    let t0 = std::time::Instant::now();
+                    std::thread::sleep(poll);
+                    if crate::obs::enabled() {
+                        crate::obs::claim_wait_ns()
+                            .record(u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX));
+                    }
+                }
+            }
+        }
+        _ => {
+            for (s, range) in ranges.iter().enumerate() {
+                if shard_evals[s].is_some() {
+                    continue;
+                }
+                if scfg.stop_after.is_some_and(|cap| evaluated >= cap) {
+                    return Err(budget_stop(evaluated, resumed, ckpt.is_some()));
+                }
+                let (evals, eval_ns) = eval_shard(s, range)?;
+                if let Some(ck) = &ckpt {
+                    ck.write_shard(s, &evals, eval_ns)?;
+                }
+                shard_evals[s] = Some(evals);
+                evaluated += 1;
+            }
+        }
     }
 
     let parts: Vec<Vec<DesignEval>> = shard_evals
@@ -734,6 +1383,7 @@ pub fn sweep_sharded(
         shards_total: ranges.len(),
         shards_evaluated: evaluated,
         shards_resumed: resumed,
+        shards_stolen: stolen,
         reps_total,
         points_total,
         fingerprint,
@@ -889,6 +1539,139 @@ mod tests {
         assert_eq!(back.costs.area_mm2.to_bits(), e.costs.area_mm2.to_bits());
         assert_eq!(back.costs.power_mw.to_bits(), e.costs.power_mw.to_bits());
         assert_eq!(back.costs, e.costs);
+    }
+
+    fn claim_scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "axmlp_claim_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn claim_files_roundtrip_and_corruption_is_explicit() {
+        let dir = claim_scratch("rt");
+        forge_claim(&dir, 3, "owner-a", 7, 123_456).unwrap();
+        let path = dir.join("shard_0003.claim");
+        match read_claim(&path) {
+            ClaimState::Valid(c) => {
+                assert_eq!(c.owner, "owner-a");
+                assert_eq!(c.seq, 7);
+                assert_eq!(c.heartbeat_ms, 123_456);
+            }
+            _ => panic!("forged claim should parse"),
+        }
+        std::fs::write(&path, "{ not json").unwrap();
+        assert!(matches!(read_claim(&path), ClaimState::Corrupt));
+        std::fs::remove_file(&path).unwrap();
+        assert!(matches!(read_claim(&path), ClaimState::Missing));
+        // claim files are never pattern-matched as shard checkpoints
+        forge_claim(&dir, 0, "owner-a", 1, 1).unwrap();
+        std::fs::write(dir.join("shard_0000.json.tmp"), "half-written").unwrap();
+        std::fs::write(dir.join("shard_junk.json"), "{}").unwrap();
+        assert!(existing_shard_files(&dir).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lease_sequence_regression_is_detected_as_stale() {
+        let dir = claim_scratch("seq");
+        let ck = Checkpoint {
+            dir: dir.clone(),
+            fingerprint: 0xDEAD,
+        };
+        let cc = ClaimConfig {
+            owner_id: "us".to_string(),
+            lease_ms: 60_000,
+            kill_at: None,
+        };
+        let mut seen = vec![0u64; 4];
+        // a live peer holds the lease at sequence 7
+        forge_claim(&dir, 0, "peer", 7, now_ms()).unwrap();
+        assert!(matches!(
+            ck.try_claim(0, &cc, &mut seen),
+            Ok(ClaimOutcome::Held)
+        ));
+        assert_eq!(seen[0], 7);
+        // the claim file rolls back to a smaller sequence: forged or
+        // restored from backup — must be refused, not trusted
+        forge_claim(&dir, 0, "peer", 3, now_ms()).unwrap();
+        match ck.try_claim(0, &cc, &mut seen) {
+            Err(ShardError::StaleLease { shard, .. }) => assert_eq!(shard, 0),
+            Err(e) => panic!("expected StaleLease, got {e}"),
+            Ok(_) => panic!("expected StaleLease, got an acquisition/hold"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn expired_leases_are_stolen_with_a_larger_sequence() {
+        let dir = claim_scratch("steal");
+        let ck = Checkpoint {
+            dir: dir.clone(),
+            fingerprint: 1,
+        };
+        let cc = ClaimConfig {
+            owner_id: "thief".to_string(),
+            lease_ms: 50,
+            kill_at: None,
+        };
+        let mut seen = vec![0u64; 1];
+        // heartbeat from the epoch: expired long ago
+        forge_claim(&dir, 0, "dead-peer", 7, 1).unwrap();
+        match ck.try_claim(0, &cc, &mut seen) {
+            Ok(ClaimOutcome::Acquired { guard, stolen }) => {
+                assert!(stolen, "an expired lease is a steal, not a fresh claim");
+                match read_claim(&dir.join("shard_0000.claim")) {
+                    ClaimState::Valid(c) => {
+                        assert_eq!(c.owner, "thief");
+                        assert_eq!(c.seq, 8, "steal must bump the lease sequence");
+                    }
+                    _ => panic!("claim file should exist while held"),
+                }
+                drop(guard); // release removes the claim file
+            }
+            Ok(ClaimOutcome::Held) => panic!("expired lease should be stolen, not held"),
+            Err(e) => panic!("expired lease should be stolen: {e}"),
+        }
+        assert!(matches!(
+            read_claim(&dir.join("shard_0000.claim")),
+            ClaimState::Missing
+        ));
+        // the audit trail shows the steal and the release
+        let log = std::fs::read_to_string(dir.join("claims.log")).unwrap();
+        assert!(log.contains("\"steal\""), "claims.log: {log}");
+        assert!(log.contains("\"release\""), "claims.log: {log}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn same_owner_id_on_a_live_lease_is_a_claim_race() {
+        let dir = claim_scratch("race");
+        let ck = Checkpoint {
+            dir: dir.clone(),
+            fingerprint: 1,
+        };
+        let cc = ClaimConfig {
+            owner_id: "dup".to_string(),
+            lease_ms: 60_000,
+            kill_at: None,
+        };
+        let mut seen = vec![0u64; 1];
+        forge_claim(&dir, 0, "dup", 2, now_ms()).unwrap();
+        match ck.try_claim(0, &cc, &mut seen) {
+            Err(ShardError::ClaimRace { shard, owner, .. }) => {
+                assert_eq!(shard, 0);
+                assert_eq!(owner, "dup");
+            }
+            Err(e) => panic!("expected ClaimRace, got {e}"),
+            Ok(_) => panic!("expected ClaimRace, got an acquisition/hold"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

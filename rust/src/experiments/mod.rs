@@ -816,7 +816,7 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
 /// retraining: both orchestrations evaluate the same quantized model, so
 /// the comparison isolates the orchestration and measures its overhead).
 ///
-/// Per dataset, three passes over the same space:
+/// Without `--claim`, five passes per dataset over the same space:
 ///
 /// 1. monolithic `dse::sweep` (the reference);
 /// 2. sharded sweep with checkpoints under `<checkpoint_dir>/<key>`,
@@ -826,7 +826,21 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
 ///    not given) one shard checkpoint is first deleted to simulate a
 ///    container death, so the pass exercises load + re-evaluate; under
 ///    `--resume` nothing is ever deleted (the user is recovering real
-///    checkpoints) and the pass is a pure load.
+///    checkpoints) and the pass is a pure load;
+/// 4. (fresh runs only) a two-claimer race: two in-process claimers with
+///    distinct owner ids partition `<key>_claim2` through the claim-file
+///    protocol, and *both* merged fronts must be bit-identical to pass 1;
+/// 5. (fresh runs only) kill-and-steal: a stale lease is forged on shard
+///    0 of `<key>_steal` (a dead peer that never renewed), and a live
+///    claimer must steal it and still match pass 1 bit-for-bit.
+///
+/// With `--claim`, this process is one peer of a multi-process sweep:
+/// it runs the claiming pass *first* (racing any concurrently launched
+/// `repro sweep --claim` peers for shards under `<checkpoint_dir>/<key>`),
+/// then the monolithic reference, and parity-checks the merged front it
+/// assembled — so every surviving peer independently certifies the
+/// combined result. The simulated-death and race passes are skipped (the
+/// races are real).
 ///
 /// This is the parity/benchmark harness for the engine; long production
 /// runs use the engine directly (`DseStrategy::Sharded` in the
@@ -838,9 +852,12 @@ pub fn exp_shard(
     shards: usize,
     checkpoint_dir: &str,
     resume: bool,
+    claim: Option<crate::dse::shard::ClaimConfig>,
 ) -> anyhow::Result<()> {
     use crate::axsum::{mean_activations, significance};
-    use crate::dse::shard::{first_divergence, sweep_sharded, ShardConfig};
+    use crate::dse::shard::{
+        first_divergence, forge_claim, sweep_sharded, ClaimConfig, ShardConfig,
+    };
     use crate::dse::{self, DesignEval, QuantData};
     use crate::util::bench::{write_json, BenchResult};
 
@@ -854,7 +871,7 @@ pub fn exp_shard(
     let pcfg = cfg.pipeline();
     let mut t = Table::new(&[
         "dataset", "points", "reps", "shards", "mono[s]", "sharded[s]", "resume[s]",
-        "resumed", "parity",
+        "resumed", "stolen", "parity",
     ]);
     let mut bench_rows: Vec<BenchResult> = Vec::new();
     let mut failures: Vec<String> = Vec::new();
@@ -874,16 +891,80 @@ pub fn exp_shard(
 
         // per-dataset counter window (see exp_search): fresh cache stats
         crate::obs::begin_run();
+        let dir = std::path::Path::new(checkpoint_dir).join(key);
+
+        if let Some(cc) = &claim {
+            // multi-process peer: claim shards first (racing any peers on
+            // the shared dir), then the reference, then self-certify
+            let ccfg = ShardConfig {
+                shards,
+                checkpoint_dir: Some(dir.clone()),
+                resume,
+                stop_after: None,
+                claim: Some(cc.clone()),
+            };
+            let t1 = std::time::Instant::now();
+            let rep = sweep_sharded(&q0, &sig, &data, &ctx.lib, &pcfg.dse, &ccfg)?;
+            let claim_s = t1.elapsed();
+
+            let t0 = std::time::Instant::now();
+            let mono =
+                dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse).map_err(anyhow::Error::msg)?;
+            let mono_s = t0.elapsed();
+            let mut parity = "ok";
+            if let Some(m) = first_mismatch(&mono, &rep.evals) {
+                parity = "FAIL";
+                failures.push(format!("[{key}] claimed front != monolithic: {m}"));
+            }
+            t.row(vec![
+                key.clone(),
+                rep.points_total.to_string(),
+                rep.reps_total.to_string(),
+                rep.shards_total.to_string(),
+                f2(mono_s.as_secs_f64()),
+                f2(claim_s.as_secs_f64()),
+                "-".into(),
+                format!("{}/{}", rep.shards_resumed, rep.shards_total),
+                rep.shards_stolen.to_string(),
+                parity.into(),
+            ]);
+            let reps = rep.reps_total.max(1) as f64;
+            for (name, d) in [("sweep_mono", mono_s), ("sweep_claim", claim_s)] {
+                let ns = d.as_nanos() as f64 / reps;
+                bench_rows.push(BenchResult {
+                    name: format!("{name}({key},shards{shards})"),
+                    iters: rep.reps_total as u64,
+                    mean_ns: ns,
+                    median_ns: ns,
+                    min_ns: ns,
+                    p95_ns: ns,
+                    patterns_per_iter: None,
+                });
+            }
+            crate::log!(
+                Info,
+                "[{key}] claimer `{}` done: {} reps / {} points, {} shards \
+                 ({} resumed, {} stolen), parity {parity}",
+                cc.owner_id,
+                rep.reps_total,
+                rep.points_total,
+                rep.shards_total,
+                rep.shards_resumed,
+                rep.shards_stolen,
+            );
+            continue;
+        }
+
         let t0 = std::time::Instant::now();
         let mono = dse::sweep(&q0, &sig, &data, &ctx.lib, &pcfg.dse).map_err(anyhow::Error::msg)?;
         let mono_s = t0.elapsed();
 
-        let dir = std::path::Path::new(checkpoint_dir).join(key);
         let scfg = ShardConfig {
             shards,
             checkpoint_dir: Some(dir.clone()),
             resume,
             stop_after: None,
+            claim: None,
         };
         let t1 = std::time::Instant::now();
         let rep1 = sweep_sharded(&q0, &sig, &data, &ctx.lib, &pcfg.dse, &scfg)?;
@@ -912,6 +993,131 @@ pub fn exp_shard(
             failures.push(format!("[{key}] resumed != monolithic: {m}"));
         }
 
+        // passes 4+5 race/steal in sibling dirs — skipped under --resume
+        // (the user is recovering a real run, not benchmarking faults)
+        let mut stolen_total = 0usize;
+        let mut stolen_cell = "-".to_string();
+        if !resume {
+            // pass 4: two claimers race for the same shards; the claim
+            // files arbitrate who evaluates what, and both merged fronts
+            // must be bit-identical to the monolithic reference
+            let cdir = std::path::Path::new(checkpoint_dir).join(format!("{key}_claim2"));
+            let _ = std::fs::remove_dir_all(&cdir);
+            let t3 = std::time::Instant::now();
+            let race: Vec<_> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..2)
+                    .map(|i| {
+                        let ccfg = ShardConfig {
+                            shards,
+                            checkpoint_dir: Some(cdir.clone()),
+                            resume: false,
+                            stop_after: None,
+                            claim: Some(ClaimConfig {
+                                owner_id: format!("exp-claimer-{i}"),
+                                lease_ms: 500,
+                                kill_at: None,
+                            }),
+                        };
+                        let (q0, sig, data, lib, dse_cfg) =
+                            (&q0, &sig, &data, &ctx.lib, &pcfg.dse);
+                        s.spawn(move || sweep_sharded(q0, sig, data, lib, dse_cfg, &ccfg))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let claim2_s = t3.elapsed();
+            let mut race_reps = 0u64;
+            for (i, r) in race.into_iter().enumerate() {
+                match r {
+                    Ok(rep) => {
+                        race_reps = race_reps.max(rep.reps_total as u64);
+                        stolen_total += rep.shards_stolen;
+                        if let Some(m) = first_mismatch(&mono, &rep.evals) {
+                            parity = "FAIL";
+                            failures
+                                .push(format!("[{key}] claimer {i} != monolithic: {m}"));
+                        }
+                    }
+                    Err(e) => {
+                        parity = "FAIL";
+                        failures.push(format!("[{key}] claimer {i} failed: {e}"));
+                    }
+                }
+            }
+            let ns = claim2_s.as_nanos() as f64 / race_reps.max(1) as f64;
+            bench_rows.push(BenchResult {
+                name: format!("sweep_claim2({key},shards{shards})"),
+                iters: race_reps,
+                mean_ns: ns,
+                median_ns: ns,
+                min_ns: ns,
+                p95_ns: ns,
+                patterns_per_iter: None,
+            });
+            let _ = std::fs::remove_dir_all(&cdir);
+
+            // pass 5: forge the claim a dead peer left behind (heartbeat
+            // in 1970, never renewed); a live claimer must steal it and
+            // still reproduce the monolithic front bit-for-bit
+            let sdir = std::path::Path::new(checkpoint_dir).join(format!("{key}_steal"));
+            let _ = std::fs::remove_dir_all(&sdir);
+            let init = ShardConfig {
+                shards,
+                checkpoint_dir: Some(sdir.clone()),
+                resume: false,
+                stop_after: Some(0),
+                claim: Some(ClaimConfig {
+                    owner_id: "exp-init".to_string(),
+                    lease_ms: 1000,
+                    kill_at: None,
+                }),
+            };
+            // materializes the manifest, then stops before any claim
+            if sweep_sharded(&q0, &sig, &data, &ctx.lib, &pcfg.dse, &init).is_ok() {
+                failures.push(format!(
+                    "[{key}] steal-pass init claimer was expected to stop at budget 0"
+                ));
+            }
+            forge_claim(&sdir, 0, "exp-dead-peer", 7, 1).map_err(anyhow::Error::msg)?;
+            let thief = ShardConfig {
+                shards,
+                checkpoint_dir: Some(sdir.clone()),
+                resume: false,
+                stop_after: None,
+                claim: Some(ClaimConfig {
+                    owner_id: "exp-thief".to_string(),
+                    lease_ms: 60,
+                    kill_at: None,
+                }),
+            };
+            let t4 = std::time::Instant::now();
+            let srep = sweep_sharded(&q0, &sig, &data, &ctx.lib, &pcfg.dse, &thief)?;
+            let steal_s = t4.elapsed();
+            if srep.shards_stolen == 0 {
+                parity = "FAIL";
+                failures.push(format!(
+                    "[{key}] steal pass: the forged stale lease on shard 0 was never stolen"
+                ));
+            }
+            stolen_total += srep.shards_stolen;
+            if let Some(m) = first_mismatch(&mono, &srep.evals) {
+                parity = "FAIL";
+                failures.push(format!("[{key}] stolen front != monolithic: {m}"));
+            }
+            let ns = steal_s.as_nanos() as f64 / srep.reps_total.max(1) as f64;
+            bench_rows.push(BenchResult {
+                name: format!("sweep_steal({key},shards{shards})"),
+                iters: srep.reps_total as u64,
+                mean_ns: ns,
+                median_ns: ns,
+                min_ns: ns,
+                p95_ns: ns,
+                patterns_per_iter: None,
+            });
+            let _ = std::fs::remove_dir_all(&sdir);
+            stolen_cell = stolen_total.to_string();
+        }
+
         t.row(vec![
             key.clone(),
             rep1.points_total.to_string(),
@@ -921,6 +1127,7 @@ pub fn exp_shard(
             f2(shard_s.as_secs_f64()),
             f2(resume_s.as_secs_f64()),
             format!("{}/{}", rep2.shards_resumed, rep2.shards_total),
+            stolen_cell,
             parity.into(),
         ]);
         let reps = rep1.reps_total.max(1) as f64;
@@ -954,7 +1161,8 @@ pub fn exp_shard(
     t.emit(
         &format!(
             "Sweep — sharded checkpointable engine vs monolithic (shards={shards}; \
-             'resumed' counts checkpointed shards loaded after a simulated container death)"
+             'resumed' counts checkpointed shards loaded after a simulated container death, \
+             'stolen' counts expired claims reclaimed in the race/steal passes)"
         ),
         "shard_summary.csv",
     );
@@ -979,7 +1187,10 @@ pub fn exp_shard(
 ///    it to a reproducer naming the corrupted neuron (an instrument that
 ///    cannot fail cannot certify a green run); the sweep-level canary
 ///    does the same with a tampered shard checkpoint, which the resumed
-///    differential run must trace back to the corrupted shard;
+///    differential run must trace back to the corrupted shard; and the
+///    claim-level canary forges a stale lease that a live claimer must
+///    detect, steal, and log before its front can match the monolithic
+///    sweep;
 /// 2. **fuzz** — `cases` random `(QuantMlp, plan, stimulus)` triples
 ///    through every forward (`axsum::forward`, `FlatEval`,
 ///    `build_mlp_ref`/`build_mlp_logits` → `simulate_packed`), plan
@@ -1019,6 +1230,13 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
     match conformance::sweep_canary(cfg.seed) {
         Ok(d) => crate::log!(Info, "canary[sweep]: tampered checkpoint caught — {}", d.summary()),
         Err(e) => failures.push(format!("canary[sweep]: {e}")),
+    }
+    // and the claiming layer: a forged stale lease (a dead peer that
+    // never renewed) must be detected, stolen with a larger sequence,
+    // and audited — with the stolen-and-finished front still bit-exact
+    match conformance::claim_canary(cfg.seed) {
+        Ok(s) => crate::log!(Info, "canary[claim]: stale lease stolen — {s}"),
+        Err(e) => failures.push(format!("canary[claim]: {e}")),
     }
 
     // 2. fuzz

@@ -142,7 +142,23 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 return Err(anyhow::Error::msg("--shards must be at least 1"));
             }
             let dir = args.flag("checkpoint-dir").unwrap_or("results/shard_ckpt");
-            experiments::exp_shard(&cfg, shards, dir, args.flag_bool("resume"))
+            let claim = if args.flag_bool("claim") {
+                let lease_ms = args.flag_u64("lease-ms", 5000).map_err(anyhow::Error::msg)?;
+                if lease_ms == 0 {
+                    return Err(anyhow::Error::msg("--lease-ms must be at least 1"));
+                }
+                Some(axmlp::dse::shard::ClaimConfig {
+                    owner_id: args
+                        .flag("owner-id")
+                        .map(str::to_string)
+                        .unwrap_or_else(|| format!("pid{}", std::process::id())),
+                    lease_ms,
+                    kill_at: None,
+                })
+            } else {
+                None
+            };
+            experiments::exp_shard(&cfg, shards, dir, args.flag_bool("resume"), claim)
         }
         "conform" => {
             let cfg = exp_config(args).map_err(anyhow::Error::msg)?;

@@ -69,6 +69,12 @@ pub mod counters {
     pub static SHARD_EVALUATED: Counter = Counter::new();
     /// Sharded-sweep shards skipped by checkpoint resume.
     pub static SHARD_RESUMED: Counter = Counter::new();
+    /// Shard leases acquired by this process (fresh claims and steals).
+    pub static SHARD_CLAIMED: Counter = Counter::new();
+    /// Shard leases acquired by stealing an expired claim.
+    pub static SHARD_STOLEN: Counter = Counter::new();
+    /// Expired (or forged-stale) leases observed on peers' claims.
+    pub static SHARD_LEASE_EXPIRED: Counter = Counter::new();
     /// Conformance fuzz cases executed.
     pub static CONFORM_CASES: Counter = Counter::new();
     /// Conformance mismatches shrunk to minimal reproducers.
@@ -93,6 +99,9 @@ static REGISTRY: &[(&str, &Counter)] = &[
     ("dse.dedup_fanout", &counters::DEDUP_FANOUT),
     ("shard.evaluated", &counters::SHARD_EVALUATED),
     ("shard.resumed", &counters::SHARD_RESUMED),
+    ("shard.claimed", &counters::SHARD_CLAIMED),
+    ("shard.stolen", &counters::SHARD_STOLEN),
+    ("shard.lease_expired", &counters::SHARD_LEASE_EXPIRED),
     ("conform.cases", &counters::CONFORM_CASES),
     ("conform.shrinks", &counters::CONFORM_SHRINKS),
     ("stream.patterns", &counters::STREAM_PATTERNS),
@@ -282,17 +291,27 @@ pub fn stream_flush_ns() -> &'static Histogram {
     H.get_or_init(Histogram::new)
 }
 
+/// Time a claiming sweep worker spends blocked waiting for peers'
+/// leases (shards claimed by other live processes) before it can make
+/// progress — one sample per wait interval.
+pub fn claim_wait_ns() -> &'static Histogram {
+    static H: OnceLock<Histogram> = OnceLock::new();
+    H.get_or_init(Histogram::new)
+}
+
 /// `(name, snapshot)` for every registered histogram, in schema order.
 pub fn hist_rows() -> Vec<(&'static str, HistSnapshot)> {
     vec![
         ("dse.eval_point_ns", eval_point_ns().snapshot()),
         ("stream.flush_ns", stream_flush_ns().snapshot()),
+        ("shard.claim_wait_ns", claim_wait_ns().snapshot()),
     ]
 }
 
 pub(crate) fn reset_hists() {
     eval_point_ns().reset();
     stream_flush_ns().reset();
+    claim_wait_ns().reset();
 }
 
 #[cfg(test)]

@@ -40,8 +40,8 @@ mod metrics;
 mod span;
 
 pub use metrics::{
-    begin_run, counter_rows, counters, gauge_rows, gauge_set, hist_rows, run_value, Counter,
-    HistSnapshot, Histogram, HIST_BUCKETS,
+    begin_run, claim_wait_ns, counter_rows, counters, eval_point_ns, gauge_rows, gauge_set,
+    hist_rows, run_value, stream_flush_ns, Counter, HistSnapshot, Histogram, HIST_BUCKETS,
 };
 pub use span::{ambient, current_path, render, span, span_rows, AmbientGuard, SpanGuard, SpanStat};
 

@@ -454,6 +454,24 @@ mod tests {
     }
 
     #[test]
+    fn zero_engine_time_is_zero_throughput_not_nan() {
+        // a stats read before any flush — or after flushes so fast the
+        // clock read zero nanoseconds — must report 0.0, never NaN/inf;
+        // these figures land in metrics.json, which carries only finite
+        // numbers
+        let fresh = StreamStats::default();
+        assert_eq!(fresh.patterns_per_sec(), 0.0);
+        let degenerate = StreamStats {
+            patterns: 10,
+            flushes: 1,
+            engine_nanos: 0,
+        };
+        let pps = degenerate.patterns_per_sec();
+        assert!(pps.is_finite(), "{pps}");
+        assert_eq!(pps, 0.0);
+    }
+
+    #[test]
     fn malformed_rows_are_rejected_without_poisoning_the_stream() {
         let q = model();
         let plan = ShiftPlan::exact(&q);

@@ -191,6 +191,27 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_median_yields_finite_throughput() {
+        // an all-zero sample set (sub-ns clock reads) must clamp the
+        // divisor, not emit inf/NaN into the BENCH_*.json trajectory
+        let r = BenchResult {
+            name: "noop".into(),
+            iters: 1,
+            mean_ns: 0.0,
+            median_ns: 0.0,
+            min_ns: 0.0,
+            p95_ns: 0.0,
+            patterns_per_iter: None,
+        }
+        .with_pps(1024);
+        let pps = r.patterns_per_sec().unwrap();
+        assert!(pps.is_finite() && pps > 0.0, "{pps}");
+        let j = crate::util::json::Json::parse(&r.json_row()).expect("valid json");
+        let parsed = j.get("patterns_per_sec").and_then(|v| v.as_f64()).unwrap();
+        assert!(parsed.is_finite(), "{parsed}");
+    }
+
+    #[test]
     fn bench_returns_sane_numbers() {
         let mut x = 0u64;
         let r = bench("noop", Duration::from_millis(30), || {

@@ -119,7 +119,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; emitting one would
+                    // produce an unparseable file (metrics.json must never
+                    // carry non-finite values), so degrade to null
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -252,6 +257,48 @@ pub fn write_atomic(path: &std::path::Path, content: &str) -> std::io::Result<()
     f.sync_all()?;
     drop(f);
     std::fs::rename(&tmp, path)
+}
+
+/// Compare-and-claim create-exclusive write: publish `content` at `path`
+/// **only if no file exists there yet**, atomically and all-or-nothing.
+///
+/// Returns `Ok(true)` when this call created the file, `Ok(false)` when
+/// another writer got there first (the existing file is left untouched).
+/// The bytes are staged in a per-process temp sibling
+/// (`<name>.<pid>.tmp`), fsynced, then *hard-linked* to `path`: link
+/// creation is the atomic existence test, and because the staged file is
+/// complete before the link, a reader can never observe a truncated
+/// claim — the two failure modes of a naive `O_CREAT|O_EXCL` +
+/// `write()` (lost race, torn write) are both closed. This is the
+/// primitive behind the sharded sweep's per-shard claim files
+/// (`dse::shard`): N leaderless processes race `write_exclusive` on
+/// `shard_NNNN.claim` and exactly one wins each shard.
+pub fn write_exclusive(path: &std::path::Path, content: &str) -> std::io::Result<bool> {
+    use std::io::Write as _;
+    let tmp = match path.file_name() {
+        Some(name) => {
+            let mut n = name.to_os_string();
+            n.push(format!(".{}.tmp", std::process::id()));
+            path.with_file_name(n)
+        }
+        None => {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("exclusive write target has no file name: {}", path.display()),
+            ))
+        }
+    };
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(content.as_bytes())?;
+    f.sync_all()?;
+    drop(f);
+    let won = match std::fs::hard_link(&tmp, path) {
+        Ok(()) => Ok(true),
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+        Err(e) => Err(e),
+    };
+    let _ = std::fs::remove_file(&tmp);
+    won
 }
 
 #[derive(Debug, Clone)]
@@ -517,6 +564,39 @@ mod tests {
             let back = Json::parse(&j.dump()).unwrap().as_f64().unwrap();
             assert_eq!(back.to_bits(), v.to_bits(), "{v}");
         }
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null_not_invalid_json() {
+        // "NaN" / "inf" are not JSON: a metrics or checkpoint file
+        // carrying them would be unparseable by every consumer
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(v).dump(), "null", "{v}");
+        }
+        let j = obj(vec![("ok", Json::Num(1.5)), ("bad", Json::Num(f64::NAN))]);
+        let back = Json::parse(&j.dump()).expect("stays valid JSON");
+        assert_eq!(back.req_f64("ok").unwrap(), 1.5);
+        assert_eq!(back.get("bad"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn write_exclusive_admits_exactly_one_winner() {
+        let dir = std::env::temp_dir().join(format!("axmlp_json_excl_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("claim.json");
+        let _ = std::fs::remove_file(&path);
+        assert!(write_exclusive(&path, "{\"owner\": \"a\"}").unwrap());
+        // the loser does not clobber the winner's content
+        assert!(!write_exclusive(&path, "{\"owner\": \"b\"}").unwrap());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"owner\": \"a\"}");
+        // no staging litter either way
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

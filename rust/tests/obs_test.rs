@@ -133,9 +133,71 @@ fn write_metrics_emits_the_stable_schema_on_disk() {
     for (name, _, _) in obs::counter_rows() {
         assert!(named("counters", "name", name), "missing counter {name}");
     }
-    for hist in ["dse.eval_point_ns", "stream.flush_ns"] {
+    for hist in ["dse.eval_point_ns", "stream.flush_ns", "shard.claim_wait_ns"] {
         assert!(named("histograms", "name", hist), "missing histogram {hist}");
     }
+}
+
+#[test]
+fn resume_does_not_replay_persisted_eval_ns_into_the_histogram() {
+    // shard checkpoints persist per-shard eval_ns for reporting; a
+    // resumed (pure-load) pass must NOT re-feed those nanoseconds into
+    // the live dse.eval_point_ns histogram — only real evaluations
+    // record samples, or resumed runs would double-count their history
+    let _l = lock();
+    use axmlp::dse::shard::{sweep_sharded, ShardConfig};
+    let (q, xs, ys) = toy(77);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let cfg = DseConfig {
+        max_g_levels: 3,
+        power_patterns: 24,
+        threads: 4,
+        verify_circuit: false,
+        max_eval: 0,
+        backend: EvalBackend::Flat,
+    };
+    let dir = std::env::temp_dir().join(format!("axmlp_obs_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let scfg = ShardConfig {
+        shards: 2,
+        checkpoint_dir: Some(dir.clone()),
+        resume: false,
+        stop_after: None,
+        claim: None,
+    };
+    obs::set_enabled(true);
+    obs::reset_all();
+    sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
+    let count_of = || {
+        obs::hist_rows()
+            .iter()
+            .find(|(n, _)| *n == "dse.eval_point_ns")
+            .map(|(_, s)| s.count)
+            .unwrap_or(0)
+    };
+    let c1 = count_of();
+    assert!(c1 > 0, "the fresh pass records eval samples");
+
+    let rcfg = ShardConfig {
+        resume: true,
+        ..scfg
+    };
+    let rep = sweep_sharded(&q, &sig, &data, &lib, &cfg, &rcfg).unwrap();
+    obs::set_enabled(false);
+    assert_eq!(rep.shards_evaluated, 0, "resume pass is a pure load");
+    assert_eq!(
+        count_of(),
+        c1,
+        "resume replayed persisted eval_ns into the live histogram"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,10 +1,14 @@
 //! Sharded-sweep engine: parity with the monolithic sweep, checkpoint /
 //! resume semantics (kill-mid-sweep, no re-evaluation of finished
-//! shards), and the corruption error paths (contextful errors, never a
-//! panic, never silently-wrong results).
+//! shards), the corruption error paths (contextful errors, never a
+//! panic, never silently-wrong results), and the multi-process claiming
+//! layer (two-claimer races, kill-at-every-write-site work stealing,
+//! orphan tmp reaping).
 
 use axmlp::axsum::{self, mean_activations, significance, ShiftPlan, Significance};
-use axmlp::dse::shard::{first_divergence, sweep_sharded, ShardConfig};
+use axmlp::dse::shard::{
+    first_divergence, sweep_sharded, ClaimConfig, KillSite, ShardConfig,
+};
 use axmlp::dse::{self, DesignEval, DseConfig, EvalBackend, QuantData};
 use axmlp::fixed::QuantMlp;
 use axmlp::pdk::EgtLibrary;
@@ -120,6 +124,7 @@ fn kill_mid_sweep_then_resume_is_bit_identical_and_skips_finished_shards() {
         checkpoint_dir: Some(dir.clone()),
         resume: false,
         stop_after: Some(2), // die after 2 of 4 shards
+        claim: None,
     };
     let err = sweep_sharded(&q, &sig, &data, &lib, &cfg, &killed)
         .err()
@@ -137,6 +142,7 @@ fn kill_mid_sweep_then_resume_is_bit_identical_and_skips_finished_shards() {
         checkpoint_dir: Some(dir.clone()),
         resume: true,
         stop_after: None,
+        claim: None,
     };
     let resumed = sweep_sharded(&q, &sig, &data, &lib, &cfg, &resumed_cfg).unwrap();
     assert_eq!(resumed.shards_resumed, 2, "finished shards are not re-evaluated");
@@ -173,6 +179,7 @@ fn resume_loads_checkpoints_verbatim_instead_of_recomputing() {
         checkpoint_dir: Some(dir.clone()),
         resume: false,
         stop_after: None,
+        claim: None,
     };
     sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
 
@@ -221,6 +228,7 @@ fn corrupted_manifest_is_a_contextful_error() {
         checkpoint_dir: Some(dir.clone()),
         resume: true,
         stop_after: None,
+        claim: None,
     };
     let err = sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg)
         .err()
@@ -252,6 +260,7 @@ fn truncated_shard_checkpoint_is_a_contextful_error() {
         checkpoint_dir: Some(dir.clone()),
         resume: false,
         stop_after: None,
+        claim: None,
     };
     sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
     let path = dir.join("shard_0001.json");
@@ -292,6 +301,7 @@ fn manifestless_resume_refuses_to_delete_orphan_shards() {
         checkpoint_dir: Some(dir.clone()),
         resume: false,
         stop_after: None,
+        claim: None,
     };
     sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
     std::fs::remove_file(dir.join("manifest.json")).unwrap();
@@ -329,6 +339,7 @@ fn resume_refuses_a_checkpoint_from_a_different_space() {
         checkpoint_dir: Some(dir.clone()),
         resume: false,
         stop_after: None,
+        claim: None,
     };
     sweep_sharded(&q, &sig, &data, &lib, &cfg_small(EvalBackend::Flat), &scfg).unwrap();
     let rcfg = ShardConfig {
@@ -385,6 +396,7 @@ fn sharded_strategy_pipeline_matches_grid_strategy() {
             shards: 3,
             checkpoint_dir: Some(dir.to_string_lossy().into_owned()),
             resume: false,
+            ..Default::default()
         });
         let mut be = RustBackend;
         run_dataset(&ds, &cfg, &ctx, &mut be).unwrap()
@@ -397,5 +409,175 @@ fn sharded_strategy_pipeline_matches_grid_strategy() {
     assert_eq!(grid_out.pareto_cloud, sharded_out.pareto_cloud);
     // per-dataset/threshold checkpoints landed under the root
     assert!(dir.join("ma_t500").join("manifest.json").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn two_claimers_race_on_a_single_shard() {
+    // the tightest contention case: one shard, two claimers. Exactly one
+    // wins the create-exclusive claim; the loser waits and loads the
+    // winner's checkpoint. Both merged fronts must equal the monolithic
+    // sweep bit-for-bit.
+    let (q, xs, ys) = toy(48);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let cfg = cfg_small(EvalBackend::Flat);
+    let mono = dse::sweep(&q, &sig, &data, &lib, &cfg).unwrap();
+
+    let dir = scratch_dir("race1");
+    let results: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|i| {
+                let ccfg = ShardConfig {
+                    shards: 1,
+                    checkpoint_dir: Some(dir.clone()),
+                    resume: false,
+                    stop_after: None,
+                    claim: Some(ClaimConfig {
+                        // same-process claimers must not share the pid
+                        // default — every live claimer needs its own id
+                        owner_id: format!("racer-{i}"),
+                        lease_ms: 400,
+                        kill_at: None,
+                    }),
+                };
+                let (q, sig, data, lib, cfg) = (&q, &sig, &data, &lib, &cfg);
+                s.spawn(move || sweep_sharded(q, sig, data, lib, cfg, &ccfg))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut evaluated = 0;
+    let mut resumed = 0;
+    for r in results {
+        let rep = r.expect("both claimers must converge on the full front");
+        evaluated += rep.shards_evaluated;
+        resumed += rep.shards_resumed;
+        assert_bit_identical(&rep.evals, &mono);
+    }
+    // someone evaluated the shard; double evaluation under a lost race
+    // is benign (identical bytes) but waiting-and-loading is the norm
+    assert!(evaluated >= 1, "the single shard was never evaluated");
+    assert!(evaluated + resumed >= 2, "each claimer accounts for the shard");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn killed_claimer_at_every_write_site_is_stolen_and_bit_identical() {
+    // property: wherever a claimer dies — before the manifest, holding a
+    // fresh claim, or after evaluating but before checkpointing — a
+    // later claimer recovers the sweep and reproduces the monolithic
+    // front bit-for-bit. `kill_at` leaves the files exactly as `kill -9`
+    // would (the claim file survives, unrenewed).
+    let (q, xs, ys) = toy(49);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let cfg = cfg_small(EvalBackend::Flat);
+    let mono = dse::sweep(&q, &sig, &data, &lib, &cfg).unwrap();
+
+    for site in [KillSite::PreManifest, KillSite::PostClaim, KillSite::MidShard] {
+        let dir = scratch_dir("killsite");
+        let victim = ShardConfig {
+            shards: 3,
+            checkpoint_dir: Some(dir.clone()),
+            resume: false,
+            stop_after: None,
+            claim: Some(ClaimConfig {
+                owner_id: "prop-victim".to_string(),
+                lease_ms: 1000,
+                kill_at: Some(site),
+            }),
+        };
+        let err = sweep_sharded(&q, &sig, &data, &lib, &cfg, &victim)
+            .err()
+            .unwrap_or_else(|| panic!("{site:?}: killed claimer must not return a result"));
+        assert!(err.to_string().contains("interrupted"), "{site:?}: {err}");
+
+        // the recovering claimer judges the victim's claim by its own
+        // (short) lease, so the stale claim expires quickly
+        let rescuer = ShardConfig {
+            shards: 3,
+            checkpoint_dir: Some(dir.clone()),
+            resume: false,
+            stop_after: None,
+            claim: Some(ClaimConfig {
+                owner_id: "prop-rescuer".to_string(),
+                lease_ms: 50,
+                kill_at: None,
+            }),
+        };
+        let rep = sweep_sharded(&q, &sig, &data, &lib, &cfg, &rescuer)
+            .unwrap_or_else(|e| panic!("{site:?}: rescuer failed: {e}"));
+        assert_bit_identical(&rep.evals, &mono);
+        if site != KillSite::PreManifest {
+            // PostClaim and MidShard leave a stale claim behind — the
+            // rescuer must have stolen it, not just claimed fresh shards
+            assert!(
+                rep.shards_stolen >= 1,
+                "{site:?}: expected a steal, got {} stolen / {} evaluated",
+                rep.shards_stolen,
+                rep.shards_evaluated
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn orphan_tmp_files_are_reaped_and_never_loaded_as_checkpoints() {
+    // a writer killed mid-write leaves torn `*.tmp` files behind; reopen
+    // must reap them and must never pattern-match them as checkpoints
+    let (q, xs, ys) = toy(50);
+    let data = QuantData {
+        x_train: &xs[..130],
+        y_train: &ys[..130],
+        x_test: &xs[130..],
+        y_test: &ys[130..],
+    };
+    let sig = sig_of(&q, data.x_train);
+    let lib = EgtLibrary::egt_v1();
+    let cfg = cfg_small(EvalBackend::Flat);
+    let mono = dse::sweep(&q, &sig, &data, &lib, &cfg).unwrap();
+
+    let dir = scratch_dir("tmp_reap");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("shard_0000.json.tmp"), "{\"torn").unwrap();
+    std::fs::write(dir.join("manifest.json.12345.tmp"), "{\"torn").unwrap();
+    let scfg = ShardConfig {
+        shards: 2,
+        checkpoint_dir: Some(dir.clone()),
+        resume: false,
+        stop_after: None,
+        claim: None,
+    };
+    let rep = sweep_sharded(&q, &sig, &data, &lib, &cfg, &scfg).unwrap();
+    assert_bit_identical(&rep.evals, &mono);
+    assert_eq!(rep.shards_resumed, 0, "a torn tmp is never a checkpoint");
+    assert!(!dir.join("shard_0000.json.tmp").exists(), "orphan tmp reaped");
+    assert!(!dir.join("manifest.json.12345.tmp").exists(), "orphan tmp reaped");
+
+    // resume over real checkpoints with a fresh torn tmp alongside: the
+    // tmp is reaped, the real checkpoints still load verbatim
+    std::fs::write(dir.join("shard_0001.json.tmp"), "{\"torn").unwrap();
+    let rcfg = ShardConfig {
+        resume: true,
+        ..scfg
+    };
+    let rep2 = sweep_sharded(&q, &sig, &data, &lib, &cfg, &rcfg).unwrap();
+    assert_eq!(rep2.shards_resumed, 2);
+    assert_bit_identical(&rep2.evals, &mono);
+    assert!(!dir.join("shard_0001.json.tmp").exists());
     let _ = std::fs::remove_dir_all(&dir);
 }
