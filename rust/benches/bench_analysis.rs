@@ -1,0 +1,64 @@
+//! Bench: the static-analysis layer. The preflight gate runs in front of
+//! every sweep, so its cost must stay negligible next to one design-point
+//! evaluation; the source linter runs once per `repro lint` and should
+//! stay well under a second for the whole tree.
+
+use axmlp::analysis::{self, verifier, IrConfig};
+use axmlp::axsum::ShiftPlan;
+use axmlp::fixed::QuantMlp;
+use axmlp::util::bench::{run, write_csv};
+use axmlp::util::rng::Rng;
+
+/// Pendigits-sized model (16x5x10) — the largest paper topology.
+fn pendigits_model(seed: u64) -> QuantMlp {
+    let mut rng = Rng::new(seed);
+    let dims = [(16usize, 5usize), (5, 10)];
+    let w = dims
+        .iter()
+        .map(|&(fan_in, width)| {
+            (0..width)
+                .map(|_| (0..fan_in).map(|_| rng.range_i64(-127, 127)).collect())
+                .collect()
+        })
+        .collect();
+    let b = dims
+        .iter()
+        .map(|&(_, width)| (0..width).map(|_| rng.range_i64(-60, 60)).collect())
+        .collect();
+    QuantMlp {
+        w,
+        b,
+        in_bits: 4,
+        w_scales: vec![1.0; 2],
+    }
+}
+
+fn main() {
+    let mut results = Vec::new();
+    let q = pendigits_model(3);
+    let plan = ShiftPlan::exact(&q);
+
+    results.push(run("bounds::propagate(pendigits)", || {
+        std::hint::black_box(analysis::propagate(&q, &plan).unwrap());
+    }));
+
+    let nl = analysis::bounds::build_logit_netlist("bench", &q, &plan);
+    results.push(run(
+        &format!("verify_netlist(pendigits, {} gates)", nl.gates.len()),
+        || {
+            std::hint::black_box(verifier::verify_netlist(&nl, &IrConfig::default()));
+        },
+    ));
+
+    // the full model checker: propagate + bitslice cross-check + netlist
+    // build + structural verify + bus widths (what `preflight` costs)
+    results.push(run("check_model(pendigits)", || {
+        std::hint::black_box(analysis::check_model("bench", &q, &plan));
+    }));
+
+    results.push(run("lint_source_tree(rust/src)", || {
+        std::hint::black_box(analysis::lint_source_tree().unwrap());
+    }));
+
+    write_csv("bench_analysis.csv", &results);
+}

@@ -201,7 +201,7 @@ fn main() {
     write_csv("bench_bitslice.csv", &results);
     write_json("BENCH_bitslice.json", &results);
 
-    if std::env::var("AXMLP_BENCH_NO_GATE").map(|v| v == "1").unwrap_or(false) {
+    if std::env::var("AXMLP_BENCH_NO_GATE").is_ok_and(|v| v == "1") {
         println!("gate: skipped (AXMLP_BENCH_NO_GATE=1)");
         return;
     }

@@ -1,0 +1,515 @@
+//! Interval abstract interpretation over `(QuantMlp, ShiftPlan)` pairs.
+//!
+//! Propagates signed value bounds through the exact arithmetic the
+//! `synth` generators implement — bespoke constant multipliers
+//! (`hi = a_hi * |w|`), shift-truncation (`(p >> s) << s`, constant zero
+//! once `s` clears the product), split-sign adder trees (sum of term
+//! bounds), the ones'-complement merge (`[-(sn_hi)-1, sp_hi-1]`) and
+//! ReLU — in `i64` *checked* arithmetic, so an unrepresentable model is
+//! a named diagnostic instead of a panic inside a netlist builder.
+//!
+//! The pass then cross-checks its result against every other piece of
+//! bound bookkeeping in the repo, neuron by neuron:
+//!
+//!  * `axsum::layer_input_widths`/`hidden_bounds` (the sweep's
+//!    bookkeeping) must derive the same per-layer input widths;
+//!  * `axsum::bitslice` plan compilation must size the same accumulator
+//!    plane counts ([`crate::axsum::BitSliceEval::neuron_plane_widths`])
+//!    and must accept/reject in agreement;
+//!  * the generated logit netlist's bus widths must equal the predicted
+//!    two's-complement minimum widths (`logit{j}`, `class`, `x{i}`).
+//!
+//! Diagnostics name `L{layer}/N{neuron}` in original model coordinates,
+//! the same naming the conformance shrinker uses.
+
+use crate::axsum::{layer_input_widths, BitSliceEval, ShiftPlan};
+use crate::fixed::QuantMlp;
+use crate::netlist::Netlist;
+use crate::synth::arith::{sbits, ubits};
+use crate::synth::{build_mlp_logits, MlpSpecRef, NeuronStyle};
+
+use super::Diag;
+
+/// Two's-complement plane count of a non-negative bound (0 for values
+/// that cannot exceed zero) — the same convention `axsum::bitslice`
+/// compiles with.
+fn bits_of(v: i64) -> u32 {
+    if v <= 0 {
+        0
+    } else {
+        64 - v.leading_zeros()
+    }
+}
+
+/// Statically derived bounds of one neuron's split-sign accumulators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NeuronBound {
+    /// Upper bound of the positive tree (bias folded in).
+    pub sp_hi: i64,
+    /// Upper bound of the negative tree.
+    pub sn_hi: i64,
+    /// Whether the ones'-complement merge applies (any negative weight
+    /// or bias — must mirror `axsum::neuron_value` exactly).
+    pub has_neg: bool,
+    /// Two's-complement working width: `1 + max(bits(sp), bits(sn))`.
+    pub w_bits: u32,
+    /// Post-ReLU activation bound fed to the next layer.
+    pub act_hi: i64,
+}
+
+impl NeuronBound {
+    /// Minimum two's-complement width of this neuron's signed sum bus —
+    /// exactly the width `synth::neuron::axsum_neuron` emits
+    /// (`as_signed` when the negative tree is empty, the
+    /// ones'-complement combine otherwise).
+    pub fn logit_width(&self) -> usize {
+        if self.has_neg {
+            sbits(-self.sn_hi - 1, self.sp_hi - 1)
+        } else {
+            sbits(0, self.sp_hi)
+        }
+    }
+}
+
+/// Bounds of every neuron, `[layer][neuron]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelBounds {
+    pub layers: Vec<Vec<NeuronBound>>,
+    /// Largest shift anywhere in the plan (guards the unchecked-shift
+    /// cross-check against `hidden_bounds`).
+    pub max_shift: u32,
+}
+
+fn at(l: usize, j: usize) -> String {
+    format!("L{l}/N{j}")
+}
+
+fn bdiag(code: &'static str, site: String, detail: String) -> Diag {
+    Diag {
+        pass: "bounds",
+        code,
+        site,
+        detail,
+    }
+}
+
+/// Geometry check: the plan (and bias matrix) must have exactly the
+/// weight matrix's shape, and layer fan-ins must chain.
+fn check_shape(q: &QuantMlp, plan: &ShiftPlan) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let n_layers = q.w.len();
+    if n_layers == 0 || q.w[0].is_empty() || q.w[0][0].is_empty() {
+        diags.push(bdiag("shape", "model".into(), "empty weight matrix".into()));
+        return diags;
+    }
+    if q.b.len() != n_layers || plan.shifts.len() != n_layers {
+        diags.push(bdiag(
+            "shape",
+            "model".into(),
+            format!(
+                "{n_layers} weight layers but {} bias layers / {} shift layers",
+                q.b.len(),
+                plan.shifts.len()
+            ),
+        ));
+        return diags;
+    }
+    let mut fan_in = q.din();
+    for l in 0..n_layers {
+        if q.b[l].len() != q.w[l].len() || plan.shifts[l].len() != q.w[l].len() {
+            diags.push(bdiag(
+                "shape",
+                format!("L{l}"),
+                format!(
+                    "{} neurons but {} biases / {} shift rows",
+                    q.w[l].len(),
+                    q.b[l].len(),
+                    plan.shifts[l].len()
+                ),
+            ));
+            return diags;
+        }
+        for (j, row) in q.w[l].iter().enumerate() {
+            if row.len() != fan_in {
+                diags.push(bdiag(
+                    "shape",
+                    at(l, j),
+                    format!("{} weights but layer fan-in is {fan_in}", row.len()),
+                ));
+                return diags;
+            }
+            if plan.shifts[l][j].len() != row.len() {
+                diags.push(bdiag(
+                    "shape",
+                    at(l, j),
+                    format!("{} weights but {} shifts", row.len(), plan.shifts[l][j].len()),
+                ));
+                return diags;
+            }
+        }
+        fan_in = q.w[l].len();
+    }
+    diags
+}
+
+/// Interval pass: derive every neuron's accumulator bounds in checked
+/// `i64` arithmetic. `Err` carries the diagnostics (shape mismatch or
+/// the first bound overflow, named `L{l}/N{j}`).
+pub fn propagate(q: &QuantMlp, plan: &ShiftPlan) -> Result<ModelBounds, Vec<Diag>> {
+    let shape = check_shape(q, plan);
+    if !shape.is_empty() {
+        return Err(shape);
+    }
+    let mut max_shift = 0u32;
+    let mut in_hi: Vec<i64> = vec![(1i64 << q.in_bits) - 1; q.din()];
+    let mut layers = Vec::with_capacity(q.n_layers());
+    for l in 0..q.n_layers() {
+        let mut bounds = Vec::with_capacity(q.w[l].len());
+        let mut next_hi = Vec::with_capacity(q.w[l].len());
+        for (j, row) in q.w[l].iter().enumerate() {
+            let bias = q.b[l][j];
+            let mut sp_hi: i64 = bias.max(0);
+            let mut sn_hi: i64 = (-bias).max(0);
+            let mut has_neg = bias < 0;
+            for (i, &w) in row.iter().enumerate() {
+                if w == 0 {
+                    continue;
+                }
+                if w < 0 {
+                    has_neg = true;
+                }
+                let s = plan.shifts[l][j][i];
+                max_shift = max_shift.max(s);
+                let p_hi = in_hi[i].checked_mul(w.unsigned_abs() as i64).ok_or_else(|| {
+                    vec![bdiag(
+                        "overflow",
+                        at(l, j),
+                        format!("product bound {} x |{w}| (input {i}) overflows i64", in_hi[i]),
+                    )]
+                })?;
+                // truncation caps the product at a multiple of 2^s;
+                // s >= 63 clears any i64-representable bound entirely
+                // (the circuit's `trunc_low` agrees: p_hi < 2^63)
+                let t_hi = if s >= 63 { 0 } else { (p_hi >> s) << s };
+                let acc = if w > 0 { &mut sp_hi } else { &mut sn_hi };
+                *acc = acc.checked_add(t_hi).ok_or_else(|| {
+                    vec![bdiag(
+                        "overflow",
+                        at(l, j),
+                        "accumulator bound overflows i64".to_string(),
+                    )]
+                })?;
+            }
+            let w_bits = 1 + bits_of(sp_hi).max(bits_of(sn_hi));
+            if w_bits > 63 {
+                return Err(vec![bdiag(
+                    "overflow",
+                    at(l, j),
+                    format!("accumulator needs {w_bits} planes (max 63 — logits must fit i64)"),
+                )]);
+            }
+            let act_hi = (if has_neg { sp_hi - 1 } else { sp_hi }).max(0);
+            bounds.push(NeuronBound {
+                sp_hi,
+                sn_hi,
+                has_neg,
+                w_bits,
+                act_hi,
+            });
+            next_hi.push(act_hi);
+        }
+        layers.push(bounds);
+        in_hi = next_hi;
+    }
+    Ok(ModelBounds { layers, max_shift })
+}
+
+/// First `L{l}/N{j}` whose accumulator bounds differ between two
+/// propagations of the same model (used by the shift-corruption canary:
+/// the first divergence is exactly the corrupted site, since earlier
+/// neurons see identical plans).
+pub fn first_divergence(a: &ModelBounds, b: &ModelBounds) -> Option<(usize, usize)> {
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        for (j, (na, nb)) in la.iter().zip(lb).enumerate() {
+            if na != nb {
+                return Some((l, j));
+            }
+        }
+    }
+    None
+}
+
+/// The logit-exposing netlist for a model/plan (the circuit the
+/// conformance harness simulates; bounds must be [`propagate`]-clean
+/// first or the width-minimal builders can overflow).
+pub fn build_logit_netlist(name: &str, q: &QuantMlp, plan: &ShiftPlan) -> Netlist {
+    build_mlp_logits(&MlpSpecRef {
+        name,
+        weights: &q.w,
+        biases: &q.b,
+        shifts: &plan.shifts,
+        in_bits: q.in_bits,
+        style: NeuronStyle::AxSum,
+    })
+}
+
+/// Compare the generated netlist's interface against the statically
+/// predicted widths: `x{i}` input buses, one `logit{j}` bus per output
+/// neuron at its bound-minimal two's-complement width, and the `class`
+/// bus at `ceil(log2 dout)` bits, last.
+pub fn netlist_width_diags(name: &str, q: &QuantMlp, b: &ModelBounds, nl: &Netlist) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let site = |s: String| format!("{name}: {s}");
+
+    if nl.inputs.len() != q.din() {
+        diags.push(bdiag(
+            "bus-width",
+            site("inputs".into()),
+            format!("{} input buses, model has {} features", nl.inputs.len(), q.din()),
+        ));
+    }
+    for (i, bus) in nl.inputs.iter().enumerate() {
+        if bus.name != format!("x{i}") || bus.nets.len() != q.in_bits {
+            diags.push(bdiag(
+                "bus-width",
+                site(format!("input bus {}", bus.name)),
+                format!(
+                    "expected x{i} at {} bits, found {} at {} bits",
+                    q.in_bits,
+                    bus.name,
+                    bus.nets.len()
+                ),
+            ));
+        }
+    }
+
+    let last = b.layers.len() - 1;
+    for (j, nb) in b.layers[last].iter().enumerate() {
+        let want = nb.logit_width();
+        match nl.outputs.iter().find(|bus| bus.name == format!("logit{j}")) {
+            None => diags.push(bdiag(
+                "missing-bus",
+                site(at(last, j)),
+                format!("no logit{j} output bus"),
+            )),
+            Some(bus) if bus.nets.len() != want => diags.push(bdiag(
+                "bus-width",
+                site(at(last, j)),
+                format!(
+                    "logit{j} bus is {} bits, bounds [{}, {}] require {want}",
+                    bus.nets.len(),
+                    if nb.has_neg { -nb.sn_hi - 1 } else { 0 },
+                    if nb.has_neg { nb.sp_hi - 1 } else { nb.sp_hi },
+                ),
+            )),
+            Some(_) => {}
+        }
+    }
+
+    let class_w = ubits((q.dout() - 1) as u64);
+    match nl.outputs.last() {
+        Some(bus) if bus.name == "class" => {
+            if bus.nets.len() != class_w {
+                diags.push(bdiag(
+                    "bus-width",
+                    site("class".into()),
+                    format!("class bus is {} bits, {} classes need {class_w}", bus.nets.len(), q.dout()),
+                ));
+            }
+        }
+        _ => diags.push(bdiag(
+            "missing-bus",
+            site("class".into()),
+            "last output bus must be `class`".to_string(),
+        )),
+    }
+    diags
+}
+
+/// Full static verification of one model/plan pair: interval pass,
+/// cross-check against `axsum`'s sweep bookkeeping and the bit-slice
+/// compiler, then structural + width verification of the generated
+/// logit netlist. Empty result = statically proven sound.
+pub fn check_model(name: &str, q: &QuantMlp, plan: &ShiftPlan) -> Vec<Diag> {
+    let _span = crate::obs::span("analysis.check_model");
+    let b = match propagate(q, plan) {
+        Ok(b) => b,
+        Err(mut diags) => {
+            // agreement even in rejection: the bit-slice compiler must
+            // refuse this plan too (shape errors never reach it)
+            if diags.iter().all(|d| d.code == "overflow") && BitSliceEval::new(q, plan).is_ok() {
+                diags.push(bdiag(
+                    "bitslice-disagree",
+                    format!("{name}: model"),
+                    "interval pass rejects the plan but bit-slice compilation accepts it".to_string(),
+                ));
+            }
+            return diags;
+        }
+    };
+    let mut diags = Vec::new();
+
+    // cross-check 1: the sweep's width bookkeeping (hidden_bounds uses
+    // unguarded shifts, so skip the comparison for plans whose shifts
+    // exceed i64's shift domain — none of the in-tree decoders emit any)
+    if b.max_shift <= 62 {
+        let widths = layer_input_widths(q, plan);
+        for l in 1..q.n_layers() {
+            for (i, nb) in b.layers[l - 1].iter().enumerate() {
+                let want = ubits(nb.act_hi as u64);
+                if widths[l][i] != want {
+                    diags.push(bdiag(
+                        "axsum-disagree",
+                        format!("{name}: {}", at(l - 1, i)),
+                        format!(
+                            "interval pass sizes the L{l} input {i} bus at {want} bits, axsum::layer_input_widths says {}",
+                            widths[l][i]
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // cross-check 2: bit-slice plan compilation
+    match BitSliceEval::new(q, plan) {
+        Err(e) => diags.push(bdiag(
+            "bitslice-disagree",
+            format!("{name}: {}", at(e.layer, e.neuron)),
+            format!("interval pass accepts the plan but bit-slice compilation rejects it: {}", e.detail),
+        )),
+        Ok(bs) => {
+            for (l, (ours, theirs)) in b.layers.iter().zip(bs.neuron_plane_widths()).enumerate() {
+                for (j, (nb, &w)) in ours.iter().zip(&theirs).enumerate() {
+                    if nb.w_bits != w {
+                        diags.push(bdiag(
+                            "bitslice-disagree",
+                            format!("{name}: {}", at(l, j)),
+                            format!("interval pass needs {} planes, bit-slice compiled {w}", nb.w_bits),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // structural + width verification of the real generated circuit
+    let nl = build_logit_netlist(name, q, plan);
+    diags.extend(super::verifier::verify_netlist(&nl, &super::verifier::IrConfig::default()));
+    diags.extend(netlist_width_diags(name, q, &b, &nl));
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conformance::gen;
+    use crate::util::rng::Rng;
+
+    fn small() -> (QuantMlp, ShiftPlan) {
+        let q = QuantMlp {
+            w: vec![
+                vec![vec![3, -5], vec![0, 7]],
+                vec![vec![2, -1], vec![-4, 6], vec![1, 1]],
+            ],
+            b: vec![vec![4, -9], vec![0, 12, -3]],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        };
+        let plan = ShiftPlan::exact(&q);
+        (q, plan)
+    }
+
+    #[test]
+    fn generated_models_are_statically_sound() {
+        let mut rng = Rng::new(41);
+        for case in 0..40 {
+            let q = gen::random_quant_mlp(&mut rng, &gen::TopologyRange::default());
+            let xs = gen::mixed_stimulus(&mut rng, &q, 16);
+            let (kind, plan) = gen::random_plan(&mut rng, &q, &xs);
+            let diags = check_model("prop", &q, &plan);
+            assert!(diags.is_empty(), "case {case} ({}): {diags:?}", kind.name());
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let (q, mut plan) = small();
+        plan.shifts[1][2].pop();
+        let diags = check_model("shape", &q, &plan);
+        assert!(
+            diags.iter().any(|d| d.code == "shape" && d.site == "L1/N2"),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn narrowed_logit_bus_is_named() {
+        let (q, plan) = small();
+        let b = propagate(&q, &plan).unwrap();
+        let mut nl = build_logit_netlist("t", &q, &plan);
+        let bus = nl.outputs.iter_mut().find(|b| b.name == "logit1").unwrap();
+        bus.nets.pop();
+        let diags = netlist_width_diags("t", &q, &b, &nl);
+        assert!(
+            diags.iter().any(|d| d.code == "bus-width" && d.site.contains("L1/N1")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn widened_logit_bus_is_named() {
+        let (q, plan) = small();
+        let b = propagate(&q, &plan).unwrap();
+        let mut nl = build_logit_netlist("t", &q, &plan);
+        let extra = nl.inputs[0].nets[0];
+        let bus = nl.outputs.iter_mut().find(|b| b.name == "logit0").unwrap();
+        bus.nets.push(extra);
+        let diags = netlist_width_diags("t", &q, &b, &nl);
+        assert!(
+            diags.iter().any(|d| d.code == "bus-width" && d.site.contains("L1/N0")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn overflow_is_rejected_in_agreement_with_bitslice() {
+        // one layer of huge fan-in x max weights cannot overflow i64 at
+        // 4-bit inputs, so chain two wide layers of 127s
+        let din = 4usize;
+        let wide = 6usize;
+        let mut q = QuantMlp {
+            w: vec![vec![vec![127; din]; wide]],
+            b: vec![vec![0; wide]],
+            in_bits: 4,
+            w_scales: vec![1.0],
+        };
+        // stack layers until the interval pass rejects (bounds grow
+        // ~127*6 per layer => a handful of layers suffice)
+        for _ in 0..12 {
+            q.w.push(vec![vec![127; wide]; wide]);
+            q.b.push(vec![0; wide]);
+            q.w_scales.push(1.0);
+        }
+        let plan = ShiftPlan::exact(&q);
+        let diags = match propagate(&q, &plan) {
+            Ok(_) => panic!("expected overflow rejection"),
+            Err(d) => d,
+        };
+        let site = &diags[0].site;
+        assert_eq!(diags[0].code, "overflow", "{diags:?}");
+        let e = BitSliceEval::new(&q, &plan).expect_err("bitslice must reject too");
+        assert_eq!(site, &format!("L{}/N{}", e.layer, e.neuron), "{diags:?}");
+    }
+
+    #[test]
+    fn divergence_names_the_first_touched_neuron() {
+        let (q, plan) = small();
+        let mut tampered = plan.clone();
+        tampered.shifts[1][1][0] = 9;
+        let a = propagate(&q, &plan).unwrap();
+        let b = propagate(&q, &tampered).unwrap();
+        assert_eq!(first_divergence(&a, &b), Some((1, 1)));
+        assert_eq!(first_divergence(&a, &a), None);
+    }
+}

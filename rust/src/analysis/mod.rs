@@ -1,0 +1,238 @@
+//! Static analysis: prove netlist/plan soundness *before* simulation.
+//!
+//! Two front ends over one diagnostic vocabulary ([`Diag`]):
+//!
+//!  * **Circuit IR verifier** ([`verifier`]) — structural lint over
+//!    [`crate::netlist::Netlist`] (dangling nets, combinational
+//!    cycles/forward references, aliased primary inputs, malformed or
+//!    dead output cones), plus an interval abstract interpretation
+//!    ([`bounds`]) that propagates signed value bounds through the
+//!    `synth` arithmetic (CSD multipliers, split-sign adder trees,
+//!    shift-truncate, ones'-complement merge) and statically proves
+//!    every bus width overflow-free — cross-checked, neuron by neuron,
+//!    against the bound bookkeeping `axsum::bitslice` plan compilation
+//!    uses and against the actual bus widths of the generated netlist.
+//!  * **Source-invariant linter** ([`srclint`]) — a zero-dependency
+//!    banned-pattern pass over `rust/src` enforcing the fabric's
+//!    standing rules (NaN-safe `total_cmp` orderings, atomic JSON
+//!    writes, leveled logging, no wall-clock reads in deterministic
+//!    modules), with a per-site `lint:allow(...)` escape hatch.
+//!
+//! How static and dynamic conformance compose: the conformance harness
+//! runs every fuzz case through this verifier *first*; a static reject
+//! is a failure (the generators only emit well-formed instances), and a
+//! static **accept** followed by a **dynamic** logit mismatch is an
+//! instant failure too — the abstract interpretation claimed a sound
+//! circuit that the differential engines then refuted, which means the
+//! analysis itself is wrong. [`analysis_canary`] keeps the detector
+//! honest the same way the conformance canaries do: an injected
+//! dangling net and a [`crate::conformance::gen::corrupt_one_shift`]
+//! fault must each be flagged with the offending net / neuron named.
+//!
+//! The pre-sweep gate ([`preflight`]) leans on a monotonicity argument:
+//! truncation only shrinks a product bound (`(p >> s) << s <= p`), so
+//! the all-exact plan dominates every truncated plan of the same model.
+//! Verifying the exact plan therefore proves *every* plan the DSE will
+//! enumerate overflow-free, for the cost of one netlist build.
+
+pub mod bounds;
+pub mod srclint;
+pub mod verifier;
+
+pub use bounds::{check_model, propagate, ModelBounds};
+pub use srclint::{lint_source_tree, SrcLintReport};
+pub use verifier::{verify_netlist, IrConfig};
+
+use crate::axsum::ShiftPlan;
+use crate::fixed::QuantMlp;
+
+/// One static-analysis finding. `pass` is the front end (`ir`, `bounds`
+/// or `srclint`), `code` the rule, `site` the flagged location in
+/// original coordinates (gate/net/bus for IR, `L{l}/N{j}` for the
+/// interval pass — mirroring the conformance shrinker — or `file:line`
+/// for the source linter).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diag {
+    pub pass: &'static str,
+    pub code: &'static str,
+    pub site: String,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}/{}] {}: {}", self.pass, self.code, self.site, self.detail)
+    }
+}
+
+/// Render at most `cap` diagnostics into one summary line.
+pub fn summarize(diags: &[Diag], cap: usize) -> String {
+    let shown: Vec<String> = diags.iter().take(cap).map(|d| d.to_string()).collect();
+    let extra = diags.len().saturating_sub(cap);
+    if extra > 0 {
+        format!("{} (+{extra} more)", shown.join("; "))
+    } else {
+        shown.join("; ")
+    }
+}
+
+/// Fail-fast pre-sweep gate: statically verify the model under the
+/// all-exact plan (which dominates every truncated plan — see the module
+/// docs) before a sweep burns hours on it. Returns the first few
+/// diagnostics as an error string; increments `lint.preflights`.
+pub fn preflight(model: &str, q: &QuantMlp) -> Result<(), String> {
+    crate::obs::counters::LINT_PREFLIGHTS.incr();
+    let _span = crate::obs::span("analysis.preflight");
+    let plan = ShiftPlan::exact(q);
+    let diags = bounds::check_model(model, q, &plan);
+    if diags.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "static verification rejected model `{model}`: {}",
+            summarize(&diags, 3)
+        ))
+    }
+}
+
+/// Fault-injection canary for the static analyzer itself (run by
+/// `repro lint` and the conformance experiment): inject the two fault
+/// classes the verifier exists to catch and demand each is flagged with
+/// its site named.
+///
+///  1. **Dangling net** — a gate input and an output-bus net are rewired
+///     past the end of the gate array of a generated MLP netlist; the IR
+///     verifier must name the offending net id both times.
+///  2. **Corrupted shift** — [`crate::conformance::gen::corrupt_one_shift`]
+///     flips one truncation shift; the interval pass over the corrupted
+///     plan must first disagree with the honest plan exactly at the
+///     corrupted `L{l}/N{j}` coordinates.
+///
+/// Like `conformance::canary_at`, each fault retries a few reseeds (a
+/// corruption can be bound-invisible when the flipped shift lands past
+/// the product's trailing zeros) and reports the replay seed on failure.
+pub fn analysis_canary(seed: u64) -> Result<String, String> {
+    use crate::conformance::gen;
+    use crate::util::rng::Rng;
+
+    let _span = crate::obs::span("analysis.canary");
+    let topo = gen::TopologyRange::default();
+
+    // -- fault 1: dangling net ------------------------------------------
+    let mut named_gate = None;
+    let mut named_bus = None;
+    for attempt in 0..16u64 {
+        let mut rng = Rng::new(seed ^ 0x0DA_46_11 ^ (attempt << 32));
+        let q = gen::random_quant_mlp(&mut rng, &topo);
+        let plan = ShiftPlan::exact(&q);
+        let mut nl = bounds::build_logit_netlist("canary", &q, &plan);
+        let bogus = nl.gates.len() as crate::netlist::NetId + 7;
+        // rewire the last physical (arity >= 1) gate's first input off
+        // the end of the gate array
+        let victim = match nl
+            .gates
+            .iter()
+            .rposition(|g| !g.inputs().is_empty()) {
+            Some(v) => v,
+            None => continue,
+        };
+        nl.gates[victim].ins[0] = bogus;
+        // and point an output-bus bit at a second phantom net
+        let bus_bogus = bogus + 2;
+        match nl.outputs.last_mut() {
+            Some(bus) if !bus.nets.is_empty() => bus.nets[0] = bus_bogus,
+            _ => continue,
+        }
+        let diags = verifier::verify_netlist(&nl, &verifier::IrConfig { allow_dead: true });
+        named_gate = diags
+            .iter()
+            .find(|d| d.code == "dangling-net" && d.detail.contains(&format!("net {bogus}")))
+            .cloned();
+        named_bus = diags
+            .iter()
+            .find(|d| d.code == "dangling-net" && d.detail.contains(&format!("net {bus_bogus}")))
+            .cloned();
+        if named_gate.is_some() && named_bus.is_some() {
+            break;
+        }
+    }
+    let named_gate = named_gate.ok_or_else(|| {
+        format!("canary NOT caught: dangling gate input went unflagged (seed {seed})")
+    })?;
+    let named_bus = named_bus.ok_or_else(|| {
+        format!("canary NOT caught: dangling output-bus net went unflagged (seed {seed})")
+    })?;
+
+    // -- fault 2: corrupted shift ---------------------------------------
+    let mut shift_msg = None;
+    for attempt in 0..16u64 {
+        let mut rng = Rng::new(seed ^ 0x5_41F7 ^ (attempt << 32));
+        let q = gen::random_quant_mlp(&mut rng, &topo);
+        let xs = gen::mixed_stimulus(&mut rng, &q, 24);
+        let (_, plan) = gen::random_plan(&mut rng, &q, &xs);
+        let Some((corrupt, (l, j, _i))) = gen::corrupt_one_shift(&q, &plan) else {
+            continue;
+        };
+        let (Ok(honest), Ok(tampered)) = (propagate(&q, &plan), propagate(&q, &corrupt)) else {
+            continue;
+        };
+        match bounds::first_divergence(&honest, &tampered) {
+            // the first diverging neuron must be exactly the corruption
+            // site: earlier neurons see identical plans
+            Some((dl, dj)) if (dl, dj) == (l, j) => {
+                shift_msg = Some(format!("corrupted shift flagged at L{l}/N{j}"));
+                break;
+            }
+            Some((dl, dj)) => {
+                return Err(format!(
+                    "canary misattributed: corrupted L{l}/N{j} but bounds first diverge at L{dl}/N{dj} (seed {seed})"
+                ));
+            }
+            None => {} // bound-invisible corruption: reseed
+        }
+    }
+    let shift_msg = shift_msg.ok_or_else(|| {
+        format!("canary NOT caught: corrupted shift left all bounds unchanged after 16 attempts (seed {seed})")
+    })?;
+
+    Ok(format!(
+        "dangling net flagged ({} / {}); {}",
+        named_gate.site, named_bus.site, shift_msg
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conformance::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn preflight_accepts_generated_models() {
+        let mut rng = Rng::new(11);
+        for i in 0..10 {
+            let q = gen::random_quant_mlp(&mut rng, &gen::TopologyRange::default());
+            assert_eq!(preflight(&format!("m{i}"), &q), Ok(()));
+        }
+    }
+
+    #[test]
+    fn canary_catches_both_faults() {
+        let msg = analysis_canary(2023).expect("canary must catch injected faults");
+        assert!(msg.contains("dangling net flagged"), "{msg}");
+        assert!(msg.contains("corrupted shift flagged at L"), "{msg}");
+    }
+
+    #[test]
+    fn summarize_caps_output() {
+        let d = |i: usize| Diag {
+            pass: "ir",
+            code: "dangling-net",
+            site: format!("gate {i}"),
+            detail: "x".into(),
+        };
+        let diags: Vec<Diag> = (0..5).map(d).collect();
+        let s = summarize(&diags, 2);
+        assert!(s.contains("(+3 more)"), "{s}");
+    }
+}

@@ -1,0 +1,370 @@
+//! Source-invariant linter: the fabric's standing rules as a
+//! banned-pattern table over `rust/src`, zero dependencies.
+//!
+//! Rules (each earned by a past incident — see ARCHITECTURE.md §Static
+//! analysis):
+//!
+//!  * `float-ordering` — no `partial_cmp` f64 orderings anywhere; a NaN
+//!    objective must sort deterministically-worst (`total_cmp` + the
+//!    `dse` NaN-hostile keys), not panic or scramble a Pareto front.
+//!  * `raw-file-create` — results/checkpoint JSON must go through
+//!    `util::json::write_atomic`/`write_exclusive` (crash-safe rename,
+//!    no torn checkpoints), never a bare `File::create`.
+//!  * `console-print` — no `println!`/`eprintln!` outside `cli/` and
+//!    `main.rs`; everything else logs through `log!` so `--quiet`/
+//!    verbosity and the telemetry layer stay authoritative.
+//!  * `wall-clock` — no `Instant::now`/`SystemTime::now` in the
+//!    deterministic modules (`axsum`, `sim`, `dse`): bit-identical
+//!    resume and sharded parity depend on decode paths that never read
+//!    the clock. (Lease bookkeeping and telemetry spans carry explicit
+//!    allows.)
+//!
+//! A site opts out with `// lint:allow(rule-name)` on the same or the
+//! preceding line. Matching runs on *stripped* source — comments,
+//! string and char literals are lexed away first — so doc references to
+//! a banned pattern (or this table itself) never trip the lint.
+
+use std::path::Path;
+
+use super::Diag;
+
+struct Rule {
+    name: &'static str,
+    needles: &'static [&'static str],
+    /// Does the rule apply to this `src`-relative path ('/'-separated)?
+    applies: fn(&str) -> bool,
+    advice: &'static str,
+}
+
+fn everywhere(_p: &str) -> bool {
+    true
+}
+
+fn outside_console_sinks(p: &str) -> bool {
+    !(p.starts_with("cli/") || p == "cli.rs" || p == "main.rs")
+}
+
+fn deterministic_modules(p: &str) -> bool {
+    for m in ["axsum", "sim", "dse"] {
+        if p == format!("{m}.rs") || p.starts_with(&format!("{m}/")) {
+            return true;
+        }
+    }
+    false
+}
+
+const RULES: &[Rule] = &[
+    Rule {
+        name: "float-ordering",
+        needles: &["partial_cmp"],
+        applies: everywhere,
+        advice: "order f64 with total_cmp (NaN-worst via dse::acc_key/area_key), never partial_cmp",
+    },
+    Rule {
+        name: "raw-file-create",
+        needles: &["File::create"],
+        applies: everywhere,
+        advice: "write results/checkpoints via util::json::write_atomic or write_exclusive",
+    },
+    Rule {
+        name: "console-print",
+        needles: &["println!", "eprintln!"],
+        applies: outside_console_sinks,
+        advice: "log through crate::log! so verbosity flags and telemetry stay authoritative",
+    },
+    Rule {
+        name: "wall-clock",
+        needles: &["Instant::now", "SystemTime::now"],
+        applies: deterministic_modules,
+        advice: "deterministic modules must not read the clock (bit-identical resume/parity)",
+    },
+];
+
+/// Outcome of a tree lint.
+#[derive(Clone, Debug, Default)]
+pub struct SrcLintReport {
+    pub files: usize,
+    pub lines: usize,
+    /// Sites that matched a rule and carried no allow marker.
+    pub violations: Vec<Diag>,
+    /// Sites silenced by a `lint:allow(...)` marker.
+    pub allowed: usize,
+}
+
+/// Comment/string stripping state carried across lines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Lex {
+    Code,
+    /// Nested block comment depth.
+    Block(u32),
+    /// Inside a normal string literal.
+    Str,
+    /// Inside a raw string literal closed by `"` + this many `#`.
+    RawStr(u8),
+}
+
+/// Strip one line to its code-only residue (comments, string and char
+/// literal *contents* blanked), advancing the cross-line lexer state.
+fn strip_line(line: &str, state: &mut Lex) -> String {
+    let b = line.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0usize;
+    while i < b.len() {
+        match *state {
+            Lex::Block(depth) => {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    *state = Lex::Block(depth + 1);
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    *state = if depth == 1 { Lex::Code } else { Lex::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            Lex::Str => {
+                if b[i] == b'\\' {
+                    i += 2;
+                } else if b[i] == b'"' {
+                    *state = Lex::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Lex::RawStr(hashes) => {
+                if b[i] == b'"'
+                    && b[i + 1..].len() >= hashes as usize
+                    && b[i + 1..i + 1 + hashes as usize].iter().all(|&c| c == b'#')
+                {
+                    *state = Lex::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            Lex::Code => {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'/') {
+                    break; // line comment: rest of the line is gone
+                }
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    *state = Lex::Block(1);
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    *state = Lex::Str;
+                    i += 1;
+                    continue;
+                }
+                if b[i] == b'r' || b[i] == b'b' {
+                    // raw (or byte/raw-byte) string prefix: r", br", r#"...
+                    let mut j = i + 1;
+                    if b[i] == b'b' && b.get(j) == Some(&b'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u8;
+                    while b.get(j + hashes as usize) == Some(&b'#') {
+                        hashes += 1;
+                    }
+                    if (b[i] != b'b' || j > i + 1) && b.get(j + hashes as usize) == Some(&b'"') {
+                        *state = Lex::RawStr(hashes);
+                        i = j + hashes as usize + 1;
+                        continue;
+                    }
+                    if b[i] == b'b' && b.get(j) == Some(&b'"') {
+                        *state = Lex::Str; // byte string
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if b[i] == b'\'' {
+                    // char literal vs lifetime: 'x' / '\n' are literals
+                    // (skip, so '"' cannot open a phantom string);
+                    // anything else is a lifetime — emit and move on
+                    if b.get(i + 1) == Some(&b'\\') {
+                        let mut j = i + 2;
+                        while j < b.len() && b[j] != b'\'' {
+                            j += 1;
+                        }
+                        i = (j + 1).min(b.len());
+                        continue;
+                    }
+                    if i + 2 < b.len() && b[i + 2] == b'\'' {
+                        i += 3;
+                        continue;
+                    }
+                }
+                out.push(b[i]);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// `lint:allow(a, b)` markers on a raw (unstripped) line.
+fn markers(line: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(pos) = rest.find("lint:allow(") {
+        rest = &rest[pos + "lint:allow(".len()..];
+        if let Some(end) = rest.find(')') {
+            out.extend(rest[..end].split(',').map(str::trim).filter(|s| !s.is_empty()));
+            rest = &rest[end + 1..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Lint one file's text. `rel` is the `src`-relative path with `/`
+/// separators; findings accumulate into `report`.
+pub fn lint_str(rel: &str, text: &str, report: &mut SrcLintReport) {
+    report.files += 1;
+    let active: Vec<&Rule> = RULES.iter().filter(|r| (r.applies)(rel)).collect();
+    if active.is_empty() {
+        report.lines += text.lines().count();
+        return;
+    }
+    let mut state = Lex::Code;
+    let mut prev_allows: Vec<String> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        report.lines += 1;
+        let here: Vec<String> = markers(raw).into_iter().map(str::to_string).collect();
+        let stripped = strip_line(raw, &mut state);
+        for rule in &active {
+            if !rule.needles.iter().any(|n| stripped.contains(n)) {
+                continue;
+            }
+            if here.iter().chain(&prev_allows).any(|a| a == rule.name) {
+                report.allowed += 1;
+                continue;
+            }
+            report.violations.push(Diag {
+                pass: "srclint",
+                code: rule.name,
+                site: format!("src/{rel}:{}", idx + 1),
+                detail: rule.advice.to_string(),
+            });
+        }
+        prev_allows = here;
+    }
+}
+
+/// Recursively lint every `.rs` file under `root`, reporting paths
+/// relative to it.
+pub fn lint_tree(root: &Path) -> std::io::Result<SrcLintReport> {
+    let _span = crate::obs::span("analysis.srclint");
+    let mut report = SrcLintReport::default();
+    let mut files = Vec::new();
+    collect_rs(root, root, &mut files)?;
+    files.sort();
+    for rel in files {
+        let text = std::fs::read_to_string(root.join(&rel))?;
+        lint_str(&rel.replace('\\', "/"), &text, &mut report);
+    }
+    crate::obs::counters::LINT_SRC_FILES.add(report.files as u64);
+    crate::obs::counters::LINT_SRC_VIOLATIONS.add(report.violations.len() as u64);
+    Ok(report)
+}
+
+/// Lint this crate's own `src` tree (the CI entry point).
+pub fn lint_source_tree() -> std::io::Result<SrcLintReport> {
+    lint_tree(Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src")))
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            if let Ok(rel) = path.strip_prefix(root) {
+                out.push(rel.to_string_lossy().into_owned());
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(rel: &str, text: &str) -> SrcLintReport {
+        let mut r = SrcLintReport::default();
+        lint_str(rel, text, &mut r);
+        r
+    }
+
+    #[test]
+    fn flags_partial_cmp_in_code() {
+        let r = lint_one("search/x.rs", "a.partial_cmp(&b).unwrap()\n");
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].code, "float-ordering");
+        assert_eq!(r.violations[0].site, "src/search/x.rs:1");
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_trip() {
+        let text = "// the old partial_cmp hazard\nlet s = \"File::create\";\n/* println!\n   eprintln! */\n";
+        let r = lint_one("dse/x.rs", text);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn allow_marker_on_same_or_previous_line() {
+        let same = "let c = a.partial_cmp(&b); // lint:allow(float-ordering)\n";
+        let prev = "// lint:allow(float-ordering)\nlet c = a.partial_cmp(&b);\n";
+        let far = "// lint:allow(float-ordering)\n\nlet c = a.partial_cmp(&b);\n";
+        assert!(lint_one("a.rs", same).violations.is_empty());
+        assert_eq!(lint_one("a.rs", same).allowed, 1);
+        assert!(lint_one("a.rs", prev).violations.is_empty());
+        assert_eq!(lint_one("a.rs", far).violations.len(), 1, "marker must be adjacent");
+    }
+
+    #[test]
+    fn console_print_scoping() {
+        let text = "println!(\"x\");\n";
+        assert!(lint_one("cli/mod.rs", text).violations.is_empty());
+        assert!(lint_one("main.rs", text).violations.is_empty());
+        assert_eq!(lint_one("dse/mod.rs", text).violations.len(), 1);
+        assert_eq!(lint_one("obs/mod.rs", text).violations.len(), 1);
+    }
+
+    #[test]
+    fn wall_clock_scoped_to_deterministic_modules() {
+        let text = "let t = std::time::Instant::now();\n";
+        assert_eq!(lint_one("dse/shard.rs", text).violations.len(), 1);
+        assert_eq!(lint_one("axsum/bitslice.rs", text).violations.len(), 1);
+        assert_eq!(lint_one("sim/mod.rs", text).violations.len(), 1);
+        assert!(lint_one("util/bench.rs", text).violations.is_empty());
+        assert!(lint_one("experiments/mod.rs", text).violations.is_empty());
+    }
+
+    #[test]
+    fn multiline_and_raw_strings_stay_stripped() {
+        let text = "let s = \"first\nprintln!(\\\"x\\\")\nlast\";\nlet r = r#\"eprintln!\"#;\n";
+        let r = lint_one("dse/x.rs", text);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn char_literal_quote_does_not_open_a_string() {
+        let text = "let q = '\"';\nlet v: Vec<&'static str> = vec![];\na.partial_cmp(&b);\n";
+        let r = lint_one("a.rs", text);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].site, "src/a.rs:3");
+    }
+
+    #[test]
+    fn own_tree_is_violation_free() {
+        let r = lint_source_tree().expect("src tree readable");
+        assert!(r.files > 40, "walked only {} files", r.files);
+        let msg: Vec<String> = r.violations.iter().map(|d| d.to_string()).collect();
+        assert!(r.violations.is_empty(), "{}", msg.join("\n"));
+    }
+}

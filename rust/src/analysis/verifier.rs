@@ -1,0 +1,269 @@
+//! Structural lint over the gate-level netlist IR.
+//!
+//! The IR makes several classes of malformation *cheap to state*: a
+//! gate's output net id is its index, so "multiply-driven net" cannot be
+//! expressed directly — its analog here is a primary input bound to two
+//! input-bus positions (aliased ports). What remains expressible, and
+//! what generator bugs actually produce, is checked:
+//!
+//!  * `dangling-net` — a gate input or a bus bit references a net id
+//!    past the end of the gate array (undriven);
+//!  * `topo-cycle` — a gate references itself or a *later* gate;
+//!    because construction is append-only, any back edge in levelized
+//!    order is a combinational cycle / forward reference (`Netlist::push`
+//!    only `debug_assert!`s this, so release-built generators need the
+//!    runtime check);
+//!  * `input-bus-driver` / `aliased-input` / `orphan-input` — input-bus
+//!    bits must map 1:1 onto `Input` gates;
+//!  * `empty-bus` — an output bus with no nets;
+//!  * `dead-gate` — a physical cell outside every output's fanin cone
+//!    (generated netlists are swept, so dead logic means a generator
+//!    forgot `sweep()`; the conformance fuzzer's deliberately-unswept
+//!    netlists opt out via [`IrConfig::allow_dead`]).
+
+use crate::netlist::Netlist;
+use crate::pdk::CellKind;
+
+use super::Diag;
+
+/// Verifier knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IrConfig {
+    /// Accept gates outside every output cone (for deliberately-unswept
+    /// netlists, e.g. `conformance::gen::random_netlist`).
+    pub allow_dead: bool,
+}
+
+fn diag(code: &'static str, site: String, detail: String) -> Diag {
+    Diag {
+        pass: "ir",
+        code,
+        site,
+        detail,
+    }
+}
+
+/// Run every structural check; returns all findings (empty = sound).
+pub fn verify_netlist(nl: &Netlist, cfg: &IrConfig) -> Vec<Diag> {
+    crate::obs::counters::LINT_IR_NETLISTS.incr();
+    let n = nl.gates.len();
+    let mut diags = Vec::new();
+
+    // gate-local wiring: range + topological (levelized) order
+    for (i, g) in nl.gates.iter().enumerate() {
+        for (k, &inp) in g.inputs().iter().enumerate() {
+            let site = format!("{}: gate {i} ({})", nl.name, g.kind.name());
+            if (inp as usize) >= n {
+                diags.push(diag(
+                    "dangling-net",
+                    site,
+                    format!("input {k} references undriven net {inp} (only {n} nets exist)"),
+                ));
+            } else if (inp as usize) >= i {
+                let what = if (inp as usize) == i {
+                    "itself (combinational cycle)".to_string()
+                } else {
+                    format!("later net {inp} (forward reference breaks levelized order)")
+                };
+                diags.push(diag("topo-cycle", site, format!("input {k} references {what}")));
+            }
+        }
+    }
+
+    // input buses <-> Input gates: 1:1 binding
+    let mut bound = vec![0u32; n];
+    for bus in &nl.inputs {
+        for (k, &net) in bus.nets.iter().enumerate() {
+            let site = format!("{}: input bus {}[{k}]", nl.name, bus.name);
+            if (net as usize) >= n {
+                diags.push(diag(
+                    "dangling-net",
+                    site,
+                    format!("bound to undriven net {net} (only {n} nets exist)"),
+                ));
+                continue;
+            }
+            bound[net as usize] += 1;
+            let kind = nl.gates[net as usize].kind;
+            if kind != CellKind::Input {
+                diags.push(diag(
+                    "input-bus-driver",
+                    site,
+                    format!("bound to a {} gate (net {net}); input buses may only carry Input nets", kind.name()),
+                ));
+            }
+        }
+    }
+    for (i, g) in nl.gates.iter().enumerate() {
+        if g.kind != CellKind::Input {
+            continue;
+        }
+        let site = format!("{}: gate {i} (input)", nl.name);
+        match bound[i] {
+            0 => diags.push(diag(
+                "orphan-input",
+                site,
+                format!("Input net {i} appears in no input bus (unreachable port bit)"),
+            )),
+            1 => {}
+            c => diags.push(diag(
+                "aliased-input",
+                site,
+                format!("Input net {i} is bound to {c} input-bus positions (multiply-driven port)"),
+            )),
+        }
+    }
+
+    // output buses: non-empty, in range
+    for bus in &nl.outputs {
+        if bus.nets.is_empty() {
+            diags.push(diag(
+                "empty-bus",
+                format!("{}: output bus {}", nl.name, bus.name),
+                "output bus has zero nets".to_string(),
+            ));
+        }
+        for (k, &net) in bus.nets.iter().enumerate() {
+            if (net as usize) >= n {
+                diags.push(diag(
+                    "dangling-net",
+                    format!("{}: output bus {}[{k}]", nl.name, bus.name),
+                    format!("driven by undriven net {net} (only {n} nets exist)"),
+                ));
+            }
+        }
+    }
+
+    // dead physical cells: cone-of-outputs mark (same walk as sweep(),
+    // but read-only), tolerating the out-of-range nets flagged above
+    if !cfg.allow_dead {
+        let mut live = vec![false; n];
+        let mut stack: Vec<usize> = Vec::new();
+        for bus in &nl.outputs {
+            for &net in &bus.nets {
+                if (net as usize) < n && !live[net as usize] {
+                    live[net as usize] = true;
+                    stack.push(net as usize);
+                }
+            }
+        }
+        while let Some(id) = stack.pop() {
+            for &i in nl.gates[id].inputs() {
+                // mark-before-push keeps this terminating even on the
+                // cyclic/forward-referencing netlists flagged above
+                if (i as usize) < n && !live[i as usize] {
+                    live[i as usize] = true;
+                    stack.push(i as usize);
+                }
+            }
+        }
+        for (i, g) in nl.gates.iter().enumerate() {
+            let physical = !matches!(
+                g.kind,
+                CellKind::Input | CellKind::Const0 | CellKind::Const1
+            );
+            if physical && !live[i] {
+                diags.push(diag(
+                    "dead-gate",
+                    format!("{}: gate {i} ({})", nl.name, g.kind.name()),
+                    format!("net {i} is outside every output's fanin cone (unswept netlist?)"),
+                ));
+            }
+        }
+    }
+
+    crate::obs::counters::LINT_IR_DIAGS.add(diags.len() as u64);
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Gate;
+
+    fn tiny() -> Netlist {
+        let mut nl = Netlist::new("t");
+        let v = nl.input_bus("v", 2);
+        let g = nl.and(v[0], v[1]);
+        nl.output_bus("y", vec![g]);
+        nl
+    }
+
+    #[test]
+    fn clean_netlist_passes() {
+        assert!(verify_netlist(&tiny(), &IrConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn dangling_gate_input_is_named() {
+        let mut nl = tiny();
+        let last = nl.gates.len() - 1;
+        nl.gates[last].ins[0] = 99;
+        let diags = verify_netlist(&nl, &IrConfig::default());
+        assert!(
+            diags.iter().any(|d| d.code == "dangling-net" && d.detail.contains("net 99")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn self_reference_is_a_cycle() {
+        let mut nl = tiny();
+        let last = nl.gates.len() - 1;
+        nl.gates[last].ins[0] = last as u32;
+        let diags = verify_netlist(&nl, &IrConfig::default());
+        assert!(
+            diags.iter().any(|d| d.code == "topo-cycle" && d.detail.contains("combinational cycle")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn forward_reference_is_flagged() {
+        let mut nl = tiny();
+        // append a buffer of a net that does not exist yet, then the net
+        let idx = nl.gates.len() as u32;
+        nl.gates.push(Gate { kind: crate::pdk::CellKind::Buf, ins: [idx + 1, 0, 0] });
+        nl.gates.push(Gate { kind: crate::pdk::CellKind::Buf, ins: [0, 0, 0] });
+        let diags = verify_netlist(&nl, &IrConfig { allow_dead: true });
+        assert!(diags.iter().any(|d| d.code == "topo-cycle"), "{diags:?}");
+    }
+
+    #[test]
+    fn aliased_and_orphan_inputs() {
+        let mut nl = tiny();
+        // bind v[0]'s net twice, orphaning v[1]'s
+        let n0 = nl.inputs[0].nets[0];
+        nl.inputs[0].nets[1] = n0;
+        let diags = verify_netlist(&nl, &IrConfig { allow_dead: true });
+        assert!(diags.iter().any(|d| d.code == "aliased-input"), "{diags:?}");
+        assert!(diags.iter().any(|d| d.code == "orphan-input"), "{diags:?}");
+    }
+
+    #[test]
+    fn output_bus_checks() {
+        let mut nl = tiny();
+        nl.output_bus("z", vec![]);
+        nl.outputs[0].nets[0] = 1234;
+        let diags = verify_netlist(&nl, &IrConfig { allow_dead: true });
+        assert!(diags.iter().any(|d| d.code == "empty-bus"), "{diags:?}");
+        assert!(
+            diags.iter().any(|d| d.code == "dangling-net" && d.detail.contains("net 1234")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn dead_gate_flagged_unless_allowed() {
+        let mut nl = Netlist::new("t");
+        let v = nl.input_bus("v", 2);
+        let live = nl.and(v[0], v[1]);
+        let _dead = nl.xor(v[0], v[1]);
+        nl.output_bus("y", vec![live]);
+        let diags = verify_netlist(&nl, &IrConfig::default());
+        assert!(diags.iter().any(|d| d.code == "dead-gate"), "{diags:?}");
+        assert!(verify_netlist(&nl, &IrConfig { allow_dead: true }).is_empty());
+        // and the swept form is clean under the strict config
+        assert!(verify_netlist(&nl.sweep().0, &IrConfig::default()).is_empty());
+    }
+}

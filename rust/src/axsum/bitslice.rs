@@ -473,6 +473,17 @@ impl BitSliceEval {
         })
     }
 
+    /// Compiled two's-complement accumulator width (planes) of every
+    /// neuron, `[layer][neuron]` — the bound bookkeeping the static
+    /// analyzer ([`crate::analysis::bounds`]) cross-checks its interval
+    /// pass against.
+    pub fn neuron_plane_widths(&self) -> Vec<Vec<u32>> {
+        self.layers
+            .iter()
+            .map(|l| l.neurons.iter().map(|n| n.w).collect())
+            .collect()
+    }
+
     /// Grow the scratch buffers to this model's compiled plane counts
     /// (no-op once warm — buffers never shrink).
     fn prepare<W: PlaneWord>(&self, s: &mut BitSliceScratch<W>) {

@@ -51,7 +51,7 @@ pub fn weight_approximate(
                         continue;
                     }
                     let a = lut.area_of(cand);
-                    if a < cur && best.map(|(ba, _)| a < ba).unwrap_or(true) {
+                    if a < cur && best.is_none_or(|(ba, _)| a < ba) {
                         best = Some((a, cand));
                     }
                 }

@@ -23,11 +23,7 @@ impl Args {
                 }
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     let v = it.next().unwrap();
                     out.flags.insert(stripped.to_string(), v);
                 } else {
@@ -51,7 +47,7 @@ impl Args {
     }
 
     pub fn flag_bool(&self, key: &str) -> bool {
-        matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
+        matches!(self.flag(key), Some("true" | "1" | "yes"))
     }
 
     pub fn flag_u64(&self, key: &str, default: u64) -> Result<u64, String> {
@@ -102,6 +98,11 @@ COMMANDS (one per paper table/figure — see DESIGN.md §6):
                 cross-validation (all forwards, logit-exact), the sweep-
                 level sharded-vs-monolithic engine, + golden regression
                 diff under rust/tests/golden/
+  lint          static-analysis gate: source-invariant linter over
+                rust/src, circuit verifier + interval bound pass over
+                every golden model x plan family, + the analyzer's own
+                fault-injection canary (emits results/lint_summary.csv
+                + lint_violations.json)
   all           every experiment in sequence
   verilog       emit bespoke Verilog RTL for a dataset (--dataset, --threshold)
   smoke         PJRT runtime + artifact smoke test

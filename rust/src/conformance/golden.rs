@@ -22,7 +22,7 @@
 //! the golden directory so a blessed-but-uncommitted change cannot slip
 //! through.
 
-use crate::axsum::{threshold_candidates, FlatEval, FlatScratch, ShiftPlan};
+use crate::axsum::{threshold_candidates, FlatEval, FlatScratch, ShiftPlan, Significance};
 use crate::datasets;
 use crate::estimate::estimate_with_toggles;
 use crate::fixed::{quantize_inputs, QuantMlp};
@@ -77,7 +77,9 @@ fn r9(x: f64) -> Json {
 
 const TRAIN_EVAL_CAP: usize = 400;
 const TEST_EVAL_CAP: usize = 300;
-const SIG_SAMPLES: usize = 200;
+/// Significance-estimation sample cap — `pub` so `repro lint` derives
+/// the same significance (hence the same plan menu) as the snapshots.
+pub const SIG_SAMPLES: usize = 200;
 /// 96 stimulus patterns: crosses the 64-pattern chunk edge.
 const STIM_PATTERNS: usize = 96;
 
@@ -108,6 +110,32 @@ pub fn snapshot_model(cfg: &GoldenConfig) -> QuantMlp {
     }
 }
 
+/// The snapshot plan menu: exact, the grid DSE decoder at a mid
+/// threshold (k=2), and a deterministic genetic genome through the
+/// search decoder. Shared with `repro lint`, so the static verifier
+/// covers exactly the (model, plan) pairs the goldens pin.
+pub fn plan_menu(
+    cfg: &GoldenConfig,
+    q: &QuantMlp,
+    sig: &Significance,
+) -> Vec<(&'static str, ShiftPlan)> {
+    let grid_g: Vec<f64> = (0..q.n_layers())
+        .map(|l| {
+            let cands = threshold_candidates(sig, l, 8);
+            cands[cands.len() / 2]
+        })
+        .collect();
+    let grid = crate::axsum::derive_shifts(q, sig, &grid_g, 2);
+    let space = SearchSpace::lossless(q, sig, 16);
+    let mut grng = Rng::new(cfg.model_seed ^ crate::datasets::fxhash(cfg.key) ^ 0x6E_0E);
+    let genome = space.decode(q, sig, &space.random_genome(&mut grng));
+    vec![
+        ("exact", ShiftPlan::exact(q)),
+        ("grid_k2", grid),
+        ("genome", genome),
+    ]
+}
+
 /// Compute the snapshot for one golden configuration. The golden
 /// generator is itself a conformance check: a circuit/software
 /// divergence on a registry topology surfaces as `Err` (reported by
@@ -131,18 +159,7 @@ pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
 
     let sig = super::gen::significance_of(&q, &xq_train[..xq_train.len().min(SIG_SAMPLES)]);
 
-    // plan menu: exact, the grid DSE decoder at a mid threshold, and a
-    // deterministic genetic genome through the search decoder
-    let grid_g: Vec<f64> = (0..q.n_layers())
-        .map(|l| {
-            let cands = threshold_candidates(&sig, l, 8);
-            cands[cands.len() / 2]
-        })
-        .collect();
-    let grid = crate::axsum::derive_shifts(&q, &sig, &grid_g, 2);
-    let space = SearchSpace::lossless(&q, &sig, 16);
-    let mut grng = Rng::new(cfg.model_seed ^ crate::datasets::fxhash(cfg.key) ^ 0x6E_0E);
-    let genome_plan = space.decode(&q, &sig, &space.random_genome(&mut grng));
+    let menu = plan_menu(cfg, &q, &sig);
 
     let lib = EgtLibrary::egt_v1();
     let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits)?;
@@ -150,11 +167,7 @@ pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
     let mut bss = crate::axsum::BitSliceScratch::new();
 
     let mut plans_json = Vec::new();
-    for (name, plan) in [
-        ("exact", &exact),
-        ("grid_k2", &grid),
-        ("genome", &genome_plan),
-    ] {
+    for (name, plan) in &menu {
         let flat = FlatEval::new(&q, plan);
         let acc_self = flat.accuracy_with(&xq_train[..nt], &self_train, &mut fs);
         let acc_data_train = flat.accuracy_with(&xq_train[..nt], &ds.y_train[..nt], &mut fs);

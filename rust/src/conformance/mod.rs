@@ -106,11 +106,20 @@ pub struct FuzzReport {
     pub mismatches: Vec<Shrunk>,
     /// Replay records for the mismatching cases.
     pub failing: Vec<FailingCase>,
+    /// Cases the static verifier rejected. The generator only emits
+    /// well-formed models, so any entry means [`crate::analysis`] is
+    /// unsound (or over-strict) — a red build on its own.
+    pub static_rejects: Vec<String>,
+    /// Case indices where the verifier accepted the model/plan but the
+    /// dynamic differential check still mismatched — the static pass
+    /// missed a fault class the engines disagree on. Always a subset of
+    /// `failing`; kept separately so the report can name the gap.
+    pub static_unsound: Vec<u64>,
 }
 
 impl FuzzReport {
     pub fn ok(&self) -> bool {
-        self.mismatches.is_empty()
+        self.mismatches.is_empty() && self.static_rejects.is_empty()
     }
 }
 
@@ -145,7 +154,24 @@ pub fn run_fuzz(cfg: &ConformConfig) -> FuzzReport {
         };
         report.plan_counts[PlanKind::ALL.iter().position(|&k| k == kind).unwrap()] += 1;
         report.patterns_total += xs.len();
+        // static pass first: the verifier must accept every generated
+        // model, and a static accept followed by a dynamic mismatch is
+        // recorded as a verifier gap (see `FuzzReport::static_unsound`)
+        let sdiags = crate::analysis::check_model("fuzz", &q, &plan);
+        if !sdiags.is_empty() {
+            report.static_rejects.push(format!(
+                "case {i} (seed {:#x}, {} plan): {}",
+                case_seed(cfg.seed, i),
+                kind.name(),
+                crate::analysis::summarize(&sdiags, 3)
+            ));
+            if report.static_rejects.len() >= cfg.max_mismatches {
+                break;
+            }
+            continue;
+        }
         if let Some(failure) = diff::check_case(&q, &plan, &xs) {
+            report.static_unsound.push(i);
             report.failing.push(FailingCase {
                 seed: case_seed(cfg.seed, i),
                 patterns: total,

@@ -372,7 +372,7 @@ pub fn evaluate_design_packed(
 ) -> Result<DesignEval, String> {
     // per-point latency histogram (`dse.eval_point_ns`): timing only —
     // the evaluation itself is untouched, so results stay bit-identical
-    // with telemetry on or off
+    // with telemetry on or off — lint:allow(wall-clock)
     let t0 = crate::obs::enabled().then(std::time::Instant::now);
     let out = eval_point_inner(q, plan, k, g, data, lib, cfg, stim, scratch);
     if let Some(t0) = t0 {
@@ -436,7 +436,7 @@ fn eval_point_inner(
     let costs =
         circuit_costs_packed(q, &plan, NeuronStyle::AxSum, &stim.power, lib, &mut scratch.sim);
     if cfg.verify_circuit {
-        let classes = scratch.sim.outputs.first().map(|v| v.as_slice()).unwrap_or(&[]);
+        let classes = scratch.sim.outputs.first().map_or(&[][..], |v| v.as_slice());
         match &engine {
             Fwd::Flat(flat) => {
                 for (x, &cls) in stim.power_rows.iter().zip(classes) {
@@ -628,6 +628,10 @@ pub fn sweep(
     cfg: &DseConfig,
 ) -> Result<Vec<DesignEval>, String> {
     let _span = crate::obs::span("dse.sweep");
+    // static gate before any evaluation: truncation only shrinks bounds,
+    // so proving the exact plan overflow-free proves every plan this
+    // sweep will visit (see `crate::analysis::preflight`)
+    crate::analysis::preflight("dse.sweep", q)?;
     let space = sweep_space(q, sig, cfg);
     let stim = SweepStimuli::prepare(q, data, cfg)?;
     let rep_evals: Vec<DesignEval> =

@@ -539,10 +539,11 @@ fn reap_stale_tmp(dir: &Path, min_age: Duration) {
 /// shrinks lease patience; it can never corrupt results (see the
 /// determinism argument in the module docs).
 fn now_ms() -> u64 {
+    // lease heartbeats are I/O-fabric state, not decode math: skew only
+    // stretches lease patience (see module docs) — lint:allow(wall-clock)
     std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_millis() as u64)
-        .unwrap_or(0)
+        .map_or(0, |d| d.as_millis() as u64)
 }
 
 /// On-disk claim record (`shard_NNNN.claim`): who is evaluating the
@@ -1195,6 +1196,10 @@ pub fn sweep_sharded(
         }
     }
     let _span = crate::obs::span("dse.sweep_sharded");
+    // same static gate as the monolithic sweep: the exact plan dominates
+    // every truncated plan in the space, so one preflight covers all
+    // shards before any claims a lease
+    crate::analysis::preflight("dse.sweep_sharded", q).map_err(err)?;
     let space = sweep_space(q, sig, cfg);
     let stim = SweepStimuli::prepare(q, data, cfg).map_err(err)?;
     let fingerprint = space_fingerprint(q, cfg, &space, data, &stim, lib);
@@ -1237,7 +1242,7 @@ pub fn sweep_sharded(
     // their persisted timings (pinned by `tests/obs_test.rs`).
     let eval_shard = |s: usize, range: &Range<usize>| -> Result<(Vec<DesignEval>, u64), ShardError> {
         let shard_span = crate::obs::span(&format!("shard{s:04}"));
-        let t0 = std::time::Instant::now();
+        let t0 = std::time::Instant::now(); // telemetry only — lint:allow(wall-clock)
         let shard_reps = &space.reps[range.clone()];
         let evals: Vec<DesignEval> =
             parallel_map_with(shard_reps, cfg.threads, EngineScratch::new, |scratch, &pi| {
@@ -1340,7 +1345,7 @@ pub fn sweep_sharded(
                     // every unfinished shard is held by a live peer:
                     // wait out part of a lease, recording the blocked
                     // time in the claim-wait histogram
-                    let t0 = std::time::Instant::now();
+                    let t0 = std::time::Instant::now(); // telemetry only — lint:allow(wall-clock)
                     std::thread::sleep(poll);
                     if crate::obs::enabled() {
                         crate::obs::claim_wait_ns()

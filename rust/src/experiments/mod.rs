@@ -578,7 +578,7 @@ mod tests {
 pub fn exp_alpha(cfg: &ExpConfig) -> anyhow::Result<()> {
     use crate::retrain::{printing_friendly_retrain, AreaModel};
 
-    let key = cfg.datasets.first().map(|s| s.as_str()).unwrap_or("se");
+    let key = cfg.datasets.first().map_or("se", |s| s.as_str());
     let ds = datasets::load(key, cfg.seed)?;
     let pcfg = cfg.pipeline();
     let ctx = SharedContext::new();
@@ -1190,14 +1190,19 @@ pub fn exp_shard(
 ///    differential run must trace back to the corrupted shard; and the
 ///    claim-level canary forges a stale lease that a live claimer must
 ///    detect, steal, and log before its front can match the monolithic
-///    sweep;
-/// 2. **fuzz** — `cases` random `(QuantMlp, plan, stimulus)` triples
-///    through every forward (`axsum::forward`, `FlatEval`,
-///    `build_mlp_ref`/`build_mlp_logits` → `simulate_packed`), plan
-///    families spanning exact / random-shift / grid / genetic-genome
-///    decoders, stimulus hitting saturation corners and 64-pattern chunk
-///    edges. Mismatches are shrunk and dumped as
-///    `results/conform_repro_*.json` (uploaded as CI artifacts);
+///    sweep; the analysis canary does the same for the static verifier
+///    (injected dangling net + corrupted shift, each flagged by name);
+/// 2. **fuzz** — `cases` random `(QuantMlp, plan, stimulus)` triples,
+///    each first through the static verifier
+///    ([`crate::analysis::check_model`] must accept every generated
+///    model, and a static accept followed by a dynamic mismatch is
+///    reported as a verifier gap), then through every forward
+///    (`axsum::forward`, `FlatEval`, `build_mlp_ref`/`build_mlp_logits`
+///    → `simulate_packed`), plan families spanning exact / random-shift
+///    / grid / genetic-genome decoders, stimulus hitting saturation
+///    corners and 64-pattern chunk edges. Mismatches are shrunk and
+///    dumped as `results/conform_repro_*.json` (uploaded as CI
+///    artifacts);
 /// 3. **fuzz/sweep** — the sixth, sweep-level engine: fuzzed models run
 ///    through the sharded checkpointable sweep (including interrupt →
 ///    resume cycles) and compared bit-for-bit against the monolithic
@@ -1238,6 +1243,12 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
         Ok(s) => crate::log!(Info, "canary[claim]: stale lease stolen — {s}"),
         Err(e) => failures.push(format!("canary[claim]: {e}")),
     }
+    // the static verifier must prove it can fail too: an injected
+    // dangling net and a corrupted shift plan, each flagged by name
+    match crate::analysis::analysis_canary(cfg.seed) {
+        Ok(s) => crate::log!(Info, "canary[analysis]: {s}"),
+        Err(e) => failures.push(format!("canary[analysis]: {e}")),
+    }
 
     // 2. fuzz
     let ccfg = ConformConfig {
@@ -1256,6 +1267,25 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
             format!("{} MISMATCHES", report.mismatches.len())
         },
     ]);
+    t.row(vec![
+        "fuzz/static".into(),
+        format!("{} cases through analysis::check_model pre-sim", report.cases),
+        if report.static_rejects.is_empty() {
+            "ok".into()
+        } else {
+            format!("{} STATIC REJECTS", report.static_rejects.len())
+        },
+    ]);
+    for r in &report.static_rejects {
+        failures.push(format!("static verifier rejected a generated case: {r}"));
+    }
+    if !report.static_unsound.is_empty() {
+        failures.push(format!(
+            "static-accept + dynamic-mismatch on case(s) {:?} — the static \
+             verifier missed a fault class the engines disagree on",
+            report.static_unsound
+        ));
+    }
     for (ki, kind) in PlanKind::ALL.iter().enumerate() {
         t.row(vec![
             "fuzz/plans".into(),
@@ -1328,6 +1358,121 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
 
     if failures.is_empty() {
         crate::log!(Info, "conformance OK: all engines bit-exact, goldens stable");
+        Ok(())
+    } else {
+        Err(anyhow::Error::msg(failures.join("\n")))
+    }
+}
+
+/// `repro lint` — the static-analysis gate (ISSUE 9).
+///
+/// Three stages, any failure turns the run red:
+///
+/// 1. **source** — the zero-dependency repo-invariant linter over
+///    `rust/src` ([`crate::analysis::lint_source_tree`]): banned
+///    patterns (`partial_cmp` float orderings, raw `File::create`,
+///    console prints outside `cli`/`main`, wall-clock reads in the
+///    deterministic modules) with per-site `lint:allow(...)` waivers.
+///    Violations are dumped to `results/lint_violations.json` for the
+///    CI artifact;
+/// 2. **models** — every golden-registry model under the full golden
+///    plan menu ([`crate::conformance::golden::plan_menu`]: exact, the
+///    grid DSE decoder, a genetic genome through the search decoder)
+///    through the circuit verifier + interval bound pass
+///    ([`crate::analysis::check_model`]): structural netlist lint,
+///    overflow-freedom of every bus, and agreement with the
+///    `axsum`/bitslice width bookkeeping;
+/// 3. **canary** — [`crate::analysis::analysis_canary`] must catch an
+///    injected dangling net and a corrupted truncation shift, naming
+///    the offending net and neuron.
+pub fn exp_lint(cfg: &ExpConfig) -> anyhow::Result<()> {
+    use crate::conformance::golden;
+    use crate::util::json::{self, Json};
+
+    let mut failures: Vec<String> = Vec::new();
+    let mut t = Table::new(&["stage", "detail", "result"]);
+
+    // 1. source-invariant linter
+    let rep = crate::analysis::lint_source_tree()
+        .map_err(|e| anyhow::anyhow!("source linter could not walk rust/src: {e}"))?;
+    t.row(vec![
+        "source".into(),
+        format!(
+            "{} files / {} lines, {} allow waiver(s)",
+            rep.files, rep.lines, rep.allowed
+        ),
+        if rep.violations.is_empty() {
+            "ok".into()
+        } else {
+            format!("{} VIOLATIONS", rep.violations.len())
+        },
+    ]);
+    let vio_json = Json::Arr(
+        rep.violations
+            .iter()
+            .map(|d| {
+                json::obj(vec![
+                    ("pass", json::s(d.pass)),
+                    ("code", json::s(d.code)),
+                    ("site", json::s(&d.site)),
+                    ("detail", json::s(&d.detail)),
+                ])
+            })
+            .collect(),
+    );
+    write_results("lint_violations.json", &vio_json.pretty());
+    for d in &rep.violations {
+        failures.push(format!("source lint: {d}"));
+    }
+
+    // 2. shipped models × decoder families through the circuit verifier
+    for gcfg in golden::default_configs() {
+        let ds = datasets::load(gcfg.key, gcfg.data_seed)?;
+        let q = golden::snapshot_model(&gcfg);
+        let xq_train = quantize_inputs(&ds.x_train);
+        let sig = crate::conformance::gen::significance_of(
+            &q,
+            &xq_train[..xq_train.len().min(golden::SIG_SAMPLES)],
+        );
+        for (name, plan) in &golden::plan_menu(&gcfg, &q, &sig) {
+            let site = format!("{}/{name}", gcfg.key);
+            let diags = crate::analysis::check_model(&site, &q, plan);
+            t.row(vec![
+                format!("models/{}", gcfg.key),
+                format!("{name}: {} truncated product(s)", plan.n_truncated()),
+                if diags.is_empty() {
+                    "ok".into()
+                } else {
+                    format!("{} DIAGS", diags.len())
+                },
+            ]);
+            if !diags.is_empty() {
+                failures.push(format!(
+                    "static verifier rejected {site}: {}",
+                    crate::analysis::summarize(&diags, 3)
+                ));
+            }
+        }
+    }
+
+    // 3. the analyzer's own canary
+    match crate::analysis::analysis_canary(cfg.seed) {
+        Ok(s) => t.row(vec!["canary".into(), s, "ok".into()]),
+        Err(e) => {
+            t.row(vec!["canary".into(), e.clone(), "FAILED".into()]);
+            failures.push(format!("canary: {e}"));
+        }
+    }
+
+    t.emit(
+        "Static analysis — source invariants, circuit verifier, canary",
+        "lint_summary.csv",
+    );
+    if failures.is_empty() {
+        crate::log!(
+            Info,
+            "lint OK: tree invariant-clean, every shipped model statically verified"
+        );
         Ok(())
     } else {
         Err(anyhow::Error::msg(failures.join("\n")))

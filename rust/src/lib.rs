@@ -20,8 +20,13 @@
 //!   AOT-lowered to HLO-text artifacts executed from Rust via PJRT
 //!   (`runtime`).
 
+// The crate has zero unsafe; keep that a guarantee, not an accident
+// (see ARCHITECTURE.md §Static analysis).
+#![forbid(unsafe_code)]
+
 pub mod util;
 
+pub mod analysis;
 pub mod axsum;
 pub mod baselines;
 pub mod battery;

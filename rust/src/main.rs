@@ -150,8 +150,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 Some(axmlp::dse::shard::ClaimConfig {
                     owner_id: args
                         .flag("owner-id")
-                        .map(str::to_string)
-                        .unwrap_or_else(|| format!("pid{}", std::process::id())),
+                        .map_or_else(|| format!("pid{}", std::process::id()), str::to_string),
                     lease_ms,
                     kill_at: None,
                 })
@@ -165,6 +164,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let cases = args.flag_u64("cases", 256).map_err(anyhow::Error::msg)?;
             experiments::exp_conform(&cfg, cases, args.flag_bool("bless"))
         }
+        "lint" => experiments::exp_lint(&exp_config(args).map_err(anyhow::Error::msg)?),
         "all" => {
             let cfg = exp_config(args).map_err(anyhow::Error::msg)?;
             experiments::exp_table2(&cfg)?;
@@ -197,8 +197,7 @@ fn cmd_verilog(args: &Args) -> anyhow::Result<()> {
         .map_err(|_| anyhow::anyhow!("--threshold expects a float"))?;
     let out_path = args
         .flag("out")
-        .map(|s| s.to_string())
-        .unwrap_or(format!("results/{key}_axmlp.v"));
+        .map_or_else(|| format!("results/{key}_axmlp.v"), |s| s.to_string());
 
     let seed = args.flag_u64("seed", 2023).map_err(anyhow::Error::msg)?;
     let ds = axmlp::datasets::load(&key, seed)?;

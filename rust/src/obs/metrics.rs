@@ -87,6 +87,16 @@ pub mod counters {
     pub static SEARCH_EVALS_REQUESTED: Counter = Counter::new();
     /// Genome evaluations served from the search memo table.
     pub static SEARCH_MEMO_HITS: Counter = Counter::new();
+    /// Netlists run through the static IR verifier.
+    pub static LINT_IR_NETLISTS: Counter = Counter::new();
+    /// Diagnostics emitted by the static IR verifier.
+    pub static LINT_IR_DIAGS: Counter = Counter::new();
+    /// Source files walked by the source-invariant linter.
+    pub static LINT_SRC_FILES: Counter = Counter::new();
+    /// Source-invariant violations found (allowed sites excluded).
+    pub static LINT_SRC_VIOLATIONS: Counter = Counter::new();
+    /// Pre-sweep static verification gates executed.
+    pub static LINT_PREFLIGHTS: Counter = Counter::new();
 }
 
 /// Name → instrument table driving snapshots, `metrics.json` and the
@@ -108,6 +118,11 @@ static REGISTRY: &[(&str, &Counter)] = &[
     ("stream.flushes", &counters::STREAM_FLUSHES),
     ("search.evals_requested", &counters::SEARCH_EVALS_REQUESTED),
     ("search.memo_hits", &counters::SEARCH_MEMO_HITS),
+    ("lint.ir_netlists", &counters::LINT_IR_NETLISTS),
+    ("lint.ir_diags", &counters::LINT_IR_DIAGS),
+    ("lint.src_files", &counters::LINT_SRC_FILES),
+    ("lint.src_violations", &counters::LINT_SRC_VIOLATIONS),
+    ("lint.preflights", &counters::LINT_PREFLIGHTS),
 ];
 
 fn bases() -> &'static Mutex<Vec<u64>> {
@@ -148,8 +163,7 @@ pub fn run_value(name: &str) -> u64 {
     counter_rows()
         .iter()
         .find(|(n, _, _)| *n == name)
-        .map(|(_, run, _)| *run)
-        .unwrap_or(0)
+        .map_or(0, |(_, run, _)| *run)
 }
 
 fn gauges() -> &'static Mutex<Vec<(String, f64)>> {

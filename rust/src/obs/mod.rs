@@ -112,11 +112,13 @@ pub fn log_enabled(l: Level) -> bool {
 /// Emit one already-formatted message (use via [`crate::log!`]): info
 /// goes to stdout, error/warn (prefixed) and debug go to stderr.
 pub fn log_emit(l: Level, msg: &str) {
+    // the one sanctioned console sink outside cli/main: every other
+    // module reaches the console through this function
     match l {
-        Level::Error => eprintln!("error: {msg}"),
-        Level::Warn => eprintln!("warn: {msg}"),
-        Level::Info => println!("{msg}"),
-        Level::Debug => eprintln!("{msg}"),
+        Level::Error => eprintln!("error: {msg}"), // lint:allow(console-print)
+        Level::Warn => eprintln!("warn: {msg}"),   // lint:allow(console-print)
+        Level::Info => println!("{msg}"),          // lint:allow(console-print)
+        Level::Debug => eprintln!("{msg}"),        // lint:allow(console-print)
     }
 }
 

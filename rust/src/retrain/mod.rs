@@ -321,15 +321,11 @@ pub fn printing_friendly_retrain(
                 log.best_score = s;
             }
             if acc >= acc0 - cfg.threshold - 1e-12
-                && best.as_ref().map(|b| s > b.1).unwrap_or(true)
+                && best.as_ref().is_none_or(|b| s > b.1)
             {
                 *best = Some((cand.clone(), s, acc, ar, level));
             }
-            if best_any
-                .as_ref()
-                .map(|b| (acc, s) > (b.2, b.1))
-                .unwrap_or(true)
-            {
+            if best_any.as_ref().is_none_or(|b| (acc, s) > (b.2, b.1)) {
                 *best_any = Some((cand, s, acc, ar, level));
             }
             acc

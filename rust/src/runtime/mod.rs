@@ -106,8 +106,7 @@ impl Runtime {
     /// Default artifacts location, overridable with AXMLP_ARTIFACTS.
     pub fn default_dir() -> PathBuf {
         std::env::var("AXMLP_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+            .map_or_else(|_| PathBuf::from("artifacts"), PathBuf::from)
     }
 
     pub fn platform(&self) -> String {

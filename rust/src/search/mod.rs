@@ -402,7 +402,7 @@ fn population_stats(
 ) -> GenStats {
     let objs: Vec<nsga::Objectives> = slots.iter().map(|&s| ev.objs[s]).collect();
     let fronts = nsga::fast_non_dominated_sort(&objs);
-    let front = fronts.first().map(|f| f.as_slice()).unwrap_or(&[]);
+    let front = fronts.first().map_or(&[][..], |f| f.as_slice());
     let pts: Vec<(f64, f64)> = front.iter().map(|&p| (objs[p][0], objs[p][1])).collect();
     let stats = GenStats {
         gen,
@@ -631,17 +631,14 @@ pub fn nsga2(
         .into_iter()
         .next()
         .unwrap_or_default();
+    // total order even on NaN metrics: accuracy desc (NaN worst), then
+    // area asc (NaN worst), then index — same keys the grid sweep uses
     front.sort_by(|&a, &b| {
-        ev.archive[b]
-            .acc_train
-            .partial_cmp(&ev.archive[a].acc_train)
-            .unwrap_or(std::cmp::Ordering::Equal)
+        crate::dse::acc_key(ev.archive[b].acc_train)
+            .total_cmp(&crate::dse::acc_key(ev.archive[a].acc_train))
             .then(
-                ev.archive[a]
-                    .costs
-                    .area_mm2
-                    .partial_cmp(&ev.archive[b].costs.area_mm2)
-                    .unwrap_or(std::cmp::Ordering::Equal),
+                crate::dse::area_key(ev.archive[a].costs.area_mm2)
+                    .total_cmp(&crate::dse::area_key(ev.archive[b].costs.area_mm2)),
             )
             .then(a.cmp(&b))
     });

@@ -5,8 +5,10 @@
 //! All routines are deterministic: every sort breaks floating-point ties
 //! by index, so identical inputs produce identical rankings regardless of
 //! thread count (the evaluation layer above is order-preserving too).
-
-use std::cmp::Ordering;
+//! Floating-point keys are ordered with `f64::total_cmp` throughout: a
+//! NaN objective (an engine bug upstream) must still produce a total,
+//! deterministic order instead of collapsing the comparator into
+//! `Ordering::Equal` and letting insertion order pick survivors.
 
 /// One point in objective space. All objectives are minimized; callers
 /// map "maximize accuracy" to `1 - accuracy`.
@@ -80,8 +82,7 @@ pub fn crowding_distance(objs: &[Objectives], front: &[usize]) -> Vec<f64> {
     for k in 0..n_obj {
         order.sort_by(|&a, &b| {
             objs[front[a]][k]
-                .partial_cmp(&objs[front[b]][k])
-                .unwrap_or(Ordering::Equal)
+                .total_cmp(&objs[front[b]][k])
                 .then(front[a].cmp(&front[b]))
         });
         let lo = objs[front[order[0]]][k];
@@ -114,11 +115,13 @@ pub fn select_survivors(objs: &[Objectives], target: usize) -> Vec<usize> {
             continue;
         }
         let crowd = crowding_distance(objs, &front);
+        // NaN crowding (NaN objectives upstream) sorts as least crowded —
+        // never preferred over a finite distance, still totally ordered
+        let key = |v: f64| if v.is_nan() { f64::NEG_INFINITY } else { v };
         let mut by_crowd: Vec<usize> = (0..front.len()).collect();
         by_crowd.sort_by(|&a, &b| {
-            crowd[b]
-                .partial_cmp(&crowd[a])
-                .unwrap_or(Ordering::Equal)
+            key(crowd[b])
+                .total_cmp(&key(crowd[a]))
                 .then(front[a].cmp(&front[b]))
         });
         for &p in by_crowd.iter().take(target - out.len()) {
@@ -157,11 +160,7 @@ pub fn hypervolume2(pts: &[(f64, f64)], ref_pt: (f64, f64)) -> f64 {
     if ps.is_empty() {
         return 0.0;
     }
-    ps.sort_by(|a, b| {
-        a.0.partial_cmp(&b.0)
-            .unwrap_or(Ordering::Equal)
-            .then(a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal))
-    });
+    ps.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
     // staircase sweep left to right: each point that improves the best y
     // so far adds the rectangle between its y, the previous best y, and
     // the reference x (dominated points improve nothing and add nothing)
@@ -255,6 +254,42 @@ mod tests {
         assert!((hv2 - (0.8 * 0.4 + 0.4 * 0.4)).abs() < 1e-12);
         // beyond-reference points contribute nothing
         assert_eq!(hypervolume2(&[(2.0, 2.0)], (1.0, 1.0)), 0.0);
+    }
+
+    #[test]
+    fn nan_objectives_stay_deterministic_and_total() {
+        // a NaN objective is an upstream engine bug, but the selection
+        // machinery must stay total: no panic, repeatable rankings, and
+        // a NaN crowding value never outranks a finite one
+        let objs = vec![
+            [0.0, 1.0, 0.0],
+            [f64::NAN, 0.5, 0.0],
+            [1.0, 0.0, 0.0],
+            [0.5, 0.5, 0.0],
+            [f64::NAN, f64::NAN, f64::NAN],
+        ];
+        for target in 1..=5 {
+            let sel = select_survivors(&objs, target);
+            assert_eq!(sel.len(), target);
+            assert_eq!(sel, select_survivors(&objs, target), "target {target}");
+        }
+        let (rank, crowd) = rank_and_crowding(&objs);
+        assert_eq!((rank.len(), crowd.len()), (5, 5));
+        assert_eq!((rank, crowd), rank_and_crowding(&objs));
+        // NaN crowding sorts as least crowded: with a finite-distance
+        // point and a NaN-distance point on one front, the finite one
+        // survives a capacity squeeze
+        let clean = vec![[0.0, 1.0, 0.0], [0.5, 0.5, 0.0], [1.0, 0.0, 0.0]];
+        let (_, cd) = rank_and_crowding(&clean);
+        assert!(cd[1].is_finite());
+        // hypervolume filters NaN points (they fail the reference bound)
+        let hv = hypervolume2(&[(0.5, 0.5), (f64::NAN, 0.1)], (1.0, 1.0));
+        assert!((hv - 0.25).abs() < 1e-12);
+        assert_eq!(
+            hypervolume2(&[(f64::NAN, f64::NAN)], (1.0, 1.0)),
+            0.0,
+            "all-NaN front dominates nothing"
+        );
     }
 
     #[test]

@@ -140,8 +140,7 @@ impl PackedStimulus {
                 let width = bus.nets.len();
                 let vals = inputs
                     .get(&bus.name)
-                    .map(|v| v.as_slice())
-                    .unwrap_or_default();
+                    .map_or(&[][..], |v| v.as_slice());
                 PackedBus {
                     name: bus.name.clone(),
                     width,

@@ -19,9 +19,7 @@ pub fn default_threads() -> usize {
             }
         }
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
+    std::thread::available_parallelism().map_or(4, |n| n.get())
 }
 
 /// Map `f` over `items` in parallel, preserving order of results.

@@ -1,0 +1,190 @@
+//! Integration tests for the static-analysis layer: property coverage
+//! (every generated instance verifies clean), mutation coverage (each
+//! injected fault class is rejected with its site named), and the
+//! static/dynamic composition contract the conformance harness enforces.
+
+use axmlp::analysis::{self, bounds, verifier, IrConfig};
+use axmlp::axsum::ShiftPlan;
+use axmlp::conformance::{self, gen, ConformConfig};
+use axmlp::util::prop::{check, forall_seeded};
+
+/// Property: every fuzzed `(model, plan)` the conformance generators
+/// emit passes the full static pipeline — interval propagation, the
+/// axsum/bitslice width cross-checks, netlist structure, and bus widths.
+#[test]
+fn fuzzed_model_plan_pairs_are_statically_sound() {
+    let topo = gen::TopologyRange::default();
+    forall_seeded(0x11A7, 60, |rng| {
+        let q = gen::random_quant_mlp(rng, &topo);
+        let xs = gen::mixed_stimulus(rng, &q, 24);
+        let (kind, plan) = gen::random_plan(rng, &q, &xs);
+        let diags = analysis::check_model("prop", &q, &plan);
+        check(
+            diags.is_empty(),
+            format!(
+                "{} plan statically rejected: {}",
+                kind.name(),
+                analysis::summarize(&diags, 3)
+            ),
+        )
+    });
+}
+
+/// Property: fuzzed raw netlists verify clean with dead logic allowed,
+/// and clean under the strict config once swept.
+#[test]
+fn fuzzed_netlists_verify_clean() {
+    forall_seeded(0x11A8, 60, |rng| {
+        let (nl, _stim) = gen::random_netlist(rng, 4);
+        let raw = verifier::verify_netlist(&nl, &IrConfig { allow_dead: true });
+        check(
+            raw.is_empty(),
+            format!("raw netlist flagged: {}", analysis::summarize(&raw, 3)),
+        )?;
+        let (swept, _) = nl.sweep();
+        let strict = verifier::verify_netlist(&swept, &IrConfig::default());
+        check(
+            strict.is_empty(),
+            format!("swept netlist flagged: {}", analysis::summarize(&strict, 3)),
+        )
+    });
+}
+
+/// Mutation: truncating the gate array of a swept MLP netlist leaves a
+/// dangling reference (the last gate is live by construction), and the
+/// verifier names the missing net.
+#[test]
+fn dropped_gate_is_named() {
+    let mut rng = axmlp::util::rng::Rng::new(0x11A9);
+    let q = gen::random_quant_mlp(&mut rng, &gen::TopologyRange::default());
+    let plan = ShiftPlan::exact(&q);
+    let mut nl = bounds::build_logit_netlist("mut", &q, &plan);
+    let dropped = nl.gates.len() - 1;
+    nl.gates.truncate(dropped);
+    let diags = verifier::verify_netlist(&nl, &IrConfig { allow_dead: true });
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.code == "dangling-net" && d.detail.contains(&format!("net {dropped}"))),
+        "dropped gate {dropped} not named: {}",
+        analysis::summarize(&diags, 5)
+    );
+}
+
+/// Mutation: widening or narrowing a logit bus makes the netlist
+/// disagree with the interval bounds, and the diagnostic carries the
+/// neuron's original coordinates.
+#[test]
+fn resized_logit_bus_is_named() {
+    let mut rng = axmlp::util::rng::Rng::new(0x11AA);
+    let q = gen::random_quant_mlp(&mut rng, &gen::TopologyRange::default());
+    let plan = ShiftPlan::exact(&q);
+    let b = bounds::propagate(&q, &plan).expect("generated model propagates");
+    let last = q.n_layers() - 1;
+    for narrow in [true, false] {
+        let mut nl = bounds::build_logit_netlist("mut", &q, &plan);
+        let bus = nl
+            .outputs
+            .iter_mut()
+            .find(|bus| bus.name == "logit0")
+            .expect("logit0 bus");
+        if narrow {
+            bus.nets.pop();
+        } else {
+            let dup = *bus.nets.last().expect("non-empty bus");
+            bus.nets.push(dup);
+        }
+        let diags = bounds::netlist_width_diags("mut", &q, &b, &nl);
+        let site = format!("L{last}/N0");
+        assert!(
+            diags.iter().any(|d| d.code == "bus-width" && d.site.contains(&site)),
+            "{} bus not flagged at {site}: {}",
+            if narrow { "narrowed" } else { "widened" },
+            analysis::summarize(&diags, 5)
+        );
+    }
+}
+
+/// Mutation property: whenever a corrupted shift moves any bound at all,
+/// the first diverging neuron is exactly the corrupted one —
+/// misattribution would send a debugging session to the wrong neuron.
+#[test]
+fn corrupted_shift_divergence_is_attributed() {
+    let topo = gen::TopologyRange::default();
+    forall_seeded(0x11AB, 40, |rng| {
+        let q = gen::random_quant_mlp(rng, &topo);
+        let xs = gen::mixed_stimulus(rng, &q, 24);
+        let (_, plan) = gen::random_plan(rng, &q, &xs);
+        let Some((corrupt, (l, j, _))) = gen::corrupt_one_shift(&q, &plan) else {
+            return Ok(()); // all-zero weights: nothing to corrupt
+        };
+        let honest = bounds::propagate(&q, &plan).map_err(|d| analysis::summarize(&d, 3))?;
+        let Ok(tampered) = bounds::propagate(&q, &corrupt) else {
+            return Ok(()); // corruption may push a bound over i64 — also a catch
+        };
+        match bounds::first_divergence(&honest, &tampered) {
+            // bound-invisible corruption (shift landed past the
+            // product's trailing zeros): nothing for the interval pass
+            // to see, the dynamic engines own that case
+            None => Ok(()),
+            Some((dl, dj)) => check(
+                (dl, dj) == (l, j),
+                format!("corrupted L{l}/N{j} but bounds diverge first at L{dl}/N{dj}"),
+            ),
+        }
+    });
+}
+
+/// The analyzer's own canary across several seeds: both injected fault
+/// classes caught, sites named.
+#[test]
+fn analysis_canary_fires_across_seeds() {
+    for seed in [2023u64, 7, 0xC0FFEE] {
+        let msg = analysis::analysis_canary(seed).expect("canary must fire");
+        assert!(msg.contains("dangling net flagged"), "seed {seed}: {msg}");
+        assert!(msg.contains("corrupted shift flagged at L"), "seed {seed}: {msg}");
+    }
+}
+
+/// Static/dynamic composition on a real fuzz run: no generated case may
+/// be statically rejected, and no statically-accepted case may mismatch
+/// dynamically (the acceptance contract `repro conform` enforces at 256
+/// cases; kept smaller here for test-suite latency).
+#[test]
+fn fuzz_run_has_no_static_dynamic_gap() {
+    let report = conformance::run_fuzz(&ConformConfig {
+        cases: 48,
+        seed: 0x11AC,
+        ..Default::default()
+    });
+    assert!(
+        report.static_rejects.is_empty(),
+        "static rejects: {:?}",
+        report.static_rejects
+    );
+    assert!(
+        report.static_unsound.is_empty(),
+        "static-accept + dynamic-mismatch cases: {:?}",
+        report.static_unsound
+    );
+    assert!(report.ok(), "fuzz mismatches: {}", report.mismatches.len());
+}
+
+/// The source linter accepts the shipped tree (the same gate CI runs via
+/// `repro lint`), and the lexer's allow bookkeeping is visible in the
+/// report.
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let rep = analysis::lint_source_tree().expect("walk rust/src");
+    assert!(rep.files > 40, "walked only {} files", rep.files);
+    assert!(
+        rep.violations.is_empty(),
+        "source violations:\n{}",
+        rep.violations
+            .iter()
+            .map(std::string::ToString::to_string)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(rep.allowed >= 6, "expected the marked allow sites, saw {}", rep.allowed);
+}

@@ -179,8 +179,7 @@ fn resume_does_not_replay_persisted_eval_ns_into_the_histogram() {
         obs::hist_rows()
             .iter()
             .find(|(n, _)| *n == "dse.eval_point_ns")
-            .map(|(_, s)| s.count)
-            .unwrap_or(0)
+            .map_or(0, |(_, s)| s.count)
     };
     let c1 = count_of();
     assert!(c1 > 0, "the fresh pass records eval samples");
