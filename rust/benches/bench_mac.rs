@@ -1,0 +1,166 @@
+//! Bench: the bespoke-MAC (CSD adder-graph) + approximate-activation
+//! families through the DSE point engine.
+//!
+//! Rows: `csd_compile` (bit-sliced plan compilation of a full CSD
+//! plan), and `mac_dse_point(<backend>)` vs the shift-only
+//! `dse_point(<backend>)` baseline for every accuracy backend. Emits
+//! `results/bench_mac.csv` + `BENCH_mac.json` (the perf trajectory
+//! record, see EXPERIMENTS.md §Perf).
+//!
+//! A regression gate compares the medians (family plans must stay
+//! within a constant factor of the shift-only engine, and compiling a
+//! plan must be cheaper than evaluating a point). Set
+//! `AXMLP_BENCH_NO_GATE=1` to measure without gating (e.g. on
+//! heavily-loaded CI hardware).
+
+use axmlp::axsum::{
+    csd_topk, derive_shifts, mean_activations, significance, ActPlan, AxPlan, BitSliceEval,
+    MacPlan, MacSpec, ReluSpec, ShiftPlan,
+};
+use axmlp::coordinator::{train_mlp0, PipelineConfig, SharedContext};
+use axmlp::datasets;
+use axmlp::dse::{
+    evaluate_design_packed, evaluate_design_packed_ax, DseConfig, EngineScratch, EvalBackend,
+    QuantData, SweepStimuli,
+};
+use axmlp::fixed::{quantize, quantize_inputs, QuantMlp};
+use axmlp::util::bench::{run, write_csv, write_json, BenchResult};
+
+/// Exact shifts + top-2 CSD on every neuron + truncated hidden ReLU +
+/// a 1-bit-reduced argmax comparator: the "everything on" family plan.
+fn family_plan(q: &QuantMlp) -> AxPlan {
+    let mut mac = MacPlan::shift_only(q);
+    for (l, layer) in q.w.iter().enumerate() {
+        for (j, row) in layer.iter().enumerate() {
+            mac.neurons[l][j] =
+                MacSpec::Csd(row.iter().map(|&w| csd_topk(w, 2)).collect());
+        }
+    }
+    AxPlan {
+        shifts: ShiftPlan::exact(q),
+        mac,
+        act: ActPlan {
+            relu: vec![ReluSpec { drop: 1, cap: 0 }; q.n_layers() - 1],
+            argmax_drop: 1,
+        },
+    }
+}
+
+fn main() {
+    let ctx = SharedContext::new();
+    let pcfg = PipelineConfig::default();
+    let ds = datasets::load("se", 2023).expect("dataset");
+    let q = quantize(&train_mlp0(&ds, &pcfg.train, 2023));
+    let xq_train = quantize_inputs(&ds.x_train);
+    let xq_test = quantize_inputs(&ds.x_test);
+    let data = QuantData {
+        x_train: &xq_train,
+        y_train: &ds.y_train,
+        x_test: &xq_test,
+        y_test: &ds.y_test,
+    };
+    let means = mean_activations(&q, &xq_train);
+    let sig = significance(&q, &means);
+    let ax = family_plan(&q);
+    let g = vec![0.05, 0.05];
+    let mut results = Vec::new();
+
+    // bit-sliced compilation of a full CSD plan (the PlanCache miss path
+    // the genetic search pays once per unique family plan)
+    results.push(run("csd_compile(se,top2)", || {
+        std::hint::black_box(BitSliceEval::new_ax(&q, &ax).expect("csd plan compiles"));
+    }));
+
+    for backend in [
+        EvalBackend::Flat,
+        EvalBackend::BitSlice,
+        EvalBackend::BitSlice128,
+        EvalBackend::BitSlice256,
+    ] {
+        let cfg = DseConfig {
+            backend,
+            verify_circuit: false,
+            power_patterns: 128,
+            max_eval: 600,
+            ..Default::default()
+        };
+        let stim = SweepStimuli::prepare(&q, &data, &cfg).expect("stimulus");
+        let mut scratch = EngineScratch::new();
+        results.push(run(&format!("dse_point({})", backend.name()), || {
+            let plan = derive_shifts(&q, &sig, &g, 2);
+            std::hint::black_box(
+                evaluate_design_packed(
+                    &q,
+                    plan,
+                    2,
+                    g.clone(),
+                    &data,
+                    &ctx.lib,
+                    &cfg,
+                    &stim,
+                    &mut scratch,
+                )
+                .expect("shift point"),
+            );
+        }));
+        results.push(run(&format!("mac_dse_point({})", backend.name()), || {
+            std::hint::black_box(
+                evaluate_design_packed_ax(
+                    &q,
+                    ax.clone(),
+                    0,
+                    Vec::new(),
+                    &data,
+                    &ctx.lib,
+                    &cfg,
+                    &stim,
+                    &mut scratch,
+                )
+                .expect("mac point"),
+            );
+        }));
+    }
+
+    write_csv("bench_mac.csv", &results);
+    write_json("BENCH_mac.json", &results);
+
+    if std::env::var("AXMLP_BENCH_NO_GATE").is_ok_and(|v| v == "1") {
+        println!("gate: skipped (AXMLP_BENCH_NO_GATE=1)");
+        return;
+    }
+    if let Err(e) = gate(&results) {
+        eprintln!("BENCH GATE FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("gate: mac points <= 10x shift points per backend, compile <= point");
+}
+
+/// CI regression gate over the median latencies.
+fn gate(results: &[BenchResult]) -> Result<(), String> {
+    let med = |name: String| -> Result<f64, String> {
+        results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.median_ns)
+            .ok_or_else(|| format!("missing row `{name}`"))
+    };
+    let compile = med("csd_compile(se,top2)".to_string())?;
+    for b in ["flat", "bitslice", "bitslice128", "bitslice256"] {
+        let mac = med(format!("mac_dse_point({b})"))?;
+        let shift = med(format!("dse_point({b})"))?;
+        if mac > 10.0 * shift {
+            return Err(format!(
+                "mac_dse_point({b}) median {mac:.0} ns exceeds 10x the shift-only point ({shift:.0} ns)"
+            ));
+        }
+    }
+    // a mac point on the bit-sliced backend *contains* a plan compile,
+    // so compile <= point holds structurally unless compilation regresses
+    let bs_point = med("mac_dse_point(bitslice)".to_string())?;
+    if compile > bs_point {
+        return Err(format!(
+            "csd_compile median {compile:.0} ns exceeds a full mac_dse_point(bitslice) ({bs_point:.0} ns)"
+        ));
+    }
+    Ok(())
+}

@@ -22,11 +22,12 @@
 //! Diagnostics name `L{layer}/N{neuron}` in original model coordinates,
 //! the same naming the conformance shrinker uses.
 
+use crate::axsum::mac::{csd_merge, AxPlan, MacSpec};
 use crate::axsum::{layer_input_widths, BitSliceEval, ShiftPlan};
 use crate::fixed::QuantMlp;
 use crate::netlist::Netlist;
 use crate::synth::arith::{sbits, ubits};
-use crate::synth::{build_mlp_logits, MlpSpecRef, NeuronStyle};
+use crate::synth::{build_mlp_ax_logits, build_mlp_logits, MlpAxSpecRef, MlpSpecRef, NeuronStyle};
 
 use super::Diag;
 
@@ -224,6 +225,231 @@ pub fn propagate(q: &QuantMlp, plan: &ShiftPlan) -> Result<ModelBounds, Vec<Diag
     Ok(ModelBounds { layers, max_shift })
 }
 
+/// Which approximation families a bounds build models. [`propagate_ax`]
+/// supports everything in-tree; a reduced build (a caller that only
+/// understands the standing shift-truncate arithmetic) passes its
+/// support set to [`propagate_ax_with`] and gets a **named** reject —
+/// never a silent widen — the moment a plan uses a family it cannot
+/// model. Silent widening would let an unmodeled CSD or clamped-ReLU
+/// neuron sail through with shift-truncate bounds that are simply wrong
+/// (CSD top-1 of `w = 7` multiplies by 8, *above* the binary weight).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FamilySupport {
+    /// Bespoke CSD MAC neurons ([`MacSpec::Csd`]).
+    pub mac: bool,
+    /// Approximate activations (truncated/clamped ReLU + argmax drop).
+    pub act: bool,
+}
+
+impl FamilySupport {
+    pub const ALL: FamilySupport = FamilySupport { mac: true, act: true };
+    pub const SHIFT_ONLY: FamilySupport = FamilySupport { mac: false, act: false };
+}
+
+/// [`check_shape`] extended over the MAC matrix: when a [`MacPlan`]
+/// carries explicit rows they must mirror the weight matrix exactly,
+/// and every CSD digit list must match its neuron's fan-in.
+///
+/// [`MacPlan`]: crate::axsum::mac::MacPlan
+fn check_shape_ax(q: &QuantMlp, ax: &AxPlan) -> Vec<Diag> {
+    let mut diags = check_shape(q, &ax.shifts);
+    if !diags.is_empty() {
+        return diags;
+    }
+    if !ax.mac.neurons.is_empty() && ax.mac.neurons.len() != q.n_layers() {
+        diags.push(bdiag(
+            "shape",
+            "model".into(),
+            format!(
+                "{} weight layers but {} MAC layers",
+                q.n_layers(),
+                ax.mac.neurons.len()
+            ),
+        ));
+        return diags;
+    }
+    for (l, layer) in ax.mac.neurons.iter().enumerate() {
+        if layer.len() != q.w[l].len() {
+            diags.push(bdiag(
+                "shape",
+                format!("L{l}"),
+                format!("{} neurons but {} MAC specs", q.w[l].len(), layer.len()),
+            ));
+            return diags;
+        }
+        for (j, spec) in layer.iter().enumerate() {
+            if let MacSpec::Csd(rows) = spec {
+                if rows.len() != q.w[l][j].len() {
+                    diags.push(bdiag(
+                        "shape",
+                        at(l, j),
+                        format!(
+                            "{} weights but {} CSD digit lists",
+                            q.w[l][j].len(),
+                            rows.len()
+                        ),
+                    ));
+                    return diags;
+                }
+            }
+        }
+    }
+    diags
+}
+
+/// [`propagate`] generalized over the full approximation plan, with
+/// every family supported. CSD neurons bound through the merged binary
+/// weights (`sp_hi += in_hi·wp`, `sn_hi += in_hi·wn` — exactly the two
+/// constant-multiply terms the bit-slice compiler lowers to), and
+/// truncated/clamped ReLU maps an activation bound through
+/// [`ReluSpec::apply`] directly (it is monotone nondecreasing).
+///
+/// A shift-only [`AxPlan`] propagates to bit-identical [`ModelBounds`]
+/// as the standing [`propagate`] pass.
+///
+/// [`ReluSpec::apply`]: crate::axsum::mac::ReluSpec::apply
+pub fn propagate_ax(q: &QuantMlp, ax: &AxPlan) -> Result<ModelBounds, Vec<Diag>> {
+    propagate_ax_with(q, ax, FamilySupport::ALL)
+}
+
+/// [`propagate_ax`] for a bounds build that models only `support`'s
+/// families. An out-of-support plan is rejected with the contextful
+/// `unsupported-family` diagnostic naming the first offending site
+/// (`L{l}/N{j}` for a MAC neuron, `L{l}` for a layer activation,
+/// `argmax` for the comparator tree).
+pub fn propagate_ax_with(
+    q: &QuantMlp,
+    ax: &AxPlan,
+    support: FamilySupport,
+) -> Result<ModelBounds, Vec<Diag>> {
+    let shape = check_shape_ax(q, ax);
+    if !shape.is_empty() {
+        return Err(shape);
+    }
+    if !support.act && ax.act.argmax_drop != 0 {
+        return Err(vec![bdiag(
+            "unsupported-family",
+            "argmax".into(),
+            format!(
+                "plan drops {} comparator bits but this bounds build has no approximate-activation support",
+                ax.act.argmax_drop
+            ),
+        )]);
+    }
+    let n_layers = q.n_layers();
+    let mut max_shift = 0u32;
+    let mut in_hi: Vec<i64> = vec![(1i64 << q.in_bits) - 1; q.din()];
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let last = l + 1 == n_layers;
+        let relu = ax.act.relu_of(l);
+        if !last && !relu.is_exact() && !support.act {
+            return Err(vec![bdiag(
+                "unsupported-family",
+                format!("L{l}"),
+                format!(
+                    "approximate ReLU (drop {}, cap {}) reached a bounds build compiled without activation-family support",
+                    relu.drop, relu.cap
+                ),
+            )]);
+        }
+        let mut bounds = Vec::with_capacity(q.w[l].len());
+        let mut next_hi = Vec::with_capacity(q.w[l].len());
+        for (j, row) in q.w[l].iter().enumerate() {
+            let bias = q.b[l][j];
+            let mut sp_hi: i64 = bias.max(0);
+            let mut sn_hi: i64 = (-bias).max(0);
+            let mut has_neg = bias < 0;
+            let overflow =
+                |detail: String| vec![bdiag("overflow", at(l, j), detail)];
+            match ax.mac_of(l, j) {
+                MacSpec::ShiftTrunc => {
+                    for (i, &w) in row.iter().enumerate() {
+                        if w == 0 {
+                            continue;
+                        }
+                        if w < 0 {
+                            has_neg = true;
+                        }
+                        let s = ax.shifts.shifts[l][j][i];
+                        max_shift = max_shift.max(s);
+                        let p_hi =
+                            in_hi[i].checked_mul(w.unsigned_abs() as i64).ok_or_else(|| {
+                                overflow(format!(
+                                    "product bound {} x |{w}| (input {i}) overflows i64",
+                                    in_hi[i]
+                                ))
+                            })?;
+                        let t_hi = if s >= 63 { 0 } else { (p_hi >> s) << s };
+                        let acc = if w > 0 { &mut sp_hi } else { &mut sn_hi };
+                        *acc = acc.checked_add(t_hi).ok_or_else(|| {
+                            overflow("accumulator bound overflows i64".to_string())
+                        })?;
+                    }
+                }
+                MacSpec::Csd(rows) => {
+                    if !support.mac {
+                        return Err(vec![bdiag(
+                            "unsupported-family",
+                            at(l, j),
+                            "bespoke CSD MAC plan reached a bounds build compiled without MAC-family support"
+                                .to_string(),
+                        )]);
+                    }
+                    for (i, digits) in rows.iter().enumerate() {
+                        if let Some(d) = digits.iter().find(|d| d.pow > 62) {
+                            return Err(overflow(format!(
+                                "CSD digit 2^{} (input {i}) exceeds the i64 model range",
+                                d.pow
+                            )));
+                        }
+                        if digits.iter().any(|d| d.neg) {
+                            has_neg = true;
+                        }
+                        let (wp, wn) = csd_merge(digits);
+                        for (weight, neg) in [(wp, false), (wn, true)] {
+                            if weight == 0 {
+                                continue;
+                            }
+                            let p_hi = in_hi[i].checked_mul(weight).ok_or_else(|| {
+                                overflow(format!(
+                                    "CSD bound {} x {weight} (input {i}) overflows i64",
+                                    in_hi[i]
+                                ))
+                            })?;
+                            let acc = if neg { &mut sn_hi } else { &mut sp_hi };
+                            *acc = acc.checked_add(p_hi).ok_or_else(|| {
+                                overflow("accumulator bound overflows i64".to_string())
+                            })?;
+                        }
+                    }
+                }
+            }
+            let w_bits = 1 + bits_of(sp_hi).max(bits_of(sn_hi));
+            if w_bits > 63 {
+                return Err(vec![bdiag(
+                    "overflow",
+                    at(l, j),
+                    format!("accumulator needs {w_bits} planes (max 63 — logits must fit i64)"),
+                )]);
+            }
+            let raw = (if has_neg { sp_hi - 1 } else { sp_hi }).max(0);
+            let act_hi = if last { raw } else { relu.apply(raw) };
+            bounds.push(NeuronBound {
+                sp_hi,
+                sn_hi,
+                has_neg,
+                w_bits,
+                act_hi,
+            });
+            next_hi.push(act_hi);
+        }
+        layers.push(bounds);
+        in_hi = next_hi;
+    }
+    Ok(ModelBounds { layers, max_shift })
+}
+
 /// First `L{l}/N{j}` whose accumulator bounds differ between two
 /// propagations of the same model (used by the shift-corruption canary:
 /// the first divergence is exactly the corrupted site, since earlier
@@ -400,9 +626,66 @@ pub fn check_model(name: &str, q: &QuantMlp, plan: &ShiftPlan) -> Vec<Diag> {
     diags
 }
 
+/// [`check_model`] generalized over the full approximation plan. A
+/// shift-only [`AxPlan`] delegates to the standing pass verbatim (which
+/// additionally cross-checks `axsum::layer_input_widths` — the sweep
+/// bookkeeping is shift-plan-specific by design). A widened plan runs
+/// [`propagate_ax`], cross-checks the bit-slice `new_ax` compiler's
+/// plane widths neuron by neuron, then structurally verifies the
+/// generated ax logit netlist and its bus widths.
+pub fn check_model_ax(name: &str, q: &QuantMlp, ax: &AxPlan) -> Vec<Diag> {
+    if ax.is_shift_only() {
+        return check_model(name, q, &ax.shifts);
+    }
+    let _span = crate::obs::span("analysis.check_model_ax");
+    let b = match propagate_ax(q, ax) {
+        Ok(b) => b,
+        Err(mut diags) => {
+            // agreement even in rejection: the bit-slice compiler must
+            // refuse this plan too (shape errors never reach it)
+            if diags.iter().all(|d| d.code == "overflow") && BitSliceEval::new_ax(q, ax).is_ok() {
+                diags.push(bdiag(
+                    "bitslice-disagree",
+                    format!("{name}: model"),
+                    "interval pass rejects the plan but bit-slice compilation accepts it".to_string(),
+                ));
+            }
+            return diags;
+        }
+    };
+    let mut diags = Vec::new();
+
+    match BitSliceEval::new_ax(q, ax) {
+        Err(e) => diags.push(bdiag(
+            "bitslice-disagree",
+            format!("{name}: {}", at(e.layer, e.neuron)),
+            format!("interval pass accepts the plan but bit-slice compilation rejects it: {}", e.detail),
+        )),
+        Ok(bs) => {
+            for (l, (ours, theirs)) in b.layers.iter().zip(bs.neuron_plane_widths()).enumerate() {
+                for (j, (nb, &w)) in ours.iter().zip(&theirs).enumerate() {
+                    if nb.w_bits != w {
+                        diags.push(bdiag(
+                            "bitslice-disagree",
+                            format!("{name}: {}", at(l, j)),
+                            format!("interval pass needs {} planes, bit-slice compiled {w}", nb.w_bits),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    let nl = build_mlp_ax_logits(&MlpAxSpecRef::from_model(name, q, ax));
+    diags.extend(super::verifier::verify_netlist(&nl, &super::verifier::IrConfig::default()));
+    diags.extend(netlist_width_diags(name, q, &b, &nl));
+    diags
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::axsum::mac::{csd_of, csd_topk, ReluSpec};
     use crate::conformance::gen;
     use crate::util::rng::Rng;
 
@@ -511,5 +794,113 @@ mod tests {
         let b = propagate(&q, &tampered).unwrap();
         assert_eq!(first_divergence(&a, &b), Some((1, 1)));
         assert_eq!(first_divergence(&a, &a), None);
+    }
+
+    #[test]
+    fn shift_only_ax_plan_propagates_to_the_standing_bounds() {
+        let (q, plan) = small();
+        let ax = AxPlan::from_shifts(&q, &plan);
+        assert_eq!(propagate_ax(&q, &ax).unwrap(), propagate(&q, &plan).unwrap());
+        assert!(check_model_ax("t", &q, &ax).is_empty());
+    }
+
+    /// Satellite mutation test: a plan using a family the bounds build
+    /// was compiled without must be rejected BY NAME — a silent widen
+    /// (falling back to shift-truncate bounds) would be wrong, since a
+    /// truncated CSD recoding can exceed the binary weight.
+    #[test]
+    fn unsupported_family_is_a_named_reject_not_a_silent_widen() {
+        let (q, plan) = small();
+
+        // MAC family on neuron L0/N1, fed to a mac-less build
+        let mut ax = AxPlan::from_shifts(&q, &plan);
+        ax.mac.neurons[0][1] = MacSpec::Csd(q.w[0][1].iter().map(|&w| csd_of(w)).collect());
+        let no_mac = FamilySupport { mac: false, act: true };
+        let diags = propagate_ax_with(&q, &ax, no_mac).expect_err("mac plan must be rejected");
+        assert_eq!(diags[0].code, "unsupported-family", "{diags:?}");
+        assert_eq!(diags[0].site, "L0/N1", "{diags:?}");
+        assert!(diags[0].detail.contains("MAC-family"), "{diags:?}");
+        // the full build accepts the very same plan
+        assert!(propagate_ax(&q, &ax).is_ok());
+
+        // activation family, fed to an act-less build
+        let no_act = FamilySupport { mac: true, act: false };
+        let mut ax = AxPlan::from_shifts(&q, &plan);
+        ax.act.relu[0] = ReluSpec { drop: 2, cap: 0 };
+        let diags = propagate_ax_with(&q, &ax, no_act).expect_err("act plan must be rejected");
+        assert_eq!((diags[0].code, diags[0].site.as_str()), ("unsupported-family", "L0"), "{diags:?}");
+
+        let mut ax = AxPlan::from_shifts(&q, &plan);
+        ax.act.argmax_drop = 3;
+        let diags = propagate_ax_with(&q, &ax, no_act).expect_err("argmax plan must be rejected");
+        assert_eq!((diags[0].code, diags[0].site.as_str()), ("unsupported-family", "argmax"), "{diags:?}");
+
+        // SHIFT_ONLY support still accepts every shift-only plan
+        let ax = AxPlan::from_shifts(&q, &plan);
+        assert!(propagate_ax_with(&q, &ax, FamilySupport::SHIFT_ONLY).is_ok());
+    }
+
+    /// Truncated CSD can bound ABOVE the exact plan (top-1 of 7 is +8),
+    /// which is exactly why the preflight dominance argument does not
+    /// extend to the MAC family and search gates per-plan instead.
+    #[test]
+    fn csd_truncation_bound_inflation_is_modeled() {
+        let q = QuantMlp {
+            w: vec![vec![vec![7]]],
+            b: vec![vec![0]],
+            in_bits: 4,
+            w_scales: vec![1.0],
+        };
+        let exact = propagate(&q, &ShiftPlan::exact(&q)).unwrap();
+        assert_eq!(exact.layers[0][0].sp_hi, 15 * 7);
+        let mut ax = AxPlan::exact(&q);
+        ax.mac.neurons[0][0] = MacSpec::Csd(vec![csd_topk(7, 1)]); // +8
+        let b = propagate_ax(&q, &ax).unwrap();
+        assert_eq!(b.layers[0][0].sp_hi, 15 * 8, "truncated CSD bound must inflate");
+        assert!(!b.layers[0][0].has_neg, "kept digit is positive");
+    }
+
+    #[test]
+    fn clamped_relu_tightens_downstream_bounds() {
+        let (q, plan) = small();
+        let exact = propagate(&q, &plan).unwrap();
+        let mut ax = AxPlan::from_shifts(&q, &plan);
+        ax.act.relu[0] = ReluSpec { drop: 0, cap: 3 };
+        let b = propagate_ax(&q, &ax).unwrap();
+        for (nb, ne) in b.layers[0].iter().zip(&exact.layers[0]) {
+            assert!(nb.act_hi <= 7, "clamp caps the activation bound");
+            assert!(nb.act_hi <= ne.act_hi);
+            assert_eq!((nb.sp_hi, nb.sn_hi), (ne.sp_hi, ne.sn_hi), "pre-activation untouched");
+        }
+        for (nb, ne) in b.layers[1].iter().zip(&exact.layers[1]) {
+            assert!(nb.sp_hi <= ne.sp_hi, "downstream bounds shrink");
+            assert!(nb.sn_hi <= ne.sn_hi);
+        }
+    }
+
+    #[test]
+    fn generated_ax_models_are_statically_sound() {
+        let mut rng = Rng::new(43);
+        for case in 0..40 {
+            let q = gen::random_quant_mlp(&mut rng, &gen::TopologyRange::default());
+            let xs = gen::mixed_stimulus(&mut rng, &q, 16);
+            let (kind, ax) = gen::random_ax_plan(&mut rng, &q, &xs);
+            let diags = check_model_ax("prop-ax", &q, &ax);
+            assert!(diags.is_empty(), "case {case} ({}): {diags:?}", kind.name());
+        }
+    }
+
+    #[test]
+    fn malformed_mac_matrix_is_a_shape_reject() {
+        let (q, plan) = small();
+        let mut ax = AxPlan::from_shifts(&q, &plan);
+        ax.mac.neurons[1].pop();
+        let diags = propagate_ax(&q, &ax).expect_err("short MAC layer");
+        assert_eq!((diags[0].code, diags[0].site.as_str()), ("shape", "L1"), "{diags:?}");
+
+        let mut ax = AxPlan::from_shifts(&q, &plan);
+        ax.mac.neurons[0][0] = MacSpec::Csd(vec![csd_of(3)]); // fan-in is 2
+        let diags = propagate_ax(&q, &ax).expect_err("short CSD row list");
+        assert_eq!((diags[0].code, diags[0].site.as_str()), ("shape", "L0/N0"), "{diags:?}");
     }
 }

@@ -34,12 +34,24 @@
 //! the all-exact plan dominates every truncated plan of the same model.
 //! Verifying the exact plan therefore proves *every* plan the DSE will
 //! enumerate overflow-free, for the cost of one netlist build.
+//!
+//! That dominance argument does **not** extend to the bespoke-MAC
+//! family: a truncated CSD recoding can bound *above* the binary weight
+//! (top-1 of `w = 7` multiplies by 8), so widened plans are gated
+//! per-plan with [`bounds::propagate_ax`] instead — the genetic search
+//! repairs any genome whose decoded plan the interval pass rejects. A
+//! bounds build compiled without a family ([`bounds::FamilySupport`])
+//! rejects out-of-support plans with a named `unsupported-family`
+//! diagnostic rather than silently widening.
 
 pub mod bounds;
 pub mod srclint;
 pub mod verifier;
 
-pub use bounds::{check_model, propagate, ModelBounds};
+pub use bounds::{
+    check_model, check_model_ax, propagate, propagate_ax, propagate_ax_with, FamilySupport,
+    ModelBounds,
+};
 pub use srclint::{lint_source_tree, SrcLintReport};
 pub use verifier::{verify_netlist, IrConfig};
 

@@ -58,6 +58,7 @@ use std::sync::{Arc, Mutex};
 
 use rustc_hash::FxHashMap;
 
+use crate::axsum::mac::{csd_merge, AxPlan, MacSpec};
 use crate::axsum::ShiftPlan;
 use crate::fixed::QuantMlp;
 use crate::sim::plane::PlaneWord;
@@ -236,6 +237,13 @@ struct BsLayer {
     dst_widths: Vec<u32>,
     dst_planes: usize,
     last: bool,
+    /// Low activation planes zeroed by the layer's [`ReluSpec`] (0 for
+    /// the exact ReLU and for the output layer).
+    act_drop: u32,
+    /// Saturation plane of the clamped ReLU (`0` = no clamp): any set
+    /// plane at or above `act_cap` forces planes `act_drop..dw` high,
+    /// the plane form of `min(r, 2^cap - 1)`.
+    act_cap: u32,
 }
 
 /// Caller-owned plane buffers for [`BitSliceEval`] — grown once, reused
@@ -304,6 +312,9 @@ pub struct BitSliceEval {
     cmp_w: usize,
     /// Planes of the predicted-class index (`ceil(log2 dout)`).
     idx_planes: usize,
+    /// Low logit planes the argmax tournament skips (the
+    /// reduced-precision comparator family; 0 = exact argmax).
+    argmax_drop: usize,
 }
 
 impl BitSliceEval {
@@ -315,11 +326,23 @@ impl BitSliceEval {
     /// into `i64`) returns a [`PlanCompileError`] naming it instead of
     /// panicking — callers in `dse`/`conformance` propagate.
     pub fn new(q: &QuantMlp, plan: &ShiftPlan) -> Result<BitSliceEval, PlanCompileError> {
+        BitSliceEval::new_ax(q, &AxPlan::from_shifts(q, plan))
+    }
+
+    /// [`Self::new`] generalized over the full approximation plan:
+    /// CSD neurons lower to at most two merged constant-multiply terms
+    /// per input (`a·Σ±2^pow == a·wp - a·wn`, powers distinct), the
+    /// truncated/clamped ReLU becomes a plane mask-and-saturate op, and
+    /// the reduced-precision argmax offsets the tournament's plane
+    /// reads. A shift-only plan compiles to exactly the engine `new`
+    /// builds.
+    pub fn new_ax(q: &QuantMlp, ax: &AxPlan) -> Result<BitSliceEval, PlanCompileError> {
         let n_layers = q.n_layers();
         let mut in_hi: Vec<i64> = vec![(1i64 << q.in_bits) - 1; q.din()];
         let mut layers: Vec<BsLayer> = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
             let last = l + 1 == n_layers;
+            let relu = ax.act.relu_of(l);
             let in_widths: Vec<u32> = in_hi.iter().map(|&h| bits_of(h)).collect();
             let mut in_offsets = Vec::with_capacity(in_widths.len());
             let mut acc = 0usize;
@@ -343,47 +366,103 @@ impl BitSliceEval {
                 let mut sn_hi: i64 = (-bias).max(0);
                 let mut has_neg = bias < 0;
                 let t0 = terms.len();
-                for (i, &w) in row.iter().enumerate() {
-                    if w == 0 {
-                        continue;
+                let sum_overflow = |j| err(j, "accumulator bound overflows i64".to_string());
+                match ax.mac_of(l, j) {
+                    MacSpec::ShiftTrunc => {
+                        for (i, &w) in row.iter().enumerate() {
+                            if w == 0 {
+                                continue;
+                            }
+                            if w < 0 {
+                                has_neg = true;
+                            }
+                            let s = ax.shifts.shifts[l][j][i];
+                            let w_abs = w.unsigned_abs();
+                            let p_hi = in_hi[i].checked_mul(w_abs as i64).ok_or_else(|| {
+                                err(
+                                    j,
+                                    format!(
+                                        "product bound {} x |{w}| (input {i}) overflows i64",
+                                        in_hi[i]
+                                    ),
+                                )
+                            })?;
+                            let prod_w = bits_of(p_hi);
+                            let t_hi = if s >= 63 { 0 } else { (p_hi >> s) << s };
+                            if w > 0 {
+                                sp_hi = sp_hi.checked_add(t_hi).ok_or_else(|| sum_overflow(j))?;
+                            } else {
+                                sn_hi = sn_hi.checked_add(t_hi).ok_or_else(|| sum_overflow(j))?;
+                            }
+                            if t_hi == 0 {
+                                // truncated to constant zero (or a zero-bound
+                                // input): no planes, but `has_neg` above still
+                                // mirrors neuron_value's bookkeeping
+                                continue;
+                            }
+                            terms.push(BsTerm {
+                                off: in_offsets[i],
+                                in_w: in_widths[i],
+                                w_abs,
+                                neg: w < 0,
+                                shift: s,
+                                prod_w,
+                            });
+                        }
                     }
-                    if w < 0 {
-                        has_neg = true;
+                    MacSpec::Csd(rows) => {
+                        if rows.len() != row.len() {
+                            return Err(err(
+                                j,
+                                format!(
+                                    "CSD spec arity {} != neuron fan-in {}",
+                                    rows.len(),
+                                    row.len()
+                                ),
+                            ));
+                        }
+                        for (i, digits) in rows.iter().enumerate() {
+                            // structural: a kept negative digit wires the
+                            // ones'-complement merge even when the input
+                            // bound (hence the term) is zero
+                            if digits.iter().any(|d| d.neg) {
+                                has_neg = true;
+                            }
+                            let (wp, wn) = csd_merge(digits);
+                            for (w_abs, neg) in [(wp, false), (wn, true)] {
+                                if w_abs == 0 {
+                                    continue;
+                                }
+                                let p_hi = in_hi[i].checked_mul(w_abs).ok_or_else(|| {
+                                    err(
+                                        j,
+                                        format!(
+                                            "CSD bound {} x {w_abs} (input {i}) overflows i64",
+                                            in_hi[i]
+                                        ),
+                                    )
+                                })?;
+                                if neg {
+                                    sn_hi =
+                                        sn_hi.checked_add(p_hi).ok_or_else(|| sum_overflow(j))?;
+                                } else {
+                                    sp_hi =
+                                        sp_hi.checked_add(p_hi).ok_or_else(|| sum_overflow(j))?;
+                                }
+                                if p_hi == 0 {
+                                    continue;
+                                }
+                                terms.push(BsTerm {
+                                    off: in_offsets[i],
+                                    in_w: in_widths[i],
+                                    w_abs: w_abs as u64,
+                                    neg,
+                                    shift: 0,
+                                    prod_w: bits_of(p_hi),
+                                });
+                            }
+                        }
                     }
-                    let s = plan.shifts[l][j][i];
-                    let w_abs = w.unsigned_abs();
-                    let p_hi = in_hi[i].checked_mul(w_abs as i64).ok_or_else(|| {
-                        err(
-                            j,
-                            format!(
-                                "product bound {} x |{w}| (input {i}) overflows i64",
-                                in_hi[i]
-                            ),
-                        )
-                    })?;
-                    let prod_w = bits_of(p_hi);
-                    let t_hi = if s >= 63 { 0 } else { (p_hi >> s) << s };
-                    let sum_overflow =
-                        |j| err(j, "accumulator bound overflows i64".to_string());
-                    if w > 0 {
-                        sp_hi = sp_hi.checked_add(t_hi).ok_or_else(|| sum_overflow(j))?;
-                    } else {
-                        sn_hi = sn_hi.checked_add(t_hi).ok_or_else(|| sum_overflow(j))?;
-                    }
-                    if t_hi == 0 {
-                        // truncated to constant zero (or a zero-bound
-                        // input): no planes, but `has_neg` above still
-                        // mirrors neuron_value's bookkeeping
-                        continue;
-                    }
-                    terms.push(BsTerm {
-                        off: in_offsets[i],
-                        in_w: in_widths[i],
-                        w_abs,
-                        neg: w < 0,
-                        shift: s,
-                        prod_w,
-                    });
                 }
                 let w_bits = 1 + bits_of(sp_hi).max(bits_of(sn_hi));
                 if w_bits > 63 {
@@ -403,7 +482,9 @@ impl BitSliceEval {
                     t1: terms.len(),
                 });
                 let hid = if has_neg { sp_hi - 1 } else { sp_hi };
-                next_hi.push(hid.max(0));
+                // ReluSpec::apply is monotone nondecreasing, so it maps
+                // the upper bound to an upper bound on the activation
+                next_hi.push(if last { hid.max(0) } else { relu.apply(hid) });
             }
 
             let dst_widths: Vec<u32> = if last {
@@ -429,6 +510,12 @@ impl BitSliceEval {
                 dst_widths,
                 dst_planes,
                 last,
+                act_drop: if last { 0 } else { (relu.drop as u32).min(63) },
+                act_cap: if last || relu.cap == 0 || relu.cap as u32 >= 63 {
+                    0
+                } else {
+                    relu.cap as u32
+                },
             });
             in_hi = next_hi;
         }
@@ -469,6 +556,7 @@ impl BitSliceEval {
             max_in_planes,
             cmp_w,
             idx_planes,
+            argmax_drop: (ax.act.argmax_drop as usize).min(63),
             layers,
         })
     }
@@ -591,8 +679,28 @@ impl BitSliceEval {
                 } else {
                     // ReLU: clear every plane where the sign plane is set
                     let keep = s.sp[w - 1].not();
+                    // clamped ReLU: any relu plane at or above the cap
+                    // forces the kept low planes high — the plane form of
+                    // min(r, 2^cap - 1). Compiled widths guarantee
+                    // dw <= cap whenever the clamp can fire.
+                    let cap = layer.act_cap as usize;
+                    let ge = if cap > 0 && cap < w - 1 {
+                        let mut g = W::ZERO;
+                        for c in cap..w - 1 {
+                            g = g.or(s.sp[c].and(keep));
+                        }
+                        g
+                    } else {
+                        W::ZERO
+                    };
+                    let drop = layer.act_drop as usize;
                     for b in 0..dw {
-                        s.next[doff + b] = s.sp[b].and(keep);
+                        s.next[doff + b] = if b < drop {
+                            // truncated ReLU: low planes are zero
+                            W::ZERO
+                        } else {
+                            s.sp[b].and(keep).or(ge)
+                        };
                     }
                 }
             }
@@ -805,12 +913,35 @@ impl BitSliceEval {
             s.ylanes[k] = word;
         }
 
-        // argmax tournament: best starts at logit 0 / index 0
+        self.argmax_tournament(s);
+
+        // predicted == label (planes beyond either width compare as 0,
+        // so out-of-range labels count as misses instead of aliasing)
+        let mut eq = W::ONES;
+        for k in 0..ky.max(self.idx_planes) {
+            let a = if k < self.idx_planes { s.idx[k] } else { W::ZERO };
+            let b = if k < ky { s.ylanes[k] } else { W::ZERO };
+            eq = eq.and(a.xor(b).not());
+        }
+        eq.and(W::mask_low(in_chunk)).count_ones() as u64
+    }
+
+    /// Word-level argmax over the chunk's output planes in `s.out`,
+    /// leaving the winning index bit-transposed in `s.idx` (strict `>`
+    /// update — identical tie-breaking to `util::stats::argmax_i64`).
+    /// The compiled `argmax_drop` offsets every plane read: bit `b` of
+    /// the compared value is bit `b + drop` of the logit (sign-extended
+    /// past the logit's width), i.e. the comparator tree loses its low
+    /// `drop` columns exactly as [`crate::axsum::approx_argmax`] does.
+    fn argmax_tournament<W: PlaneWord>(&self, s: &mut BitSliceScratch<W>) {
+        let last = self.layers.last().expect("at least one layer");
+        let d = self.argmax_drop;
+        // best starts at logit 0 / index 0
         let w0 = last.dst_widths[0] as usize;
         let off0 = last.dst_offsets[0];
         let sign0 = s.out[off0 + w0 - 1];
         for b in 0..self.cmp_w {
-            s.best[b] = if b < w0 { s.out[off0 + b] } else { sign0 };
+            s.best[b] = if b + d < w0 { s.out[off0 + b + d] } else { sign0 };
         }
         s.idx[..self.idx_planes].fill(W::ZERO);
         for j in 1..self.dout {
@@ -823,7 +954,7 @@ impl BitSliceEval {
             let mut sum = W::ZERO;
             for b in 0..self.cmp_w {
                 let a = s.best[b];
-                let c = (if b < wj { s.out[offj + b] } else { signj }).not();
+                let c = (if b + d < wj { s.out[offj + b + d] } else { signj }).not();
                 sum = a.xor(c).xor(carry);
                 carry = a.and(c).or(carry.and(a.xor(c)));
             }
@@ -832,7 +963,7 @@ impl BitSliceEval {
                 continue;
             }
             for b in 0..self.cmp_w {
-                let c = if b < wj { s.out[offj + b] } else { signj };
+                let c = if b + d < wj { s.out[offj + b + d] } else { signj };
                 s.best[b] = m.and(c).or(m.not().and(s.best[b]));
             }
             for (k, plane) in s.idx[..self.idx_planes].iter_mut().enumerate() {
@@ -840,16 +971,48 @@ impl BitSliceEval {
                 *plane = m.and(jbit).or(m.not().and(*plane));
             }
         }
+    }
 
-        // predicted == label (planes beyond either width compare as 0,
-        // so out-of-range labels count as misses instead of aliasing)
-        let mut eq = W::ONES;
-        for k in 0..ky.max(self.idx_planes) {
-            let a = if k < self.idx_planes { s.idx[k] } else { W::ZERO };
-            let b = if k < ky { s.ylanes[k] } else { W::ZERO };
-            eq = eq.and(a.xor(b).not());
+    /// Predicted class per pattern, without leaving the sliced domain:
+    /// forward + argmax tournament per chunk, index planes read back
+    /// out. The class-level analogue of [`Self::forward_packed_w`] —
+    /// this is the entry the conformance harness diffs against
+    /// `predict_ax` / `FlatEval::predict` for the approximate-argmax
+    /// family (raw logits cannot see `argmax_drop`).
+    pub fn classes_packed_w<W: PlaneWord>(
+        &self,
+        stim: &PackedStimulus,
+        classes: &mut Vec<usize>,
+        s: &mut BitSliceScratch<W>,
+        accum: AccumMode,
+    ) {
+        self.prepare(s);
+        let patterns = stim.patterns();
+        classes.clear();
+        classes.resize(patterns, 0);
+        for chunk in 0..patterns.div_ceil(W::PATTERNS) {
+            self.forward_chunk(stim, chunk, accum, s);
+            self.argmax_tournament(s);
+            let base = chunk * W::PATTERNS;
+            let in_chunk = (patterns - base).min(W::PATTERNS);
+            for (p, slot) in classes[base..base + in_chunk].iter_mut().enumerate() {
+                let mut c = 0usize;
+                for k in 0..self.idx_planes {
+                    c |= (s.idx[k].bit(p) as usize) << k;
+                }
+                *slot = c;
+            }
         }
-        eq.and(W::mask_low(in_chunk)).count_ones() as u64
+    }
+
+    /// [`Self::classes_packed_w`] at the `u64` ripple baseline.
+    pub fn classes_packed(
+        &self,
+        stim: &PackedStimulus,
+        classes: &mut Vec<usize>,
+        s: &mut BitSliceScratch,
+    ) {
+        self.classes_packed_w::<u64>(stim, classes, s, AccumMode::Ripple)
     }
 
     /// Convenience wrapper over [`Self::forward_packed`]: packs `xs`
@@ -911,12 +1074,14 @@ fn model_fingerprint(q: &QuantMlp) -> u64 {
 
 struct PlanCacheInner {
     model_fp: Option<u64>,
-    map: FxHashMap<Vec<Vec<Vec<u32>>>, Arc<BitSliceEval>>,
+    map: FxHashMap<AxPlan, Arc<BitSliceEval>>,
 }
 
-/// Amortized compiled-plan cache: [`BitSliceEval`]s keyed on the plan's
-/// shift table — the same key `dse::sweep_space` dedups design points on
-/// and `search`'s evaluator memoizes on — so repeated genomes in
+/// Amortized compiled-plan cache: [`BitSliceEval`]s keyed on the full
+/// [`AxPlan`] (shift table + MAC + activation families — plain
+/// [`ShiftPlan`] callers key on its lossless embedding) — the same
+/// identity `dse::sweep_space` dedups design points on and `search`'s
+/// evaluator memoizes on — so repeated genomes in
 /// search/sweep (and repeated operating points in the serving runtime)
 /// never recompile plane widths. One cache serves one model: if a call
 /// arrives with a different `QuantMlp` (fingerprint over weights/biases/
@@ -944,12 +1109,21 @@ impl PlanCache {
     }
 
     /// Cached compile: returns the shared engine for `(q, plan)`,
-    /// compiling at most once per distinct shift table. Compile errors
+    /// compiling at most once per distinct plan. Compile errors
     /// are not cached (the same broken plan will re-report).
     pub fn get_or_compile(
         &self,
         q: &QuantMlp,
         plan: &ShiftPlan,
+    ) -> Result<Arc<BitSliceEval>, PlanCompileError> {
+        self.get_or_compile_ax(q, &AxPlan::from_shifts(q, plan))
+    }
+
+    /// [`Self::get_or_compile`] over the full approximation plan.
+    pub fn get_or_compile_ax(
+        &self,
+        q: &QuantMlp,
+        ax: &AxPlan,
     ) -> Result<Arc<BitSliceEval>, PlanCompileError> {
         let fp = model_fingerprint(q);
         let mut inner = self.inner.lock().expect("plan cache poisoned");
@@ -957,13 +1131,13 @@ impl PlanCache {
             inner.model_fp = Some(fp);
             inner.map.clear();
         }
-        if let Some(e) = inner.map.get(&plan.shifts) {
+        if let Some(e) = inner.map.get(ax) {
             crate::obs::counters::PLAN_CACHE_HITS.incr();
             return Ok(Arc::clone(e));
         }
         crate::obs::counters::PLAN_CACHE_MISSES.incr();
-        let compiled = Arc::new(BitSliceEval::new(q, plan)?);
-        inner.map.insert(plan.shifts.clone(), Arc::clone(&compiled));
+        let compiled = Arc::new(BitSliceEval::new_ax(q, ax)?);
+        inner.map.insert(ax.clone(), Arc::clone(&compiled));
         Ok(compiled)
     }
 
@@ -980,6 +1154,7 @@ impl PlanCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::axsum::mac::{csd_topk, forward_ax, predict_ax, ActPlan, MacPlan, ReluSpec};
     use crate::axsum::{self, FlatEval, FlatScratch};
     use crate::sim::plane::{Lanes, Lanes4};
     use crate::util::rng::Rng;
@@ -1346,5 +1521,130 @@ mod tests {
         let mut want = Vec::new();
         fresh.forward_batch(&xs, &mut want, &mut s);
         assert_eq!(got, want);
+    }
+
+    /// Random mix of the three families on top of random shifts: CSD
+    /// neurons (kept-digit counts 0..=4, incl. degenerate all-zero),
+    /// truncated/clamped ReLUs and a reduced-precision argmax.
+    fn rand_ax(rng: &mut Rng, q: &QuantMlp) -> AxPlan {
+        let shifts = rand_plan(rng, q);
+        let mut mac = MacPlan::shift_only(q);
+        for (l, layer) in q.w.iter().enumerate() {
+            for (j, row) in layer.iter().enumerate() {
+                if rng.below(2) == 0 {
+                    let m = rng.below(5);
+                    mac.neurons[l][j] =
+                        MacSpec::Csd(row.iter().map(|&w| csd_topk(w, m)).collect());
+                }
+            }
+        }
+        let relu = (0..q.n_layers().saturating_sub(1))
+            .map(|_| ReluSpec {
+                drop: rng.below(3) as u8,
+                cap: [0u8, 4, 6][rng.below(3)],
+            })
+            .collect();
+        AxPlan {
+            shifts,
+            mac,
+            act: ActPlan {
+                relu,
+                argmax_drop: rng.below(4) as u8,
+            },
+        }
+    }
+
+    #[test]
+    fn csd_and_act_plans_bit_match_the_reference_at_every_width() {
+        let mut rng = Rng::new(0xAC);
+        for total in [1usize, 63, 64, 65, 129, 257] {
+            let q = rand_q(&mut rng, 5, 4, 3);
+            let ax = rand_ax(&mut rng, &q);
+            let xs: Vec<Vec<i64>> = (0..total)
+                .map(|_| (0..5).map(|_| rng.range_i64(0, 15)).collect())
+                .collect();
+            let mut scratch = Vec::new();
+            let mut want = Vec::with_capacity(total * 3);
+            let mut want_cls = Vec::with_capacity(total);
+            for x in &xs {
+                want.extend(forward_ax(&q, &ax, x, &mut scratch));
+                want_cls.push(predict_ax(&q, &ax, x));
+            }
+            let stim = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
+            let bs = BitSliceEval::new_ax(&q, &ax).unwrap();
+            let mut got = Vec::new();
+            let mut cls = Vec::new();
+            let mut s64 = BitSliceScratch::<u64>::new();
+            bs.forward_packed(&stim, &mut got, &mut s64);
+            assert_eq!(got, want, "u64 logits, {total} patterns");
+            bs.classes_packed(&stim, &mut cls, &mut s64);
+            assert_eq!(cls, want_cls, "u64 classes, {total} patterns");
+            let mut s128 = BitSliceScratch::<u128>::new();
+            let mut s256 = BitSliceScratch::<Lanes4>::new();
+            for accum in [AccumMode::Ripple, AccumMode::CarrySave] {
+                bs.forward_packed_w(&stim, &mut got, &mut s128, accum);
+                assert_eq!(got, want, "u128/{accum:?}, {total} patterns");
+                bs.classes_packed_w(&stim, &mut cls, &mut s128, accum);
+                assert_eq!(cls, want_cls, "u128 classes/{accum:?}, {total} patterns");
+                bs.forward_packed_w(&stim, &mut got, &mut s256, accum);
+                assert_eq!(got, want, "lanes4/{accum:?}, {total} patterns");
+                bs.classes_packed_w(&stim, &mut cls, &mut s256, accum);
+                assert_eq!(cls, want_cls, "lanes4 classes/{accum:?}, {total} patterns");
+            }
+            // the sliced accuracy sees the approximate argmax too
+            assert_eq!(bs.accuracy_packed(&stim, &want_cls, &mut s64), 1.0);
+        }
+    }
+
+    #[test]
+    fn shift_only_ax_plan_compiles_to_the_same_engine_semantics() {
+        // the lossless embedding: new() and new_ax(from_shifts) agree
+        // at logit and class level (new() delegates, so this pins the
+        // embedding itself)
+        let mut rng = Rng::new(0xAE);
+        let q = rand_q(&mut rng, 5, 4, 3);
+        let plan = rand_plan(&mut rng, &q);
+        let ax = AxPlan::from_shifts(&q, &plan);
+        assert!(ax.is_shift_only());
+        let xs: Vec<Vec<i64>> = (0..70)
+            .map(|_| (0..5).map(|_| rng.range_i64(0, 15)).collect())
+            .collect();
+        let stim = PackedStimulus::from_features(&xs, q.din(), q.in_bits).unwrap();
+        let a = BitSliceEval::new(&q, &plan).unwrap();
+        let b = BitSliceEval::new_ax(&q, &ax).unwrap();
+        let mut s = BitSliceScratch::new();
+        let (mut la, mut lb) = (Vec::new(), Vec::new());
+        a.forward_packed(&stim, &mut la, &mut s);
+        b.forward_packed(&stim, &mut lb, &mut s);
+        assert_eq!(la, lb);
+        let (mut ca, mut cb) = (Vec::new(), Vec::new());
+        a.classes_packed(&stim, &mut ca, &mut s);
+        b.classes_packed(&stim, &mut cb, &mut s);
+        assert_eq!(ca, cb);
+        // exact argmax classes equal the flat argmax over raw logits
+        for (p, &c) in ca.iter().enumerate() {
+            assert_eq!(c, argmax_i64(&la[p * 3..(p + 1) * 3]));
+        }
+    }
+
+    #[test]
+    fn plan_cache_distinguishes_ax_families_on_shared_shifts() {
+        let mut rng = Rng::new(0xAD);
+        let q = rand_q(&mut rng, 4, 3, 2);
+        let plan = rand_plan(&mut rng, &q);
+        let cache = PlanCache::new();
+        let base = cache.get_or_compile(&q, &plan).unwrap();
+        let embedded = cache
+            .get_or_compile_ax(&q, &AxPlan::from_shifts(&q, &plan))
+            .unwrap();
+        assert!(
+            Arc::ptr_eq(&base, &embedded),
+            "lossless embedding must share the compile"
+        );
+        let mut ax = AxPlan::from_shifts(&q, &plan);
+        ax.act.argmax_drop = 2;
+        let dropped = cache.get_or_compile_ax(&q, &ax).unwrap();
+        assert!(!Arc::ptr_eq(&base, &dropped));
+        assert_eq!(cache.len(), 2);
     }
 }

@@ -1,0 +1,538 @@
+//! Bespoke-MAC and approximate-activation plan families (paper §3 +
+//! arxiv 2312.17612): per-weight CSD (canonical signed digit) recodings
+//! with subexpression-sharing adder graphs as an *alternative* to the
+//! shift-truncate MAC, plus truncated/clamped ReLU and reduced-precision
+//! argmax — each an independent gene the search can toggle.
+//!
+//! The unit of currency is [`AxPlan`]: a [`ShiftPlan`] (the standing
+//! family) extended with a per-neuron [`MacSpec`] and per-layer
+//! [`ReluSpec`] / output [`ActPlan::argmax_drop`]. Every engine in the
+//! repo — the per-sample reference ([`forward_ax`]), `FlatEval`,
+//! `BitSliceEval`, and the synthesized netlists — decodes the *same*
+//! `AxPlan` to bit-identical integer semantics; the conformance harness
+//! diffs them all (`conformance::diff::check_case_ax`).
+//!
+//! Reference semantics (the other engines are pinned to these):
+//!
+//! * **ShiftTrunc neuron** — exactly `axsum::neuron_value`: split-sign
+//!   accumulation of `((a·|w|) >> s) << s` with the ones-complement
+//!   combine `sp - sn - 1` whenever the bias or any weight is negative.
+//! * **CSD neuron** — per input `i`, a *kept* digit list encodes the
+//!   signed weight as `Σ ±2^pow`; positive digits add `a << pow` to
+//!   `sp`, negative to `sn`. The combine is structural: `sp - sn - 1`
+//!   iff the bias is negative or any kept digit is negative (matching
+//!   the hardware, where the ones-complement merge exists whenever the
+//!   negative adder list is non-empty). Truncating the digit list (top-m
+//!   most significant digits, [`csd_topk`]) is the approximation.
+//! * **Truncated ReLU** — `ReluSpec { drop, cap }`:
+//!   `((max(v,0) clamped to 2^cap - 1 when cap > 0) >> drop) << drop`.
+//! * **Approximate argmax** — first-max-wins argmax over the logits
+//!   arithmetically shifted right by `argmax_drop` (the comparator tree
+//!   loses its low `drop` columns).
+
+use crate::fixed::QuantMlp;
+use crate::synth::csd_digits;
+use crate::util::stats::argmax_i64;
+
+use super::ShiftPlan;
+
+/// One kept CSD digit: `±2^pow` (sign in `neg`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CsdDigit {
+    pub pow: u8,
+    pub neg: bool,
+}
+
+/// MAC family of one neuron.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum MacSpec {
+    /// The standing family: shift-truncated binary multiply, driven by
+    /// the neuron's row of [`ShiftPlan`] shifts.
+    ShiftTrunc,
+    /// Bespoke constant multiply: per-input kept CSD digit lists (an
+    /// empty list is a degenerate all-zero weight). When a neuron is
+    /// `Csd` its `ShiftPlan` row is ignored.
+    Csd(Vec<Vec<CsdDigit>>),
+}
+
+impl MacSpec {
+    pub fn is_csd(&self) -> bool {
+        matches!(self, MacSpec::Csd(_))
+    }
+}
+
+/// Per-neuron MAC assignment, `neurons[layer][neuron]`.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub struct MacPlan {
+    pub neurons: Vec<Vec<MacSpec>>,
+}
+
+impl MacPlan {
+    /// All neurons on the standing shift-truncate family.
+    pub fn shift_only(q: &QuantMlp) -> MacPlan {
+        MacPlan {
+            neurons: q
+                .w
+                .iter()
+                .map(|layer| vec![MacSpec::ShiftTrunc; layer.len()])
+                .collect(),
+        }
+    }
+
+    pub fn is_shift_only(&self) -> bool {
+        self.neurons
+            .iter()
+            .all(|l| l.iter().all(|n| !n.is_csd()))
+    }
+}
+
+/// Approximate-ReLU parameters of one hidden layer. `drop` zeroes the
+/// low `drop` output bits; `cap > 0` clamps the activation to
+/// `2^cap - 1` first (a piecewise-saturating ReLU whose hardware is an
+/// OR over the high magnitude bits). `EXACT` is the standing ReLU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ReluSpec {
+    pub drop: u8,
+    pub cap: u8,
+}
+
+impl ReluSpec {
+    pub const EXACT: ReluSpec = ReluSpec { drop: 0, cap: 0 };
+
+    pub fn is_exact(&self) -> bool {
+        self.drop == 0 && self.cap == 0
+    }
+
+    /// Reference semantics (monotone nondecreasing in `v`, so interval
+    /// bounds propagate through `apply` directly).
+    pub fn apply(&self, v: i64) -> i64 {
+        let mut r = v.max(0);
+        if self.cap > 0 && (self.cap as u32) < 63 {
+            r = r.min((1i64 << self.cap) - 1);
+        }
+        let d = (self.drop as u32).min(63);
+        (r >> d) << d
+    }
+}
+
+/// Activation plan: one [`ReluSpec`] per *hidden* layer (layer `l`
+/// feeds layer `l+1`; the output layer has no ReLU) plus the argmax
+/// comparator precision.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ActPlan {
+    pub relu: Vec<ReluSpec>,
+    /// Low logit bits the argmax comparator tree ignores (arithmetic
+    /// shift semantics; 0 = exact argmax).
+    pub argmax_drop: u8,
+}
+
+impl ActPlan {
+    pub fn exact(n_layers: usize) -> ActPlan {
+        ActPlan {
+            relu: vec![ReluSpec::EXACT; n_layers.saturating_sub(1)],
+            argmax_drop: 0,
+        }
+    }
+
+    pub fn is_exact(&self) -> bool {
+        self.argmax_drop == 0 && self.relu.iter().all(|r| r.is_exact())
+    }
+
+    /// The ReLU spec applied to layer `l`'s activations (EXACT for the
+    /// output layer and for short vectors).
+    pub fn relu_of(&self, l: usize) -> ReluSpec {
+        self.relu.get(l).copied().unwrap_or(ReluSpec::EXACT)
+    }
+}
+
+/// Full approximation assignment: the standing shift plan plus the two
+/// new families. `from_shifts` embeds a [`ShiftPlan`] losslessly — every
+/// engine's `*_ax` entry compiled from it is bit-identical to the
+/// shift-only entry — so the widened space strictly contains the old one.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct AxPlan {
+    pub shifts: ShiftPlan,
+    pub mac: MacPlan,
+    pub act: ActPlan,
+}
+
+impl AxPlan {
+    pub fn from_shifts(q: &QuantMlp, plan: &ShiftPlan) -> AxPlan {
+        AxPlan {
+            shifts: plan.clone(),
+            mac: MacPlan::shift_only(q),
+            act: ActPlan::exact(q.n_layers()),
+        }
+    }
+
+    pub fn exact(q: &QuantMlp) -> AxPlan {
+        AxPlan::from_shifts(q, &ShiftPlan::exact(q))
+    }
+
+    /// True iff this plan is expressible as a plain [`ShiftPlan`]
+    /// (no CSD neuron, exact activations) — the fast path every
+    /// pre-existing engine entry point already covers.
+    pub fn is_shift_only(&self) -> bool {
+        self.mac.is_shift_only() && self.act.is_exact()
+    }
+
+    /// The MAC spec of neuron `(l, j)` (ShiftTrunc when the plan's
+    /// matrix is short — e.g. a hand-built plan).
+    pub fn mac_of(&self, l: usize, j: usize) -> &MacSpec {
+        const SHIFT: MacSpec = MacSpec::ShiftTrunc;
+        self.mac
+            .neurons
+            .get(l)
+            .and_then(|layer| layer.get(j))
+            .unwrap_or(&SHIFT)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSD decode.
+// ---------------------------------------------------------------------------
+
+/// Full CSD recoding of a signed weight, most-significant digit first.
+/// `w = Σ ±2^pow` exactly; a negative `w` flips every digit's sign.
+/// `csd_of(0)` is empty.
+pub fn csd_of(w: i64) -> Vec<CsdDigit> {
+    let mag = csd_digits(w.unsigned_abs()); // LSB-first (pow, ±1)
+    mag.iter()
+        .rev()
+        .map(|&(pow, d)| CsdDigit {
+            pow: pow as u8,
+            neg: (d < 0) != (w < 0),
+        })
+        .collect()
+}
+
+/// The `m` most-significant CSD digits of `w` — the bespoke-MAC
+/// approximation knob. `m = 0` degenerates to an all-zero weight;
+/// `m >=` the digit count is the exact recoding.
+pub fn csd_topk(w: i64, m: usize) -> Vec<CsdDigit> {
+    let mut d = csd_of(w);
+    d.truncate(m);
+    d
+}
+
+/// Signed value of a kept digit list (i128 so i64-edge magnitudes
+/// reconstruct without overflow in tests).
+pub fn csd_value(digits: &[CsdDigit]) -> i128 {
+    digits
+        .iter()
+        .map(|d| {
+            let t = 1i128 << d.pow;
+            if d.neg {
+                -t
+            } else {
+                t
+            }
+        })
+        .sum()
+}
+
+/// Merge a kept digit list into `(wp, wn)`: the positive / negative
+/// binary weights `Σ 2^pow` over each sign class. Because CSD digits
+/// have distinct powers, `a·Σ±2^pow == a·wp - a·wn` exactly — this is
+/// how `FlatEval` and the bit-sliced planes lower a CSD neuron to two
+/// constant multiplies without changing the split-sign sums.
+pub fn csd_merge(digits: &[CsdDigit]) -> (i64, i64) {
+    let (mut wp, mut wn) = (0i64, 0i64);
+    for d in digits {
+        debug_assert!(d.pow < 63, "CSD digit pow out of model range");
+        if d.neg {
+            wn += 1i64 << d.pow;
+        } else {
+            wp += 1i64 << d.pow;
+        }
+    }
+    (wp, wn)
+}
+
+// ---------------------------------------------------------------------------
+// Reference forward.
+// ---------------------------------------------------------------------------
+
+/// Split-sign neuron value under an [`AxPlan`] MAC spec. For
+/// `ShiftTrunc` this is exactly `axsum::neuron_value`; for `Csd` the
+/// kept digits accumulate `a << pow` into `sp`/`sn` and the combine is
+/// structural on the spec (not on the data).
+pub fn neuron_value_ax(
+    x: &[i64],
+    weights: &[i64],
+    bias: i64,
+    shifts: &[u32],
+    mac: &MacSpec,
+) -> i64 {
+    let mut sp = bias.max(0);
+    let mut sn = (-bias).max(0);
+    let mut has_neg = bias < 0;
+    match mac {
+        MacSpec::ShiftTrunc => {
+            for ((&a, &w), &s) in x.iter().zip(weights).zip(shifts) {
+                let t = ((a * w.abs()) >> s) << s;
+                if w < 0 {
+                    sn += t;
+                } else {
+                    sp += t;
+                }
+            }
+            has_neg |= weights.iter().any(|&w| w < 0);
+        }
+        MacSpec::Csd(rows) => {
+            debug_assert_eq!(rows.len(), x.len(), "CSD row arity");
+            for (&a, digits) in x.iter().zip(rows) {
+                for d in digits {
+                    let t = a << (d.pow as u32).min(62);
+                    if d.neg {
+                        sn += t;
+                        has_neg = true;
+                    } else {
+                        sp += t;
+                    }
+                }
+            }
+        }
+    }
+    if has_neg {
+        sp - sn - 1
+    } else {
+        sp
+    }
+}
+
+/// First-max-wins argmax over logits arithmetically shifted right by
+/// `drop` — the reference semantics of the reduced-precision comparator
+/// tree (ties after the shift resolve to the earlier index, exactly as
+/// the hardware chain and the bit-sliced tournament do).
+pub fn approx_argmax(logits: &[i64], drop: u8) -> usize {
+    if drop == 0 {
+        return argmax_i64(logits);
+    }
+    let d = (drop as u32).min(63);
+    let shifted: Vec<i64> = logits.iter().map(|&v| v >> d).collect();
+    argmax_i64(&shifted)
+}
+
+/// Per-sample reference forward under a full [`AxPlan`]: raw output
+/// logits (the argmax family only affects [`predict_ax`]). `scratch` is
+/// the activation ping-pong buffer, reused across calls.
+pub fn forward_ax(q: &QuantMlp, ax: &AxPlan, x: &[i64], scratch: &mut Vec<i64>) -> Vec<i64> {
+    assert_eq!(x.len(), q.din(), "input arity");
+    let n_layers = q.n_layers();
+    let mut cur: Vec<i64> = x.to_vec();
+    for l in 0..n_layers {
+        let last = l + 1 == n_layers;
+        let relu = ax.act.relu_of(l);
+        scratch.clear();
+        for (j, row) in q.w[l].iter().enumerate() {
+            let v = neuron_value_ax(
+                &cur,
+                row,
+                q.b[l][j],
+                &ax.shifts.shifts[l][j],
+                ax.mac_of(l, j),
+            );
+            scratch.push(if last { v } else { relu.apply(v) });
+        }
+        std::mem::swap(&mut cur, scratch);
+    }
+    cur
+}
+
+/// Predicted class under a full [`AxPlan`] (approximate argmax family
+/// included).
+pub fn predict_ax(q: &QuantMlp, ax: &AxPlan, x: &[i64]) -> usize {
+    let mut scratch = Vec::new();
+    let logits = forward_ax(q, ax, x, &mut scratch);
+    approx_argmax(&logits, ax.act.argmax_drop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn csd_of_reconstructs_small_and_edge_magnitudes() {
+        for w in -200i64..=200 {
+            assert_eq!(csd_value(&csd_of(w)), w as i128, "w={w}");
+        }
+        for &w in &[
+            i64::MAX,
+            i64::MIN,
+            i64::MIN + 1,
+            (1i64 << 62) - 1,
+            -(1i64 << 62),
+            0x5555_5555_5555_5555,
+            -0x5555_5555_5555_5555,
+        ] {
+            assert_eq!(csd_value(&csd_of(w)), w as i128, "w={w:#x}");
+        }
+    }
+
+    #[test]
+    fn csd_digits_are_sparse_and_nonadjacent() {
+        for w in 1i64..=1000 {
+            let d = csd_of(w);
+            // MSB-first, strictly decreasing powers, no adjacent digits
+            for p in d.windows(2) {
+                assert!(p[0].pow >= p[1].pow + 2, "w={w}: {:?}", d);
+            }
+            // CSD is minimal-weight: never more digits than binary ones
+            assert!(d.len() <= (w.count_ones() as usize), "w={w}");
+        }
+    }
+
+    #[test]
+    fn csd_topk_keeps_most_significant_digits() {
+        let d = csd_of(85); // 1010101 -> 4 digits
+        assert_eq!(d.len(), 4);
+        for m in 0..=5 {
+            let t = csd_topk(85, m);
+            assert_eq!(t.len(), m.min(4));
+            assert_eq!(t, d[..m.min(4)].to_vec());
+        }
+        // top-1 of 7 = +8 (CSD 8-1): overshoots the binary weight — the
+        // bound-inflation case `propagate_ax` must model
+        assert_eq!(csd_topk(7, 1), vec![CsdDigit { pow: 3, neg: false }]);
+        assert_eq!(csd_value(&csd_topk(7, 1)), 8);
+        assert!(csd_topk(0, 3).is_empty(), "all-zero weight degenerates");
+    }
+
+    #[test]
+    fn csd_merge_matches_digit_value() {
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let w = rng.range_i64(-127, 127);
+            for m in 0..=4 {
+                let d = csd_topk(w, m);
+                let (wp, wn) = csd_merge(&d);
+                assert_eq!((wp - wn) as i128, csd_value(&d), "w={w} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn shift_trunc_spec_matches_neuron_value() {
+        let mut rng = Rng::new(9);
+        for _ in 0..300 {
+            let n = 1 + rng.below(6);
+            let x: Vec<i64> = (0..n).map(|_| rng.range_i64(0, 15)).collect();
+            let w: Vec<i64> = (0..n).map(|_| rng.range_i64(-127, 127)).collect();
+            let s: Vec<u32> = (0..n).map(|_| rng.below(12) as u32).collect();
+            let b = rng.range_i64(-90, 90);
+            assert_eq!(
+                neuron_value_ax(&x, &w, b, &s, &MacSpec::ShiftTrunc),
+                super::super::neuron_value(&x, &w, b, &s),
+            );
+        }
+    }
+
+    #[test]
+    fn full_csd_neuron_matches_exact_dot_product_value() {
+        // with every digit kept and no negative digit/bias, the CSD
+        // neuron is the exact dot product; with negatives it is the
+        // split-sign value sp - sn - 1 (off-by-one by design, shared
+        // with the hardware combine)
+        let mut rng = Rng::new(13);
+        for _ in 0..300 {
+            let n = 1 + rng.below(6);
+            let x: Vec<i64> = (0..n).map(|_| rng.range_i64(0, 15)).collect();
+            let w: Vec<i64> = (0..n).map(|_| rng.range_i64(-127, 127)).collect();
+            let b = rng.range_i64(-90, 90);
+            let rows: Vec<Vec<CsdDigit>> = w.iter().map(|&wi| csd_of(wi)).collect();
+            let has_neg = b < 0 || rows.iter().any(|r| r.iter().any(|d| d.neg));
+            let dot: i64 = b + x.iter().zip(&w).map(|(&a, &wi)| a * wi).sum::<i64>();
+            let got = neuron_value_ax(&x, &w, b, &vec![0; n], &MacSpec::Csd(rows));
+            let want = if has_neg { dot - 1 } else { dot };
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn relu_spec_is_monotone_and_exact_when_trivial() {
+        let specs = [
+            ReluSpec::EXACT,
+            ReluSpec { drop: 1, cap: 0 },
+            ReluSpec { drop: 2, cap: 5 },
+            ReluSpec { drop: 0, cap: 3 },
+            ReluSpec { drop: 7, cap: 0 },
+        ];
+        for spec in specs {
+            let mut prev = i64::MIN;
+            for v in -300i64..=300 {
+                let r = spec.apply(v);
+                assert!(r >= prev, "{spec:?} not monotone at {v}");
+                assert!(r >= 0);
+                assert_eq!(r % (1i64 << spec.drop.min(62)), 0, "low bits dropped");
+                if spec.cap > 0 {
+                    assert!(r <= (1i64 << spec.cap) - 1);
+                }
+                prev = r;
+            }
+        }
+        for v in -50i64..=50 {
+            assert_eq!(ReluSpec::EXACT.apply(v), v.max(0));
+        }
+    }
+
+    #[test]
+    fn approx_argmax_matches_shifted_exact_argmax() {
+        let mut rng = Rng::new(21);
+        for _ in 0..500 {
+            let n = 1 + rng.below(6);
+            let logits: Vec<i64> = (0..n).map(|_| rng.range_i64(-5000, 5000)).collect();
+            let drop = rng.below(6) as u8;
+            let want = {
+                let shifted: Vec<i64> = logits.iter().map(|&v| v >> drop).collect();
+                argmax_i64(&shifted)
+            };
+            assert_eq!(approx_argmax(&logits, drop), want);
+        }
+        assert_eq!(approx_argmax(&[3, 7, 5], 0), 1);
+        // drop=2: 0,1,1 -> first max wins -> index 1
+        assert_eq!(approx_argmax(&[3, 7, 5], 2), 1);
+        // drop large: everything collapses to sign; first wins
+        assert_eq!(approx_argmax(&[3, 7, 5], 60), 0);
+    }
+
+    #[test]
+    fn from_shifts_forward_matches_shift_only_reference() {
+        let mut rng = Rng::new(33);
+        let q = QuantMlp {
+            w: vec![
+                (0..3)
+                    .map(|_| (0..4).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+                (0..2)
+                    .map(|_| (0..3).map(|_| rng.range_i64(-90, 90)).collect())
+                    .collect(),
+            ],
+            b: vec![
+                (0..3).map(|_| rng.range_i64(-40, 40)).collect(),
+                (0..2).map(|_| rng.range_i64(-40, 40)).collect(),
+            ],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        };
+        let mut plan = ShiftPlan::exact(&q);
+        plan.shifts[0][1][2] = 3;
+        plan.shifts[1][0][1] = 5;
+        let ax = AxPlan::from_shifts(&q, &plan);
+        assert!(ax.is_shift_only());
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        for _ in 0..50 {
+            let x: Vec<i64> = (0..4).map(|_| rng.range_i64(0, 15)).collect();
+            assert_eq!(
+                forward_ax(&q, &ax, &x, &mut s1),
+                super::super::forward(&q, &plan, &x, &mut s2)
+            );
+            assert_eq!(
+                predict_ax(&q, &ax, &x),
+                super::super::predict(&q, &plan, &x)
+            );
+        }
+    }
+}

@@ -11,10 +11,15 @@
 //!    bookkeeping the bespoke circuit generator applies.
 
 pub mod bitslice;
+pub mod mac;
 
 pub use bitslice::{
     plan_cache_hits, plan_cache_misses, AccumMode, BitSliceEval, BitSliceScratch, PlanCache,
     PlanCompileError,
+};
+pub use mac::{
+    approx_argmax, csd_merge, csd_of, csd_topk, csd_value, forward_ax, neuron_value_ax,
+    predict_ax, ActPlan, AxPlan, CsdDigit, MacPlan, MacSpec, ReluSpec,
 };
 
 use crate::fixed::QuantMlp;
@@ -42,7 +47,9 @@ fn keep_finite(v: &f64) -> bool {
 }
 
 /// Truncation plan: `shifts[layer][out][in]`, 0 = exact product.
-#[derive(Clone, Debug, PartialEq)]
+/// (`Eq`/`Hash` so plans — and the [`AxPlan`]s embedding them — key the
+/// sweep dedup maps, the plan cache and the search fitness memo.)
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct ShiftPlan {
     pub shifts: Vec<Vec<Vec<u32>>>,
 }
@@ -142,9 +149,35 @@ pub fn accuracy(q: &QuantMlp, plan: &ShiftPlan, xs: &[Vec<i64>], ys: &[usize]) -
     flat.accuracy_with(xs, ys, &mut scratch)
 }
 
+/// [`accuracy`] over a full [`mac::AxPlan`] (approximate argmax included).
+pub fn accuracy_ax(q: &QuantMlp, ax: &mac::AxPlan, xs: &[Vec<i64>], ys: &[usize]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let flat = FlatEval::new_ax(q, ax);
+    let mut scratch = FlatScratch::new();
+    flat.accuracy_with(xs, ys, &mut scratch)
+}
+
 // ---------------------------------------------------------------------------
 // Flattened evaluation form (DSE hot path).
 // ---------------------------------------------------------------------------
+
+/// Compiled MAC family of one [`FlatEval`] neuron. A CSD neuron's kept
+/// digits are merged per input into the positive/negative binary
+/// weights `(wp, wn)` (`mac::csd_merge`): `Σ ±a·2^pow == a·wp - a·wn`
+/// exactly, so the hot loop is two plain multiplies with no digit walk.
+#[derive(Clone, Debug)]
+enum FlatMac {
+    /// Use the layer's row-major `w`/`shifts` slices (standing family).
+    Shift,
+    Csd {
+        wp: Vec<i64>,
+        wn: Vec<i64>,
+        /// Structural: bias < 0 or any kept negative digit.
+        has_neg: bool,
+    },
+}
 
 /// One layer of a [`FlatEval`]: weights and shifts stored contiguously
 /// row-major (`w[j * n_in + i]`), so the per-neuron inner product walks
@@ -156,6 +189,12 @@ struct FlatLayer {
     w: Vec<i64>,
     shifts: Vec<u32>,
     b: Vec<i64>,
+    /// Per-neuron MAC family (all `Shift` for shift-only plans).
+    mac: Vec<FlatMac>,
+    /// Approximate-ReLU parameters (0 / `i64::MAX` = exact ReLU, so the
+    /// shift-only hot path is the untouched `v.max(0)`).
+    act_drop: u32,
+    act_cap_mask: i64,
 }
 
 /// Flattened `(QuantMlp, ShiftPlan)` pair: built once per design point,
@@ -165,6 +204,8 @@ struct FlatLayer {
 #[derive(Clone, Debug)]
 pub struct FlatEval {
     layers: Vec<FlatLayer>,
+    /// Low logit bits the argmax ignores (0 = exact argmax).
+    argmax_drop: u32,
 }
 
 /// Caller-owned ping-pong activation buffers for [`FlatEval`].
@@ -182,30 +223,84 @@ impl FlatScratch {
 
 impl FlatEval {
     pub fn new(q: &QuantMlp, plan: &ShiftPlan) -> FlatEval {
+        FlatEval::new_ax(q, &mac::AxPlan::from_shifts(q, plan))
+    }
+
+    /// Compile a full [`mac::AxPlan`]. For shift-only plans this is
+    /// bit-identical to [`FlatEval::new`] (which delegates here).
+    pub fn new_ax(q: &QuantMlp, ax: &mac::AxPlan) -> FlatEval {
         let layers = q
             .w
             .iter()
             .zip(&q.b)
-            .zip(&plan.shifts)
-            .map(|((lw, lb), ls)| {
+            .zip(&ax.shifts.shifts)
+            .enumerate()
+            .map(|(l, ((lw, lb), ls))| {
                 let n_out = lw.len();
                 let n_in = lw.first().map_or(0, |r| r.len());
                 let mut w = Vec::with_capacity(n_out * n_in);
                 let mut shifts = Vec::with_capacity(n_out * n_in);
-                for (row, srow) in lw.iter().zip(ls) {
+                let mut macs = Vec::with_capacity(n_out);
+                for (j, (row, srow)) in lw.iter().zip(ls).enumerate() {
                     w.extend_from_slice(row);
                     shifts.extend_from_slice(srow);
+                    macs.push(match ax.mac_of(l, j) {
+                        mac::MacSpec::ShiftTrunc => FlatMac::Shift,
+                        mac::MacSpec::Csd(rows) => {
+                            assert_eq!(rows.len(), row.len(), "CSD row arity at L{l}/N{j}");
+                            let mut wp = Vec::with_capacity(rows.len());
+                            let mut wn = Vec::with_capacity(rows.len());
+                            for digits in rows {
+                                let (p, n) = mac::csd_merge(digits);
+                                wp.push(p);
+                                wn.push(n);
+                            }
+                            let has_neg = lb[j] < 0 || wn.iter().any(|&n| n != 0);
+                            FlatMac::Csd { wp, wn, has_neg }
+                        }
+                    });
                 }
+                let relu = ax.act.relu_of(l);
                 FlatLayer {
                     n_in,
                     n_out,
                     w,
                     shifts,
                     b: lb.clone(),
+                    mac: macs,
+                    act_drop: (relu.drop as u32).min(63),
+                    act_cap_mask: if relu.cap > 0 && relu.cap < 63 {
+                        (1i64 << relu.cap) - 1
+                    } else {
+                        i64::MAX
+                    },
                 }
             })
             .collect();
-        FlatEval { layers }
+        FlatEval {
+            layers,
+            argmax_drop: (ax.act.argmax_drop as u32).min(63),
+        }
+    }
+
+    /// Class of a logit slice under this plan's argmax family
+    /// (first-max-wins over `v >> argmax_drop`).
+    #[inline]
+    pub fn classify(&self, logits: &[i64]) -> usize {
+        if self.argmax_drop == 0 {
+            return argmax_i64(logits);
+        }
+        let d = self.argmax_drop;
+        let mut best = 0usize;
+        let mut best_v = i64::MIN;
+        for (j, &v) in logits.iter().enumerate() {
+            let sv = v >> d;
+            if sv > best_v {
+                best_v = sv;
+                best = j;
+            }
+        }
+        best
     }
 
     /// Integer logits for one sample, borrowed from the scratch buffer.
@@ -217,10 +312,32 @@ impl FlatEval {
             let last = li + 1 == n_layers;
             s.next.clear();
             for j in 0..layer.n_out {
-                let row = &layer.w[j * layer.n_in..(j + 1) * layer.n_in];
-                let sh = &layer.shifts[j * layer.n_in..(j + 1) * layer.n_in];
-                let v = neuron_value(&s.cur, row, layer.b[j], sh);
-                s.next.push(if last { v } else { v.max(0) });
+                let v = match &layer.mac[j] {
+                    FlatMac::Shift => {
+                        let row = &layer.w[j * layer.n_in..(j + 1) * layer.n_in];
+                        let sh = &layer.shifts[j * layer.n_in..(j + 1) * layer.n_in];
+                        neuron_value(&s.cur, row, layer.b[j], sh)
+                    }
+                    FlatMac::Csd { wp, wn, has_neg } => {
+                        let bias = layer.b[j];
+                        let mut sp = bias.max(0);
+                        let mut sn = (-bias).max(0);
+                        for ((&a, &p), &n) in s.cur.iter().zip(wp).zip(wn) {
+                            sp += a * p;
+                            sn += a * n;
+                        }
+                        if *has_neg {
+                            sp - sn - 1
+                        } else {
+                            sp
+                        }
+                    }
+                };
+                s.next.push(if last {
+                    v
+                } else {
+                    (v.max(0).min(layer.act_cap_mask) >> layer.act_drop) << layer.act_drop
+                });
             }
             std::mem::swap(&mut s.cur, &mut s.next);
         }
@@ -238,7 +355,8 @@ impl FlatEval {
     }
 
     pub fn predict(&self, x: &[i64], s: &mut FlatScratch) -> usize {
-        argmax_i64(self.forward_into(x, s))
+        let logits = self.forward_into(x, s);
+        self.classify(logits)
     }
 
     pub fn accuracy_with(&self, xs: &[Vec<i64>], ys: &[usize], s: &mut FlatScratch) -> f64 {
@@ -247,7 +365,7 @@ impl FlatEval {
         }
         let mut ok = 0usize;
         for (x, &y) in xs.iter().zip(ys) {
-            if argmax_i64(self.forward_into(x, s)) == y {
+            if self.predict(x, s) == y {
                 ok += 1;
             }
         }
@@ -755,6 +873,56 @@ mod tests {
             let ys: Vec<usize> = xs.iter().map(|x| predict(&q, &plan, x)).collect();
             assert_eq!(flat.accuracy_with(&xs, &ys, &mut fs), 1.0);
             assert_eq!(accuracy(&q, &plan, &xs, &ys), 1.0);
+        }
+    }
+
+    #[test]
+    fn flat_eval_ax_bit_matches_forward_ax() {
+        // mixed-family plan: CSD rows, shift rows, truncated ReLU,
+        // reduced-precision argmax — FlatEval must pin the reference
+        let mut rng = Rng::new(417);
+        for round in 0..10 {
+            let q = rand_q(&mut rng, 5, 4, 3);
+            let mut plan = ShiftPlan::exact(&q);
+            for layer in plan.shifts.iter_mut() {
+                for row in layer.iter_mut() {
+                    for s in row.iter_mut() {
+                        *s = rng.below(6) as u32;
+                    }
+                }
+            }
+            let mut ax = mac::AxPlan::from_shifts(&q, &plan);
+            for l in 0..q.n_layers() {
+                for (j, row) in q.w[l].iter().enumerate() {
+                    if rng.f64() < 0.5 {
+                        let m = rng.below(5);
+                        ax.mac.neurons[l][j] = mac::MacSpec::Csd(
+                            row.iter().map(|&w| mac::csd_topk(w, m)).collect(),
+                        );
+                    }
+                }
+            }
+            ax.act.relu[0] = mac::ReluSpec {
+                drop: rng.below(3) as u8,
+                cap: if rng.f64() < 0.5 { 0 } else { 4 + rng.below(4) as u8 },
+            };
+            ax.act.argmax_drop = (round % 4) as u8;
+            let flat = FlatEval::new_ax(&q, &ax);
+            let mut fs = FlatScratch::new();
+            let mut scratch = Vec::new();
+            let xs: Vec<Vec<i64>> = (0..40)
+                .map(|_| (0..5).map(|_| rng.range_i64(0, 15)).collect())
+                .collect();
+            let mut batch = Vec::new();
+            flat.forward_batch(&xs, &mut batch, &mut fs);
+            for (s_idx, x) in xs.iter().enumerate() {
+                let want = mac::forward_ax(&q, &ax, x, &mut scratch);
+                assert_eq!(&batch[s_idx * 3..(s_idx + 1) * 3], &want[..]);
+                assert_eq!(flat.predict(x, &mut fs), mac::predict_ax(&q, &ax, x));
+            }
+            let ys: Vec<usize> = xs.iter().map(|x| mac::predict_ax(&q, &ax, x)).collect();
+            assert_eq!(flat.accuracy_with(&xs, &ys, &mut fs), 1.0);
+            assert_eq!(accuracy_ax(&q, &ax, &xs, &ys), 1.0);
         }
     }
 

@@ -125,6 +125,12 @@ FLAGS:
   --pop N                (search) NSGA-II population size (default 48; 24 quick)
   --gens N               (search) NSGA-II generations (default 32; 12 quick)
   --search-log           (search) per-generation front log on stderr
+  --families             (search) three-way comparison: grid vs shift-only
+                         genetic vs widened genomes (bespoke CSD MACs +
+                         approximate ReLU/argmax); the widened arm is
+                         seeded with the shift-only front, so it weakly
+                         dominates it by construction; emits
+                         results/search_families.csv
   --cases N              (conform) fuzzed differential cases (default 256)
   --bless                (conform) rewrite the golden snapshots
   --shards N             (sweep) shard count (default 4)

@@ -1,37 +1,48 @@
-//! Differential execution of one `(QuantMlp, ShiftPlan, stimulus)` case
+//! Differential execution of one `(QuantMlp, AxPlan, stimulus)` case
 //! through every forward the framework owns, plus the shrinking minimizer
 //! that reduces a failing case to a reproducer naming the culpable
 //! layer/neuron.
 //!
 //! Engines compared (all must agree bit-for-bit):
 //!
-//! 1. `axsum::forward` — the reference integer model (per-sample logits);
+//! 1. `axsum::forward_ax` — the reference integer model (per-sample
+//!    logits; identical to `axsum::forward` on shift-only plans);
 //! 2. `axsum::FlatEval::forward_batch` — the DSE's flattened hot path;
 //! 3. `axsum::BitSliceEval` — the bit-sliced word-parallel forward (64
 //!    patterns per `u64`, ripple accumulation), compared at logit level —
 //!    then re-run over the widened plane words (`u128`, `Lanes4`) and the
-//!    carry-save accumulation path, each pinned to the same logits;
+//!    carry-save accumulation path, each pinned to the same logits — and
+//!    at *class* level through the in-plane argmax tournament
+//!    (`classes_packed`), which is where the approximate-argmax family
+//!    lives;
 //! 4. `synth::build_mlp_ref` → `sim::simulate_packed` — the gate-level
-//!    circuit the DSE costs (class output, argmax semantics);
-//! 5. `synth::build_mlp_logits` → `sim::simulate_packed` — the same
-//!    netlist family with the output-layer sums exposed, so the
-//!    hardware/software comparison happens at *logit* level, not just at
-//!    the argmax (which can mask per-neuron divergence).
+//!    circuit the DSE costs (class output, argmax semantics); widened
+//!    plans route through `synth::build_mlp_ax_ref` (CSD adder graphs,
+//!    clamped ReLU, reduced-precision comparator tree);
+//! 5. `synth::build_mlp_logits` / `synth::build_mlp_ax_logits` →
+//!    `sim::simulate_packed` — the same netlist family with the
+//!    output-layer sums exposed, so the hardware/software comparison
+//!    happens at *logit* level, not just at the argmax (which can mask
+//!    per-neuron divergence).
 //!
-//! For fault-injection self-tests ([`check_case_all`]) the netlist — or
-//! the bit-sliced engine — can be built from a *different* plan than the
-//! reference model: corrupting one shift on one side must surface as a
-//! mismatch, which is how the harness proves it would catch a real
-//! divergence in either direction.
+//! For fault-injection self-tests ([`check_case_all_ax`]) the netlist —
+//! or the bit-sliced engine — can be built from a *different* plan than
+//! the reference model: corrupting one shift, one CSD digit, or the
+//! comparator precision on one side must surface as a mismatch, which is
+//! how the harness proves it would catch a real divergence in either
+//! direction.
 
 use crate::axsum::{
-    self, AccumMode, BitSliceEval, BitSliceScratch, FlatEval, FlatScratch, ShiftPlan,
+    self, approx_argmax, AccumMode, AxPlan, BitSliceEval, BitSliceScratch, FlatEval, FlatScratch,
+    MacSpec, ShiftPlan,
 };
 use crate::fixed::QuantMlp;
 use crate::sim::{as_signed, simulate_packed, Lanes4, PackedStimulus, PlaneWord, SimScratch};
-use crate::synth::{build_mlp_logits, build_mlp_ref, MlpSpecRef, NeuronStyle};
+use crate::synth::{
+    build_mlp_ax_logits, build_mlp_ax_ref, build_mlp_logits, build_mlp_ref, MlpAxSpecRef,
+    MlpSpecRef, NeuronStyle,
+};
 use crate::util::json::{self, Json};
-use crate::util::stats::argmax_i64;
 
 /// One observed divergence between two engines.
 #[derive(Clone, Debug)]
@@ -115,10 +126,12 @@ pub fn check_case_pair(
     check_case_all(q, plan_sw, plan_hw, plan_sw, xs)
 }
 
-/// Fully general differential check: independent plans for the reference
-/// software model (`plan_sw`), the synthesized netlists (`plan_hw`) and
-/// the bit-sliced engine (`plan_bs`). All equal = conformance; corrupting
-/// exactly one of them is the fault-injection path for that engine.
+/// Fully general differential check over shift plans: independent plans
+/// for the reference software model (`plan_sw`), the synthesized
+/// netlists (`plan_hw`) and the bit-sliced engine (`plan_bs`). All equal
+/// = conformance; corrupting exactly one of them is the fault-injection
+/// path for that engine. Thin wrapper over [`check_case_all_ax`] (a
+/// shift plan embeds losslessly).
 pub fn check_case_all(
     q: &QuantMlp,
     plan_sw: &ShiftPlan,
@@ -126,18 +139,50 @@ pub fn check_case_all(
     plan_bs: &ShiftPlan,
     xs: &[Vec<i64>],
 ) -> Option<CaseFailure> {
+    check_case_all_ax(
+        q,
+        &AxPlan::from_shifts(q, plan_sw),
+        &AxPlan::from_shifts(q, plan_hw),
+        &AxPlan::from_shifts(q, plan_bs),
+        xs,
+    )
+}
+
+/// [`check_case`] over a full approximation plan (bespoke MACs +
+/// approximate activations), every engine on the same [`AxPlan`].
+pub fn check_case_ax(q: &QuantMlp, ax: &AxPlan, xs: &[Vec<i64>]) -> Option<CaseFailure> {
+    check_case_all_ax(q, ax, ax, ax, xs)
+}
+
+/// The fully general differential check. Independent [`AxPlan`]s for the
+/// reference software model (`ax_sw`), the synthesized netlists
+/// (`ax_hw`) and the bit-sliced engine (`ax_bs`); all equal is the
+/// conformance configuration, and corrupting exactly one side (a shift,
+/// a CSD digit, a comparator bit) is that engine's fault-injection path.
+pub fn check_case_all_ax(
+    q: &QuantMlp,
+    ax_sw: &AxPlan,
+    ax_hw: &AxPlan,
+    ax_bs: &AxPlan,
+    xs: &[Vec<i64>],
+) -> Option<CaseFailure> {
     assert!(!xs.is_empty(), "conformance case needs at least one pattern");
     let dout = q.dout();
 
-    // engine 1: reference forward, per sample
+    // engine 1: reference forward, per sample (class through the
+    // reference approximate argmax)
     let mut scratch = Vec::new();
     let logits_ref: Vec<Vec<i64>> = xs
         .iter()
-        .map(|x| axsum::forward(q, plan_sw, x, &mut scratch))
+        .map(|x| axsum::forward_ax(q, ax_sw, x, &mut scratch))
+        .collect();
+    let classes_ref: Vec<usize> = logits_ref
+        .iter()
+        .map(|l| approx_argmax(l, ax_sw.act.argmax_drop))
         .collect();
 
     // engine 2: flattened batch forward
-    let flat = FlatEval::new(q, plan_sw);
+    let flat = FlatEval::new_ax(q, ax_sw);
     let mut fs = FlatScratch::new();
     let mut batch = Vec::new();
     flat.forward_batch(xs, &mut batch, &mut fs);
@@ -153,6 +198,16 @@ pub fn check_case_all(
                 });
             }
         }
+        // class level: the flat compile's argmax family
+        let got_class = flat.classify(got);
+        if got_class != classes_ref[p] {
+            return Some(CaseFailure {
+                pattern: p,
+                engines: ("axsum::predict_ax", "FlatEval::classify"),
+                output: classes_ref[p],
+                got: (classes_ref[p] as i64, got_class as i64),
+            });
+        }
     }
 
     // one transpose for engines 3–5: the bit-sliced forward consumes the
@@ -163,7 +218,7 @@ pub fn check_case_all(
     // engine 3: bit-sliced word-parallel forward, logit level (the
     // generator keeps models inside the compilable plane budget, so a
     // failed compile here is a harness bug, not a conformance finding)
-    let bs = BitSliceEval::new(q, plan_bs)
+    let bs = BitSliceEval::new_ax(q, ax_bs)
         .expect("conformance model within the bit-slice plane budget");
     let mut bss = BitSliceScratch::new();
     let mut sliced = Vec::new();
@@ -217,28 +272,65 @@ pub fn check_case_all(
         return Some(f);
     }
 
-    // engines 4+5: synthesized netlists against the packed simulator
-    let mut sim = SimScratch::new();
+    // engine 3e: the in-plane argmax tournament (class level — this is
+    // where the approximate-argmax family lives on the bit-sliced side)
+    let mut bs_classes = Vec::new();
+    bs.classes_packed(&packed, &mut bs_classes, &mut bss);
+    for (p, &want) in classes_ref.iter().enumerate() {
+        if bs_classes[p] != want {
+            return Some(CaseFailure {
+                pattern: p,
+                engines: ("axsum::predict_ax", "BitSliceEval::classes_packed"),
+                output: want,
+                got: (want as i64, bs_classes[p] as i64),
+            });
+        }
+    }
 
-    let nl_class = build_mlp_ref(&spec_of(q, plan_hw, "conform_ref"));
+    // engines 4+5: synthesized netlists against the packed simulator.
+    // Shift-only plans go through the standing builders (the circuits the
+    // grid DSE costs); widened plans through the ax builders.
+    let mut sim = SimScratch::new();
+    let hw_shift_only = ax_hw.is_shift_only();
+
+    let (nl_class, class_engine): (_, &'static str) = if hw_shift_only {
+        (
+            build_mlp_ref(&spec_of(q, &ax_hw.shifts, "conform_ref")),
+            "build_mlp_ref+simulate_packed",
+        )
+    } else {
+        (
+            build_mlp_ax_ref(&MlpAxSpecRef::from_model("conform_ref", q, ax_hw)),
+            "build_mlp_ax_ref+simulate_packed",
+        )
+    };
     simulate_packed(&nl_class, &packed, false, &mut sim);
     let classes = sim
         .output(&nl_class, "class")
         .expect("MLP netlist exposes class")
         .to_vec();
-    for (p, logits) in logits_ref.iter().enumerate() {
-        let sw_class = argmax_i64(logits);
+    for (p, &sw_class) in classes_ref.iter().enumerate() {
         if classes[p] as usize != sw_class {
             return Some(CaseFailure {
                 pattern: p,
-                engines: ("axsum::forward(argmax)", "build_mlp_ref+simulate_packed"),
+                engines: ("axsum::predict_ax", class_engine),
                 output: sw_class,
                 got: (sw_class as i64, classes[p] as i64),
             });
         }
     }
 
-    let nl_logits = build_mlp_logits(&spec_of(q, plan_hw, "conform_logits"));
+    let (nl_logits, logit_engine): (_, &'static str) = if hw_shift_only {
+        (
+            build_mlp_logits(&spec_of(q, &ax_hw.shifts, "conform_logits")),
+            "build_mlp_logits+simulate_packed",
+        )
+    } else {
+        (
+            build_mlp_ax_logits(&MlpAxSpecRef::from_model("conform_logits", q, ax_hw)),
+            "build_mlp_ax_logits+simulate_packed",
+        )
+    };
     simulate_packed(&nl_logits, &packed, false, &mut sim);
     for j in 0..dout {
         let name = format!("logit{j}");
@@ -254,7 +346,7 @@ pub fn check_case_all(
             if hw != logits[j] {
                 return Some(CaseFailure {
                     pattern: p,
-                    engines: ("axsum::forward", "build_mlp_logits+simulate_packed"),
+                    engines: ("axsum::forward", logit_engine),
                     output: j,
                     got: (logits[j], hw),
                 });
@@ -276,11 +368,11 @@ pub fn check_case_all(
 #[derive(Clone, Debug)]
 pub struct Shrunk {
     pub q: QuantMlp,
-    pub plan_sw: ShiftPlan,
-    pub plan_hw: ShiftPlan,
+    pub plan_sw: AxPlan,
+    pub plan_hw: AxPlan,
     /// Plan the bit-sliced engine ran (== `plan_sw` unless the failure
     /// came from bitslice fault injection).
-    pub plan_bs: ShiftPlan,
+    pub plan_bs: AxPlan,
     pub xs: Vec<Vec<i64>>,
     /// Original indices of the surviving input features.
     pub kept_inputs: Vec<usize>,
@@ -341,15 +433,28 @@ impl Shrunk {
                         "b",
                         Json::Arr(self.q.b[l].iter().map(|&v| Json::Num(v as f64)).collect()),
                     ),
-                    ("shifts_sw", mat_u32(&self.plan_sw.shifts[l])),
-                    ("shifts_hw", mat_u32(&self.plan_hw.shifts[l])),
-                    ("shifts_bs", mat_u32(&self.plan_bs.shifts[l])),
+                    ("shifts_sw", mat_u32(&self.plan_sw.shifts.shifts[l])),
+                    ("shifts_hw", mat_u32(&self.plan_hw.shifts.shifts[l])),
+                    ("shifts_bs", mat_u32(&self.plan_bs.shifts.shifts[l])),
                 ])
             })
             .collect();
-        json::obj(vec![
+        let mut fields = vec![
             ("in_bits", Json::Num(self.q.in_bits as f64)),
             ("layers", Json::Arr(layers)),
+        ];
+        // approximation families ride along only when a side uses one,
+        // so shift-only reproducers keep the standing schema
+        for (key, ax) in [
+            ("ax_sw", &self.plan_sw),
+            ("ax_hw", &self.plan_hw),
+            ("ax_bs", &self.plan_bs),
+        ] {
+            if !ax.is_shift_only() {
+                fields.push((key, ax_families_json(ax)));
+            }
+        }
+        fields.extend([
             ("stimulus", mat_i64(&self.xs)),
             (
                 "kept_inputs",
@@ -366,16 +471,68 @@ impl Shrunk {
             ),
             ("failure", json::s(&self.failure.to_string())),
             ("summary", json::s(&self.summary())),
-        ])
+        ]);
+        json::obj(fields)
     }
+}
+
+/// JSON encoding of an [`AxPlan`]'s non-shift families: per-neuron MAC
+/// specs (`"shift"` or the kept digit list as `[pow, neg]` pairs) and
+/// the activation plan.
+fn ax_families_json(ax: &AxPlan) -> Json {
+    let mac = Json::Arr(
+        ax.mac
+            .neurons
+            .iter()
+            .map(|layer| {
+                Json::Arr(
+                    layer
+                        .iter()
+                        .map(|spec| match spec {
+                            MacSpec::ShiftTrunc => json::s("shift"),
+                            MacSpec::Csd(rows) => Json::Arr(
+                                rows.iter()
+                                    .map(|digits| {
+                                        Json::Arr(
+                                            digits
+                                                .iter()
+                                                .map(|d| {
+                                                    Json::Arr(vec![
+                                                        Json::Num(d.pow as f64),
+                                                        Json::Num(d.neg as u8 as f64),
+                                                    ])
+                                                })
+                                                .collect(),
+                                        )
+                                    })
+                                    .collect(),
+                            ),
+                        })
+                        .collect(),
+                )
+            })
+            .collect(),
+    );
+    let relu = Json::Arr(
+        ax.act
+            .relu
+            .iter()
+            .map(|r| Json::Arr(vec![Json::Num(r.drop as f64), Json::Num(r.cap as f64)]))
+            .collect(),
+    );
+    json::obj(vec![
+        ("mac", mac),
+        ("relu", relu),
+        ("argmax_drop", Json::Num(ax.act.argmax_drop as f64)),
+    ])
 }
 
 #[derive(Clone)]
 struct ShrinkState {
     q: QuantMlp,
-    plan_sw: ShiftPlan,
-    plan_hw: ShiftPlan,
-    plan_bs: ShiftPlan,
+    plan_sw: AxPlan,
+    plan_hw: AxPlan,
+    plan_bs: AxPlan,
     xs: Vec<Vec<i64>>,
     kept_inputs: Vec<usize>,
     kept_neurons: Vec<Vec<usize>>,
@@ -385,10 +542,10 @@ struct ShrinkState {
 impl ShrinkState {
     fn still_fails(&mut self) -> Option<CaseFailure> {
         self.attempts += 1;
-        check_case_all(&self.q, &self.plan_sw, &self.plan_hw, &self.plan_bs, &self.xs)
+        check_case_all_ax(&self.q, &self.plan_sw, &self.plan_hw, &self.plan_bs, &self.xs)
     }
 
-    fn plans_mut(&mut self) -> [&mut ShiftPlan; 3] {
+    fn plans_mut(&mut self) -> [&mut AxPlan; 3] {
         [&mut self.plan_sw, &mut self.plan_hw, &mut self.plan_bs]
     }
 
@@ -396,11 +553,25 @@ impl ShrinkState {
         self.q.w[l].remove(j);
         self.q.b[l].remove(j);
         let next = l + 1 < self.q.n_layers();
-        for plan in self.plans_mut() {
-            plan.shifts[l].remove(j);
+        for ax in self.plans_mut() {
+            ax.shifts.shifts[l].remove(j);
+            if l < ax.mac.neurons.len() && j < ax.mac.neurons[l].len() {
+                ax.mac.neurons[l].remove(j);
+            }
             if next {
-                for row in plan.shifts[l + 1].iter_mut() {
+                for row in ax.shifts.shifts[l + 1].iter_mut() {
                     row.remove(j);
+                }
+                // the dropped neuron is input j of layer l+1: CSD digit
+                // lists there are indexed by input and must shrink too
+                if let Some(layer) = ax.mac.neurons.get_mut(l + 1) {
+                    for spec in layer.iter_mut() {
+                        if let MacSpec::Csd(rows) = spec {
+                            if j < rows.len() {
+                                rows.remove(j);
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -416,9 +587,18 @@ impl ShrinkState {
         for row in self.q.w[0].iter_mut() {
             row.remove(i);
         }
-        for plan in self.plans_mut() {
-            for row in plan.shifts[0].iter_mut() {
+        for ax in self.plans_mut() {
+            for row in ax.shifts.shifts[0].iter_mut() {
                 row.remove(i);
+            }
+            if let Some(layer) = ax.mac.neurons.get_mut(0) {
+                for spec in layer.iter_mut() {
+                    if let MacSpec::Csd(rows) = spec {
+                        if i < rows.len() {
+                            rows.remove(i);
+                        }
+                    }
+                }
             }
         }
         for x in self.xs.iter_mut() {
@@ -428,11 +608,7 @@ impl ShrinkState {
     }
 }
 
-/// Minimize a failing case. `plan_sw`/`plan_hw`/`plan_bs` are the plans
-/// the reference software, netlist and bit-sliced engines ran (all
-/// identical for organic conformance failures). The returned reproducer
-/// keeps the mismatch live at every step, so the surviving neuron set
-/// provably contains the divergence.
+/// [`shrink_ax`] over plain shift plans (each embeds losslessly).
 pub fn shrink(
     q: &QuantMlp,
     plan_sw: &ShiftPlan,
@@ -441,11 +617,34 @@ pub fn shrink(
     xs: &[Vec<i64>],
     failure: CaseFailure,
 ) -> Shrunk {
+    shrink_ax(
+        q,
+        &AxPlan::from_shifts(q, plan_sw),
+        &AxPlan::from_shifts(q, plan_hw),
+        &AxPlan::from_shifts(q, plan_bs),
+        xs,
+        failure,
+    )
+}
+
+/// Minimize a failing case. `ax_sw`/`ax_hw`/`ax_bs` are the plans the
+/// reference software, netlist and bit-sliced engines ran (all identical
+/// for organic conformance failures). The returned reproducer keeps the
+/// mismatch live at every step, so the surviving neuron set provably
+/// contains the divergence.
+pub fn shrink_ax(
+    q: &QuantMlp,
+    ax_sw: &AxPlan,
+    ax_hw: &AxPlan,
+    ax_bs: &AxPlan,
+    xs: &[Vec<i64>],
+    failure: CaseFailure,
+) -> Shrunk {
     let mut st = ShrinkState {
         q: q.clone(),
-        plan_sw: plan_sw.clone(),
-        plan_hw: plan_hw.clone(),
-        plan_bs: plan_bs.clone(),
+        plan_sw: ax_sw.clone(),
+        plan_hw: ax_hw.clone(),
+        plan_bs: ax_bs.clone(),
         xs: xs.to_vec(),
         kept_inputs: (0..q.din()).collect(),
         kept_neurons: q.w.iter().map(|l| (0..l.len()).collect()).collect(),
@@ -578,7 +777,7 @@ mod tests {
         assert_eq!(s.xs.len(), 1);
         assert_eq!(s.kept_neurons, vec![vec![0usize]], "{}", s.summary());
         // the shrunk reproducer still fails through the full engine set
-        assert!(check_case_all(&s.q, &s.plan_sw, &s.plan_hw, &s.plan_bs, &s.xs).is_some());
+        assert!(check_case_all_ax(&s.q, &s.plan_sw, &s.plan_hw, &s.plan_bs, &s.xs).is_some());
     }
 
     #[test]
@@ -623,7 +822,7 @@ mod tests {
                 s.summary()
             );
             // the shrunk case still fails
-            assert!(check_case_pair(&s.q, &s.plan_sw, &s.plan_hw, &s.xs).is_some());
+            assert!(check_case_all_ax(&s.q, &s.plan_sw, &s.plan_hw, &s.plan_bs, &s.xs).is_some());
             // reproducer serializes
             let js = s.to_json().pretty();
             assert!(js.contains("shifts_hw"));
@@ -633,5 +832,72 @@ mod tests {
         // columns) are legitimate; the handcrafted test above pins the
         // guaranteed-divergent case, this loop exercises shrink breadth
         assert!(caught >= 1, "no random corruption diverged");
+    }
+
+    #[test]
+    fn conforming_ax_cases_pass_every_engine() {
+        let mut rng = Rng::new(17);
+        for _ in 0..12 {
+            let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+            let xs = gen::mixed_stimulus(&mut rng, &q, 40);
+            let (_, ax) = gen::random_ax_plan(&mut rng, &q, &xs);
+            assert!(check_case_ax(&q, &ax, &xs).is_none());
+        }
+    }
+
+    #[test]
+    fn corrupted_csd_digit_is_caught_and_shrunk_to_the_neuron() {
+        // CSD-encode both neurons exactly, then flip the sign of the
+        // top digit of w[0][0][0] = 7 on the hardware side only: the ax
+        // netlist builder computes 7 -> CSD(8-1) -> corrupt to (-8-1)
+        let q = crate::fixed::QuantMlp {
+            w: vec![vec![vec![7, 5], vec![3, 2]]],
+            b: vec![vec![0, 0]],
+            in_bits: 4,
+            w_scales: vec![1.0],
+        };
+        let mut ax = AxPlan::exact(&q);
+        for (j, row) in q.w[0].iter().enumerate() {
+            ax.mac.neurons[0][j] =
+                MacSpec::Csd(row.iter().map(|&w| axsum::csd_of(w)).collect());
+        }
+        let (hw, (l, j, _i)) =
+            gen::corrupt_one_csd_digit(&q, &ax).expect("model has a CSD digit to corrupt");
+        assert_eq!((l, j), (0, 0), "largest |w| drives the corruption site");
+        let xs = gen::adversarial_stimulus(2, 4);
+        let f = check_case_all_ax(&q, &ax, &hw, &ax, &xs).expect("digit corruption must diverge");
+        assert!(
+            f.engines.1.contains("build_mlp_ax"),
+            "netlist-side fault must surface on the ax netlist engine: {f}"
+        );
+        let s = shrink_ax(&q, &ax, &hw, &ax, &xs, f);
+        assert!(s.kept_neurons[l].contains(&j), "{}", s.summary());
+        let js = s.to_json().pretty();
+        assert!(js.contains("ax_hw"), "widened reproducer embeds the MAC family");
+    }
+
+    #[test]
+    fn corrupted_argmax_precision_is_caught_at_class_level() {
+        // logits agree bit-for-bit; only the comparator precision of the
+        // bit-sliced side is corrupted, so the divergence must surface
+        // on the class-level tournament engine
+        // exact argmax always picks index 1 (logit1 = logit0 + 1); a
+        // dropped comparator ties them and first-max-wins flips to 0
+        let q = crate::fixed::QuantMlp {
+            w: vec![vec![vec![3, 2], vec![3, 2]]],
+            b: vec![vec![0, 1]],
+            in_bits: 4,
+            w_scales: vec![1.0],
+        };
+        let ax = AxPlan::exact(&q);
+        let mut bs = ax.clone();
+        bs.act.argmax_drop = 4;
+        let xs = gen::mixed_stimulus(&mut Rng::new(3), &q, 33);
+        let f = check_case_all_ax(&q, &ax, &ax, &bs, &xs)
+            .expect("comparator corruption must diverge on some pattern");
+        assert_eq!(f.engines.1, "BitSliceEval::classes_packed", "{f}");
+        let s = shrink_ax(&q, &ax, &ax, &bs, &xs, f);
+        assert_ne!(s.plan_bs, s.plan_sw, "bs-side family survives the shrink");
+        assert!(check_case_all_ax(&s.q, &s.plan_sw, &s.plan_hw, &s.plan_bs, &s.xs).is_some());
     }
 }

@@ -11,7 +11,8 @@
 //! pattern count + plan family).
 
 use crate::axsum::{
-    derive_shifts, mean_activations, significance, threshold_candidates, ShiftPlan, Significance,
+    csd_of, csd_topk, derive_shifts, mean_activations, significance, threshold_candidates, AxPlan,
+    MacSpec, ReluSpec, ShiftPlan, Significance,
 };
 use crate::fixed::QuantMlp;
 use crate::netlist::{NetId, Netlist};
@@ -131,7 +132,7 @@ pub fn mixed_stimulus(rng: &mut Rng, q: &QuantMlp, total: usize) -> Vec<Vec<i64>
 }
 
 /// Which family a fuzzed plan came from (reported per conformance run so
-/// coverage of all four decoders is visible).
+/// coverage of all six decoders is visible).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlanKind {
     /// All-exact plan.
@@ -144,6 +145,13 @@ pub enum PlanKind {
     /// A random genetic genome decoded through `search::SearchSpace` —
     /// the NSGA-II path (per-neuron levels, `k`, prune bits).
     Genome,
+    /// Bespoke-MAC family: random neurons recoded to kept-CSD digit
+    /// lists (exact, truncated, single-digit, and degenerate all-zero),
+    /// over a random shift base for the remaining neurons.
+    Mac,
+    /// Approximate-activation family: truncated/clamped ReLU per hidden
+    /// layer plus a reduced-precision argmax comparator.
+    Act,
 }
 
 impl PlanKind {
@@ -153,14 +161,18 @@ impl PlanKind {
             PlanKind::RandomShifts => "random-shifts",
             PlanKind::Grid => "grid",
             PlanKind::Genome => "genome",
+            PlanKind::Mac => "mac",
+            PlanKind::Act => "act",
         }
     }
 
-    pub const ALL: [PlanKind; 4] = [
+    pub const ALL: [PlanKind; 6] = [
         PlanKind::Exact,
         PlanKind::RandomShifts,
         PlanKind::Grid,
         PlanKind::Genome,
+        PlanKind::Mac,
+        PlanKind::Act,
     ];
 }
 
@@ -170,10 +182,15 @@ pub fn significance_of(q: &QuantMlp, xs: &[Vec<i64>]) -> Significance {
     significance(q, &mean_activations(q, xs))
 }
 
-/// A random plan of the given family. `xs` supplies the activation
-/// distribution for the significance-driven families.
+/// A random plan of the given shift family. `xs` supplies the activation
+/// distribution for the significance-driven families. The widened
+/// families ([`PlanKind::Mac`], [`PlanKind::Act`]) are not expressible
+/// as a [`ShiftPlan`] — use [`plan_of_kind_ax`].
 pub fn plan_of_kind(rng: &mut Rng, q: &QuantMlp, xs: &[Vec<i64>], kind: PlanKind) -> ShiftPlan {
     match kind {
+        PlanKind::Mac | PlanKind::Act => {
+            panic!("{} plans are AxPlan-only: use plan_of_kind_ax", kind.name())
+        }
         PlanKind::Exact => ShiftPlan::exact(q),
         PlanKind::RandomShifts => {
             let mut plan = ShiftPlan::exact(q);
@@ -225,6 +242,87 @@ pub fn random_plan(rng: &mut Rng, q: &QuantMlp, xs: &[Vec<i64>]) -> (PlanKind, S
     (kind, plan_of_kind(rng, q, xs, kind))
 }
 
+/// A random [`AxPlan`] of the given family. Shift families embed their
+/// [`plan_of_kind`] plan losslessly; the widened families layer bespoke
+/// MACs / approximate activations over a random shift base.
+pub fn plan_of_kind_ax(rng: &mut Rng, q: &QuantMlp, xs: &[Vec<i64>], kind: PlanKind) -> AxPlan {
+    match kind {
+        PlanKind::Mac => {
+            // half the time the non-CSD neurons keep exact shifts, half
+            // the time an arbitrary-shift base rides underneath
+            let base = if rng.f64() < 0.5 {
+                ShiftPlan::exact(q)
+            } else {
+                plan_of_kind(rng, q, xs, PlanKind::RandomShifts)
+            };
+            let mut ax = AxPlan::from_shifts(q, &base);
+            for (l, layer) in q.w.iter().enumerate() {
+                for (j, row) in layer.iter().enumerate() {
+                    if rng.f64() >= 0.6 {
+                        continue;
+                    }
+                    let rows: Vec<Vec<crate::axsum::CsdDigit>> = match rng.below(4) {
+                        // exact recoding (lossless CSD)
+                        0 => row.iter().map(|&w| csd_of(w)).collect(),
+                        // degenerate: every digit dropped (all-zero MAC)
+                        1 => row.iter().map(|_| Vec::new()).collect(),
+                        // degenerate: single kept digit per weight
+                        2 => row.iter().map(|&w| csd_topk(w, 1)).collect(),
+                        // truncated to a random budget
+                        _ => {
+                            let m = 1 + rng.below(4);
+                            row.iter().map(|&w| csd_topk(w, m)).collect()
+                        }
+                    };
+                    ax.mac.neurons[l][j] = MacSpec::Csd(rows);
+                }
+            }
+            // the family label must be honest: force one CSD neuron in
+            if ax.mac.is_shift_only() {
+                ax.mac.neurons[0][0] =
+                    MacSpec::Csd(q.w[0][0].iter().map(|&w| csd_of(w)).collect());
+            }
+            ax
+        }
+        PlanKind::Act => {
+            let (_, base) = random_plan(rng, q, xs);
+            let mut ax = AxPlan::from_shifts(q, &base);
+            for r in ax.act.relu.iter_mut() {
+                *r = ReluSpec {
+                    drop: rng.below(3) as u8,
+                    cap: one_of(vec![0u8, 0, 4, 6])(rng),
+                };
+            }
+            ax.act.argmax_drop = rng.below(5) as u8;
+            if ax.act.is_exact() {
+                ax.act.argmax_drop = 1;
+            }
+            ax
+        }
+        shift => AxPlan::from_shifts(q, &plan_of_kind(rng, q, xs, shift)),
+    }
+}
+
+/// A random [`AxPlan`] of a random family (the four shift families at
+/// reduced weight, bespoke MAC 20%, approximate activations 15%).
+pub fn random_ax_plan(rng: &mut Rng, q: &QuantMlp, xs: &[Vec<i64>]) -> (PlanKind, AxPlan) {
+    let roll = rng.f64();
+    let kind = if roll < 0.07 {
+        PlanKind::Exact
+    } else if roll < 0.27 {
+        PlanKind::RandomShifts
+    } else if roll < 0.47 {
+        PlanKind::Grid
+    } else if roll < 0.65 {
+        PlanKind::Genome
+    } else if roll < 0.85 {
+        PlanKind::Mac
+    } else {
+        PlanKind::Act
+    };
+    (kind, plan_of_kind_ax(rng, q, xs, kind))
+}
+
 /// Corrupt exactly one shift of `plan` at the model's largest-magnitude
 /// nonzero weight (the site most likely to provoke an observable
 /// divergence): full-width truncation if the product was live, restored
@@ -258,6 +356,54 @@ pub fn corrupt_one_shift(
     let full = crate::axsum::product_bits(q.in_bits, w);
     corrupt.shifts[l][j][i] = if plan.shifts[l][j][i] >= full { 0 } else { full };
     Some((corrupt, (l, j, i)))
+}
+
+/// Corrupt exactly one CSD digit of `ax`: at the largest-magnitude
+/// weight owning a non-empty kept digit list, flip the sign of the most
+/// significant digit (the corruption a miswired adder-graph merge would
+/// produce). Returns the corrupted plan and the `(layer, neuron, input)`
+/// coordinates, or `None` when no neuron carries a CSD digit. Feeds the
+/// bespoke-MAC canary on either engine side (netlist or bitslice).
+pub fn corrupt_one_csd_digit(q: &QuantMlp, ax: &AxPlan) -> Option<(AxPlan, (usize, usize, usize))> {
+    let mut best: Option<(usize, usize, usize, i64)> = None;
+    for (l, layer) in ax.mac.neurons.iter().enumerate() {
+        for (j, spec) in layer.iter().enumerate() {
+            let MacSpec::Csd(rows) = spec else { continue };
+            for (i, digits) in rows.iter().enumerate() {
+                if digits.is_empty() {
+                    continue;
+                }
+                let w = q.w[l][j][i];
+                let better = match best {
+                    None => true,
+                    Some((_, _, _, bw)) => w.abs() > bw.abs(),
+                };
+                if better {
+                    best = Some((l, j, i, w));
+                }
+            }
+        }
+    }
+    let (l, j, i, _) = best?;
+    let mut corrupt = ax.clone();
+    let MacSpec::Csd(rows) = &mut corrupt.mac.neurons[l][j] else {
+        unreachable!("site was selected from a CSD neuron");
+    };
+    rows[i][0].neg = !rows[i][0].neg; // digit lists are MSB-first
+    Some((corrupt, (l, j, i)))
+}
+
+/// Corrupt the argmax comparator precision of `ax` (the approximate-
+/// activation canary's fault): widen an exact comparator to drop 4
+/// bits, narrow an approximate one by a bit.
+pub fn corrupt_argmax_drop(ax: &AxPlan) -> AxPlan {
+    let mut corrupt = ax.clone();
+    corrupt.act.argmax_drop = if ax.act.argmax_drop == 0 {
+        4
+    } else {
+        ax.act.argmax_drop - 1
+    };
+    corrupt
 }
 
 // ---------------------------------------------------------------------------
@@ -367,23 +513,92 @@ mod tests {
             let q = random_quant_mlp(&mut rng, &TopologyRange::default());
             let xs = mixed_stimulus(&mut rng, &q, 24);
             for kind in PlanKind::ALL {
-                let plan = plan_of_kind(&mut rng, &q, &xs, kind);
-                assert_eq!(plan.shifts.len(), q.n_layers(), "{}", kind.name());
-                for (l, layer) in plan.shifts.iter().enumerate() {
+                let ax = plan_of_kind_ax(&mut rng, &q, &xs, kind);
+                assert_eq!(ax.shifts.shifts.len(), q.n_layers(), "{}", kind.name());
+                for (l, layer) in ax.shifts.shifts.iter().enumerate() {
                     assert_eq!(layer.len(), q.w[l].len());
                     for (j, row) in layer.iter().enumerate() {
                         assert_eq!(row.len(), q.w[l][j].len());
                     }
                 }
-                if kind == PlanKind::Exact {
-                    assert_eq!(plan.n_truncated(), 0);
+                // MAC matrix mirrors the weight matrix; every CSD row
+                // list has the neuron's fan-in and in-range digits
+                assert_eq!(ax.mac.neurons.len(), q.n_layers(), "{}", kind.name());
+                for (l, layer) in ax.mac.neurons.iter().enumerate() {
+                    assert_eq!(layer.len(), q.w[l].len());
+                    for (j, spec) in layer.iter().enumerate() {
+                        if let crate::axsum::MacSpec::Csd(rows) = spec {
+                            assert_eq!(rows.len(), q.w[l][j].len());
+                            for digits in rows {
+                                assert!(digits.iter().all(|d| d.pow < 63));
+                            }
+                        }
+                    }
+                }
+                // the family label is honest
+                match kind {
+                    PlanKind::Exact => {
+                        assert_eq!(ax.shifts.n_truncated(), 0);
+                        assert!(ax.is_shift_only());
+                    }
+                    PlanKind::Mac => assert!(!ax.mac.is_shift_only(), "mac plan must keep a CSD neuron"),
+                    PlanKind::Act => assert!(!ax.act.is_exact(), "act plan must approximate something"),
+                    _ => assert!(ax.is_shift_only(), "{} embeds losslessly", kind.name()),
                 }
             }
-            // the random-family picker agrees with its own label
+            // the random-family pickers agree with their own labels
             let (kind, plan) = random_plan(&mut rng, &q, &xs);
             if kind == PlanKind::Exact {
                 assert_eq!(plan.n_truncated(), 0);
             }
+            let (kind, ax) = random_ax_plan(&mut rng, &q, &xs);
+            if kind == PlanKind::Mac {
+                assert!(!ax.mac.is_shift_only());
+            }
+        }
+    }
+
+    #[test]
+    fn csd_corruptor_flips_exactly_one_digit_at_the_named_site() {
+        let mut rng = Rng::new(5);
+        let mut corrupted = 0;
+        for _ in 0..20 {
+            let q = random_quant_mlp(&mut rng, &TopologyRange::default());
+            let xs = mixed_stimulus(&mut rng, &q, 16);
+            let ax = plan_of_kind_ax(&mut rng, &q, &xs, PlanKind::Mac);
+            let Some((bad, (l, j, i))) = corrupt_one_csd_digit(&q, &ax) else {
+                continue; // every CSD list degenerated to empty
+            };
+            corrupted += 1;
+            assert_ne!(bad, ax);
+            let (crate::axsum::MacSpec::Csd(good_rows), crate::axsum::MacSpec::Csd(bad_rows)) =
+                (&ax.mac.neurons[l][j], &bad.mac.neurons[l][j])
+            else {
+                panic!("corruption site must be a CSD neuron");
+            };
+            assert_eq!(good_rows[i][0].pow, bad_rows[i][0].pow);
+            assert_ne!(good_rows[i][0].neg, bad_rows[i][0].neg);
+            // everything else identical
+            let mut restored = bad.clone();
+            if let crate::axsum::MacSpec::Csd(rows) = &mut restored.mac.neurons[l][j] {
+                rows[i][0].neg = !rows[i][0].neg;
+            }
+            assert_eq!(restored, ax);
+        }
+        assert!(corrupted >= 5, "corruptor found digits in only {corrupted}/20 plans");
+    }
+
+    #[test]
+    fn argmax_corruptor_always_changes_the_comparator() {
+        let mut rng = Rng::new(6);
+        let q = random_quant_mlp(&mut rng, &TopologyRange::default());
+        let xs = mixed_stimulus(&mut rng, &q, 16);
+        for kind in [PlanKind::Exact, PlanKind::Act] {
+            let ax = plan_of_kind_ax(&mut rng, &q, &xs, kind);
+            let bad = corrupt_argmax_drop(&ax);
+            assert_ne!(bad.act.argmax_drop, ax.act.argmax_drop);
+            assert_eq!(bad.mac, ax.mac);
+            assert_eq!(bad.shifts, ax.shifts);
         }
     }
 

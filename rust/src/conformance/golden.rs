@@ -18,18 +18,26 @@
 //!
 //! Blessing: `repro conform --bless` rewrites every snapshot; a missing
 //! snapshot is written on first run and reported as *bootstrapped* (commit
-//! it). CI runs the strict diff and additionally `git diff --exit-code`s
-//! the golden directory so a blessed-but-uncommitted change cannot slip
+//! it). When the plan menu grows a new approximation family, goldens
+//! blessed before it landed stay green: only the entries the baseline
+//! pins are diffed, and the unknown names are reported as *outdated*
+//! with the fresh snapshot written to the reports directory for review
+//! (see `restrict_plans_to_baseline`). CI runs the strict diff and
+//! additionally `git diff`s the golden directory (informationally for
+//! family adoption) so a blessed-but-uncommitted change cannot slip
 //! through.
 
-use crate::axsum::{threshold_candidates, FlatEval, FlatScratch, ShiftPlan, Significance};
+use crate::axsum::{
+    csd_topk, threshold_candidates, ActPlan, AxPlan, FlatEval, FlatScratch, MacPlan, MacSpec,
+    ReluSpec, ShiftPlan, Significance,
+};
 use crate::datasets;
 use crate::estimate::estimate_with_toggles;
 use crate::fixed::{quantize_inputs, QuantMlp};
 use crate::pdk::EgtLibrary;
 use crate::search::SearchSpace;
 use crate::sim::{simulate_packed, PackedStimulus, SimScratch};
-use crate::synth::{build_mlp_ref, MlpSpecRef, NeuronStyle};
+use crate::synth::{build_mlp_ax_ref, build_mlp_ref, MlpAxSpecRef, MlpSpecRef, NeuronStyle};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
@@ -136,6 +144,58 @@ pub fn plan_menu(
     ]
 }
 
+/// The widened snapshot menu: every shift-only entry of [`plan_menu`]
+/// lifted into an [`AxPlan`], plus one entry per new approximation
+/// family — a bespoke top-2 CSD recoding of every weight over exact
+/// shifts, and a truncated/clamped ReLU with a reduced-precision argmax
+/// over the grid plan. Entries absent from an already-committed golden
+/// are reported for blessing, not failed (see [`check_all`]), so the
+/// registry migrates softly.
+pub fn ax_plan_menu(
+    cfg: &GoldenConfig,
+    q: &QuantMlp,
+    sig: &Significance,
+) -> Vec<(&'static str, AxPlan)> {
+    let shift_menu = plan_menu(cfg, q, sig);
+    let grid = shift_menu[1].1.clone();
+    let mut menu: Vec<(&'static str, AxPlan)> = shift_menu
+        .into_iter()
+        .map(|(name, plan)| (name, AxPlan::from_shifts(q, &plan)))
+        .collect();
+    let mac = MacPlan {
+        neurons: q
+            .w
+            .iter()
+            .map(|layer| {
+                layer
+                    .iter()
+                    .map(|row| MacSpec::Csd(row.iter().map(|&w| csd_topk(w, 2)).collect()))
+                    .collect()
+            })
+            .collect(),
+    };
+    menu.push((
+        "mac_csd2",
+        AxPlan {
+            shifts: ShiftPlan::exact(q),
+            mac,
+            act: ActPlan::exact(q.n_layers()),
+        },
+    ));
+    menu.push((
+        "act_relu",
+        AxPlan {
+            shifts: grid,
+            mac: MacPlan::shift_only(q),
+            act: ActPlan {
+                relu: vec![ReluSpec { drop: 1, cap: 6 }; q.n_layers().saturating_sub(1)],
+                argmax_drop: 2,
+            },
+        },
+    ));
+    menu
+}
+
 /// Compute the snapshot for one golden configuration. The golden
 /// generator is itself a conformance check: a circuit/software
 /// divergence on a registry topology surfaces as `Err` (reported by
@@ -159,7 +219,7 @@ pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
 
     let sig = super::gen::significance_of(&q, &xq_train[..xq_train.len().min(SIG_SAMPLES)]);
 
-    let menu = plan_menu(cfg, &q, &sig);
+    let menu = ax_plan_menu(cfg, &q, &sig);
 
     let lib = EgtLibrary::egt_v1();
     let packed = PackedStimulus::from_features(stimulus, q.din(), q.in_bits)?;
@@ -167,8 +227,8 @@ pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
     let mut bss = crate::axsum::BitSliceScratch::new();
 
     let mut plans_json = Vec::new();
-    for (name, plan) in &menu {
-        let flat = FlatEval::new(&q, plan);
+    for (name, ax) in &menu {
+        let flat = FlatEval::new_ax(&q, ax);
         let acc_self = flat.accuracy_with(&xq_train[..nt], &self_train, &mut fs);
         let acc_data_train = flat.accuracy_with(&xq_train[..nt], &ds.y_train[..nt], &mut fs);
         let acc_data_test = flat.accuracy_with(&xq_test[..ne], &ds.y_test[..ne], &mut fs);
@@ -176,7 +236,7 @@ pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
         // the golden generator is itself a conformance check for the
         // bit-sliced engine: any accuracy drift vs the flat forward on a
         // registry topology surfaces as a golden error
-        let bs = crate::axsum::BitSliceEval::new(&q, plan)
+        let bs = crate::axsum::BitSliceEval::new_ax(&q, ax)
             .map_err(|e| format!("golden model {}/{name} failed bit-slice compile: {e}", cfg.key))?;
         let acc_bits = bs.accuracy_with(&xq_train[..nt], &self_train, &mut bss);
         if acc_bits != acc_self {
@@ -187,15 +247,20 @@ pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
             ));
         }
 
-        let spec = MlpSpecRef {
-            name: "golden",
-            weights: &q.w,
-            biases: &q.b,
-            shifts: &plan.shifts,
-            in_bits: q.in_bits,
-            style: NeuronStyle::AxSum,
+        // shift-only entries keep the standing netlist builder so their
+        // committed gate counts / histograms stay byte-identical
+        let nl = if ax.is_shift_only() {
+            build_mlp_ref(&MlpSpecRef {
+                name: "golden",
+                weights: &q.w,
+                biases: &q.b,
+                shifts: &ax.shifts.shifts,
+                in_bits: q.in_bits,
+                style: NeuronStyle::AxSum,
+            })
+        } else {
+            build_mlp_ax_ref(&MlpAxSpecRef::from_model("golden", &q, ax))
         };
-        let nl = build_mlp_ref(&spec);
         simulate_packed(&nl, &packed, true, &mut sim);
         let classes = sim.output(&nl, "class").expect("class bus").to_vec();
         let mut checksum = 0u64;
@@ -227,7 +292,7 @@ pub fn snapshot(cfg: &GoldenConfig) -> Result<Json, String> {
 
         plans_json.push(json::obj(vec![
             ("name", json::s(name)),
-            ("n_truncated", Json::Num(plan.n_truncated() as f64)),
+            ("n_truncated", Json::Num(ax.shifts.n_truncated() as f64)),
             ("acc_self_train", r9(acc_self)),
             ("acc_data_train", r9(acc_data_train)),
             ("acc_data_test", r9(acc_data_test)),
@@ -269,6 +334,11 @@ pub enum GoldenStatus {
     Bootstrapped,
     /// Golden was rewritten under `--bless`.
     Blessed,
+    /// Every entry the committed golden pins still matches, but the
+    /// snapshot now carries plan families the baseline predates (named
+    /// here). Not a failure — the fresh snapshot is written alongside
+    /// the reports for review; `--bless` adopts it.
+    Outdated(Vec<String>),
     /// Snapshot diverged from the committed golden.
     Drift(Vec<String>),
     /// The golden file could not be read/parsed/written.
@@ -285,6 +355,7 @@ impl GoldenStatus {
             GoldenStatus::Matched => "ok",
             GoldenStatus::Bootstrapped => "bootstrapped",
             GoldenStatus::Blessed => "blessed",
+            GoldenStatus::Outdated(_) => "outdated (bless to adopt new families)",
             GoldenStatus::Drift(_) => "DRIFT",
             GoldenStatus::Error(_) => "ERROR",
         }
@@ -330,6 +401,53 @@ pub fn diff_json(path: &str, old: &Json, new: &Json, out: &mut Vec<String>) {
     }
 }
 
+/// Soft schema migration: keep only the snapshot plan entries whose
+/// `name` the committed baseline already pins, and report the rest by
+/// name. A golden blessed before a new approximation family landed
+/// keeps guarding everything it knows about instead of tripping on the
+/// menu growing; removed-from-menu entries still surface as drift (the
+/// restricted array comes up short against the baseline).
+fn restrict_plans_to_baseline(old: &Json, snap: &Json) -> (Json, Vec<String>) {
+    let baseline: Vec<String> = old
+        .get("plans")
+        .and_then(|p| p.as_arr())
+        .map(|plans| {
+            plans
+                .iter()
+                .filter_map(|p| p.req_str("name").ok().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default();
+    let mut missing = Vec::new();
+    let Json::Obj(fields) = snap else {
+        return (snap.clone(), missing);
+    };
+    let restricted = fields
+        .iter()
+        .map(|(k, v)| {
+            let v = match (k.as_str(), v) {
+                ("plans", Json::Arr(plans)) => Json::Arr(
+                    plans
+                        .iter()
+                        .filter(|p| match p.req_str("name") {
+                            Ok(name) if baseline.iter().any(|b| b == name) => true,
+                            Ok(name) => {
+                                missing.push(name.to_string());
+                                false
+                            }
+                            Err(_) => true,
+                        })
+                        .cloned()
+                        .collect(),
+                ),
+                _ => v.clone(),
+            };
+            (k.clone(), v)
+        })
+        .collect();
+    (Json::Obj(restricted), missing)
+}
+
 fn write_golden(path: &str, snap: &Json, status: GoldenStatus) -> GoldenStatus {
     match std::fs::create_dir_all(GOLDEN_DIR).and_then(|_| std::fs::write(path, snap.pretty())) {
         Ok(()) => status,
@@ -360,11 +478,10 @@ fn check_one(cfg: &GoldenConfig, bless: bool) -> GoldenResult {
             Ok(text) => match Json::parse(&text) {
                 Err(e) => GoldenStatus::Error(format!("golden is not valid JSON: {e}")),
                 Ok(old) => {
+                    let (restricted, new_families) = restrict_plans_to_baseline(&old, &snap);
                     let mut diffs = Vec::new();
-                    diff_json(cfg.key, &old, &snap, &mut diffs);
-                    if diffs.is_empty() {
-                        GoldenStatus::Matched
-                    } else {
+                    diff_json(cfg.key, &old, &restricted, &mut diffs);
+                    if !diffs.is_empty() {
                         // dump the regenerated snapshot next to the CI
                         // artifacts so a drift investigation can read the
                         // new values without a local toolchain + --bless
@@ -373,6 +490,14 @@ fn check_one(cfg: &GoldenConfig, bless: bool) -> GoldenResult {
                             &snap.pretty(),
                         );
                         GoldenStatus::Drift(diffs)
+                    } else if !new_families.is_empty() {
+                        crate::report::write_results(
+                            &format!("conform_golden_{}.new.json", cfg.key),
+                            &snap.pretty(),
+                        );
+                        GoldenStatus::Outdated(new_families)
+                    } else {
+                        GoldenStatus::Matched
                     }
                 }
             },
@@ -413,17 +538,56 @@ mod tests {
         // schema spot checks
         assert_eq!(a.req_usize("schema").unwrap(), 1);
         let plans = a.get("plans").unwrap().as_arr().unwrap();
-        assert_eq!(plans.len(), 3);
+        assert_eq!(plans.len(), 5);
         assert_eq!(plans[0].req_str("name").unwrap(), "exact");
         // exact plan perfectly reproduces its own labels
         assert_eq!(plans[0].req_f64("acc_self_train").unwrap(), 1.0);
         assert_eq!(plans[0].req_usize("n_truncated").unwrap(), 0);
         assert!(plans[1].req_usize("n_truncated").unwrap() > 0 || plans[2].req_usize("n_truncated").unwrap() > 0);
+        assert_eq!(plans[3].req_str("name").unwrap(), "mac_csd2");
+        assert_eq!(plans[4].req_str("name").unwrap(), "act_relu");
         for p in plans {
             assert!(p.req_f64("area_mm2").unwrap() > 0.0);
             assert!(p.req_f64("power_mw").unwrap() > 0.0);
             assert!(p.get("cell_histogram").is_some());
         }
+    }
+
+    #[test]
+    fn baseline_restriction_soft_migrates_new_families() {
+        // a golden blessed before the mac/act families landed keeps
+        // matching: the unknown entries are reported, not diffed
+        let old = Json::parse(
+            r#"{"schema": 1, "plans": [{"name": "exact", "x": 1}, {"name": "grid_k2", "x": 2}]}"#,
+        )
+        .unwrap();
+        let snap = Json::parse(
+            r#"{"schema": 1, "plans": [{"name": "exact", "x": 1}, {"name": "grid_k2", "x": 2},
+                {"name": "mac_csd2", "x": 3}, {"name": "act_relu", "x": 4}]}"#,
+        )
+        .unwrap();
+        let (restricted, missing) = restrict_plans_to_baseline(&old, &snap);
+        assert_eq!(missing, vec!["mac_csd2".to_string(), "act_relu".to_string()]);
+        let mut diffs = Vec::new();
+        diff_json("t", &old, &restricted, &mut diffs);
+        assert!(diffs.is_empty(), "{diffs:?}");
+        // but a value change inside a known entry is still a drift
+        let drifted = Json::parse(
+            r#"{"schema": 1, "plans": [{"name": "exact", "x": 9}, {"name": "grid_k2", "x": 2},
+                {"name": "mac_csd2", "x": 3}]}"#,
+        )
+        .unwrap();
+        let (restricted, _) = restrict_plans_to_baseline(&old, &drifted);
+        let mut diffs = Vec::new();
+        diff_json("t", &old, &restricted, &mut diffs);
+        assert!(!diffs.is_empty());
+        // and an entry the baseline pins but the menu dropped surfaces too
+        let shrunk = Json::parse(r#"{"schema": 1, "plans": [{"name": "exact", "x": 1}]}"#).unwrap();
+        let (restricted, missing) = restrict_plans_to_baseline(&old, &shrunk);
+        assert!(missing.is_empty());
+        let mut diffs = Vec::new();
+        diff_json("t", &old, &restricted, &mut diffs);
+        assert!(diffs.iter().any(|d| d.contains("length")), "{diffs:?}");
     }
 
     #[test]

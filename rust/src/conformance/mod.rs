@@ -8,10 +8,11 @@
 //! hand-written parity tests:
 //!
 //! * [`gen`] — composable generators (built on `util::prop`) for random
-//!   `QuantMlp` topologies, truncation plans of every decoder family
+//!   `QuantMlp` topologies, approximation plans of every decoder family
 //!   (exact / arbitrary shifts / grid `derive_shifts` / genetic genomes
-//!   through `search::SearchSpace`), adversarial stimulus corners, and
-//!   raw netlists;
+//!   through `search::SearchSpace` / bespoke CSD MAC recodings /
+//!   approximate activations with reduced-precision argmax), adversarial
+//!   stimulus corners, and raw netlists;
 //! * [`diff`] — runs each case through every per-case forward the repo
 //!   owns (`axsum::forward`, `FlatEval::forward_batch`, the bit-sliced
 //!   `BitSliceEval` at u64/u128/`Lanes4` plane widths under both ripple
@@ -28,17 +29,25 @@
 //!
 //! Entry points: `repro conform [--cases N] [--bless]` (CLI),
 //! [`crate::experiments::exp_conform`], and [`run_fuzz`] /
-//! [`canary`] for tests. Before trusting a green fuzz run, [`canary`]
-//! injects a single-shift corruption (and [`sweep::sweep_canary`] a
-//! checkpoint corruption) and verifies the harness catches *and shrinks*
-//! it — an instrument that cannot fail cannot certify.
+//! [`canary`] for tests. Before trusting a green fuzz run, the canaries
+//! inject one fault per approximation family and verify the harness
+//! catches *and shrinks* each — an instrument that cannot fail cannot
+//! certify. [`canary`] / [`canary_at`] corrupt a single truncation
+//! shift (netlist or bitslice side), [`mac_canary`] flips one CSD digit
+//! in the hardware-side adder graph, [`act_canary`] degrades the
+//! bit-sliced argmax comparator precision (invisible at logit level, so
+//! it must surface on the class tournament), and
+//! [`sweep::sweep_canary`] corrupts a sweep checkpoint.
 
 pub mod diff;
 pub mod gen;
 pub mod golden;
 pub mod sweep;
 
-pub use diff::{check_case, check_case_all, check_case_pair, shrink, CaseFailure, Shrunk};
+pub use diff::{
+    check_case, check_case_all, check_case_all_ax, check_case_ax, check_case_pair, shrink,
+    shrink_ax, CaseFailure, Shrunk,
+};
 pub use gen::{PlanKind, TopologyRange};
 pub use golden::{GoldenConfig, GoldenResult, GoldenStatus};
 pub use sweep::{
@@ -101,7 +110,7 @@ pub struct FuzzReport {
     pub cases: u64,
     pub patterns_total: usize,
     /// Cases per plan family, `PlanKind::ALL` order.
-    pub plan_counts: [usize; 4],
+    pub plan_counts: [usize; 6],
     /// Shrunk mismatch reproducers (bounded by `max_mismatches`).
     pub mismatches: Vec<Shrunk>,
     /// Replay records for the mismatching cases.
@@ -146,18 +155,18 @@ pub fn run_fuzz(cfg: &ConformConfig) -> FuzzReport {
         // the first two rounds cycle every plan family deterministically
         // (coverage must not hinge on a lucky roll); later cases roll
         let forced = i < 2 * PlanKind::ALL.len() as u64;
-        let (kind, plan) = if forced {
+        let (kind, ax) = if forced {
             let k = PlanKind::ALL[(i as usize) % PlanKind::ALL.len()];
-            (k, gen::plan_of_kind(&mut rng, &q, &xs, k))
+            (k, gen::plan_of_kind_ax(&mut rng, &q, &xs, k))
         } else {
-            gen::random_plan(&mut rng, &q, &xs)
+            gen::random_ax_plan(&mut rng, &q, &xs)
         };
         report.plan_counts[PlanKind::ALL.iter().position(|&k| k == kind).unwrap()] += 1;
         report.patterns_total += xs.len();
         // static pass first: the verifier must accept every generated
         // model, and a static accept followed by a dynamic mismatch is
         // recorded as a verifier gap (see `FuzzReport::static_unsound`)
-        let sdiags = crate::analysis::check_model("fuzz", &q, &plan);
+        let sdiags = crate::analysis::check_model_ax("fuzz", &q, &ax);
         if !sdiags.is_empty() {
             report.static_rejects.push(format!(
                 "case {i} (seed {:#x}, {} plan): {}",
@@ -170,7 +179,7 @@ pub fn run_fuzz(cfg: &ConformConfig) -> FuzzReport {
             }
             continue;
         }
-        if let Some(failure) = diff::check_case(&q, &plan, &xs) {
+        if let Some(failure) = diff::check_case_ax(&q, &ax, &xs) {
             report.static_unsound.push(i);
             report.failing.push(FailingCase {
                 seed: case_seed(cfg.seed, i),
@@ -181,7 +190,7 @@ pub fn run_fuzz(cfg: &ConformConfig) -> FuzzReport {
             crate::obs::counters::CONFORM_SHRINKS.incr();
             report
                 .mismatches
-                .push(diff::shrink(&q, &plan, &plan, &plan, &xs, failure));
+                .push(diff::shrink_ax(&q, &ax, &ax, &ax, &xs, failure));
             if report.mismatches.len() >= cfg.max_mismatches {
                 break;
             }
@@ -257,6 +266,86 @@ pub fn canary_at(seed: u64, site: FaultSite) -> Result<Shrunk, String> {
     ))
 }
 
+/// Bespoke-MAC fault-injection self-test: corrupt exactly one CSD digit
+/// (the sign of the most significant kept digit at the largest weight)
+/// on the **netlist** side of a MAC-family plan, and require the harness
+/// to catch the divergence on an ax netlist engine and shrink it to a
+/// reproducer that still names the corrupted neuron. The adder-graph
+/// backend is new hardware; an instrument blind to a miswired merge
+/// could not certify it.
+pub fn mac_canary(seed: u64) -> Result<Shrunk, String> {
+    let mut rng = Rng::new(seed ^ 0x3AC_CA_4A);
+    for _ in 0..16u64 {
+        let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+        let xs = gen::mixed_stimulus(&mut rng, &q, 33);
+        let ax = gen::plan_of_kind_ax(&mut rng, &q, &xs, PlanKind::Mac);
+        let Some((corrupt, (l, j, _i))) = gen::corrupt_one_csd_digit(&q, &ax) else {
+            continue; // every kept digit list degenerated to empty
+        };
+        if let Some(failure) = diff::check_case_all_ax(&q, &ax, &corrupt, &ax, &xs) {
+            if !failure.engines.1.contains("build_mlp_ax") {
+                return Err(format!(
+                    "mac canary diverged off the ax netlist engines ({}): harness misattributes \
+                     a hardware-side digit fault (seed {seed})",
+                    failure.engines.1
+                ));
+            }
+            let s = diff::shrink_ax(&q, &ax, &corrupt, &ax, &xs, failure);
+            if !s.kept_neurons[l].contains(&j) {
+                return Err(format!(
+                    "mac canary shrink lost the corrupted neuron L{l}/{j}: {} (seed {seed})",
+                    s.summary()
+                ));
+            }
+            return Ok(s);
+        }
+    }
+    Err(format!(
+        "mac canary could not provoke a divergence in 16 attempts (seed {seed})"
+    ))
+}
+
+/// Approximate-activation fault-injection self-test: corrupt the argmax
+/// comparator precision on the **bit-sliced** side only. Logits agree
+/// bit-for-bit everywhere, so the divergence must surface on the
+/// class-level tournament engine (`BitSliceEval::classes_packed`) — and
+/// the shrunk reproducer must keep the corrupted family on the bs plan.
+pub fn act_canary(seed: u64) -> Result<Shrunk, String> {
+    let mut rng = Rng::new(seed ^ 0xAC7_CA_4A);
+    // comparator corruptions are tie-sensitive (two top logits must
+    // share a dropped-precision bucket), so this canary reseeds more
+    // than the always-loud shift/digit faults
+    for _ in 0..32u64 {
+        let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+        if q.dout() < 2 {
+            continue; // single-class argmax cannot diverge
+        }
+        let xs = gen::mixed_stimulus(&mut rng, &q, 65);
+        let (_, ax) = gen::random_ax_plan(&mut rng, &q, &xs);
+        let bs = gen::corrupt_argmax_drop(&ax);
+        if let Some(failure) = diff::check_case_all_ax(&q, &ax, &ax, &bs, &xs) {
+            if failure.engines.1 != "BitSliceEval::classes_packed" {
+                return Err(format!(
+                    "act canary diverged off the class tournament ({}): a comparator-only fault \
+                     must be invisible at logit level (seed {seed})",
+                    failure.engines.1
+                ));
+            }
+            let s = diff::shrink_ax(&q, &ax, &ax, &bs, &xs, failure);
+            if s.plan_bs == s.plan_sw {
+                return Err(format!(
+                    "act canary shrink lost the corrupted comparator family: {} (seed {seed})",
+                    s.summary()
+                ));
+            }
+            return Ok(s);
+        }
+    }
+    Err(format!(
+        "act canary could not provoke a divergence in 32 attempts (seed {seed})"
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -316,5 +405,31 @@ mod tests {
         // the software plan in the surviving reproducer
         assert_ne!(s.plan_bs, s.plan_sw);
         assert_eq!(s.plan_hw, s.plan_sw);
+    }
+
+    #[test]
+    fn mac_canary_fires_and_names_the_neuron() {
+        // a single flipped CSD digit in the hardware-side plan must be
+        // caught on an ax netlist engine and survive the shrink
+        let s = mac_canary(2023).expect("mac canary must fire");
+        assert_eq!(s.xs.len(), 1, "mac canary reproducer minimized");
+        // the corruption lives in the hw plan's MAC family
+        assert_ne!(s.plan_hw, s.plan_sw);
+        assert_eq!(s.plan_bs, s.plan_sw);
+        assert!(!s.plan_hw.mac.is_shift_only(), "{}", s.summary());
+    }
+
+    #[test]
+    fn act_canary_fires_at_class_level() {
+        // an argmax-precision fault corrupts no logit anywhere; the
+        // class-level tournament engine must still catch it
+        let s = act_canary(2023).expect("act canary must fire");
+        assert_ne!(s.plan_bs, s.plan_sw);
+        assert_eq!(s.plan_hw, s.plan_sw);
+        assert_ne!(
+            s.plan_bs.act.argmax_drop, s.plan_sw.act.argmax_drop,
+            "{}",
+            s.summary()
+        );
     }
 }

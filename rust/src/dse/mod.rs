@@ -23,16 +23,15 @@
 pub mod shard;
 
 use crate::axsum::{
-    self, derive_shifts, threshold_candidates, AccumMode, BitSliceEval, BitSliceScratch, FlatEval,
-    FlatScratch, PlanCache, ShiftPlan, Significance,
+    self, approx_argmax, derive_shifts, threshold_candidates, AccumMode, AxPlan, BitSliceEval,
+    BitSliceScratch, FlatEval, FlatScratch, PlanCache, ShiftPlan, Significance,
 };
 use crate::estimate::{estimate_with_toggles, Costs};
 use crate::fixed::QuantMlp;
 use crate::pdk::EgtLibrary;
 use crate::sim::{simulate_packed, Lanes4, PackedStimulus, PlaneWord, SimScratch};
-use crate::synth::{build_mlp_ref, MlpSpecRef, NeuronStyle};
+use crate::synth::{build_mlp_ax_ref, build_mlp_ref, MlpAxSpecRef, MlpSpecRef, NeuronStyle};
 use crate::util::pool::parallel_map_with;
-use crate::util::stats::argmax_i64;
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -312,6 +311,27 @@ pub fn circuit_costs_packed(
     estimate_with_toggles(&nl, lib, &scratch.toggles, scratch.patterns)
 }
 
+/// [`circuit_costs_packed`] over a full approximation plan: bespoke-MAC /
+/// approximate-activation plans synthesize through the CSD adder-graph
+/// builder; shift-only plans delegate to the standing builder, which
+/// emits the identical circuit (pinned by the `synth::mac` parity test).
+pub fn circuit_costs_packed_ax(
+    q: &QuantMlp,
+    ax: &AxPlan,
+    packed: &PackedStimulus,
+    lib: &EgtLibrary,
+    scratch: &mut SimScratch,
+) -> Costs {
+    if ax.is_shift_only() {
+        return circuit_costs_packed(q, &ax.shifts, NeuronStyle::AxSum, packed, lib, scratch);
+    }
+    let nl = build_mlp_ax_ref(&MlpAxSpecRef::from_model("mlp", q, ax));
+    assert_eq!(nl.outputs.len(), 1, "MLP circuit must expose one bus");
+    assert_eq!(nl.outputs[0].name, "class");
+    simulate_packed(&nl, packed, true, scratch);
+    estimate_with_toggles(&nl, lib, &scratch.toggles, scratch.patterns)
+}
+
 /// Evaluate one design point end to end.
 ///
 /// Standalone wrapper over [`evaluate_design_packed`]: packs the stimuli
@@ -370,11 +390,45 @@ pub fn evaluate_design_packed(
     stim: &SweepStimuli,
     scratch: &mut EngineScratch,
 ) -> Result<DesignEval, String> {
+    evaluate_design_packed_ax(
+        q,
+        AxPlan::from_shifts(q, &plan),
+        k,
+        g,
+        data,
+        lib,
+        cfg,
+        stim,
+        scratch,
+    )
+}
+
+/// [`evaluate_design_packed`] over a full approximation plan (bespoke
+/// CSD MACs, truncated/clamped ReLU, reduced-precision argmax). Every
+/// engine in the point loop is family-aware: the flat and bit-sliced
+/// accuracy backends compile the `AxPlan`, the circuit is costed through
+/// [`circuit_costs_packed_ax`], and the verify cross-check compares the
+/// *approximate* classes (the reduced-precision argmax is part of the
+/// semantics, not an error). Shift-only plans take exactly the standing
+/// path — `evaluate_design_packed` is this function under
+/// [`AxPlan::from_shifts`].
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_design_packed_ax(
+    q: &QuantMlp,
+    ax: AxPlan,
+    k: u32,
+    g: Vec<f64>,
+    data: &QuantData,
+    lib: &EgtLibrary,
+    cfg: &DseConfig,
+    stim: &SweepStimuli,
+    scratch: &mut EngineScratch,
+) -> Result<DesignEval, String> {
     // per-point latency histogram (`dse.eval_point_ns`): timing only —
     // the evaluation itself is untouched, so results stay bit-identical
     // with telemetry on or off — lint:allow(wall-clock)
     let t0 = crate::obs::enabled().then(std::time::Instant::now);
-    let out = eval_point_inner(q, plan, k, g, data, lib, cfg, stim, scratch);
+    let out = eval_point_inner(q, ax, k, g, data, lib, cfg, stim, scratch);
     if let Some(t0) = t0 {
         let ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
         crate::obs::eval_point_ns().record(ns);
@@ -385,7 +439,7 @@ pub fn evaluate_design_packed(
 #[allow(clippy::too_many_arguments)]
 fn eval_point_inner(
     q: &QuantMlp,
-    plan: ShiftPlan,
+    ax: AxPlan,
     k: u32,
     g: Vec<f64>,
     data: &QuantData,
@@ -401,7 +455,7 @@ fn eval_point_inner(
     }
     let (engine, acc_train, acc_test) = match cfg.backend {
         EvalBackend::Flat => {
-            let flat = FlatEval::new(q, &plan);
+            let flat = FlatEval::new_ax(q, &ax);
             let at =
                 flat.accuracy_with(&data.x_train[..nt], &data.y_train[..nt], &mut scratch.flat);
             let ae = flat.accuracy_with(&data.x_test[..ne], &data.y_test[..ne], &mut scratch.flat);
@@ -410,7 +464,7 @@ fn eval_point_inner(
         backend => {
             let bs = stim
                 .plans
-                .get_or_compile(q, &plan)
+                .get_or_compile_ax(q, &ax)
                 .map_err(|e| format!("design point (k={k}) rejected: {e}"))?;
             let train = stim.train.as_ref().expect("bitslice train stimulus packed");
             let test = stim.test.as_ref().expect("bitslice test stimulus packed");
@@ -433,8 +487,7 @@ fn eval_point_inner(
             (Fwd::Bits(bs), at, ae)
         }
     };
-    let costs =
-        circuit_costs_packed(q, &plan, NeuronStyle::AxSum, &stim.power, lib, &mut scratch.sim);
+    let costs = circuit_costs_packed_ax(q, &ax, &stim.power, lib, &mut scratch.sim);
     if cfg.verify_circuit {
         let classes = scratch.sim.outputs.first().map_or(&[][..], |v| v.as_slice());
         match &engine {
@@ -471,7 +524,10 @@ fn eval_point_inner(
                 }
                 let dout = q.dout();
                 for (p, &cls) in classes.iter().take(stim.power_rows.len()).enumerate() {
-                    let sw = argmax_i64(&scratch.logits[p * dout..(p + 1) * dout]);
+                    let sw = approx_argmax(
+                        &scratch.logits[p * dout..(p + 1) * dout],
+                        ax.act.argmax_drop,
+                    );
                     assert_eq!(
                         sw, cls as usize,
                         "circuit/software divergence (substrate bug)"
@@ -483,7 +539,7 @@ fn eval_point_inner(
     Ok(DesignEval {
         k,
         g,
-        plan,
+        plan: ax.shifts,
         acc_train,
         acc_test,
         costs,

@@ -95,6 +95,49 @@ pub fn estimate_with_toggles(
     }
 }
 
+/// Side-by-side pricing of a subexpression-shared netlist against its
+/// unshared baseline — the printed-PDK view of CSD adder-graph sharing,
+/// where every merged `(input, pow-gap)` pair is area and power that
+/// never gets printed. Both sides are priced vector-less so the
+/// comparison needs no stimulus.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SharingSavings {
+    pub shared: Costs,
+    pub baseline: Costs,
+}
+
+impl SharingSavings {
+    pub fn area_saved_mm2(&self) -> f64 {
+        self.baseline.area_mm2 - self.shared.area_mm2
+    }
+
+    pub fn power_saved_mw(&self) -> f64 {
+        self.baseline.power_mw - self.shared.power_mw
+    }
+
+    pub fn cells_saved(&self) -> i64 {
+        self.baseline.cells as i64 - self.shared.cells as i64
+    }
+
+    /// Shared / baseline area; 1.0 for an empty baseline (nothing to
+    /// save), so callers can log the ratio without a zero-division
+    /// special case.
+    pub fn area_ratio(&self) -> f64 {
+        if self.baseline.area_mm2 == 0.0 {
+            1.0
+        } else {
+            self.shared.area_mm2 / self.baseline.area_mm2
+        }
+    }
+}
+
+pub fn sharing_savings(shared: &Netlist, baseline: &Netlist, lib: &EgtLibrary) -> SharingSavings {
+    SharingSavings {
+        shared: estimate(shared, lib, None),
+        baseline: estimate(baseline, lib, None),
+    }
+}
+
 /// Cell-count report line (debugging / DESIGN.md inventory).
 pub fn histogram_string(nl: &Netlist) -> String {
     let h = nl.cell_histogram();
@@ -169,6 +212,29 @@ mod tests {
         assert!(cq.power_mw < cb.power_mw);
         // static floor is still there
         assert!(cq.power_mw > 0.0);
+    }
+
+    #[test]
+    fn sharing_savings_prices_the_delta() {
+        let lib = EgtLibrary::egt_v1();
+        let small = xor_chain(4);
+        let big = xor_chain(9);
+        let s = sharing_savings(&small, &big, &lib);
+        assert_eq!(s.cells_saved(), 5);
+        assert!(s.area_saved_mm2() > 0.0);
+        assert!(s.power_saved_mw() > 0.0);
+        assert!(s.area_ratio() > 0.0 && s.area_ratio() < 1.0);
+    }
+
+    #[test]
+    fn sharing_savings_empty_baseline_ratio_is_one() {
+        let lib = EgtLibrary::egt_v1();
+        let mut nl = Netlist::new("none");
+        let a = nl.input_bus("a", 1);
+        nl.output_bus("y", vec![a[0]]);
+        let s = sharing_savings(&nl, &nl, &lib);
+        assert_eq!(s.area_ratio(), 1.0);
+        assert_eq!(s.cells_saved(), 0);
     }
 
     #[test]

@@ -633,7 +633,18 @@ pub fn exp_alpha(cfg: &ExpConfig) -> anyhow::Result<()> {
 /// * `results/search_fronts.csv` — both fronts, every point;
 /// * `results/search_gens.csv` — generation-by-generation front log;
 /// * `BENCH_search.json` — evaluations/sec trajectory record.
-pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow::Result<()> {
+///
+/// With `families == true` (`repro search --families`) a shift-only
+/// control search runs first and its front genomes seed the widened run
+/// (bespoke CSD MACs + approximate activations), so the widened archive
+/// contains every shift-front evaluation and *weakly dominates* it by
+/// construction — the table then reports how often it strictly improves.
+/// Adds `results/search_families.csv` (genetic-vs-grid-vs-mac columns).
+pub fn exp_search(
+    cfg: &ExpConfig,
+    scfg: &crate::search::SearchConfig,
+    families: bool,
+) -> anyhow::Result<()> {
     use crate::axsum::{mean_activations, significance};
     use crate::dse::{self, QuantData};
     use crate::report::pct;
@@ -647,8 +658,12 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
         "dataset", "grid pts", "ga evals", "memo hits", "grid area[cm2]",
         "ga area[cm2]", "extra gain", "ga acc(test)", "dominates", "hv grid", "hv ga",
     ]);
+    let mut fam_t = Table::new(&[
+        "dataset", "shift area[cm2]", "wide area[cm2]", "shift acc(test)", "wide acc(test)",
+        "wide front fams", "repairs", "weakly dominates",
+    ]);
     let mut fronts_csv =
-        String::from("dataset,method,acc_train,acc_test,area_cm2,power_mw,truncated\n");
+        String::from("dataset,method,acc_train,acc_test,area_cm2,power_mw,truncated,family\n");
     let mut gens_csv = String::from(
         "dataset,gen,front_size,hypervolume,best_acc_train,min_area_mm2,evaluated,requested\n",
     );
@@ -686,8 +701,25 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
         // wide-fan-in datasets (ca: 21 inputs > the default level cap)
         let space = SearchSpace::lossless(&q0, &sig, scfg.max_levels);
         let seeds = seed_genomes_from_grid(&space, &q0, &grid);
+        // `--families`: a shift-only control arm runs first; its front
+        // genomes join the widened run's seed set, so the widened archive
+        // provably contains every shift-front evaluation (weak dominance
+        // is structural, strict improvement is the measured question)
+        let out_shift = if families {
+            let shift_space = SearchSpace::lossless(&q0, &sig, scfg.max_levels).shift_only();
+            Some(
+                nsga2(&q0, &sig, &data, &ctx.lib, &pcfg.dse, scfg, &shift_space, &seeds)
+                    .map_err(anyhow::Error::msg)?,
+            )
+        } else {
+            None
+        };
+        let mut wide_seeds = seeds;
+        if let Some(s) = &out_shift {
+            wide_seeds.extend(s.front_genomes());
+        }
         let t0 = std::time::Instant::now();
-        let out = nsga2(&q0, &sig, &data, &ctx.lib, &pcfg.dse, scfg, &space, &seeds)
+        let out = nsga2(&q0, &sig, &data, &ctx.lib, &pcfg.dse, scfg, &space, &wide_seeds)
             .map_err(anyhow::Error::msg)?;
         let elapsed = t0.elapsed();
 
@@ -695,7 +727,7 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
         for &i in &dse::pareto_front(&grid, true) {
             let d = &grid[i];
             fronts_csv.push_str(&format!(
-                "{key},grid,{:.4},{:.4},{:.3},{:.2},{}\n",
+                "{key},grid,{:.4},{:.4},{:.3},{:.2},{},shift\n",
                 d.acc_train,
                 d.acc_test,
                 d.costs.area_cm2(),
@@ -703,15 +735,30 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
                 d.plan.n_truncated(),
             ));
         }
-        for d in out.front_evals() {
+        for &i in &out.front {
+            let d = &out.archive[i];
             fronts_csv.push_str(&format!(
-                "{key},nsga2,{:.4},{:.4},{:.3},{:.2},{}\n",
+                "{key},nsga2,{:.4},{:.4},{:.3},{:.2},{},{}\n",
                 d.acc_train,
                 d.acc_test,
                 d.costs.area_cm2(),
                 d.costs.power_mw,
                 d.plan.n_truncated(),
+                family_label(out.ax_plans[i].as_ref()),
             ));
+        }
+        if let Some(s) = &out_shift {
+            for &i in &s.front {
+                let d = &s.archive[i];
+                fronts_csv.push_str(&format!(
+                    "{key},nsga2_shift,{:.4},{:.4},{:.3},{:.2},{},shift\n",
+                    d.acc_train,
+                    d.acc_test,
+                    d.costs.area_cm2(),
+                    d.costs.power_mw,
+                    d.plan.n_truncated(),
+                ));
+            }
         }
         for g in &out.gens {
             gens_csv.push_str(&format!(
@@ -724,6 +771,32 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
                 g.evaluated,
                 g.requested,
             ));
+        }
+
+        // `--families` three-way view: shift-only genetic vs widened
+        // genomes, at the same 1%-loss floor the main table uses
+        if let Some(s) = &out_shift {
+            let weakly = s.front.iter().all(|&i| {
+                let p = &s.archive[i];
+                out.archive.iter().any(|e| {
+                    e.acc_train >= p.acc_train - 1e-12
+                        && e.costs.area_mm2 <= p.costs.area_mm2 + 1e-9
+                        && e.costs.power_mw <= p.costs.power_mw + 1e-9
+                })
+            });
+            let fam_front = out.front.iter().filter(|&&i| out.ax_plans[i].is_some()).count();
+            let shift_best = dse::select_for_threshold(&s.archive, acc0, threshold);
+            let wide_best = dse::select_for_threshold(&out.archive, acc0, threshold);
+            fam_t.row(vec![
+                key.clone(),
+                shift_best.map_or("-".into(), |d| f2(d.costs.area_cm2())),
+                wide_best.map_or("-".into(), |d| f2(d.costs.area_cm2())),
+                shift_best.map_or("-".into(), |d| f3(d.acc_test)),
+                wide_best.map_or("-".into(), |d| f3(d.acc_test)),
+                format!("{fam_front}/{}", out.front.len()),
+                crate::obs::run_value("search.genome_repairs").to_string(),
+                if weakly { "yes".into() } else { "NO".to_string() },
+            ]);
         }
 
         // threshold comparison (grid seeds guarantee ga ≤ grid)
@@ -805,10 +878,31 @@ pub fn exp_search(cfg: &ExpConfig, scfg: &crate::search::SearchConfig) -> anyhow
         ),
         "search_summary.csv",
     );
+    if families {
+        fam_t.emit(
+            "Families — shift-only genetic vs widened genomes (bespoke CSD MACs + approximate \
+             activations) @ 1% loss; the widened arm is seeded with the shift-only front, so \
+             'weakly dominates' must hold and NO flags a regression",
+            "search_families.csv",
+        );
+    }
     write_results("search_fronts.csv", &fronts_csv);
     write_results("search_gens.csv", &gens_csv);
     write_json("BENCH_search.json", &bench_rows);
     Ok(())
+}
+
+/// Family tag for a search-front design: which approximation families
+/// beyond shift-truncate its decoded plan uses.
+fn family_label(ax: Option<&crate::axsum::AxPlan>) -> &'static str {
+    match ax {
+        None => "shift",
+        Some(p) => match (!p.mac.is_shift_only(), !p.act.is_exact()) {
+            (true, true) => "mac+act",
+            (true, false) => "mac",
+            _ => "act",
+        },
+    }
 }
 
 /// `repro sweep` — the sharded, checkpointable sweep engine head-to-head
@@ -1192,6 +1286,9 @@ pub fn exp_shard(
 ///    detect, steal, and log before its front can match the monolithic
 ///    sweep; the analysis canary does the same for the static verifier
 ///    (injected dangling net + corrupted shift, each flagged by name);
+///    and the approximation families carry their own instruments — the
+///    mac canary corrupts one CSD digit on the netlist side, the act
+///    canary one argmax comparator precision on the bitslice side;
 /// 2. **fuzz** — `cases` random `(QuantMlp, plan, stimulus)` triples,
 ///    each first through the static verifier
 ///    ([`crate::analysis::check_model`] must accept every generated
@@ -1199,7 +1296,8 @@ pub fn exp_shard(
 ///    reported as a verifier gap), then through every forward
 ///    (`axsum::forward`, `FlatEval`, `build_mlp_ref`/`build_mlp_logits`
 ///    → `simulate_packed`), plan families spanning exact / random-shift
-///    / grid / genetic-genome decoders, stimulus hitting saturation
+///    / grid / genetic-genome / bespoke-CSD-MAC / approximate-activation
+///    decoders, stimulus hitting saturation
 ///    corners and 64-pattern chunk edges. Mismatches are shrunk and
 ///    dumped as `results/conform_repro_*.json` (uploaded as CI
 ///    artifacts);
@@ -1248,6 +1346,22 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
     match crate::analysis::analysis_canary(cfg.seed) {
         Ok(s) => crate::log!(Info, "canary[analysis]: {s}"),
         Err(e) => failures.push(format!("canary[analysis]: {e}")),
+    }
+    // the new approximation families carry their own instruments: one
+    // corrupted CSD digit on the netlist side, one corrupted argmax
+    // comparator precision on the bitslice side — each must be caught
+    // by the right engine pair and shrunk to the corrupted site
+    match conformance::mac_canary(cfg.seed) {
+        Ok(s) => crate::log!(Info, "canary[mac]: corrupted CSD digit caught — {}", s.summary()),
+        Err(e) => failures.push(format!("canary[mac]: {e}")),
+    }
+    match conformance::act_canary(cfg.seed) {
+        Ok(s) => crate::log!(
+            Info,
+            "canary[act]: corrupted argmax comparator caught — {}",
+            s.summary()
+        ),
+        Err(e) => failures.push(format!("canary[act]: {e}")),
     }
 
     // 2. fuzz
@@ -1344,6 +1458,9 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
                 e.clone()
             }
             GoldenStatus::Bootstrapped => format!("wrote {} — commit it", g.path),
+            GoldenStatus::Outdated(names) => {
+                format!("baseline predates plan families: {}", names.join(", "))
+            }
             _ => g.path.clone(),
         };
         t.row(vec![format!("golden/{}", g.key), detail, g.status.label().into()]);
@@ -1376,15 +1493,18 @@ pub fn exp_conform(cfg: &ExpConfig, cases: u64, bless: bool) -> anyhow::Result<(
 ///    Violations are dumped to `results/lint_violations.json` for the
 ///    CI artifact;
 /// 2. **models** — every golden-registry model under the full golden
-///    plan menu ([`crate::conformance::golden::plan_menu`]: exact, the
-///    grid DSE decoder, a genetic genome through the search decoder)
+///    plan menu ([`crate::conformance::golden::ax_plan_menu`]: exact, the
+///    grid DSE decoder, a genetic genome through the search decoder,
+///    plus the bespoke-CSD-MAC and approximate-activation families)
 ///    through the circuit verifier + interval bound pass
-///    ([`crate::analysis::check_model`]): structural netlist lint,
+///    ([`crate::analysis::check_model_ax`]): structural netlist lint,
 ///    overflow-freedom of every bus, and agreement with the
 ///    `axsum`/bitslice width bookkeeping;
-/// 3. **canary** — [`crate::analysis::analysis_canary`] must catch an
+/// 3. **canaries** — [`crate::analysis::analysis_canary`] must catch an
 ///    injected dangling net and a corrupted truncation shift, naming
-///    the offending net and neuron.
+///    the offending net and neuron; [`crate::conformance::mac_canary`]
+///    and [`crate::conformance::act_canary`] must catch a corrupted CSD
+///    digit and a corrupted argmax comparator, by name.
 pub fn exp_lint(cfg: &ExpConfig) -> anyhow::Result<()> {
     use crate::conformance::golden;
     use crate::util::json::{self, Json};
@@ -1434,12 +1554,16 @@ pub fn exp_lint(cfg: &ExpConfig) -> anyhow::Result<()> {
             &q,
             &xq_train[..xq_train.len().min(golden::SIG_SAMPLES)],
         );
-        for (name, plan) in &golden::plan_menu(&gcfg, &q, &sig) {
+        for (name, ax) in &golden::ax_plan_menu(&gcfg, &q, &sig) {
             let site = format!("{}/{name}", gcfg.key);
-            let diags = crate::analysis::check_model(&site, &q, plan);
+            let diags = crate::analysis::check_model_ax(&site, &q, ax);
             t.row(vec![
                 format!("models/{}", gcfg.key),
-                format!("{name}: {} truncated product(s)", plan.n_truncated()),
+                format!(
+                    "{name}: {} truncated product(s){}",
+                    ax.shifts.n_truncated(),
+                    if ax.is_shift_only() { "" } else { ", ax families" },
+                ),
                 if diags.is_empty() {
                     "ok".into()
                 } else {
@@ -1463,9 +1587,27 @@ pub fn exp_lint(cfg: &ExpConfig) -> anyhow::Result<()> {
             failures.push(format!("canary: {e}"));
         }
     }
+    // ... and the approximation-family instruments, named like the
+    // conformance run names them: a corrupted CSD digit (netlist side)
+    // and a corrupted argmax comparator (bitslice side), each caught
+    // and shrunk back to the injection site
+    match crate::conformance::mac_canary(cfg.seed) {
+        Ok(s) => t.row(vec!["canary/mac".into(), s.summary(), "ok".into()]),
+        Err(e) => {
+            t.row(vec!["canary/mac".into(), e.clone(), "FAILED".into()]);
+            failures.push(format!("canary/mac: {e}"));
+        }
+    }
+    match crate::conformance::act_canary(cfg.seed) {
+        Ok(s) => t.row(vec!["canary/act".into(), s.summary(), "ok".into()]),
+        Err(e) => {
+            t.row(vec!["canary/act".into(), e.clone(), "FAILED".into()]);
+            failures.push(format!("canary/act: {e}"));
+        }
+    }
 
     t.emit(
-        "Static analysis — source invariants, circuit verifier, canary",
+        "Static analysis — source invariants, circuit verifier, canaries",
         "lint_summary.csv",
     );
     if failures.is_empty() {

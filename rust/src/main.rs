@@ -133,7 +133,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "search" => {
             let cfg = exp_config(args).map_err(anyhow::Error::msg)?;
             let scfg = search_config(args, &cfg).map_err(anyhow::Error::msg)?;
-            experiments::exp_search(&cfg, &scfg)
+            experiments::exp_search(&cfg, &scfg, args.flag_bool("families"))
         }
         "sweep" => {
             let cfg = exp_config(args).map_err(anyhow::Error::msg)?;

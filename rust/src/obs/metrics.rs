@@ -87,6 +87,9 @@ pub mod counters {
     pub static SEARCH_EVALS_REQUESTED: Counter = Counter::new();
     /// Genome evaluations served from the search memo table.
     pub static SEARCH_MEMO_HITS: Counter = Counter::new();
+    /// Genomes whose decoded bespoke-MAC plan failed the interval bounds
+    /// gate and was repaired to its shift-truncate fallback.
+    pub static SEARCH_GENOME_REPAIRS: Counter = Counter::new();
     /// Netlists run through the static IR verifier.
     pub static LINT_IR_NETLISTS: Counter = Counter::new();
     /// Diagnostics emitted by the static IR verifier.
@@ -118,6 +121,7 @@ static REGISTRY: &[(&str, &Counter)] = &[
     ("stream.flushes", &counters::STREAM_FLUSHES),
     ("search.evals_requested", &counters::SEARCH_EVALS_REQUESTED),
     ("search.memo_hits", &counters::SEARCH_MEMO_HITS),
+    ("search.genome_repairs", &counters::SEARCH_GENOME_REPAIRS),
     ("lint.ir_netlists", &counters::LINT_IR_NETLISTS),
     ("lint.ir_diags", &counters::LINT_IR_DIAGS),
     ("lint.src_files", &counters::LINT_SRC_FILES),

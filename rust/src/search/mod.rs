@@ -14,13 +14,24 @@
 //!
 //! * **Genome** — one [`Gene`] per neuron: a truncation *level* (index
 //!   into that neuron's sorted significance values; 0 = exact), an
-//!   MSB-keep count `k ∈ [1,3]`, and a *prune* bit that drops
+//!   MSB-keep count `k ∈ [1,3]`, a *prune* bit that drops
 //!   below-threshold products entirely (shift = full product width)
-//!   instead of keeping the top-`k` bits.
+//!   instead of keeping the top-`k` bits, and a bespoke-MAC gene `mac`
+//!   (0 = shift-truncate; `m ≥ 1` = per-weight CSD recodings keeping the
+//!   top `m` signed digits, synthesized as a shared adder graph). On top
+//!   of the per-neuron genes the genome carries per-hidden-layer
+//!   approximate-ReLU truncation depths ([`Genome::acts`]) and an output
+//!   argmax comparator precision ([`Genome::argmax_drop`]).
 //! * **Decode** — a genome derives a [`ShiftPlan`] with exactly the
 //!   layer-by-layer bus-width bookkeeping of `axsum::derive_shifts`, so
 //!   grid points encode losslessly into genomes (the grid seeds the
 //!   initial population) and every genome maps to a synthesizable plan.
+//!   [`SearchSpace::decode_ax`] widens that to a full
+//!   [`AxPlan`]; because CSD truncation can bound *above* the binary
+//!   weight, every bespoke-MAC plan passes the per-plan interval gate
+//!   [`SearchSpace::decode_ax_gated`] (reject → the genome is repaired
+//!   to its shift-truncate fallback, counted in
+//!   `search.genome_repairs`).
 //! * **NSGA-II** — fast non-dominated sorting + crowding distance over
 //!   the minimized objectives `(1 - train accuracy, area, power)`,
 //!   binary-tournament selection, uniform/segment crossover and per-gene
@@ -41,10 +52,11 @@
 pub mod nsga;
 
 use crate::axsum::{
-    hidden_bounds, neuron_threshold_levels, product_bits, ShiftPlan, Significance,
+    csd_topk, hidden_bounds, neuron_threshold_levels, product_bits, ActPlan, AxPlan, MacPlan,
+    MacSpec, ReluSpec, ShiftPlan, Significance,
 };
 use crate::dse::{
-    evaluate_design_packed, DesignEval, DseConfig, EngineScratch, QuantData, SweepStimuli,
+    evaluate_design_packed_ax, DesignEval, DseConfig, EngineScratch, QuantData, SweepStimuli,
 };
 use crate::fixed::QuantMlp;
 use crate::pdk::EgtLibrary;
@@ -53,6 +65,14 @@ use crate::util::pool::parallel_map_with;
 use crate::util::rng::Rng;
 
 use rustc_hash::FxHashMap;
+
+/// Widest bespoke-MAC gene: CSD recodings keep at most this many
+/// signed digits per weight.
+pub const MAC_MAX: u8 = 4;
+/// Deepest per-layer approximate-ReLU truncation (low bits dropped).
+pub const ACT_DROP_MAX: u8 = 3;
+/// Deepest argmax-comparator precision reduction (low bits ignored).
+pub const ARGMAX_DROP_MAX: u8 = 4;
 
 /// Per-neuron approximation gene.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -67,12 +87,24 @@ pub struct Gene {
     /// width) instead of keeping the top `k` bits — the hardware loses
     /// the whole adder, not just its low columns.
     pub prune: bool,
+    /// Bespoke constant-multiply MAC: 0 = the shift-truncate family
+    /// (`level`/`k`/`prune` apply); `m ≥ 1` replaces the neuron's MACs
+    /// with per-weight CSD recodings keeping the top `m` signed digits
+    /// (an adder graph in hardware; `level`/`k`/`prune` are don't-cares).
+    pub mac: u8,
 }
 
-/// A full per-neuron assignment, genes in layer-major neuron order.
+/// A full per-neuron assignment, genes in layer-major neuron order,
+/// plus the per-layer activation genes.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct Genome {
     pub genes: Vec<Gene>,
+    /// Per *hidden* layer approximate-ReLU truncation depth (low bits
+    /// dropped after the clamp); 0 = exact ReLU.
+    pub acts: Vec<u8>,
+    /// Precision reduction of the output argmax comparator tree; 0 =
+    /// exact comparison.
+    pub argmax_drop: u8,
 }
 
 /// Static description of the searchable space for one model: the
@@ -84,6 +116,12 @@ pub struct SearchSpace {
     pub levels: Vec<Vec<Vec<f64>>>,
     /// Gene index → (layer, row).
     pub layout: Vec<(usize, usize)>,
+    /// When false, [`SearchSpace::random_genome`] and the mutation
+    /// operator never emit bespoke-MAC or activation genes: the search is
+    /// restricted to the original shift-truncate family. Decoding is
+    /// unaffected (a genome that already carries family genes still
+    /// decodes them), so shift-only fronts can seed a widened run.
+    pub families: bool,
 }
 
 impl SearchSpace {
@@ -123,11 +161,37 @@ impl SearchSpace {
             }
             levels.push(per_row);
         }
-        SearchSpace { levels, layout }
+        SearchSpace {
+            levels,
+            layout,
+            families: true,
+        }
+    }
+
+    /// Restrict the sampler/mutator to the shift-truncate family (no
+    /// bespoke-MAC, no approximate-activation genes). The baseline arm of
+    /// the `repro search --families` comparison.
+    pub fn shift_only(mut self) -> SearchSpace {
+        self.families = false;
+        self
     }
 
     pub fn n_genes(&self) -> usize {
         self.layout.len()
+    }
+
+    /// Hidden-layer count = arity of [`Genome::acts`].
+    pub fn n_hidden(&self) -> usize {
+        self.levels.len().saturating_sub(1)
+    }
+
+    /// Wrap a gene vector into a genome with exact activation genes.
+    pub fn genome_of(&self, genes: Vec<Gene>) -> Genome {
+        Genome {
+            genes,
+            acts: vec![0; self.n_hidden()],
+            argmax_drop: 0,
+        }
     }
 
     fn n_levels(&self, gene_idx: usize) -> usize {
@@ -177,6 +241,65 @@ impl SearchSpace {
         plan
     }
 
+    /// Decode the full genome — shift-truncate, bespoke-MAC and
+    /// activation genes — into an [`AxPlan`]. A gene with `mac > 0` owns
+    /// its neuron: the shift genes are don't-cares there and are zeroed
+    /// before deriving the shift plan, so semantically identical genomes
+    /// decode to the identical `AxPlan` and collapse in the fitness memo.
+    pub fn decode_ax(&self, q: &QuantMlp, sig: &Significance, genome: &Genome) -> AxPlan {
+        assert_eq!(genome.genes.len(), self.n_genes(), "genome arity");
+        let mut shift_genome = genome.clone();
+        for g in &mut shift_genome.genes {
+            if g.mac > 0 {
+                g.level = 0;
+            }
+        }
+        let shifts = self.decode(q, sig, &shift_genome);
+        let mut mac = MacPlan::shift_only(q);
+        for (gi, &(l, j)) in self.layout.iter().enumerate() {
+            let m = genome.genes[gi].mac.min(MAC_MAX);
+            if m > 0 {
+                mac.neurons[l][j] = MacSpec::Csd(
+                    q.w[l][j].iter().map(|&w| csd_topk(w, m as usize)).collect(),
+                );
+            }
+        }
+        let relu = (0..self.n_hidden())
+            .map(|l| ReluSpec {
+                drop: genome.acts.get(l).copied().unwrap_or(0).min(ACT_DROP_MAX),
+                cap: 0,
+            })
+            .collect();
+        AxPlan {
+            shifts,
+            mac,
+            act: ActPlan {
+                relu,
+                argmax_drop: genome.argmax_drop.min(ARGMAX_DROP_MAX),
+            },
+        }
+    }
+
+    /// [`Self::decode_ax`] behind the per-plan interval-bounds gate. The
+    /// grid preflight's dominance argument does not cover CSD recodings
+    /// (a truncated recoding can bound *above* the binary weight — top-1
+    /// of `w = 7` multiplies by 8), so each bespoke-MAC plan is checked
+    /// individually; a genome whose plan the bounds pass rejects is
+    /// *repaired* — its MAC genes are reverted to shift-truncate — rather
+    /// than crashing the run or silently widening a bus.
+    pub fn decode_ax_gated(&self, q: &QuantMlp, sig: &Significance, genome: &Genome) -> AxPlan {
+        let ax = self.decode_ax(q, sig, genome);
+        if ax.mac.is_shift_only() || crate::analysis::propagate_ax(q, &ax).is_ok() {
+            return ax;
+        }
+        crate::obs::counters::SEARCH_GENOME_REPAIRS.incr();
+        let mut safe = genome.clone();
+        for g in &mut safe.genes {
+            g.mac = 0;
+        }
+        self.decode_ax(q, sig, &safe)
+    }
+
     /// Encode a grid point (shared `k`, per-layer thresholds `g`) as a
     /// genome: each neuron's level is the count of its own significance
     /// values ≤ that layer's threshold. When the level tables are not
@@ -202,16 +325,23 @@ impl SearchSpace {
                     level: level as u8,
                     k: k.clamp(1, 3) as u8,
                     prune: false,
+                    mac: 0,
                 }
             })
             .collect();
-        Genome { genes }
+        // grid points carry no bespoke-MAC or activation approximation:
+        // zeroed new-family genes keep grid seeding lossless, so the
+        // widened search still weakly dominates the grid front
+        self.genome_of(genes)
     }
 
     /// Uniformly random genome (levels weighted toward the shallow end so
     /// the initial population is not dominated by fully-truncated nets).
+    /// The new-family genes are drawn *after* every shift gene, so the
+    /// shift-plan distribution (and any snapshot pinned to it) is
+    /// unchanged from the shift-only genome era.
     pub fn random_genome(&self, rng: &mut Rng) -> Genome {
-        let genes = (0..self.n_genes())
+        let mut genes: Vec<Gene> = (0..self.n_genes())
             .map(|gi| {
                 let n = self.n_levels(gi);
                 // half the mass on "exact or light truncation"
@@ -224,10 +354,37 @@ impl SearchSpace {
                     level: level as u8,
                     k: 1 + rng.below(3) as u8,
                     prune: rng.f64() < 0.15,
+                    mac: 0,
                 }
             })
             .collect();
-        Genome { genes }
+        if !self.families {
+            return self.genome_of(genes);
+        }
+        for g in &mut genes {
+            if rng.f64() < 0.25 {
+                g.mac = 1 + rng.below(MAC_MAX as usize) as u8;
+            }
+        }
+        let acts = (0..self.n_hidden())
+            .map(|_| {
+                if rng.f64() < 0.3 {
+                    1 + rng.below(ACT_DROP_MAX as usize) as u8
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let argmax_drop = if rng.f64() < 0.25 {
+            1 + rng.below(ARGMAX_DROP_MAX as usize) as u8
+        } else {
+            0
+        };
+        Genome {
+            genes,
+            acts,
+            argmax_drop,
+        }
     }
 }
 
@@ -293,6 +450,14 @@ pub struct SearchOutcome {
     /// first-evaluation order. `DesignEval::k` is 0 and `g` empty for
     /// genome-derived points (no shared `(k, G)` label exists).
     pub archive: Vec<DesignEval>,
+    /// Aligned with `archive`: `Some(plan)` where the design uses a
+    /// bespoke-MAC or approximate-activation family (`DesignEval::plan`
+    /// only carries the shift part); `None` for shift-only designs.
+    pub ax_plans: Vec<Option<AxPlan>>,
+    /// Aligned with `archive`: the first genome that decoded to each
+    /// design. Lets a follow-up run (e.g. the widened-family arm of
+    /// `repro search --families`) re-seed from this run's front.
+    pub genomes: Vec<Genome>,
     /// Indices into `archive`: non-dominated under
     /// `(1 - acc_train, area, power)`, sorted by descending accuracy.
     pub front: Vec<usize>,
@@ -310,6 +475,12 @@ impl SearchOutcome {
     /// The archive-wide front as owned evaluations (descending accuracy).
     pub fn front_evals(&self) -> Vec<DesignEval> {
         self.front.iter().map(|&i| self.archive[i].clone()).collect()
+    }
+
+    /// The genomes behind the archive-wide front (same order as
+    /// [`SearchOutcome::front_evals`]) — ready to use as seeds.
+    pub fn front_genomes(&self) -> Vec<Genome> {
+        self.front.iter().map(|&i| self.genomes[i].clone()).collect()
     }
 }
 
@@ -329,8 +500,13 @@ struct Evaluator<'a> {
     dse_cfg: &'a DseConfig,
     stim: SweepStimuli<'a>,
     space: &'a SearchSpace,
-    memo: FxHashMap<Vec<Vec<Vec<u32>>>, usize>,
+    memo: FxHashMap<AxPlan, usize>,
     archive: Vec<DesignEval>,
+    /// `Some(plan)` per archive slot whose design uses a non-shift-only
+    /// approximation family (aligned with `archive`).
+    ax_plans: Vec<Option<AxPlan>>,
+    /// First genome seen per archive slot (aligned with `archive`).
+    genomes: Vec<Genome>,
     objs: Vec<nsga::Objectives>,
     requested: usize,
     memo_hits: usize,
@@ -343,11 +519,15 @@ impl<'a> Evaluator<'a> {
         // resolve each genome to an archive slot; collect unique misses
         // in first-seen order (deterministic regardless of thread count)
         let mut slots: Vec<usize> = Vec::with_capacity(genomes.len());
-        let mut fresh: Vec<ShiftPlan> = Vec::new();
+        let mut fresh: Vec<AxPlan> = Vec::new();
+        let mut fresh_genomes: Vec<Genome> = Vec::new();
         for g in genomes {
-            let plan = self.space.decode(self.q, self.sig, g);
+            // bounds-gated decode: a genome whose CSD plan the interval
+            // pass rejects is repaired to shift-truncate here, so the
+            // memo key is always the plan that actually evaluates
+            let ax = self.space.decode_ax_gated(self.q, self.sig, g);
             // probe without cloning the nested key; clone only on a miss
-            let slot = match self.memo.get(&plan.shifts) {
+            let slot = match self.memo.get(&ax) {
                 Some(&s) => {
                     self.memo_hits += 1;
                     crate::obs::counters::SEARCH_MEMO_HITS.incr();
@@ -355,8 +535,9 @@ impl<'a> Evaluator<'a> {
                 }
                 None => {
                     let s = self.archive.len() + fresh.len();
-                    self.memo.insert(plan.shifts.clone(), s);
-                    fresh.push(plan);
+                    self.memo.insert(ax.clone(), s);
+                    fresh.push(ax);
+                    fresh_genomes.push(g.clone());
                     s
                 }
             };
@@ -367,10 +548,10 @@ impl<'a> Evaluator<'a> {
                 &fresh,
                 self.dse_cfg.threads,
                 EngineScratch::new,
-                |scratch, plan| {
-                    evaluate_design_packed(
+                |scratch, ax| {
+                    evaluate_design_packed_ax(
                         self.q,
-                        plan.clone(),
+                        ax.clone(),
                         0,
                         Vec::new(),
                         self.data,
@@ -383,9 +564,11 @@ impl<'a> Evaluator<'a> {
             )
             .into_iter()
             .collect::<Result<Vec<_>, String>>()?;
-            for e in evals {
+            for ((e, ax), g) in evals.into_iter().zip(fresh).zip(fresh_genomes) {
                 self.objs.push(objectives(&e));
                 self.archive.push(e);
+                self.ax_plans.push((!ax.is_shift_only()).then_some(ax));
+                self.genomes.push(g);
             }
         }
         Ok(slots)
@@ -463,7 +646,24 @@ fn crossover(rng: &mut Rng, a: &Genome, b: &Genome) -> Genome {
         let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
         genes[lo..=hi].copy_from_slice(&b.genes[lo..=hi]);
     }
-    Genome { genes }
+    // activation genes mix uniformly in both modes (they are per-layer,
+    // not per-neuron, so segment semantics have nothing to offer)
+    let mut acts = a.acts.clone();
+    for (x, &xb) in acts.iter_mut().zip(&b.acts) {
+        if rng.f64() < 0.5 {
+            *x = xb;
+        }
+    }
+    let argmax_drop = if rng.f64() < 0.5 {
+        a.argmax_drop
+    } else {
+        b.argmax_drop
+    };
+    Genome {
+        genes,
+        acts,
+        argmax_drop,
+    }
 }
 
 fn mutate(rng: &mut Rng, space: &SearchSpace, genome: &mut Genome, rate: f64) {
@@ -473,19 +673,35 @@ fn mutate(rng: &mut Rng, space: &SearchSpace, genome: &mut Genome, rate: f64) {
         }
         let n = space.n_levels(gi);
         let r = rng.f64();
-        if r < 0.5 {
+        if r < 0.45 {
             // local level step ±1 (the neighbourhood move that turns the
             // grid's per-layer staircase into per-neuron refinement)
             let cur = gene.level as i64;
             let step = if rng.f64() < 0.5 { -1 } else { 1 };
             gene.level = (cur + step).clamp(0, n as i64) as u8;
-        } else if r < 0.75 {
+        } else if r < 0.65 {
             gene.level = rng.below(n + 1) as u8;
-        } else if r < 0.9 {
+        } else if r < 0.78 {
             gene.k = 1 + rng.below(3) as u8;
-        } else {
+        } else if r < 0.88 || !space.families {
             gene.prune = !gene.prune;
+        } else {
+            // toggle the MAC family: 0 = shift-truncate, m ≥ 1 = CSD
+            // top-m adder graph (a rejected recoding is repaired back to
+            // shift-truncate by the bounds gate at decode time)
+            gene.mac = rng.below(MAC_MAX as usize + 1) as u8;
         }
+    }
+    if !space.families {
+        return;
+    }
+    for act in genome.acts.iter_mut() {
+        if rng.f64() < rate {
+            *act = rng.below(ACT_DROP_MAX as usize + 1) as u8;
+        }
+    }
+    if rng.f64() < rate {
+        genome.argmax_drop = rng.below(ARGMAX_DROP_MAX as usize + 1) as u8;
     }
 }
 
@@ -545,6 +761,8 @@ pub fn nsga2(
         space,
         memo: FxHashMap::default(),
         archive: Vec::new(),
+        ax_plans: Vec::new(),
+        genomes: Vec::new(),
         objs: Vec::new(),
         requested: 0,
         memo_hits: 0,
@@ -555,9 +773,10 @@ pub fn nsga2(
     // provably contains every grid point's evaluation, then trimmed to
     // μ by environmental selection), and random fill
     let mut init: Vec<Genome> = Vec::with_capacity(cfg.pop_size.max(seeds.len() + 1));
-    init.push(Genome {
-        genes: vec![Gene { level: 0, k: 2, prune: false }; space.n_genes()],
-    });
+    init.push(space.genome_of(vec![
+        Gene { level: 0, k: 2, prune: false, mac: 0 };
+        space.n_genes()
+    ]));
     init.extend(seeds.iter().cloned());
     while init.len() < cfg.pop_size {
         init.push(space.random_genome(&mut rng));
@@ -645,6 +864,8 @@ pub fn nsga2(
 
     Ok(SearchOutcome {
         archive: ev.archive,
+        ax_plans: ev.ax_plans,
+        genomes: ev.genomes,
         front,
         gens,
         requested: ev.requested,
@@ -718,10 +939,13 @@ mod tests {
         let (q, xs, _) = toy();
         let sig = sig_of(&q, &xs);
         let space = SearchSpace::new(&q, &sig, 16);
-        let g = Genome {
-            genes: vec![Gene { level: 0, k: 2, prune: false }; space.n_genes()],
-        };
+        let g = space.genome_of(vec![
+            Gene { level: 0, k: 2, prune: false, mac: 0 };
+            space.n_genes()
+        ]);
         assert_eq!(space.decode(&q, &sig, &g), ShiftPlan::exact(&q));
+        // and the widened decode of the same genome is the exact AxPlan
+        assert_eq!(space.decode_ax(&q, &sig, &g), AxPlan::exact(&q));
     }
 
     #[test]
@@ -749,12 +973,12 @@ mod tests {
         let sig = sig_of(&q, &xs);
         let space = SearchSpace::new(&q, &sig, 16);
         let n = space.n_genes();
-        let mut genes = vec![Gene { level: 0, k: 1, prune: false }; n];
+        let mut genes = vec![Gene { level: 0, k: 1, prune: false, mac: 0 }; n];
         // fully truncate neuron 0 with prune: every nonzero first-layer
         // product of row 0 gets shift = its full width
         let max_level = space.levels[0][0].len() as u8;
-        genes[0] = Gene { level: max_level, k: 1, prune: true };
-        let plan = space.decode(&q, &sig, &Genome { genes });
+        genes[0] = Gene { level: max_level, k: 1, prune: true, mac: 0 };
+        let plan = space.decode(&q, &sig, &space.genome_of(genes));
         let mut n_pruned = 0;
         for (i, &w) in q.w[0][0].iter().enumerate() {
             // infinite-significance products (w = 0 or a degenerate
@@ -772,6 +996,99 @@ mod tests {
         let ys0 = [0usize; 20];
         let acc = axsum::accuracy(&q, &plan, &xs[..20], &ys0);
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn grid_seeds_carry_no_new_family_genes() {
+        let (q, xs, _) = toy();
+        let sig = sig_of(&q, &xs);
+        let space = SearchSpace::lossless(&q, &sig, 16);
+        let genome = space.encode_grid_point(2, &[0.1, 0.1]);
+        assert!(genome.genes.iter().all(|g| g.mac == 0));
+        assert!(genome.acts.iter().all(|&a| a == 0));
+        assert_eq!(genome.argmax_drop, 0);
+        // the widened decode of a grid genome is the grid plan verbatim:
+        // grid ≤ search stays structural with the new families in play
+        let ax = space.decode_ax(&q, &sig, &genome);
+        assert!(ax.is_shift_only());
+        assert_eq!(ax, AxPlan::from_shifts(&q, &space.decode(&q, &sig, &genome)));
+    }
+
+    #[test]
+    fn mac_gene_owns_its_neuron_and_decodes_to_csd_rows() {
+        let (q, xs, _) = toy();
+        let sig = sig_of(&q, &xs);
+        let space = SearchSpace::lossless(&q, &sig, 16);
+        let mut genes = vec![Gene { level: 0, k: 2, prune: false, mac: 0 }; space.n_genes()];
+        genes[1].mac = 2;
+        let mut genome = space.genome_of(genes);
+        genome.acts[0] = 2;
+        genome.argmax_drop = 1;
+        let ax = space.decode_ax(&q, &sig, &genome);
+        let MacSpec::Csd(rows) = &ax.mac.neurons[0][1] else {
+            panic!("mac gene must decode to a CSD spec");
+        };
+        assert_eq!(rows.len(), q.w[0][1].len());
+        for (digits, &w) in rows.iter().zip(&q.w[0][1]) {
+            assert_eq!(digits, &csd_topk(w, 2));
+        }
+        assert_eq!(ax.act.relu_of(0), ReluSpec { drop: 2, cap: 0 });
+        assert_eq!(ax.act.argmax_drop, 1);
+        // shift genes are don't-cares on a MAC neuron: decode canonicalizes
+        // them away so the fitness memo collapses equivalent genomes
+        let mut noisy = genome.clone();
+        noisy.genes[1].level = 3;
+        noisy.genes[1].prune = true;
+        assert_eq!(space.decode_ax(&q, &sig, &noisy), ax);
+    }
+
+    #[test]
+    fn shift_only_space_never_samples_family_genes() {
+        let (q, xs, _) = toy();
+        let sig = sig_of(&q, &xs);
+        let space = SearchSpace::lossless(&q, &sig, 16).shift_only();
+        let mut rng = Rng::new(9);
+        for _ in 0..40 {
+            let mut g = space.random_genome(&mut rng);
+            mutate(&mut rng, &space, &mut g, 0.9);
+            assert!(g.genes.iter().all(|x| x.mac == 0));
+            assert!(g.acts.iter().all(|&a| a == 0));
+            assert_eq!(g.argmax_drop, 0);
+        }
+        // ... while the widened (default) space does sample them
+        let wide = SearchSpace::lossless(&q, &sig, 16);
+        let mut wrng = Rng::new(9);
+        let any_family = (0..40).any(|_| {
+            let g = wide.random_genome(&mut wrng);
+            g.genes.iter().any(|x| x.mac > 0)
+                || g.acts.iter().any(|&a| a > 0)
+                || g.argmax_drop > 0
+        });
+        assert!(any_family);
+    }
+
+    #[test]
+    fn overflowing_csd_genome_is_repaired_to_shift_only() {
+        // exact bound 7·(2^59−1) + 2^58 fits 63 signed bits, but the
+        // top-1 CSD recoding of 7 multiplies by 8 and pushes the
+        // accumulator to 64 — the per-plan gate must repair the genome,
+        // not widen a bus or crash the run
+        let q = QuantMlp {
+            w: vec![vec![vec![7]]],
+            b: vec![vec![1i64 << 58]],
+            in_bits: 59,
+            w_scales: vec![1.0],
+        };
+        let xs: Vec<Vec<i64>> = (1..6).map(|i| vec![(1i64 << 58) + i]).collect();
+        let sig = sig_of(&q, &xs);
+        let space = SearchSpace::lossless(&q, &sig, 8);
+        let genome = space.genome_of(vec![Gene { level: 0, k: 2, prune: false, mac: 1 }]);
+        let ax = space.decode_ax(&q, &sig, &genome);
+        assert!(!ax.is_shift_only());
+        assert!(crate::analysis::propagate_ax(&q, &ax).is_err());
+        let gated = space.decode_ax_gated(&q, &sig, &genome);
+        assert!(gated.is_shift_only());
+        assert!(crate::analysis::propagate_ax(&q, &gated).is_ok());
     }
 
     #[test]

@@ -1,0 +1,531 @@
+//! Bespoke-MAC netlist backend (arxiv 2312.17612 §III): CSD
+//! constant-multiply neurons with an adder-graph that shares two-digit
+//! subexpressions across a neuron's weights, plus the approximate
+//! activation units — truncated/clamped ReLU and a reduced-precision
+//! argmax comparator chain. The hardware twin of
+//! [`crate::axsum::neuron_value_ax`] / [`crate::axsum::approx_argmax`]:
+//! every builder here is pinned bit-identical to those reference
+//! semantics by the conformance harness.
+//!
+//! A CSD neuron realizes each weight as its kept digit list
+//! `Σ ±2^pow`: positive digits contribute `a << pow` to the `Sp` tree,
+//! negative to `Sn`, and the combine is the same ones'-complement merge
+//! the shift-truncate neuron uses — present iff the bias is negative or
+//! any kept digit is negative (structural, matching the reference).
+//! Within a neuron, same-sign digit pairs `a<<p + a<<q` normalize to a
+//! cached `(a + (a << (p-q))) << q`, so weights sharing a digit-gap
+//! pattern on the same input reuse one adder (the subexpression-sharing
+//! win the paper prices).
+
+use rustc_hash::FxHashMap;
+
+use crate::axsum::mac::{AxPlan, CsdDigit, MacSpec, ReluSpec};
+use crate::fixed::QuantMlp;
+use crate::netlist::{NetId, Netlist};
+
+use super::arith::{
+    argmax, ones_complement_combine, relu, u_add, u_adder_tree, ubits, SBus, UBus,
+};
+use super::neuron::{axsum_neuron, NeuronSpec};
+
+/// CSD constant-multiply neuron: per-input kept digit lists, split-sign
+/// adder trees over the shifted inputs, ones'-complement combine. The
+/// per-neuron subexpression cache maps `(input, pow-gap)` to the shared
+/// `a + (a << gap)` bus; sharing is exact rewiring of the adder graph,
+/// so it never changes the accumulated value (pinned by tests and the
+/// conformance harness).
+pub fn csd_neuron(
+    nl: &mut Netlist,
+    inputs: &[UBus],
+    rows: &[Vec<CsdDigit>],
+    bias: i64,
+) -> SBus {
+    assert_eq!(inputs.len(), rows.len(), "CSD spec arity");
+    let mut pos: Vec<UBus> = Vec::new();
+    let mut neg: Vec<UBus> = Vec::new();
+    let mut share: FxHashMap<(usize, u8), UBus> = FxHashMap::default();
+    for (i, (a, digits)) in inputs.iter().zip(rows).enumerate() {
+        let mut by_sign: [Vec<u8>; 2] = [Vec::new(), Vec::new()];
+        for d in digits {
+            by_sign[d.neg as usize].push(d.pow);
+        }
+        for (sign_class, pows) in by_sign.iter().enumerate() {
+            let dst = if sign_class == 1 { &mut neg } else { &mut pos };
+            let mut pairs = pows.chunks_exact(2);
+            for pair in pairs.by_ref() {
+                let (p, q) = (pair[0].max(pair[1]), pair[0].min(pair[1]));
+                let gap = p - q;
+                let base = share
+                    .entry((i, gap))
+                    .or_insert_with(|| {
+                        let hi_part = a.shl(nl, gap as usize);
+                        u_add(nl, a, &hi_part)
+                    })
+                    .clone();
+                dst.push(base.shl(nl, q as usize));
+            }
+            if let [p] = pairs.remainder() {
+                dst.push(a.shl(nl, *p as usize));
+            }
+        }
+    }
+    if bias > 0 {
+        pos.push(UBus::constant(nl, bias as u64));
+    } else if bias < 0 {
+        neg.push(UBus::constant(nl, (-bias) as u64));
+    }
+    let sp = u_adder_tree(nl, pos);
+    if neg.is_empty() {
+        sp.as_signed(nl)
+    } else {
+        let sn = u_adder_tree(nl, neg);
+        ones_complement_combine(nl, &sp, &sn)
+    }
+}
+
+/// Approximate ReLU unit ([`ReluSpec`] semantics): the exact ReLU mask,
+/// then an OR over the high magnitude bits saturates the kept low bits
+/// when `cap` fires (`min(r, 2^cap - 1)` in gates), and the low `drop`
+/// bits are hardwired zero (their adder columns simply disappear
+/// downstream). Bit-exact with [`ReluSpec::apply`].
+pub fn relu_ax(nl: &mut Netlist, s: &SBus, spec: ReluSpec) -> UBus {
+    let r = relu(nl, s);
+    if spec.is_exact() {
+        return r;
+    }
+    let hi = spec.apply(r.hi as i64).max(0) as u64;
+    let w = ubits(hi);
+    let cap = spec.cap as usize;
+    let ge = if spec.cap > 0 && (spec.cap as u32) < 63 && r.width() > cap {
+        let mut g = r.nets[cap];
+        for &b in &r.nets[cap + 1..] {
+            g = nl.or(g, b);
+        }
+        Some(g)
+    } else {
+        None
+    };
+    let drop = spec.drop as usize;
+    let nets: Vec<NetId> = (0..w)
+        .map(|b| {
+            if b < drop {
+                nl.zero()
+            } else {
+                let base = r.bit(nl, b);
+                match ge {
+                    Some(g) => nl.or(base, g),
+                    None => base,
+                }
+            }
+        })
+        .collect();
+    UBus { nets, hi }
+}
+
+/// Reduced-precision argmax: the comparator chain loses its low `drop`
+/// columns — each logit bus is rewired to its arithmetic right shift
+/// (free: the dropped nets just aren't compared) before the standing
+/// first-max-wins [`argmax`] chain. Bit-exact with
+/// [`crate::axsum::approx_argmax`].
+pub fn argmax_ax(nl: &mut Netlist, values: &[SBus], drop: u8) -> UBus {
+    if drop == 0 {
+        return argmax(nl, values);
+    }
+    let d = (drop as usize).min(63);
+    let shifted: Vec<SBus> = values
+        .iter()
+        .map(|s| {
+            // v >> d == v >> (w-1) once d >= w-1 (the sign repeats), so
+            // the rewire keeps at least the sign net
+            let k = d.min(s.width() - 1);
+            SBus {
+                nets: s.nets[k..].to_vec(),
+                lo: s.lo >> d,
+                hi: s.hi >> d,
+            }
+        })
+        .collect();
+    argmax(nl, &shifted)
+}
+
+/// Borrowed spec of an MLP circuit under a full [`AxPlan`]: the
+/// [`super::MlpSpecRef`] analogue for the widened approximation space.
+/// ShiftTrunc neurons lower through the standing [`axsum_neuron`]
+/// (driven by the plan's shift rows); CSD neurons through
+/// [`csd_neuron`]; activations through [`relu_ax`] / [`argmax_ax`].
+#[derive(Clone, Copy, Debug)]
+pub struct MlpAxSpecRef<'a> {
+    pub name: &'a str,
+    pub weights: &'a [Vec<Vec<i64>>],
+    pub biases: &'a [Vec<i64>],
+    pub in_bits: usize,
+    pub ax: &'a AxPlan,
+}
+
+impl<'a> MlpAxSpecRef<'a> {
+    pub fn from_model(name: &'a str, q: &'a QuantMlp, ax: &'a AxPlan) -> MlpAxSpecRef<'a> {
+        MlpAxSpecRef {
+            name,
+            weights: &q.w,
+            biases: &q.b,
+            in_bits: q.in_bits,
+            ax,
+        }
+    }
+}
+
+/// Build the full circuit under an [`AxPlan`]: output bus `class`
+/// carries the (approximate-)argmax class index. The ax analogue of
+/// [`super::build_mlp_ref`] — a shift-only plan builds the identical
+/// circuit shape (ShiftTrunc neurons, exact ReLU, exact argmax).
+pub fn build_mlp_ax_ref(spec: &MlpAxSpecRef<'_>) -> Netlist {
+    build_mlp_ax_inner(spec, false)
+}
+
+/// [`build_mlp_ax_ref`] variant exposing every output neuron's *raw*
+/// signed sum as its own `logit{j}` bus (the argmax family only affects
+/// `class`). The conformance harness diffs these against the software
+/// forwards bit-for-bit; DSE cost paths must keep using
+/// [`build_mlp_ax_ref`].
+pub fn build_mlp_ax_logits(spec: &MlpAxSpecRef<'_>) -> Netlist {
+    build_mlp_ax_inner(spec, true)
+}
+
+fn build_mlp_ax_inner(spec: &MlpAxSpecRef<'_>, expose_logits: bool) -> Netlist {
+    let n_inputs = spec.weights[0][0].len();
+    let mut nl = Netlist::new(spec.name.to_string());
+    let mut acts: Vec<UBus> = (0..n_inputs)
+        .map(|i| UBus::from_nets(nl.input_bus(format!("x{i}"), spec.in_bits)))
+        .collect();
+
+    let n_layers = spec.weights.len();
+    for l in 0..n_layers {
+        let layer_w = &spec.weights[l];
+        let layer_b = &spec.biases[l];
+        let relu_spec = spec.ax.act.relu_of(l);
+        let mut sums = Vec::with_capacity(layer_w.len());
+        for (j, row) in layer_w.iter().enumerate() {
+            let s = match spec.ax.mac_of(l, j) {
+                MacSpec::ShiftTrunc => {
+                    let nspec = NeuronSpec {
+                        weights: row.clone(),
+                        bias: layer_b[j],
+                        shifts: spec.ax.shifts.shifts[l][j].clone(),
+                    };
+                    axsum_neuron(&mut nl, &acts, &nspec)
+                }
+                MacSpec::Csd(rows) => csd_neuron(&mut nl, &acts, rows, layer_b[j]),
+            };
+            sums.push(s);
+        }
+        if l + 1 < n_layers {
+            acts = sums.iter().map(|s| relu_ax(&mut nl, s, relu_spec)).collect();
+        } else {
+            if expose_logits {
+                for (j, s) in sums.iter().enumerate() {
+                    nl.output_bus(format!("logit{j}"), s.nets.clone());
+                }
+            }
+            let idx = argmax_ax(&mut nl, &sums, spec.ax.act.argmax_drop);
+            nl.output_bus("class", idx.nets.clone());
+        }
+    }
+    nl.sweep().0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axsum::mac::{
+        approx_argmax, csd_of, csd_topk, forward_ax, neuron_value_ax, predict_ax, ActPlan,
+        MacPlan,
+    };
+    use crate::axsum::ShiftPlan;
+    use crate::sim::{as_signed, eval_once};
+    use crate::util::rng::Rng;
+
+    fn rand_q(rng: &mut Rng, din: usize, hidden: usize, dout: usize) -> QuantMlp {
+        QuantMlp {
+            w: vec![
+                (0..hidden)
+                    .map(|_| (0..din).map(|_| rng.range_i64(-127, 127)).collect())
+                    .collect(),
+                (0..dout)
+                    .map(|_| (0..hidden).map(|_| rng.range_i64(-127, 127)).collect())
+                    .collect(),
+            ],
+            b: vec![
+                (0..hidden).map(|_| rng.range_i64(-80, 80)).collect(),
+                (0..dout).map(|_| rng.range_i64(-80, 80)).collect(),
+            ],
+            in_bits: 4,
+            w_scales: vec![1.0, 1.0],
+        }
+    }
+
+    fn rand_ax(rng: &mut Rng, q: &QuantMlp) -> AxPlan {
+        let mut shifts = ShiftPlan::exact(q);
+        for layer in shifts.shifts.iter_mut() {
+            for row in layer.iter_mut() {
+                for s in row.iter_mut() {
+                    *s = rng.below(6) as u32;
+                }
+            }
+        }
+        let mut mac = MacPlan::shift_only(q);
+        for (l, layer) in q.w.iter().enumerate() {
+            for (j, row) in layer.iter().enumerate() {
+                if rng.below(2) == 0 {
+                    let m = rng.below(5);
+                    mac.neurons[l][j] =
+                        MacSpec::Csd(row.iter().map(|&w| csd_topk(w, m)).collect());
+                }
+            }
+        }
+        let relu = (0..q.n_layers().saturating_sub(1))
+            .map(|_| ReluSpec {
+                drop: rng.below(3) as u8,
+                cap: [0u8, 4, 6][rng.below(3)],
+            })
+            .collect();
+        AxPlan {
+            shifts,
+            mac,
+            act: ActPlan {
+                relu,
+                argmax_drop: rng.below(4) as u8,
+            },
+        }
+    }
+
+    fn eval_signed(nl: &Netlist, w: usize, a: &[i64]) -> i64 {
+        let ins: Vec<(String, u64)> = a
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (format!("a{i}"), v as u64))
+            .collect();
+        let refs: Vec<(&str, u64)> = ins.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        as_signed(eval_once(nl, &refs)["s"], w)
+    }
+
+    fn build_csd(rows: Vec<Vec<CsdDigit>>, bias: i64) -> (Netlist, usize) {
+        let mut nl = Netlist::new("csd");
+        let inputs: Vec<UBus> = (0..rows.len())
+            .map(|i| UBus::from_nets(nl.input_bus(format!("a{i}"), 4)))
+            .collect();
+        let s = csd_neuron(&mut nl, &inputs, &rows, bias);
+        let w = s.width();
+        nl.output_bus("s", s.nets.clone());
+        (nl.sweep().0, w)
+    }
+
+    #[test]
+    fn csd_neuron_matches_reference_value() {
+        let mut rng = Rng::new(0x51);
+        for _ in 0..40 {
+            let n = 1 + rng.below(5);
+            let w: Vec<i64> = (0..n).map(|_| rng.range_i64(-127, 127)).collect();
+            let bias = rng.range_i64(-60, 60);
+            let m = rng.below(5);
+            let rows: Vec<Vec<CsdDigit>> = w.iter().map(|&wi| csd_topk(wi, m)).collect();
+            let (nl, width) = build_csd(rows.clone(), bias);
+            let spec = MacSpec::Csd(rows);
+            for _ in 0..8 {
+                let a: Vec<i64> = (0..n).map(|_| rng.range_i64(0, 15)).collect();
+                let want = neuron_value_ax(&a, &w, bias, &vec![0; n], &spec);
+                assert_eq!(eval_signed(&nl, width, &a), want, "a={a:?} w={w:?} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_all_zero_and_single_digit_rows() {
+        // all digits dropped: the neuron is the bias constant
+        let (nl, w) = build_csd(vec![vec![], vec![]], 7);
+        assert_eq!(eval_signed(&nl, w, &[9, 3]), 7);
+        let (nl, w) = build_csd(vec![vec![], vec![]], -7);
+        // negative bias wires the combine: 0 - 7 - 1
+        assert_eq!(eval_signed(&nl, w, &[9, 3]), -8);
+        // one kept digit per input
+        let rows = vec![
+            vec![CsdDigit { pow: 3, neg: false }],
+            vec![CsdDigit { pow: 1, neg: true }],
+        ];
+        let (nl, w) = build_csd(rows, 0);
+        for a0 in 0..16i64 {
+            for a1 in [0i64, 5, 15] {
+                assert_eq!(eval_signed(&nl, w, &[a0, a1]), (a0 << 3) - (a1 << 1) - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn adder_graph_sharing_preserves_value_and_saves_cells() {
+        // 85 = CSD 1010101: digit pairs (6,4) and (2,0) share gap 2 on
+        // the same input — the shared (a + a<<2) adder is built once
+        let digits = csd_of(85);
+        assert_eq!(digits.len(), 4);
+        let (shared, w) = build_csd(vec![digits.clone()], 0);
+
+        // unshared build: one shifted term per digit, same trees
+        let mut nl = Netlist::new("unshared");
+        let a = UBus::from_nets(nl.input_bus("a0", 4));
+        let terms: Vec<UBus> = digits.iter().map(|d| a.shl(&mut nl, d.pow as usize)).collect();
+        let sp = u_adder_tree(&mut nl, terms);
+        let s = sp.as_signed(&mut nl);
+        let wu = s.width();
+        nl.output_bus("s", s.nets.clone());
+        let unshared = nl.sweep().0;
+
+        for av in 0..16i64 {
+            assert_eq!(eval_signed(&shared, w, &[av]), 85 * av);
+            assert_eq!(eval_signed(&unshared, wu, &[av]), 85 * av);
+        }
+        assert!(
+            shared.n_cells() < unshared.n_cells(),
+            "sharing saved nothing: {} !< {}",
+            shared.n_cells(),
+            unshared.n_cells()
+        );
+    }
+
+    #[test]
+    fn relu_ax_matches_spec_apply() {
+        use super::super::arith::u_sub_signed;
+        for spec in [
+            ReluSpec::EXACT,
+            ReluSpec { drop: 2, cap: 0 },
+            ReluSpec { drop: 0, cap: 3 },
+            ReluSpec { drop: 1, cap: 4 },
+            ReluSpec { drop: 9, cap: 0 },
+        ] {
+            let mut nl = Netlist::new("r");
+            let p = UBus::from_nets(nl.input_bus("p", 5));
+            let n = UBus::from_nets(nl.input_bus("n", 5));
+            let s = u_sub_signed(&mut nl, &p, &n);
+            let r = relu_ax(&mut nl, &s, spec);
+            nl.output_bus("r", r.nets.clone());
+            let nl = nl.sweep().0;
+            for pv in 0..32u64 {
+                for nv in [0u64, 1, 7, 16, 31] {
+                    let out = eval_once(&nl, &[("p", pv), ("n", nv)]);
+                    let want = spec.apply(pv as i64 - nv as i64);
+                    assert_eq!(out["r"] as i64, want, "{spec:?} p={pv} n={nv}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_ax_matches_approx_argmax() {
+        use super::super::arith::u_sub_signed;
+        let mut rng = Rng::new(0x52);
+        for drop in [0u8, 1, 2, 5, 20] {
+            let mut nl = Netlist::new("am");
+            let values: Vec<SBus> = (0..4)
+                .map(|i| {
+                    let p = UBus::from_nets(nl.input_bus(format!("p{i}"), 5));
+                    let n = UBus::from_nets(nl.input_bus(format!("n{i}"), 5));
+                    u_sub_signed(&mut nl, &p, &n)
+                })
+                .collect();
+            let idx = argmax_ax(&mut nl, &values, drop);
+            nl.output_bus("idx", idx.nets.clone());
+            let nl = nl.sweep().0;
+            for _ in 0..40 {
+                let ps: Vec<u64> = (0..4).map(|_| rng.below(32) as u64).collect();
+                let ns: Vec<u64> = (0..4).map(|_| rng.below(32) as u64).collect();
+                let mut ins: Vec<(String, u64)> = Vec::new();
+                for i in 0..4 {
+                    ins.push((format!("p{i}"), ps[i]));
+                    ins.push((format!("n{i}"), ns[i]));
+                }
+                let refs: Vec<(&str, u64)> = ins.iter().map(|(s, v)| (s.as_str(), *v)).collect();
+                let out = eval_once(&nl, &refs);
+                let logits: Vec<i64> = (0..4).map(|i| ps[i] as i64 - ns[i] as i64).collect();
+                assert_eq!(
+                    out["idx"] as usize,
+                    approx_argmax(&logits, drop),
+                    "drop={drop} logits={logits:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ax_mlp_matches_reference_forward_and_predict() {
+        let mut rng = Rng::new(0x53);
+        for round in 0..6 {
+            let q = rand_q(&mut rng, 5, 3, 3);
+            let ax = rand_ax(&mut rng, &q);
+            let spec = MlpAxSpecRef::from_model("t", &q, &ax);
+            let nl = build_mlp_ax_logits(&spec);
+            assert_eq!(nl.outputs.last().unwrap().name, "class");
+            let mut scratch = Vec::new();
+            for _ in 0..25 {
+                let x: Vec<i64> = (0..5).map(|_| rng.range_i64(0, 15)).collect();
+                let ins: Vec<(String, u64)> = x
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| (format!("x{i}"), v as u64))
+                    .collect();
+                let refs: Vec<(&str, u64)> =
+                    ins.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+                let out = eval_once(&nl, &refs);
+                let want = forward_ax(&q, &ax, &x, &mut scratch);
+                for (j, &wv) in want.iter().enumerate() {
+                    let bus = nl
+                        .outputs
+                        .iter()
+                        .find(|b| b.name == format!("logit{j}"))
+                        .unwrap();
+                    let got = as_signed(out[&format!("logit{j}")], bus.nets.len());
+                    assert_eq!(got, wv, "round {round} logit{j} x={x:?}");
+                }
+                assert_eq!(
+                    out["class"] as usize,
+                    predict_ax(&q, &ax, &x),
+                    "round {round} x={x:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shift_only_ax_spec_builds_the_standing_circuit_semantics() {
+        use super::super::mlp::{build_mlp_ref, MlpSpecRef, NeuronStyle};
+        let mut rng = Rng::new(0x54);
+        let q = rand_q(&mut rng, 4, 3, 3);
+        let mut plan = ShiftPlan::exact(&q);
+        for layer in plan.shifts.iter_mut() {
+            for row in layer.iter_mut() {
+                for s in row.iter_mut() {
+                    *s = rng.below(5) as u32;
+                }
+            }
+        }
+        let ax = AxPlan::from_shifts(&q, &plan);
+        let nl_ax = build_mlp_ax_ref(&MlpAxSpecRef::from_model("t", &q, &ax));
+        let nl_std = build_mlp_ref(&MlpSpecRef {
+            name: "t",
+            weights: &q.w,
+            biases: &q.b,
+            shifts: &plan.shifts,
+            in_bits: q.in_bits,
+            style: NeuronStyle::AxSum,
+        });
+        for _ in 0..40 {
+            let x: Vec<i64> = (0..4).map(|_| rng.range_i64(0, 15)).collect();
+            let ins: Vec<(String, u64)> = x
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (format!("x{i}"), v as u64))
+                .collect();
+            let refs: Vec<(&str, u64)> = ins.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+            assert_eq!(
+                eval_once(&nl_ax, &refs)["class"],
+                eval_once(&nl_std, &refs)["class"]
+            );
+        }
+    }
+}

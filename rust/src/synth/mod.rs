@@ -8,11 +8,15 @@
 //! would fold it.
 
 pub mod arith;
+pub mod mac;
 pub mod mlp;
 pub mod multiplier;
 pub mod neuron;
 
 pub use arith::{SBus, UBus};
+pub use mac::{
+    argmax_ax, build_mlp_ax_logits, build_mlp_ax_ref, csd_neuron, relu_ax, MlpAxSpecRef,
+};
 pub use mlp::{build_mlp, build_mlp_logits, build_mlp_ref, MlpCircuitSpec, MlpSpecRef, NeuronStyle};
 pub use multiplier::{const_multiplier, csd_digits, csd_weight, multiplier_netlist, MultStyle, DEFAULT_MULT_STYLE};
 pub use neuron::{axsum_neuron, axsum_neuron_value, exact_neuron, NeuronSpec};

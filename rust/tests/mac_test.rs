@@ -1,0 +1,266 @@
+//! Conformance tests for the bespoke-MAC (CSD adder-graph) and
+//! approximate-activation families.
+//!
+//! Layers under test: the CSD recoding itself (decode == exact i64
+//! value, canonical digit spacing), the shared-adder-graph netlist
+//! backend (sharing must never change a logit), the truncated-ReLU /
+//! reduced-precision-argmax reference semantics, and the full
+//! differential stack (`axsum` reference vs `FlatEval` vs the bit-sliced
+//! planes at every width vs the synthesized netlist) under fuzzed
+//! family plans.
+
+use axmlp::axsum::{
+    csd_merge, csd_of, csd_topk, csd_value, forward_ax, ActPlan, AxPlan, CsdDigit, FlatEval,
+    FlatScratch, MacPlan, MacSpec, ReluSpec, ShiftPlan,
+};
+use axmlp::conformance::{check_case_all_ax, gen, PlanKind, TopologyRange};
+use axmlp::dse::{
+    evaluate_design_packed_ax, DseConfig, EngineScratch, EvalBackend, QuantData, SweepStimuli,
+};
+use axmlp::fixed::QuantMlp;
+use axmlp::pdk::EgtLibrary;
+use axmlp::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// CSD recoding: exact decode + canonical form
+// ---------------------------------------------------------------------------
+
+#[test]
+fn csd_decode_is_exact_for_small_and_edge_weights() {
+    let mut rng = Rng::new(0x3AC0);
+    let mut ws: Vec<i64> = (-16..=16).collect();
+    for _ in 0..200 {
+        ws.push(rng.range_i64(-1_000_000, 1_000_000));
+    }
+    // i64 edge magnitudes: the recoding must not overflow internally
+    ws.extend([i64::MAX, -i64::MAX, i64::MIN, 1i64 << 62, -(1i64 << 62)]);
+    for &w in &ws {
+        let digits = csd_of(w);
+        assert_eq!(csd_value(&digits), w as i128, "w={w}");
+        // canonical CSD: powers strictly decreasing, no adjacent digits
+        for pair in digits.windows(2) {
+            assert!(
+                pair[0].pow >= pair[1].pow + 2,
+                "w={w}: adjacent CSD digits {pair:?}"
+            );
+        }
+        if w == 0 {
+            assert!(digits.is_empty());
+        }
+    }
+}
+
+#[test]
+fn csd_merge_splits_exactly_and_topk_truncates_msb_first() {
+    let mut rng = Rng::new(0x3AC1);
+    for _ in 0..200 {
+        let w = rng.range_i64(-(1i64 << 40), 1i64 << 40);
+        let digits = csd_of(w);
+        let (wp, wn) = csd_merge(&digits);
+        assert_eq!(wp - wn, w, "w={w}");
+        // top-k keeps the most significant digits: the kept value's
+        // error is below the first dropped digit's weight
+        for m in 0..=digits.len() {
+            let kept = csd_topk(w, m);
+            assert_eq!(&kept[..], &digits[..m]);
+            let err = (w as i128 - csd_value(&kept)).unsigned_abs();
+            if m < digits.len() {
+                assert!(err < (1u128 << (digits[m].pow + 1)), "w={w} m={m}");
+            } else {
+                assert_eq!(err, 0);
+            }
+        }
+    }
+    // the pinned bound-inflation example: top-1 of 7 rounds UP to 8
+    assert_eq!(csd_topk(7, 1), vec![CsdDigit { pow: 3, neg: false }]);
+}
+
+// ---------------------------------------------------------------------------
+// Approximate activations: reference semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn approximate_relu_is_monotone_bounded_and_exact_at_zero() {
+    let mut vals: Vec<i64> = vec![i64::MIN, -5, -1, 0, 1, 2, 3, 63, 64, 127, 255, i64::MAX];
+    let mut rng = Rng::new(0xAC7);
+    for _ in 0..200 {
+        vals.push(rng.range_i64(-100_000, 100_000));
+    }
+    vals.sort_unstable();
+    for drop in 0..=4u8 {
+        for cap in [0u8, 4, 8, 62] {
+            let spec = ReluSpec { drop, cap };
+            let mut prev = i64::MIN;
+            for &v in &vals {
+                let r = spec.apply(v);
+                assert!(r >= prev, "{spec:?} not monotone at v={v}");
+                assert!(r >= 0, "{spec:?} negative at v={v}");
+                assert!(r <= v.max(0), "{spec:?} exceeds exact ReLU at v={v}");
+                prev = r;
+            }
+        }
+    }
+    // the exact spec IS max(0, v)
+    for &v in &vals {
+        assert_eq!(ReluSpec::EXACT.apply(v), v.max(0));
+    }
+    assert!(ReluSpec::EXACT.is_exact());
+    assert!(!ReluSpec { drop: 1, cap: 0 }.is_exact());
+}
+
+// ---------------------------------------------------------------------------
+// Shared adder graph: sharing must never change a logit
+// ---------------------------------------------------------------------------
+
+/// Weights picked so the CSD recodings repeat `(input, pow-gap)` pairs
+/// (85 = 1010101₂ alone shares twice); every engine — including the
+/// netlist logit backend built on the *shared* adder graph — must agree
+/// with the digit-by-digit software reference bit for bit.
+#[test]
+fn adder_graph_sharing_never_changes_logits() {
+    let q = QuantMlp {
+        w: vec![
+            vec![vec![85, -51, 21], vec![-85, 73, 5], vec![37, -21, 85]],
+            vec![vec![51, -21, 9], vec![-9, 85, -37]],
+        ],
+        b: vec![vec![7, -3, 0], vec![-11, 5]],
+        in_bits: 4,
+        w_scales: vec![1.0, 1.0],
+    };
+    let full_csd = |q: &QuantMlp, m: Option<usize>| -> MacPlan {
+        let mut mac = MacPlan::shift_only(q);
+        for (l, layer) in q.w.iter().enumerate() {
+            for (j, row) in layer.iter().enumerate() {
+                mac.neurons[l][j] = MacSpec::Csd(
+                    row.iter()
+                        .map(|&w| m.map_or_else(|| csd_of(w), |m| csd_topk(w, m)))
+                        .collect(),
+                );
+            }
+        }
+        mac
+    };
+    let mut rng = Rng::new(0x5AA);
+    let xs: Vec<Vec<i64>> = (0..70)
+        .map(|_| (0..3).map(|_| rng.range_i64(0, 15)).collect())
+        .collect();
+    for m in [None, Some(2), Some(1)] {
+        let ax = AxPlan {
+            shifts: ShiftPlan::exact(&q),
+            mac: full_csd(&q, m),
+            act: ActPlan::exact(q.n_layers()),
+        };
+        assert_eq!(
+            check_case_all_ax(&q, &ax, &ax, &ax, &xs).map(|f| f.to_string()),
+            None,
+            "m={m:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fuzzed differential sweeps: every engine, every plane width
+// ---------------------------------------------------------------------------
+
+/// Forced Mac/Act plan families plus the full random plan mix, each
+/// case through all nine engines (`check_case_all_ax` runs the
+/// reference, flat, u64-ripple, u64/u128/lanes4 carry-save planes,
+/// packed-class, and both netlist backends).
+#[test]
+fn fuzzed_family_plans_are_bit_identical_across_all_engines() {
+    let mut rng = Rng::new(0xD1FF);
+    let range = TopologyRange::default();
+    for case in 0..40u32 {
+        let q = gen::random_quant_mlp(&mut rng, &range);
+        // 70 patterns: crosses the 64-wide plane-word boundary
+        let xs = gen::mixed_stimulus(&mut rng, &q, 70);
+        let ax = match case % 3 {
+            0 => gen::plan_of_kind_ax(&mut rng, &q, &xs, PlanKind::Mac),
+            1 => gen::plan_of_kind_ax(&mut rng, &q, &xs, PlanKind::Act),
+            _ => gen::random_ax_plan(&mut rng, &q, &xs).1,
+        };
+        if let Some(f) = check_case_all_ax(&q, &ax, &ax, &ax, &xs) {
+            panic!("case {case}: {f}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DSE point evaluation: accuracy identical across backends
+// ---------------------------------------------------------------------------
+
+#[test]
+fn design_point_accuracy_is_backend_invariant_for_family_plans() {
+    let mut rng = Rng::new(0xBAC6);
+    let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+    let xs = gen::mixed_stimulus(&mut rng, &q, 150);
+    let plan0 = ShiftPlan::exact(&q);
+    let ys: Vec<usize> = xs.iter().map(|x| axmlp::axsum::predict(&q, &plan0, x)).collect();
+    let data = QuantData {
+        x_train: &xs[..100],
+        y_train: &ys[..100],
+        x_test: &xs[100..],
+        y_test: &ys[100..],
+    };
+    let ax = gen::plan_of_kind_ax(&mut rng, &q, &xs[..100], PlanKind::Mac);
+    let lib = EgtLibrary::egt_v1();
+    let mut results = Vec::new();
+    for backend in [
+        EvalBackend::Flat,
+        EvalBackend::BitSlice,
+        EvalBackend::BitSlice128,
+        EvalBackend::BitSlice256,
+    ] {
+        let cfg = DseConfig {
+            backend,
+            power_patterns: 70,
+            threads: 1,
+            verify_circuit: true,
+            max_eval: 0,
+            ..DseConfig::default()
+        };
+        let stim = SweepStimuli::prepare(&q, &data, &cfg).unwrap();
+        let mut scratch = EngineScratch::new();
+        let eval = evaluate_design_packed_ax(
+            &q,
+            ax.clone(),
+            0,
+            Vec::new(),
+            &data,
+            &lib,
+            &cfg,
+            &stim,
+            &mut scratch,
+        )
+        .unwrap();
+        results.push((backend, eval));
+    }
+    let (b0, first) = &results[0];
+    for (b, e) in &results[1..] {
+        assert_eq!(e.acc_train, first.acc_train, "{b0:?} vs {b:?}");
+        assert_eq!(e.acc_test, first.acc_test, "{b0:?} vs {b:?}");
+        assert_eq!(e.costs, first.costs, "{b0:?} vs {b:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FlatEval under family plans matches the per-sample reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flat_eval_matches_reference_forward_under_family_plans() {
+    let mut rng = Rng::new(0xF1A7);
+    for _ in 0..10 {
+        let q = gen::random_quant_mlp(&mut rng, &TopologyRange::default());
+        let xs = gen::mixed_stimulus(&mut rng, &q, 40);
+        let (_, ax) = gen::random_ax_plan(&mut rng, &q, &xs);
+        let flat = FlatEval::new_ax(&q, &ax);
+        let mut fs = FlatScratch::new();
+        let mut scratch = Vec::new();
+        for x in &xs {
+            let want = forward_ax(&q, &ax, x, &mut scratch);
+            assert_eq!(flat.forward_into(x, &mut fs), &want[..]);
+            assert_eq!(flat.classify(&want), axmlp::axsum::predict_ax(&q, &ax, x));
+        }
+    }
+}
